@@ -1,0 +1,54 @@
+//! Interactive-style explorer: sweep every §V sharing axis at every
+//! degree and print the full performance/resource tradeoff matrix — the
+//! tool a library author (e.g. MPICH) would use to pick an endpoint
+//! configuration for a target thread count.
+//!
+//! ```sh
+//! cargo run --release --example endpoint_explorer
+//! ```
+
+use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
+use scalable_ep::endpoints::ResourceUsage;
+use scalable_ep::report::{f2, Table};
+
+fn main() {
+    let axes = [
+        SharedResource::Buf,
+        SharedResource::Ctx,
+        SharedResource::CtxTwoXQps,
+        SharedResource::CtxSharing2,
+        SharedResource::Pd,
+        SharedResource::Mr,
+        SharedResource::Cq,
+        SharedResource::Qp,
+    ];
+    let mut t = Table::new(
+        "x-way sharing tradeoffs, 16 threads (All features | conservative)",
+        &["resource", "x", "Mmsg/s (All)", "Mmsg/s (cons.)", "uUARs", "QPs", "CQs", "mem MiB"],
+    );
+    for res in axes {
+        for ways in [1u32, 2, 4, 8, 16] {
+            let spec = SharingSpec::new(res, ways, 16);
+            let (fabric, eps) = spec.build().expect("build");
+            let run = |features| {
+                let cfg =
+                    MsgRateConfig { msgs_per_thread: 8 * 1024, features, ..Default::default() };
+                Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
+            };
+            let all = run(Features::all());
+            let cons = run(Features::conservative());
+            let u = ResourceUsage::of_fabric(&fabric);
+            t.row(vec![
+                res.label().to_string(),
+                ways.to_string(),
+                f2(all),
+                f2(cons),
+                u.uuars_allocated.to_string(),
+                u.qps.to_string(),
+                u.cqs.to_string(),
+                f2(u.memory_mib()),
+            ]);
+        }
+    }
+    t.print();
+}

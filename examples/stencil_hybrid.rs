@@ -1,0 +1,43 @@
+//! The paper's 5-pt stencil hybrid sweep (§VII, Fig 14): for each `P.T`
+//! split of 16 hardware threads and each endpoint category, time the halo
+//! exchange on the virtual-clock NIC model — then run a functional Jacobi
+//! solve through the Pallas stencil artifact to show the compute half.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example stencil_hybrid
+//! ```
+
+use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
+use scalable_ep::apps::StencilBench;
+use scalable_ep::coordinator::JobSpec;
+use scalable_ep::endpoints::Category;
+use scalable_ep::report::{f2, Table};
+use scalable_ep::runtime::ArtifactRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "5-pt stencil halo exchange (Mmsg/s), 2 nodes x 16 hw threads",
+        &["P.T", "MPI everywhere", "2xDynamic", "Dynamic", "Shared Dynamic", "Static", "MPI+threads"],
+    );
+    for spec in JobSpec::paper_sweep() {
+        let mut row = vec![spec.label()];
+        for cat in Category::ALL {
+            let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES)?;
+            row.push(f2(s.time_exchange(1024).mmsgs_per_sec));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // Functional Jacobi sweeps through the Pallas artifact.
+    let dir = ArtifactRuntime::default_dir();
+    if dir.join("stencil_tile.hlo.txt").exists() {
+        let mut rt = ArtifactRuntime::new(dir)?;
+        let err = StencilBench::run_jacobi(&mut rt, 130, 130, 4)?;
+        println!("functional Jacobi 130x130 x4 sweeps via Pallas/PJRT: max |err| = {err:.3e}");
+        anyhow::ensure!(err < 1e-4, "stencil validation failed");
+    } else {
+        println!("(artifacts not built; run `make artifacts` for the compute half)");
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel is authored for TPU-style tiling (VMEM-resident blocks, MXU
+128x128 matmul shapes) but lowered with ``interpret=True`` so the AOT HLO
+runs on the CPU PJRT client that the Rust coordinator embeds. Real-TPU
+performance is *estimated* from BlockSpec footprints in DESIGN.md §6 —
+interpret-mode timings are not a TPU proxy.
+"""
+
+from .dgemm import dgemm_tile, TILE as DGEMM_TILE
+from .stencil5 import stencil5_tile, TILE as STENCIL_TILE
+
+__all__ = ["dgemm_tile", "DGEMM_TILE", "stencil5_tile", "STENCIL_TILE"]

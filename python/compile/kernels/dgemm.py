@@ -1,0 +1,77 @@
+"""Tiled DGEMM accumulate kernel: ``C += A @ B`` over 128x128 f32 tiles.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+global-array benchmark fetches matrix tiles over InfiniBand and multiplies
+them on the host. On a TPU the same tile loop becomes an MXU-shaped Pallas
+kernel: 128x128 blocks match the systolic array, the K contraction runs as
+the innermost grid dimension, and the C block stays resident in VMEM while
+A/B tiles stream HBM->VMEM via BlockSpec — the role the RDMA tile fetches
+play in the paper.
+
+The kernel is grid-tiled so the same code lowers for any multiple of the
+tile; the AOT artifact exports the single-tile instance that the Rust
+runtime composes (the coordinator owns the tile loop, mirroring the
+paper's design where communication scheduling is the system's job).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic-array edge.
+TILE = 128
+
+
+def _dgemm_kernel(a_ref, b_ref, c_in_ref, c_out_ref, acc_ref, *, k_steps):
+    """One (i, j, k) grid step: accumulate a_tile @ b_tile into acc."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = c_in_ref[...]
+
+    # f32 inputs, f32 accumulate — on TPU the MXU consumes bf16 natively;
+    # preferred_element_type pins the accumulator width.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        c_out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dgemm_tile(a, b, c, interpret=True):
+    """``C + A @ B`` for (m, k) x (k, n) + (m, n), all multiples of TILE."""
+    m, kk = a.shape
+    k2, n = b.shape
+    assert kk == k2 and c.shape == (m, n), (a.shape, b.shape, c.shape)
+    assert m % TILE == 0 and n % TILE == 0 and kk % TILE == 0
+    grid = (m // TILE, n // TILE, kk // TILE)
+    kernel = functools.partial(_dgemm_kernel, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (k, j)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu_vmem((TILE, TILE), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b, c)
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation that degrades gracefully in interpret mode."""
+    try:  # pragma: no cover - exercised only when TPU plugins exist
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # interpret mode accepts plain ShapeDtypeStruct scratch
+        return jax.ShapeDtypeStruct(shape, dtype)

@@ -1,0 +1,42 @@
+"""5-point Jacobi stencil kernel over a haloed tile.
+
+The paper's stencil benchmark partitions the grid 1-D across ranks and
+threads, exchanging halo rows over InfiniBand (Fig 13). The compute half
+is this kernel: one Jacobi sweep over a ``(TILE+2) x (TILE+2)`` haloed
+block producing the ``TILE x TILE`` interior. The halo rows arrive via
+the coordinator's RMA windows — the kernel itself is communication-free,
+exactly like the per-iteration compute of the MPI benchmark.
+
+On a real TPU the row tiles live in VMEM and the shifted adds vectorize
+on the VPU (the op is memory-bound; DESIGN.md §6 gives the roofline
+estimate). interpret=True keeps the artifact executable on the CPU PJRT
+client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 64
+
+
+def _stencil_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # 4-neighbor average of the interior (classic Jacobi update).
+    o_ref[...] = 0.25 * (
+        x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2] + x[1:-1, 2:]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stencil5_tile(haloed, interpret=True):
+    """One Jacobi sweep: (TILE+2, TILE+2) haloed tile -> (TILE, TILE)."""
+    h = TILE + 2
+    assert haloed.shape == (h, h), haloed.shape
+    return pl.pallas_call(
+        _stencil_kernel,
+        out_shape=jax.ShapeDtypeStruct((TILE, TILE), jnp.float32),
+        interpret=interpret,
+    )(haloed)

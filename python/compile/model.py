@@ -1,0 +1,45 @@
+"""Layer-2 JAX compute graphs exported to the Rust runtime.
+
+Each exported function wraps the L1 Pallas kernel in the composition the
+coordinator actually calls:
+
+* ``dgemm_tile_step`` — one C-tile accumulate step of the global-array
+  DGEMM (the Rust client owns the tile loop; the paper's contribution is
+  the communication schedule, not the matmul).
+* ``stencil_tile_step`` — one haloed Jacobi sweep of the 5-pt stencil.
+
+Both are shape-monomorphic (PJRT AOT requires static shapes); the Rust
+side composes them over arbitrarily large problems.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dgemm_tile, stencil5_tile, DGEMM_TILE, STENCIL_TILE
+
+
+def dgemm_tile_step(a, b, c):
+    """One 128x128 tile accumulate: returns (C + A @ B,)."""
+    return (dgemm_tile(a, b, c, interpret=True),)
+
+
+def stencil_tile_step(haloed):
+    """One 5-pt Jacobi sweep over a haloed 66x66 tile: returns (66-2)^2."""
+    return (stencil5_tile(haloed, interpret=True),)
+
+
+def dgemm_example_args():
+    t = jax.ShapeDtypeStruct((DGEMM_TILE, DGEMM_TILE), jnp.float32)
+    return (t, t, t)
+
+
+def stencil_example_args():
+    h = STENCIL_TILE + 2
+    return (jax.ShapeDtypeStruct((h, h), jnp.float32),)
+
+
+#: name -> (fn, example_args) for every artifact aot.py emits.
+EXPORTS = {
+    "dgemm_tile": (dgemm_tile_step, dgemm_example_args),
+    "stencil_tile": (stencil_tile_step, stencil_example_args),
+}

@@ -1,0 +1,91 @@
+"""L1 correctness: Pallas DGEMM kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dgemm_tile, DGEMM_TILE
+from compile.kernels.ref import dgemm_ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def test_single_tile_matches_ref():
+    a = _rand((DGEMM_TILE, DGEMM_TILE), 0)
+    b = _rand((DGEMM_TILE, DGEMM_TILE), 1)
+    c = _rand((DGEMM_TILE, DGEMM_TILE), 2)
+    got = dgemm_tile(a, b, c)
+    want = dgemm_ref(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_c_is_plain_matmul():
+    a = _rand((DGEMM_TILE, DGEMM_TILE), 3)
+    b = _rand((DGEMM_TILE, DGEMM_TILE), 4)
+    c = jnp.zeros((DGEMM_TILE, DGEMM_TILE), jnp.float32)
+    got = dgemm_tile(a, b, c)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_identity_b_returns_c_plus_a():
+    a = _rand((DGEMM_TILE, DGEMM_TILE), 5)
+    b = jnp.eye(DGEMM_TILE, dtype=jnp.float32)
+    c = _rand((DGEMM_TILE, DGEMM_TILE), 6)
+    got = dgemm_tile(a, b, c)
+    np.testing.assert_allclose(got, c + a, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (DGEMM_TILE, DGEMM_TILE, DGEMM_TILE),
+        (2 * DGEMM_TILE, DGEMM_TILE, DGEMM_TILE),
+        (DGEMM_TILE, 2 * DGEMM_TILE, DGEMM_TILE),
+        (DGEMM_TILE, DGEMM_TILE, 2 * DGEMM_TILE),
+        (2 * DGEMM_TILE, 2 * DGEMM_TILE, 2 * DGEMM_TILE),
+    ],
+)
+def test_multi_tile_grid(m, k, n):
+    # The k-grid accumulation across block steps must match a full matmul.
+    a = _rand((m, k), m * 7 + k)
+    b = _rand((k, n), k * 11 + n)
+    c = _rand((m, n), m * 13 + n)
+    got = dgemm_tile(a, b, c)
+    want = dgemm_ref(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_shape_validation():
+    a = jnp.zeros((64, 64), jnp.float32)  # not a multiple of TILE
+    with pytest.raises(AssertionError):
+        dgemm_tile(a, a, a)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+def test_property_scaling_linearity(seed, scale):
+    # dgemm(s*A, B, 0) == s * dgemm(A, B, 0): the kernel is linear in A.
+    a = _rand((DGEMM_TILE, DGEMM_TILE), seed)
+    b = _rand((DGEMM_TILE, DGEMM_TILE), seed + 1)
+    zero = jnp.zeros((DGEMM_TILE, DGEMM_TILE), jnp.float32)
+    lhs = dgemm_tile(a * scale, b, zero)
+    rhs = dgemm_tile(a, b, zero) * scale
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4 * scale)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_matches_ref_random(seed):
+    a = _rand((DGEMM_TILE, DGEMM_TILE), seed)
+    b = _rand((DGEMM_TILE, DGEMM_TILE), seed ^ 0xABCDEF)
+    c = _rand((DGEMM_TILE, DGEMM_TILE), seed ^ 0x123456)
+    np.testing.assert_allclose(
+        dgemm_tile(a, b, c), dgemm_ref(a, b, c), rtol=2e-5, atol=2e-5
+    )

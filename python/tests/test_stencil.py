@@ -1,0 +1,68 @@
+"""L1 correctness: Pallas 5-pt stencil kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import stencil5_tile, STENCIL_TILE
+from compile.kernels.ref import stencil5_ref
+
+H = STENCIL_TILE + 2
+
+
+def _rand(seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((H, H), dtype=np.float32))
+
+
+def test_matches_ref():
+    x = _rand(0)
+    np.testing.assert_allclose(
+        stencil5_tile(x), stencil5_ref(x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_constant_field_is_fixed_point():
+    # A constant field is a Jacobi fixed point: out == 3.0 everywhere.
+    x = jnp.full((H, H), 3.0, jnp.float32)
+    out = stencil5_tile(x)
+    np.testing.assert_allclose(out, jnp.full((STENCIL_TILE, STENCIL_TILE), 3.0), rtol=0)
+
+
+def test_linear_gradient_is_fixed_point():
+    # Harmonic functions (linear ramps) are exact Jacobi fixed points.
+    ramp = jnp.tile(jnp.arange(H, dtype=jnp.float32), (H, 1))
+    out = stencil5_tile(ramp)
+    np.testing.assert_allclose(out, ramp[1:-1, 1:-1], rtol=1e-6, atol=1e-6)
+
+
+def test_output_shape():
+    assert stencil5_tile(_rand(1)).shape == (STENCIL_TILE, STENCIL_TILE)
+
+
+def test_shape_validation():
+    with pytest.raises(AssertionError):
+        stencil5_tile(jnp.zeros((H, H + 1), jnp.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_matches_ref_random(seed):
+    x = _rand(seed)
+    np.testing.assert_allclose(
+        stencil5_tile(x), stencil5_ref(x), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    shift=st.floats(min_value=-100.0, max_value=100.0),
+)
+def test_property_shift_invariance(seed, shift):
+    # Jacobi commutes with constant shifts: J(x + s) == J(x) + s.
+    x = _rand(seed)
+    lhs = stencil5_tile(x + shift)
+    rhs = stencil5_tile(x) + shift
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)

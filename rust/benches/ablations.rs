@@ -1,0 +1,10 @@
+//! Design-choice ablations (DESIGN.md): QP-lock removal, the flush-group
+//! anomaly model, and the inline-cutoff message-size sweep.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    for name in ["ablation-qp-lock", "ablation-quirk", "ablation-msg-size"] {
+        for table in scalable_ep::figures::by_name(name, quick).expect("known") {
+            table.print();
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating paper fig2 (see rust/src/figures.rs for
+//! the workload; EXPERIMENTS.md records paper-vs-measured).
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = std::time::Instant::now();
+    for table in scalable_ep::figures::by_name("fig2", quick).expect("known figure") {
+        table.print();
+    }
+    eprintln!("[fig02_extremes] regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating paper fig7 (see rust/src/figures.rs for
+//! the workload; EXPERIMENTS.md records paper-vs-measured).
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = std::time::Instant::now();
+    for table in scalable_ep::figures::by_name("fig7", quick).expect("known figure") {
+        table.print();
+    }
+    eprintln!("[fig07_ctx_sharing] regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench harness regenerating paper fig14 (see rust/src/figures.rs for
+//! the workload; EXPERIMENTS.md records paper-vs-measured).
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = std::time::Instant::now();
+    for table in scalable_ep::figures::by_name("fig14", quick).expect("known figure") {
+        table.print();
+    }
+    eprintln!("[fig14_stencil] regenerated in {:.2?}", t0.elapsed());
+}

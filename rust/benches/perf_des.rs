@@ -1,0 +1,29 @@
+//! Wallclock performance of the DES hot loop itself (EXPERIMENTS.md
+//! §Perf): simulated messages per wallclock second across representative
+//! topologies. The figure suite's runtime is dominated by this loop.
+
+use std::time::Instant;
+
+use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
+
+fn measure(label: &str, res: SharedResource, ways: u32, features: Features, msgs: u64) {
+    let (fabric, eps) = SharingSpec::new(res, ways, 16).build().unwrap();
+    let cfg = MsgRateConfig { msgs_per_thread: msgs, features, ..Default::default() };
+    let t0 = Instant::now();
+    let r = Runner::new(&fabric, &eps, cfg).run();
+    let dt = t0.elapsed();
+    println!(
+        "{label:>28}: {:>6.1} M simulated msgs/s wallclock ({} msgs in {:.2?})",
+        r.messages as f64 / dt.as_secs_f64() / 1e6,
+        r.messages,
+        dt
+    );
+}
+
+fn main() {
+    let msgs = 256 * 1024;
+    measure("independent, All", SharedResource::Ctx, 1, Features::all(), msgs);
+    measure("independent, conservative", SharedResource::Ctx, 1, Features::conservative(), msgs / 4);
+    measure("16-way shared QP, All", SharedResource::Qp, 16, Features::all(), msgs / 4);
+    measure("16-way shared CQ, w/o unsig", SharedResource::Cq, 16, Features::all().without_unsignaled(), msgs / 8);
+}

@@ -1,0 +1,185 @@
+//! Global-array DGEMM benchmark (§VII, Fig 12).
+//!
+//! "The pattern of fetching and writing tiles from and to a global array
+//! is at the core of many scientific applications such as NWChem." The
+//! global matrices A, B and C live on a server node; a client node
+//! performs the DGEMM, fetching A/B tiles and writing C tiles over the
+//! fabric. All QPs share one PD; each has three BUFs and three MRs (one
+//! per tile).
+//!
+//! Two facets:
+//! * [`GlobalArray::time_comm`] — the timed communication phase on the
+//!   virtual-clock NIC model (conservative semantics: no Postlist, no
+//!   Unsignaled, BlueFlame — §VII), which regenerates Fig 12's left panel.
+//! * [`GlobalArray::run_dgemm`] — the functional end-to-end DGEMM: tiles
+//!   move through RMA windows and the compute runs the AOT-compiled
+//!   Pallas kernel through PJRT, validated against a host-side oracle.
+
+use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
+use crate::coordinator::{Job, JobSpec, Universe};
+use crate::endpoints::{Category, EndpointBuilder, EndpointSet, ResourceUsage};
+use crate::nicsim::CostModel;
+use crate::runtime::{ArtifactRuntime, DGEMM_TILE};
+use crate::verbs::error::Result;
+use crate::verbs::Fabric;
+
+/// The global-array benchmark for one endpoint category.
+pub struct GlobalArray {
+    pub category: Category,
+    pub nthreads: u32,
+    pub fabric: Fabric,
+    pub set: EndpointSet,
+}
+
+impl GlobalArray {
+    /// Build the client-side endpoint topology: category layout plus the
+    /// paper's 3-BUF/3-MR-per-QP registration pattern.
+    pub fn new(category: Category, nthreads: u32) -> Result<Self> {
+        let mut fabric = Fabric::connectx4();
+        let set = EndpointBuilder::new(category, nthreads).build(&mut fabric)?;
+        // Two extra tile buffers + MRs per thread (A, B, C tiles). The
+        // builder registered one; add the other two on the thread's PD.
+        for (i, te) in set.threads.iter().enumerate() {
+            let pd = fabric.qp(te.qp)?.pd;
+            let tile_bytes = (DGEMM_TILE * DGEMM_TILE * 4) as u64;
+            for k in 1..3u64 {
+                let addr = 0x8000_0000 + (i as u64 * 3 + k) * tile_bytes;
+                fabric.declare_buf(addr, tile_bytes);
+                fabric.reg_mr(pd, addr, tile_bytes)?;
+            }
+        }
+        Ok(Self { category, nthreads, fabric, set })
+    }
+
+    /// Timed communication phase: `msgs_per_thread` RDMA writes with the
+    /// §VII conservative semantics.
+    pub fn time_comm(&self, msgs_per_thread: u64, msg_size: u32) -> MsgRateResult {
+        let cfg = MsgRateConfig {
+            msgs_per_thread,
+            msg_size,
+            features: Features::conservative(),
+            cost: CostModel::calibrated(),
+            force_shared_qp_path: self.category == Category::MpiThreads,
+            ..Default::default()
+        };
+        Runner::new(&self.fabric, &self.set.threads, cfg).run()
+    }
+
+    /// Resource usage of the client's endpoints.
+    pub fn resources(&self) -> ResourceUsage {
+        ResourceUsage::of_set(&self.fabric, &self.set)
+    }
+
+    /// Functional end-to-end DGEMM `C = A x B` over `n x n` matrices
+    /// (`n` a multiple of the 128-tile), tiles moving through RMA windows
+    /// and the compute running the Pallas artifact via PJRT. Returns the
+    /// max absolute error against a host-side oracle.
+    pub fn run_dgemm(&self, rt: &mut ArtifactRuntime, n: usize) -> anyhow::Result<f64> {
+        anyhow::ensure!(n % DGEMM_TILE == 0, "n must be a multiple of {DGEMM_TILE}");
+        let tiles = n / DGEMM_TILE;
+
+        // Server = rank 0 (node 0), client threads = rank 1 (node 1).
+        let job = Job::two_node(JobSpec::new(1, self.nthreads), self.category);
+        let mut u = Universe::launch(job, 3 * n * n * 4 + 4096)?;
+
+        // Server holds A, B, C in its window.
+        let a_win = u.window(0, 0, n * n * 4);
+        let b_win = u.window(0, n * n * 4, n * n * 4);
+        let c_win = u.window(0, 2 * n * n * 4, n * n * 4);
+        let mut a = vec![0f32; n * n];
+        let mut b = vec![0f32; n * n];
+        let mut rng = crate::sim::XorShift::new(0xD6E55);
+        for x in a.iter_mut().chain(b.iter_mut()) {
+            *x = (rng.unit_f64() as f32) - 0.5;
+        }
+        u.put_f32(a_win, 0, &a);
+        u.put_f32(b_win, 0, &b);
+
+        // Client: for each C tile, fetch A-row/B-col tiles, accumulate via
+        // the Pallas kernel, write C back. (Thread i handles tile i mod
+        // nthreads — round-robin ownership like the NWChem pattern.)
+        let read_tile = |u: &Universe, win, ti: usize, tj: usize| -> Vec<f32> {
+            let mut tile = vec![0f32; DGEMM_TILE * DGEMM_TILE];
+            for r in 0..DGEMM_TILE {
+                let row = ti * DGEMM_TILE + r;
+                let off = row * n + tj * DGEMM_TILE;
+                tile[r * DGEMM_TILE..(r + 1) * DGEMM_TILE]
+                    .copy_from_slice(&u.get_f32(win, off, DGEMM_TILE));
+            }
+            tile
+        };
+        for ti in 0..tiles {
+            for tj in 0..tiles {
+                let mut c_tile = vec![0f32; DGEMM_TILE * DGEMM_TILE];
+                for tk in 0..tiles {
+                    let a_tile = read_tile(&u, a_win, ti, tk);
+                    let b_tile = read_tile(&u, b_win, tk, tj);
+                    c_tile = rt.dgemm_tile(&a_tile, &b_tile, &c_tile)?;
+                }
+                for r in 0..DGEMM_TILE {
+                    let row = ti * DGEMM_TILE + r;
+                    let off = row * n + tj * DGEMM_TILE;
+                    let slice = &c_tile[r * DGEMM_TILE..(r + 1) * DGEMM_TILE];
+                    u.put_f32(c_win, off, slice);
+                }
+            }
+        }
+
+        // Validate against a host-side oracle.
+        let c = u.get_f32(c_win, 0, n * n);
+        let mut max_err = 0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for k in 0..n {
+                    acc += a[i * n + k] as f64 * b[k * n + j] as f64;
+                }
+                max_err = max_err.max((acc - c[i * n + j] as f64).abs());
+            }
+        }
+        Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_mrs_per_qp_and_shared_pd() {
+        let ga = GlobalArray::new(Category::Dynamic, 16).unwrap();
+        // 16 threads x 3 MRs each.
+        let live_mrs = ga.fabric.mrs.iter().filter(|m| m.live).count();
+        assert_eq!(live_mrs, 48);
+        // All QPs share one PD.
+        let pd0 = ga.fabric.qp(ga.set.threads[0].qp).unwrap().pd;
+        assert!(ga.set.threads.iter().all(|t| ga.fabric.qp(t.qp).unwrap().pd == pd0));
+    }
+
+    #[test]
+    fn comm_phase_completes_for_every_category() {
+        for cat in Category::ALL {
+            let ga = GlobalArray::new(cat, 4).unwrap();
+            let r = ga.time_comm(512, 2);
+            assert_eq!(r.messages, 4 * 512, "{cat}");
+        }
+    }
+
+    #[test]
+    fn fig12_throughput_ordering() {
+        // 2xDynamic >= Dynamic > SharedDynamic >= Static >> MPI+threads.
+        let rate = |cat| {
+            let ga = GlobalArray::new(cat, 16).unwrap();
+            ga.time_comm(2048, 2).mmsgs_per_sec
+        };
+        let twox = rate(Category::TwoXDynamic);
+        let dynamic = rate(Category::Dynamic);
+        let shared = rate(Category::SharedDynamic);
+        let statik = rate(Category::Static);
+        let threads = rate(Category::MpiThreads);
+        assert!(twox >= dynamic * 0.99, "2xDynamic {twox} vs Dynamic {dynamic}");
+        assert!(dynamic > shared, "Dynamic {dynamic} vs SharedDynamic {shared}");
+        assert!(shared * 4.0 > statik, "Static should be near SharedDynamic");
+        assert!(statik > threads * 3.0, "Static {statik} vs MPI+threads {threads}");
+    }
+}

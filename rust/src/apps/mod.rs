@@ -1,0 +1,8 @@
+//! The paper's §VII application benchmarks, built on the coordinator and
+//! the PJRT runtime.
+
+pub mod global_array;
+pub mod stencil;
+
+pub use global_array::GlobalArray;
+pub use stencil::StencilBench;

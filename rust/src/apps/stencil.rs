@@ -1,0 +1,284 @@
+//! 5-point stencil benchmark (§VII, Figs 13-14).
+//!
+//! A 1-D row partitioning of a square grid across 2 nodes x P ranks x T
+//! threads; each thread owns a band of rows and exchanges halo rows with
+//! its up/down neighbors over two QPs mapped to one CQ (Fig 13). The
+//! hybrid sweep varies `P.T` with `P*T = 16`.
+//!
+//! Endpoint topology per category (per rank of T threads):
+//!
+//! | Category       | per thread                                | CTXs |
+//! |----------------|-------------------------------------------|------|
+//! | MpiEverywhere  | own CTX, 2 QPs -> 1 CQ                    | T    |
+//! | TwoXDynamic    | 4 indep. TD-QPs, 2 CQs, evens used        | 1    |
+//! | Dynamic        | 2 indep. TD-QPs -> 1 CQ                   | 1    |
+//! | SharedDynamic  | 2 paired TD-QPs -> 1 CQ                   | 1    |
+//! | Static         | 2 plain QPs -> 1 CQ (static uUARs)        | 1    |
+//! | MpiThreads     | rank-wide: 2 QPs -> 1 CQ shared by all    | 1    |
+
+use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
+use crate::coordinator::JobSpec;
+use crate::endpoints::{Category, ResourceUsage, ThreadEndpoint};
+use crate::mlx5::Mlx5Env;
+use crate::nicsim::CostModel;
+use crate::runtime::{ArtifactRuntime, STENCIL_TILE};
+use crate::verbs::error::Result;
+use crate::verbs::{Fabric, QpCaps, TdInitAttr};
+
+/// Default halo-row payload: an 8-column f32 subtile row. Small enough
+/// that the exchange is initiation-bound, as in the paper (its message
+/// rates exceed the 150 M msg/s port spec, so its halos are tiny).
+pub const DEFAULT_HALO_BYTES: u32 = 32;
+
+/// One node's worth of the stencil job: P ranks x T threads on one NIC.
+pub struct StencilBench {
+    pub spec: JobSpec,
+    pub category: Category,
+    pub fabric: Fabric,
+    /// Per hardware thread (rank-major): its two endpoints (up/down QP).
+    pub threads: Vec<Vec<ThreadEndpoint>>,
+    /// Halo row size in bytes (message size of the exchange).
+    pub halo_bytes: u32,
+}
+
+impl StencilBench {
+    pub fn new(spec: JobSpec, category: Category, halo_bytes: u32) -> Result<Self> {
+        let mut fabric = Fabric::connectx4();
+        let mut threads = Vec::new();
+        let t = spec.threads_per_rank;
+        let caps = QpCaps::default();
+        let buf_base = 0x100_0000u64;
+        let mut bufno = 0u64;
+        for _rank in 0..spec.ranks_per_node {
+            match category {
+                Category::MpiEverywhere => {
+                    for _ in 0..t {
+                        let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                        let pd = fabric.alloc_pd(ctx)?;
+                        let cq = fabric.create_cq(ctx, 64)?;
+                        let mut eps = Vec::new();
+                        for _ in 0..2 {
+                            let qp = fabric.create_qp(pd, cq, caps, None)?;
+                            let addr = buf_base + bufno * 64 * ((halo_bytes as u64 + 63) / 64 + 1);
+                            bufno += 1;
+                            let buf = fabric.declare_buf(addr, halo_bytes as u64);
+                            let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
+                            eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                        }
+                        threads.push(eps);
+                    }
+                }
+                Category::TwoXDynamic
+                | Category::Dynamic
+                | Category::SharedDynamic
+                | Category::Static => {
+                    let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                    let pd = fabric.alloc_pd(ctx)?;
+                    let (use_td, attr, stride) = match category {
+                        Category::TwoXDynamic => (true, TdInitAttr::independent(), 2u32),
+                        Category::Dynamic => (true, TdInitAttr::independent(), 1),
+                        Category::SharedDynamic => (true, TdInitAttr::paired(), 1),
+                        _ => (false, TdInitAttr::independent(), 1),
+                    };
+                    for _ in 0..t {
+                        // Create 2*stride QPs; the used pair is every
+                        // `stride`-th, mapped to one CQ; 2xDynamic's spare
+                        // pair gets its own CQ ("the number of QPs and CQs
+                        // in 2xDynamic is twice that of MPI everywhere").
+                        let used_cq = fabric.create_cq(ctx, 64)?;
+                        let spare_cq =
+                            if stride == 2 { Some(fabric.create_cq(ctx, 64)?) } else { None };
+                        let mut eps = Vec::new();
+                        for k in 0..(2 * stride) {
+                            let td = if use_td { Some(fabric.alloc_td(ctx, attr)?) } else { None };
+                            let used = k % stride == 0;
+                            let cq = if used { used_cq } else { spare_cq.unwrap() };
+                            let qp = fabric.create_qp(pd, cq, caps, td)?;
+                            if used {
+                                let addr =
+                                    buf_base + bufno * 64 * ((halo_bytes as u64 + 63) / 64 + 1);
+                                bufno += 1;
+                                let buf = fabric.declare_buf(addr, halo_bytes as u64);
+                                let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
+                                eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                            }
+                        }
+                        threads.push(eps);
+                    }
+                }
+                Category::MpiThreads => {
+                    let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                    let pd = fabric.alloc_pd(ctx)?;
+                    let cq = fabric.create_cq(ctx, (4 * t).max(64))?;
+                    let up = fabric.create_qp(pd, cq, caps, None)?;
+                    let down = fabric.create_qp(pd, cq, caps, None)?;
+                    for _ in 0..t {
+                        let mut eps = Vec::new();
+                        for qp in [up, down] {
+                            let addr = buf_base + bufno * 64 * ((halo_bytes as u64 + 63) / 64 + 1);
+                            bufno += 1;
+                            let buf = fabric.declare_buf(addr, halo_bytes as u64);
+                            let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
+                            eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                        }
+                        threads.push(eps);
+                    }
+                }
+            }
+        }
+        Ok(Self { spec, category, fabric, threads, halo_bytes })
+    }
+
+    /// Timed halo-exchange phase: each hardware thread sends
+    /// `2 * iterations` halo rows (one up, one down per iteration) with
+    /// conservative semantics. Threads of one rank additionally share the
+    /// MPI library's rank-wide progress state, which is why
+    /// processes-only splits outrun fully-hybrid ones (§VII, Fig 14).
+    pub fn time_exchange(&self, iterations: u64) -> MsgRateResult {
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 2 * iterations,
+            msg_size: self.halo_bytes,
+            features: Features::conservative(),
+            cost: CostModel::calibrated(),
+            force_shared_qp_path: self.category == Category::MpiThreads,
+            ..Default::default()
+        };
+        let mut runner = Runner::new_multi(&self.fabric, &self.threads, cfg);
+        let ranks: Vec<u32> = (0..self.spec.ranks_per_node)
+            .flat_map(|r| std::iter::repeat(r).take(self.spec.threads_per_rank as usize))
+            .collect();
+        runner.set_rank_groups(&ranks);
+        runner.run()
+    }
+
+    /// Node-wide resource usage (Fig 14 right panels).
+    pub fn resources(&self) -> ResourceUsage {
+        ResourceUsage::of_fabric(&self.fabric)
+    }
+
+    /// Functional end-to-end Jacobi sweeps over a `rows x cols` grid with
+    /// 1-D partitioning, interior updates running the Pallas stencil
+    /// artifact tile by tile. Returns the max absolute error against a
+    /// host-side oracle after `sweeps` iterations.
+    pub fn run_jacobi(
+        rt: &mut ArtifactRuntime,
+        rows: usize,
+        cols: usize,
+        sweeps: usize,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            (rows - 2) % STENCIL_TILE == 0 && (cols - 2) % STENCIL_TILE == 0,
+            "interior must tile by {STENCIL_TILE}"
+        );
+        let mut rng = crate::sim::XorShift::new(0x57E7C11);
+        let mut grid: Vec<f32> = (0..rows * cols).map(|_| rng.unit_f64() as f32).collect();
+        let mut oracle = grid.clone();
+
+        for _ in 0..sweeps {
+            // Pallas path, tile by tile over the interior.
+            let mut next = grid.clone();
+            let h = STENCIL_TILE + 2;
+            for bi in (1..rows - 1).step_by(STENCIL_TILE) {
+                for bj in (1..cols - 1).step_by(STENCIL_TILE) {
+                    let mut haloed = vec![0f32; h * h];
+                    for r in 0..h {
+                        for c in 0..h {
+                            haloed[r * h + c] = grid[(bi - 1 + r) * cols + (bj - 1 + c)];
+                        }
+                    }
+                    let out = rt.stencil_tile(&haloed)?;
+                    for r in 0..STENCIL_TILE {
+                        for c in 0..STENCIL_TILE {
+                            next[(bi + r) * cols + (bj + c)] = out[r * STENCIL_TILE + c];
+                        }
+                    }
+                }
+            }
+            grid = next;
+
+            // Host oracle.
+            let mut onext = oracle.clone();
+            for r in 1..rows - 1 {
+                for c in 1..cols - 1 {
+                    onext[r * cols + c] = 0.25
+                        * (oracle[(r - 1) * cols + c]
+                            + oracle[(r + 1) * cols + c]
+                            + oracle[r * cols + c - 1]
+                            + oracle[r * cols + c + 1]);
+                }
+            }
+            oracle = onext;
+        }
+
+        let mut max_err = 0f64;
+        for (g, o) in grid.iter().zip(&oracle) {
+            max_err = max_err.max((*g as f64 - *o as f64).abs());
+        }
+        Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qp_cq_ratio_is_two_except_mpi_threads() {
+        for cat in Category::ALL {
+            let s = StencilBench::new(JobSpec::new(4, 4), cat, DEFAULT_HALO_BYTES).unwrap();
+            let u = s.resources();
+            // Fig 13: "the number of QPs is twice the number of CQs for
+            // all cases" (2xDynamic doubles both; MPI+threads has 2 QPs +
+            // 1 CQ per rank).
+            assert_eq!(u.qps, 2 * u.cqs, "{cat}: {} QPs vs {} CQs", u.qps, u.cqs);
+        }
+    }
+
+    #[test]
+    fn fig14_16_1_counts() {
+        // Processes-only: every category gives each rank its own CTX.
+        for (cat, qps, ctxs) in [
+            (Category::MpiEverywhere, 32, 16),
+            (Category::TwoXDynamic, 64, 16),
+            (Category::Dynamic, 32, 16),
+            (Category::Static, 32, 16),
+            (Category::MpiThreads, 32, 16),
+        ] {
+            let s = StencilBench::new(JobSpec::new(16, 1), cat, DEFAULT_HALO_BYTES).unwrap();
+            let u = s.resources();
+            assert_eq!((u.qps, u.ctxs), (qps, ctxs), "{cat}");
+        }
+    }
+
+    #[test]
+    fn hybrid_reduces_ctxs() {
+        let s16 = StencilBench::new(JobSpec::new(16, 1), Category::Dynamic, DEFAULT_HALO_BYTES).unwrap();
+        let s1 = StencilBench::new(JobSpec::new(1, 16), Category::Dynamic, DEFAULT_HALO_BYTES).unwrap();
+        assert!(s1.resources().uars_allocated < s16.resources().uars_allocated);
+    }
+
+    #[test]
+    fn exchange_completes_all_categories() {
+        for cat in Category::ALL {
+            let s = StencilBench::new(JobSpec::new(2, 2), cat, 1024).unwrap();
+            let r = s.time_exchange(128);
+            assert_eq!(r.messages, 4 * 256, "{cat}");
+        }
+    }
+
+    #[test]
+    fn static_1_16_uses_third_level_sharing() {
+        // §VII: "in 1.16, of the 32 QPs per CTX, 28 use the third level"
+        // (4 land alone on low-latency uUARs, 28 share the 11 medium).
+        let s = StencilBench::new(JobSpec::new(1, 16), Category::Static, DEFAULT_HALO_BYTES).unwrap();
+        let mut shared_qps = 0;
+        for eps in &s.threads {
+            for e in eps {
+                if s.fabric.uuar_of(e.qp).qps.len() > 1 {
+                    shared_qps += 1;
+                }
+            }
+        }
+        assert_eq!(shared_qps, 28);
+    }
+}

@@ -1,0 +1,141 @@
+//! InfiniBand operational-feature toggles (paper §II-B, §IV).
+
+/// Feature configuration for a benchmark run.
+///
+/// §IV defaults: `p = 32`, `q = 64` ("we find that setting p=32 and q=64
+/// achieves the maximum throughput for 16 threads"). Postlist and
+/// Unsignaled are defined *with respect to the threads*, not their QPs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// Postlist size `p` (1 = "w/o Postlist").
+    pub postlist: u32,
+    /// Signal one completion every `q` WQEs (1 = "w/o Unsignaled").
+    pub unsignaled: u32,
+    /// Inline small payloads into the WQE (`IBV_SEND_INLINE`).
+    pub inlining: bool,
+    /// Allow BlueFlame programmed-I/O WQE writes (false models
+    /// `MLX5_SHUT_UP_BF=1`). BlueFlame is only *used* when Postlist is 1
+    /// (§II-B: "BlueFlame is not used with Postlist").
+    pub blueflame: bool,
+}
+
+impl Features {
+    pub const DEFAULT_POSTLIST: u32 = 32;
+    pub const DEFAULT_UNSIGNALED: u32 = 64;
+
+    /// "All": every feature on, paper defaults.
+    pub fn all() -> Self {
+        Self {
+            postlist: Self::DEFAULT_POSTLIST,
+            unsignaled: Self::DEFAULT_UNSIGNALED,
+            inlining: true,
+            blueflame: true,
+        }
+    }
+
+    pub fn without_postlist(mut self) -> Self {
+        self.postlist = 1;
+        self
+    }
+
+    pub fn without_unsignaled(mut self) -> Self {
+        self.unsignaled = 1;
+        self
+    }
+
+    pub fn without_inlining(mut self) -> Self {
+        self.inlining = false;
+        self
+    }
+
+    pub fn without_blueflame(mut self) -> Self {
+        self.blueflame = false;
+        self
+    }
+
+    /// Conservative application semantics of §VII: no Postlist, no
+    /// Unsignaled Completions, BlueFlame writes (latency-oriented).
+    pub fn conservative() -> Self {
+        Self { postlist: 1, unsignaled: 1, inlining: true, blueflame: true }
+    }
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Self::all()
+    }
+}
+
+/// The named feature sets plotted in Figs 3, 5, 7-11.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureSet {
+    All,
+    WithoutBlueFlame,
+    WithoutInlining,
+    WithoutPostlist,
+    WithoutUnsignaled,
+}
+
+impl FeatureSet {
+    pub const ALL_SETS: [FeatureSet; 5] = [
+        FeatureSet::All,
+        FeatureSet::WithoutBlueFlame,
+        FeatureSet::WithoutInlining,
+        FeatureSet::WithoutPostlist,
+        FeatureSet::WithoutUnsignaled,
+    ];
+
+    pub fn features(self) -> Features {
+        match self {
+            FeatureSet::All => Features::all(),
+            FeatureSet::WithoutBlueFlame => Features::all().without_blueflame(),
+            FeatureSet::WithoutInlining => Features::all().without_inlining(),
+            FeatureSet::WithoutPostlist => Features::all().without_postlist(),
+            FeatureSet::WithoutUnsignaled => Features::all().without_unsignaled(),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FeatureSet::All => "All",
+            FeatureSet::WithoutBlueFlame => "All w/o BlueFlame",
+            FeatureSet::WithoutInlining => "All w/o Inlining",
+            FeatureSet::WithoutPostlist => "All w/o Postlist",
+            FeatureSet::WithoutUnsignaled => "All w/o Unsignaled",
+        }
+    }
+}
+
+impl std::fmt::Display for FeatureSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let f = Features::all();
+        assert_eq!(f.postlist, 32);
+        assert_eq!(f.unsignaled, 64);
+        assert!(f.inlining && f.blueflame);
+    }
+
+    #[test]
+    fn without_variants() {
+        assert_eq!(Features::all().without_postlist().postlist, 1);
+        assert_eq!(Features::all().without_unsignaled().unsignaled, 1);
+        assert!(!Features::all().without_inlining().inlining);
+        assert!(!Features::all().without_blueflame().blueflame);
+    }
+
+    #[test]
+    fn conservative_semantics() {
+        let f = Features::conservative();
+        assert_eq!((f.postlist, f.unsignaled), (1, 1));
+        assert!(f.blueflame);
+    }
+}

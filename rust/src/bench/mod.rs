@@ -1,0 +1,15 @@
+//! The §IV multithreaded "sender-receiver" RDMA-write message-rate
+//! benchmark, adopted from perftest, as a virtual-time state machine.
+//!
+//! Each sender thread loops: post its QP full of WQEs in multiples of
+//! *Postlist* `p`, requesting one signaled completion every *Unsignaled*
+//! `q` WQEs, then poll its CQ for `c = d/q` completions. Feature toggles
+//! reproduce the paper's "All w/o f" methodology.
+
+pub mod features;
+pub mod msgrate;
+pub mod sharing;
+
+pub use features::{FeatureSet, Features};
+pub use msgrate::{MsgRateConfig, MsgRateResult, Runner};
+pub use sharing::{SharedResource, SharingSpec};

@@ -1,0 +1,635 @@
+//! The message-rate benchmark engine (§IV), executed in virtual time.
+//!
+//! Thread program (one *iteration*, perftest-style):
+//!
+//! ```text
+//! while msgs remain:
+//!   for each of d_eff/p_eff post calls:            # fill the QP
+//!     lock(QP) if enabled
+//!       prepare p_eff WQEs (+ inline copy)
+//!       atomic fetch-sub on shared QP depth
+//!       ring DoorBell (MMIO) or write WQE via BlueFlame
+//!     unlock(QP)
+//!     NIC pipeline -> CQE arrival times into the CQ
+//!   while iteration's signaled completions not credited:
+//!     lock(CQ) if enabled
+//!       read up to c CQEs; atomically credit their owners
+//!     unlock(CQ)
+//! ```
+//!
+//! With an `x`-way shared QP each thread drives a `d/x` window of the
+//! shared ring, so its effective Postlist and Unsignaled values clamp to
+//! the window — sharing a QP inherently destroys the batching features,
+//! which is a large part of why Fig 11 falls so steeply.
+//!
+//! A thread may own several endpoints (the 5-pt stencil gives each thread
+//! one QP per neighbor, completing into one CQ); post calls round-robin
+//! over them.
+
+use std::collections::HashMap;
+
+use crate::endpoints::ThreadEndpoint;
+use crate::nicsim::{CostModel, Nic};
+use crate::sim::atomic::SimAtomic;
+use crate::sim::sched::{Scheduler, Step};
+use crate::sim::{to_secs, SimLock, Time};
+use crate::verbs::{CqId, Fabric, QpId};
+
+use super::features::Features;
+
+/// Configuration of one virtual-time benchmark run.
+#[derive(Debug, Clone, Copy)]
+pub struct MsgRateConfig {
+    /// Messages each thread must complete.
+    pub msgs_per_thread: u64,
+    /// RDMA-write payload size (2 B in §IV).
+    pub msg_size: u32,
+    /// QP depth `d`.
+    pub qp_depth: u32,
+    pub features: Features,
+    pub cost: CostModel,
+    /// Take the shared-QP code path (depth atomics + extra branches) even
+    /// when only one thread drives the QP — models an MPI library compiled
+    /// for `MPI_THREAD_MULTIPLE` (§VII: MPI+threads reaches only 87 % in
+    /// the processes-only stencil "because of the overhead of atomics and
+    /// additional branches associated with QP-sharing").
+    pub force_shared_qp_path: bool,
+}
+
+impl Default for MsgRateConfig {
+    fn default() -> Self {
+        Self {
+            msgs_per_thread: 20_000,
+            msg_size: 2,
+            qp_depth: 128,
+            features: Features::all(),
+            cost: CostModel::calibrated(),
+            force_shared_qp_path: false,
+        }
+    }
+}
+
+/// Result of a run.
+#[derive(Debug, Clone)]
+pub struct MsgRateResult {
+    /// Total messages completed across threads.
+    pub messages: u64,
+    /// Virtual makespan.
+    pub duration: Time,
+    /// Million messages per second (the paper's y-axis).
+    pub mmsgs_per_sec: f64,
+    /// Per-thread completion times.
+    pub thread_done: Vec<Time>,
+    /// PCIe transaction counts (Fig 6b).
+    pub pcie: crate::nicsim::PcieCounters,
+    /// PCIe read rate over the makespan, reads/s.
+    pub pcie_read_rate: f64,
+    /// Median signaled-completion latency (post-call to CPU-visible CQE),
+    /// nanoseconds. Conservative (§VII) semantics are latency-oriented;
+    /// this is the metric they optimize.
+    pub p50_latency_ns: f64,
+    /// 99th-percentile signaled-completion latency, nanoseconds.
+    pub p99_latency_ns: f64,
+}
+
+/// Per-thread effective parameters after QP-window clamping.
+#[derive(Debug, Clone, Copy)]
+struct Effective {
+    window: u32,
+    postlist: u32,
+    signal_every: u32,
+    use_blueflame: bool,
+    signals_per_iter: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Post { batch: u32 },
+    Poll,
+}
+
+#[derive(Debug, Clone)]
+struct ThreadState {
+    eps: Vec<ThreadEndpoint>,
+    cq: CqId,
+    eff: Effective,
+    phase: Phase,
+    /// WQEs posted so far (this thread's stream).
+    posted: u64,
+    /// Signaled completions credited to this thread.
+    credits: u64,
+    /// Credits needed to finish the current iteration.
+    credit_target: u64,
+    msgs_total: u64,
+}
+
+/// The benchmark world: one fabric + NIC + lock/atomic state.
+pub struct Runner {
+    cfg: MsgRateConfig,
+    nic: Nic,
+    threads: Vec<ThreadState>,
+    qp_locks: Vec<SimLock>,
+    qp_depth_atomic: Vec<SimAtomic>,
+    qp_sharers: Vec<u32>,
+    /// CQ state, indexed by `CqId::index()` (dense: fabrics are small).
+    cq_locks: Vec<SimLock>,
+    cq_sharers: Vec<u32>,
+    /// Min-heap of (arrival, owner tid) per CQ.
+    cq_arrivals: Vec<std::collections::BinaryHeap<std::cmp::Reverse<(Time, u32)>>>,
+    /// Reusable scratch for signaled indices / polled CQEs (avoids an
+    /// allocation per post/poll call on the hot path).
+    sig_buf: Vec<u32>,
+    got_buf: Vec<(Time, u32)>,
+    /// Per-thread credit atomics (bounce when another thread credits us).
+    credit_atomic: Vec<SimAtomic>,
+    /// uUAR locks for medium-latency uUARs shared by several *QPs*
+    /// (level-3 sharing): key = (ctx, page, slot).
+    uuar_locks: HashMap<(u32, u32, u8), SimLock>,
+    /// Per-QP key into `uuar_locks` (None when its uUAR needs no lock).
+    qp_uuar_key: Vec<Option<(u32, u32, u8)>>,
+    /// Per-thread, per-endpoint cacheline of the payload buffer.
+    buf_cacheline: Vec<Vec<u64>>,
+    /// Rank (process) of each thread, when the workload models an MPI
+    /// library: threads of one rank serialize on rank-wide progress state
+    /// (request pool bookkeeping) even with fully independent endpoints —
+    /// the §VII "processes perform better than threads" effect.
+    thread_rank: Option<Vec<u32>>,
+    /// One progress-state atomic per rank.
+    rank_atomic: Vec<SimAtomic>,
+    /// Signaled-completion latencies (ns), sampled across all threads
+    /// (every 8th signal — keeps the percentile estimate while staying
+    /// off the hot path).
+    latencies: crate::sim::stats::Sample,
+    lat_decim: u32,
+}
+
+impl Runner {
+    /// One endpoint per thread (the §IV benchmark shape).
+    pub fn new(fabric: &Fabric, threads: &[ThreadEndpoint], cfg: MsgRateConfig) -> Self {
+        let multi: Vec<Vec<ThreadEndpoint>> = threads.iter().map(|t| vec![*t]).collect();
+        Self::new_multi(fabric, &multi, cfg)
+    }
+
+    /// Several endpoints per thread, posted round-robin; all of a thread's
+    /// endpoints must complete into the same CQ.
+    pub fn new_multi(fabric: &Fabric, threads: &[Vec<ThreadEndpoint>], cfg: MsgRateConfig) -> Self {
+        let c = cfg.cost;
+        let active: Vec<QpId> =
+            threads.iter().flat_map(|eps| eps.iter().map(|t| t.qp)).collect();
+        let nic = Nic::new(fabric, c, &active);
+
+        // Sharing degrees (threads per QP / per CQ).
+        let mut qp_sharers = vec![0u32; fabric.qps.len()];
+        let mut cq_sharers = vec![0u32; fabric.cqs.len()];
+        for eps in threads {
+            assert!(!eps.is_empty(), "thread without endpoints");
+            let cq = eps[0].cq;
+            for t in eps {
+                assert_eq!(t.cq, cq, "a thread's endpoints must share one CQ");
+                qp_sharers[t.qp.index()] += 1;
+            }
+            cq_sharers[cq.index()] += 1;
+        }
+
+        // Locks.
+        let mut qp_locks = Vec::with_capacity(fabric.qps.len());
+        let mut qp_bf_ok = Vec::with_capacity(fabric.qps.len());
+        for qp in &fabric.qps {
+            qp_locks.push(if qp.lock_enabled {
+                SimLock::new(c.lock_uncontended, c.lock_handoff)
+            } else {
+                SimLock::disabled()
+            });
+            qp_bf_ok.push(fabric.uuar_of(qp.id).allows_blueflame());
+        }
+        let cq_locks: Vec<SimLock> = fabric
+            .cqs
+            .iter()
+            .map(|cq| {
+                if cq.single_threaded {
+                    SimLock::disabled()
+                } else {
+                    SimLock::new(c.lock_uncontended, c.lock_handoff)
+                }
+            })
+            .collect();
+
+        // uUAR locks for medium-latency uUARs (multiple QPs, BlueFlame
+        // needs serialization — Appendix B).
+        let mut uuar_locks = HashMap::new();
+        let mut qp_uuar_key = vec![None; fabric.qps.len()];
+        for qp in &fabric.qps {
+            let u = fabric.uuar_of(qp.id);
+            if u.needs_lock() {
+                let key = (qp.ctx.0, qp.uuar.page, qp.uuar.slot);
+                uuar_locks
+                    .entry(key)
+                    .or_insert_with(|| SimLock::new(c.lock_uncontended, c.lock_handoff));
+                qp_uuar_key[qp.id.index()] = Some(key);
+            }
+        }
+
+        // Per-thread effective parameters + state.
+        let f = cfg.features;
+        let mut tstates = Vec::with_capacity(threads.len());
+        for eps in threads {
+            let x = eps.iter().map(|t| qp_sharers[t.qp.index()]).max().unwrap().max(1);
+            let window = (cfg.qp_depth / x).max(1);
+            // Clamp p and q to the window and keep the window a multiple
+            // of the post-call size (perftest posts whole lists).
+            let postlist = f.postlist.min(window).max(1);
+            let window = window - window % postlist;
+            let signal_every = f.unsignaled.min(window).max(1);
+            let use_blueflame =
+                f.blueflame && postlist == 1 && eps.iter().all(|t| qp_bf_ok[t.qp.index()]);
+            let eff = Effective {
+                window,
+                postlist,
+                signal_every,
+                use_blueflame,
+                signals_per_iter: (window / signal_every).max(1),
+            };
+            let iters = cfg.msgs_per_thread.max(1).div_ceil(window as u64);
+            tstates.push(ThreadState {
+                eps: eps.clone(),
+                cq: eps[0].cq,
+                eff,
+                phase: Phase::Post { batch: 0 },
+                posted: 0,
+                credits: 0,
+                credit_target: 0,
+                msgs_total: iters * window as u64,
+            });
+        }
+
+        let cq_arrivals = vec![std::collections::BinaryHeap::new(); fabric.cqs.len()];
+
+        let buf_cacheline = threads
+            .iter()
+            .map(|eps| eps.iter().map(|t| fabric.buf(t.buf).cacheline()).collect())
+            .collect();
+
+        Self {
+            cfg,
+            nic,
+            threads: tstates,
+            qp_locks,
+            qp_depth_atomic: (0..fabric.qps.len())
+                .map(|_| SimAtomic::new(c.atomic_base, c.atomic_bounce))
+                .collect(),
+            qp_sharers,
+            cq_locks,
+            cq_sharers,
+            cq_arrivals,
+            sig_buf: Vec::new(),
+            got_buf: Vec::new(),
+            credit_atomic: (0..threads.len())
+                .map(|_| SimAtomic::new(c.atomic_base, c.atomic_bounce))
+                .collect(),
+            uuar_locks,
+            qp_uuar_key,
+            buf_cacheline,
+            thread_rank: None,
+            rank_atomic: Vec::new(),
+            latencies: crate::sim::stats::Sample::new(),
+            lat_decim: 0,
+        }
+    }
+
+    /// Group threads into MPI ranks: each post call additionally touches
+    /// its rank's shared progress state (an atomic on a rank-wide
+    /// cacheline). Call before [`Runner::run`].
+    pub fn set_rank_groups(&mut self, ranks: &[u32]) {
+        assert_eq!(ranks.len(), self.threads.len());
+        let c = self.cfg.cost;
+        let nranks = ranks.iter().max().map(|m| m + 1).unwrap_or(0);
+        self.rank_atomic = (0..nranks)
+            .map(|_| SimAtomic::new(c.progress_atomic_base, c.progress_atomic_bounce))
+            .collect();
+        self.thread_rank = Some(ranks.to_vec());
+    }
+
+    /// Run to completion and report.
+    pub fn run(mut self) -> MsgRateResult {
+        let n = self.threads.len() as u32;
+        let done = Scheduler::new(n).run(|tid, now| self.step(tid, now));
+        let duration = *done.iter().max().unwrap_or(&0);
+        let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
+        let secs = to_secs(duration.max(1));
+        MsgRateResult {
+            messages,
+            duration,
+            mmsgs_per_sec: messages as f64 / secs / 1e6,
+            thread_done: done,
+            pcie: self.nic.counters,
+            pcie_read_rate: self.nic.counters.read_rate(duration.max(1)),
+            p50_latency_ns: self.latencies.percentile(50.0),
+            p99_latency_ns: self.latencies.percentile(99.0),
+        }
+    }
+
+    fn step(&mut self, tid: u32, now: Time) -> Step {
+        let ti = tid as usize;
+        match self.threads[ti].phase {
+            Phase::Post { batch } => self.step_post(ti, now, batch),
+            Phase::Poll => self.step_poll(ti, now),
+        }
+    }
+
+    /// One `ibv_post_send` call of `p_eff` WQEs.
+    fn step_post(&mut self, ti: usize, now: Time, batch: u32) -> Step {
+        let c = self.cfg.cost;
+        let t = &self.threads[ti];
+        let eff = t.eff;
+        let tid = ti as u32;
+        let p = eff.postlist;
+        // Round-robin over the thread's endpoints per post call.
+        let ep_idx = ((t.posted / p as u64) % t.eps.len() as u64) as usize;
+        let ep = t.eps[ep_idx];
+        let qp = ep.qp;
+        let qi = qp.index();
+        let shared_qp = self.qp_sharers[qi] > 1 || self.cfg.force_shared_qp_path;
+        let inline = self.cfg.features.inlining && self.cfg.msg_size <= 60;
+        let cacheline = self.buf_cacheline[ti][ep_idx];
+
+        // CPU work under the QP lock: WQE preparation (+ inline copy),
+        // depth reservation, doorbell.
+        let prep: Time = p as u64 * (c.wqe_prep + if shared_qp { c.shared_qp_branch } else { 0 })
+            + if inline { p as u64 * self.cfg.msg_size as u64 * c.inline_per_byte } else { 0 };
+
+        // Level-3 sharing: distinct QPs on one medium-latency uUAR
+        // serialize their BlueFlame writes with the uUAR lock. (A shared
+        // QP's own lock already covers the BlueFlame write, §V: "The lock
+        // on the QP also protects concurrent BlueFlame writes".)
+        let uuar_key = self.qp_uuar_key[qi].filter(|_| eff.use_blueflame);
+
+        // Destructure so the lock, the NIC and the atomics borrow
+        // disjoint fields (no swaps on the hot path).
+        let Runner { qp_locks, uuar_locks, nic, qp_depth_atomic, .. } = self;
+        let mut uuar_lock = uuar_key.map(|k| uuar_locks.get_mut(&k).unwrap());
+        let depth_atomic = &mut qp_depth_atomic[qi];
+
+        let release = qp_locks[qi].scope(now, tid, |start| {
+            let mut tt = start + prep;
+            if shared_qp {
+                tt = depth_atomic.rmw(tt, tid);
+            }
+            // Ring: BlueFlame (64 B PIO WQE) or plain 8 B DoorBell. The
+            // write drains through the UAR page's register port.
+            if eff.use_blueflame {
+                tt += c.blueflame_write;
+                match uuar_lock.as_mut() {
+                    Some(l) => l.scope(tt, tid, |s| nic.cpu_ring(s, qp, true, tid)),
+                    None => nic.cpu_ring(tt, qp, true, tid),
+                }
+            } else {
+                tt += c.doorbell_mmio;
+                nic.cpu_ring(tt, qp, false, tid)
+            }
+        });
+        // Rank-wide progress bookkeeping (MPI-library workloads only).
+        let release = match &self.thread_rank {
+            Some(ranks) => self.rank_atomic[ranks[ti] as usize].rmw(release, tid),
+            None => release,
+        };
+
+        // NIC-side pipeline from the accepted doorbell.
+        let base_idx = self.threads[ti].posted;
+        self.sig_buf.clear();
+        for i in 0..p {
+            if (base_idx + i as u64 + 1) % eff.signal_every as u64 == 0 {
+                self.sig_buf.push(i);
+            }
+        }
+        let completions = self.nic.process_batch(
+            release,
+            qp,
+            p,
+            inline,
+            eff.use_blueflame,
+            cacheline,
+            self.cfg.msg_size,
+            &self.sig_buf,
+        );
+        let cq = self.threads[ti].cq;
+        let heap = &mut self.cq_arrivals[cq.index()];
+        for ct in completions {
+            self.lat_decim = self.lat_decim.wrapping_add(1);
+            if self.lat_decim % 8 == 0 {
+                self.latencies.add(crate::sim::to_ns(ct.saturating_sub(now)));
+            }
+            heap.push(std::cmp::Reverse((ct, tid)));
+        }
+
+        // Advance thread state.
+        let t = &mut self.threads[ti];
+        t.posted += p as u64;
+        let batches_per_iter = eff.window / p;
+        if batch + 1 < batches_per_iter {
+            t.phase = Phase::Post { batch: batch + 1 };
+        } else {
+            t.credit_target += eff.signals_per_iter as u64;
+            t.phase = Phase::Poll;
+        }
+        Step::Resume(release)
+    }
+
+    /// One `ibv_poll_cq` call for up to `c = window/q` CQEs.
+    fn step_poll(&mut self, ti: usize, now: Time) -> Step {
+        let cost = self.cfg.cost;
+        let tid = ti as u32;
+        let t = &self.threads[ti];
+        let eff = t.eff;
+        let cq = t.cq;
+
+        // Iteration (or run) already satisfied by another poller?
+        if t.credits >= t.credit_target {
+            return self.next_iteration(ti, now);
+        }
+
+        // An MPI_THREAD_MULTIPLE library's completion path does atomic
+        // counter updates even when a single thread polls (§VII).
+        let shared_cq = self.cq_sharers[cq.index()] > 1 || self.cfg.force_shared_qp_path;
+        let heap = &mut self.cq_arrivals[cq.index()];
+        // Nothing visible yet: sleep until the next arrival. (Arrivals are
+        // pushed at post time, so an empty heap with unmet credits cannot
+        // happen — our outstanding CQEs are either queued or were consumed
+        // and credited by another poller, which the check above catches.)
+        match heap.peek() {
+            None => panic!("poll with empty CQ and unmet credits (thread {tid})"),
+            Some(&std::cmp::Reverse((arr, _))) if arr > now => {
+                return Step::Resume(arr);
+            }
+            _ => {}
+        }
+
+        // Read up to c CQEs under the CQ lock.
+        let cmax = (eff.window / eff.signal_every).max(1);
+        let got = &mut self.got_buf;
+        got.clear();
+        while got.len() < cmax as usize {
+            match heap.peek() {
+                Some(&std::cmp::Reverse((arr, owner))) if arr <= now => {
+                    heap.pop();
+                    got.push((arr, owner));
+                }
+                _ => break,
+            }
+        }
+
+        let Runner { cq_locks, credit_atomic, got_buf, .. } = self;
+        let got = &*got_buf;
+        let ngot = got.len();
+        let release = cq_locks[cq.index()].scope(now, tid, |start| {
+            let mut tt = start + cost.cq_poll_base + ngot as u64 * cost.cq_poll_per_cqe;
+            if shared_cq {
+                // Atomic credit update per CQE; bounces when crediting
+                // another thread's counter (§V-E).
+                for &(_, owner) in got.iter() {
+                    tt = credit_atomic[owner as usize].rmw(tt, tid);
+                }
+            }
+            tt
+        });
+        for i in 0..ngot {
+            let owner = self.got_buf[i].1;
+            self.threads[owner as usize].credits += 1;
+        }
+
+        let t = &mut self.threads[ti];
+        if t.credits >= t.credit_target {
+            self.next_iteration(ti, release)
+        } else {
+            t.phase = Phase::Poll;
+            Step::Resume(release)
+        }
+    }
+
+    fn next_iteration(&mut self, ti: usize, now: Time) -> Step {
+        let t = &mut self.threads[ti];
+        if t.posted >= t.msgs_total {
+            Step::Done(now)
+        } else {
+            t.phase = Phase::Post { batch: 0 };
+            Step::Resume(now)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::{Category, EndpointBuilder};
+
+    fn run_category(cat: Category, n: u32, features: Features) -> MsgRateResult {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        let cfg = MsgRateConfig { features, msgs_per_thread: 4096, ..Default::default() };
+        Runner::new(&f, &set.threads, cfg).run()
+    }
+
+    #[test]
+    fn single_thread_rate_in_hardware_ballpark() {
+        let r = run_category(Category::MpiEverywhere, 1, Features::all());
+        assert!(
+            r.mmsgs_per_sec > 4.0 && r.mmsgs_per_sec < 40.0,
+            "1-thread rate {} Mmsg/s out of ballpark",
+            r.mmsgs_per_sec
+        );
+    }
+
+    #[test]
+    fn independent_endpoints_scale_with_threads() {
+        let r1 = run_category(Category::MpiEverywhere, 1, Features::all());
+        let r16 = run_category(Category::MpiEverywhere, 16, Features::all());
+        let speedup = r16.mmsgs_per_sec / r1.mmsgs_per_sec;
+        assert!(speedup > 8.0, "16-thread speedup only {speedup:.2}x");
+    }
+
+    #[test]
+    fn shared_qp_is_many_times_slower() {
+        // Fig 2b / §IX: multiple threads on one QP perform up to 7x worse.
+        let every = run_category(Category::MpiEverywhere, 16, Features::all());
+        let shared = run_category(Category::MpiThreads, 16, Features::all());
+        let ratio = every.mmsgs_per_sec / shared.mmsgs_per_sec;
+        assert!(ratio > 4.0, "MPI-everywhere/MPI+threads ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run_category(Category::Dynamic, 8, Features::all());
+        let b = run_category(Category::Dynamic, 8, Features::all());
+        assert_eq!(a.duration, b.duration);
+        assert_eq!(a.messages, b.messages);
+    }
+
+    #[test]
+    fn all_messages_complete() {
+        let r = run_category(Category::Static, 16, Features::all());
+        assert_eq!(r.messages, 16 * 4096);
+        assert!(r.thread_done.iter().all(|&d| d > 0));
+    }
+
+    #[test]
+    fn latency_percentiles_reported() {
+        let r = run_category(Category::Dynamic, 4, Features::conservative());
+        assert!(r.p50_latency_ns > 0.0 && r.p50_latency_ns.is_finite());
+        assert!(r.p99_latency_ns >= r.p50_latency_ns);
+        // Conservative (p=1, BlueFlame) completion latency should be a
+        // couple of microseconds: pipeline + wire RTT + CQE write.
+        assert!(
+            r.p50_latency_ns > 500.0 && r.p50_latency_ns < 20_000.0,
+            "p50 {} ns",
+            r.p50_latency_ns
+        );
+        // Contended shared-QP latencies are far worse.
+        let shared = run_category(Category::MpiThreads, 16, Features::conservative());
+        assert!(shared.p50_latency_ns > r.p50_latency_ns);
+    }
+
+    #[test]
+    fn multi_endpoint_round_robin() {
+        // A thread with two QPs into one CQ (stencil shape) completes.
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Default::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 256).unwrap();
+        let q0 = f.create_qp(pd, cq, Default::default(), None).unwrap();
+        let q1 = f.create_qp(pd, cq, Default::default(), None).unwrap();
+        let b0 = f.declare_buf(0x1000, 2);
+        let b1 = f.declare_buf(0x1040, 2);
+        let mr = f.reg_mr(pd, 0x1000, 0x80).unwrap();
+        let eps = vec![vec![
+            ThreadEndpoint { qp: q0, cq, buf: b0, mr },
+            ThreadEndpoint { qp: q1, cq, buf: b1, mr },
+        ]];
+        let cfg = MsgRateConfig { msgs_per_thread: 2048, ..Default::default() };
+        let r = Runner::new_multi(&f, &eps, cfg).run();
+        assert_eq!(r.messages, 2048);
+        assert!(r.mmsgs_per_sec > 1.0);
+    }
+
+    #[test]
+    fn forced_shared_path_costs_something() {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(Category::MpiThreads, 1).build(&mut f).unwrap();
+        let base = Runner::new(
+            &f,
+            &set.threads,
+            MsgRateConfig { msgs_per_thread: 4096, features: Features::conservative(), ..Default::default() },
+        )
+        .run();
+        let forced = Runner::new(
+            &f,
+            &set.threads,
+            MsgRateConfig {
+                msgs_per_thread: 4096,
+                features: Features::conservative(),
+                force_shared_qp_path: true,
+                ..Default::default()
+            },
+        )
+        .run();
+        assert!(forced.duration > base.duration);
+    }
+}

@@ -1,0 +1,314 @@
+//! Topology builders for the §V resource-sharing analysis.
+//!
+//! Each §V subsection shares exactly one resource `x`-ways between 16
+//! threads while keeping everything else at the naïve-endpoint baseline
+//! (one TD-assigned QP per thread). "8-way sharing means the resource is
+//! shared between 8 threads (two instances of the shared resource)."
+
+use crate::endpoints::ThreadEndpoint;
+use crate::mlx5::Mlx5Env;
+use crate::verbs::error::Result;
+use crate::verbs::types::{QpCaps, TdInitAttr};
+use crate::verbs::Fabric;
+
+/// Which verbs (or non-IB) resource the sweep shares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedResource {
+    /// §V-A: the payload buffer.
+    Buf,
+    /// §V-B: the device context, with maximally independent TDs.
+    Ctx,
+    /// §V-B variant: CTX sharing with 2x TDs, using only the even ones.
+    CtxTwoXQps,
+    /// §V-B variant: CTX sharing with `sharing=2` TDs (mlx5's hardcoded
+    /// level-2 assignment).
+    CtxSharing2,
+    /// §V-C: the protection domain (within one shared CTX).
+    Pd,
+    /// §V-D: the memory region (independent cache-aligned BUFs inside).
+    Mr,
+    /// §V-E: the completion queue (within one shared CTX).
+    Cq,
+    /// §V-F: the queue pair itself.
+    Qp,
+}
+
+impl SharedResource {
+    pub fn label(self) -> &'static str {
+        match self {
+            SharedResource::Buf => "BUF",
+            SharedResource::Ctx => "CTX",
+            SharedResource::CtxTwoXQps => "CTX (2xQPs)",
+            SharedResource::CtxSharing2 => "CTX (Sharing 2)",
+            SharedResource::Pd => "PD",
+            SharedResource::Mr => "MR",
+            SharedResource::Cq => "CQ",
+            SharedResource::Qp => "QP",
+        }
+    }
+}
+
+/// An `x`-way sharing topology over `nthreads` threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SharingSpec {
+    pub resource: SharedResource,
+    pub ways: u32,
+    pub nthreads: u32,
+    pub qp_caps: QpCaps,
+    pub cq_depth: u32,
+    pub msg_size: u32,
+    /// Cache-align independent buffers (Fig 6 sets this false).
+    pub cache_aligned: bool,
+}
+
+impl SharingSpec {
+    pub fn new(resource: SharedResource, ways: u32, nthreads: u32) -> Self {
+        assert!(ways >= 1 && nthreads % ways == 0, "x must divide the thread count");
+        Self {
+            resource,
+            ways,
+            nthreads,
+            qp_caps: QpCaps::default(),
+            cq_depth: 64,
+            msg_size: 2,
+            cache_aligned: true,
+        }
+    }
+
+    /// Build the topology; returns the fabric and one endpoint per thread.
+    pub fn build(&self) -> Result<(Fabric, Vec<ThreadEndpoint>)> {
+        let mut f = Fabric::connectx4();
+        let n = self.nthreads;
+        let x = self.ways;
+        let groups = n / x;
+        let mut eps: Vec<ThreadEndpoint> = Vec::with_capacity(n as usize);
+
+        // Buffer layout: independent per-thread cachelines by default.
+        let buf_base = 0x40_0000u64;
+        let buf_addr = |i: u32| {
+            if self.cache_aligned {
+                buf_base + i as u64 * 64
+            } else {
+                buf_base + i as u64 * self.msg_size as u64
+            }
+        };
+
+        match self.resource {
+            SharedResource::Buf => {
+                // Naïve endpoints, BUF shared x-way: threads in one group
+                // point their WQEs at the same address (§V-A).
+                for i in 0..n {
+                    let ctx = f.open_ctx(Mlx5Env::default())?;
+                    let pd = f.alloc_pd(ctx)?;
+                    let cq = f.create_cq(ctx, self.cq_depth)?;
+                    let td = f.alloc_td(ctx, TdInitAttr::independent())?;
+                    let qp = f.create_qp(pd, cq, self.qp_caps, Some(td))?;
+                    let shared_addr = buf_addr((i / x) * x);
+                    let buf = f.declare_buf(shared_addr, self.msg_size as u64);
+                    let mr = f.reg_mr(pd, shared_addr, self.msg_size as u64)?;
+                    eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            SharedResource::Ctx | SharedResource::CtxTwoXQps | SharedResource::CtxSharing2 => {
+                for g in 0..groups {
+                    let ctx = f.open_ctx(Mlx5Env::default())?;
+                    let pd = f.alloc_pd(ctx)?;
+                    let (attr, stride) = match self.resource {
+                        SharedResource::CtxTwoXQps => (TdInitAttr::independent(), 2),
+                        SharedResource::CtxSharing2 => (TdInitAttr::paired(), 1),
+                        _ => (TdInitAttr::independent(), 1),
+                    };
+                    let mut group_eps = Vec::new();
+                    for _ in 0..(x * stride) {
+                        let td = f.alloc_td(ctx, attr)?;
+                        let cq = f.create_cq(ctx, self.cq_depth)?;
+                        let qp = f.create_qp(pd, cq, self.qp_caps, Some(td))?;
+                        group_eps.push((qp, cq));
+                    }
+                    for k in 0..x {
+                        let i = g * x + k;
+                        let (qp, cq) = group_eps[(k * stride) as usize];
+                        let addr = buf_addr(i);
+                        let buf = f.declare_buf(addr, self.msg_size as u64);
+                        let mr = f.reg_mr(pd, addr, self.msg_size as u64)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+            }
+            SharedResource::Pd | SharedResource::Mr => {
+                // One shared CTX (a PD/MR can only be shared within a
+                // CTX, §V-C); vary only how many PDs/MRs exist.
+                let ctx = f.open_ctx(Mlx5Env::default())?;
+                let shared_pd = self.resource == SharedResource::Pd;
+                // PD sweep: one PD per group. MR sweep: one PD holding
+                // one MR per group, each spanning x cache-aligned BUFs.
+                let pds: Vec<_> = if shared_pd {
+                    (0..groups).map(|_| f.alloc_pd(ctx)).collect::<Result<_>>()?
+                } else {
+                    vec![f.alloc_pd(ctx)?]
+                };
+                let one_pd = pds[0];
+                let mut group_mr = Vec::new();
+                if self.resource == SharedResource::Mr {
+                    for g in 0..groups {
+                        let base = buf_addr(g * x);
+                        group_mr.push(f.reg_mr(one_pd, base, x as u64 * 64)?);
+                    }
+                }
+                for i in 0..n {
+                    let g = i / x;
+                    let pd = if shared_pd { pds[g as usize] } else { one_pd };
+                    let td = f.alloc_td(ctx, TdInitAttr::independent())?;
+                    let cq = f.create_cq(ctx, self.cq_depth)?;
+                    let qp = f.create_qp(pd, cq, self.qp_caps, Some(td))?;
+                    let addr = buf_addr(i);
+                    let buf = f.declare_buf(addr, self.msg_size as u64);
+                    let mr = if shared_pd {
+                        f.reg_mr(pd, addr, self.msg_size as u64)?
+                    } else {
+                        group_mr[g as usize]
+                    };
+                    eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            SharedResource::Cq => {
+                // One shared CTX; x QPs complete into one CQ (§V-E).
+                let ctx = f.open_ctx(Mlx5Env::default())?;
+                let pd = f.alloc_pd(ctx)?;
+                for g in 0..groups {
+                    let cq = f.create_cq(ctx, self.cq_depth.max(2 * x))?;
+                    for k in 0..x {
+                        let i = g * x + k;
+                        let td = f.alloc_td(ctx, TdInitAttr::independent())?;
+                        let qp = f.create_qp(pd, cq, self.qp_caps, Some(td))?;
+                        let addr = buf_addr(i);
+                        let buf = f.declare_buf(addr, self.msg_size as u64);
+                        let mr = f.reg_mr(pd, addr, self.msg_size as u64)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+            }
+            SharedResource::Qp => {
+                // One shared CTX; x threads drive one QP (§V-F). Shared
+                // QPs cannot be TD-assigned (no single-thread guarantee).
+                let ctx = f.open_ctx(Mlx5Env::default())?;
+                let pd = f.alloc_pd(ctx)?;
+                for g in 0..groups {
+                    let cq = f.create_cq(ctx, self.cq_depth.max(2 * x))?;
+                    let qp = f.create_qp(pd, cq, self.qp_caps, None)?;
+                    for k in 0..x {
+                        let i = g * x + k;
+                        let addr = buf_addr(i);
+                        let buf = f.declare_buf(addr, self.msg_size as u64);
+                        let mr = f.reg_mr(pd, addr, self.msg_size as u64)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+            }
+        }
+        Ok((f, eps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::ResourceUsage;
+
+    #[test]
+    fn buf_sharing_shares_cachelines() {
+        let (f, eps) = SharingSpec::new(SharedResource::Buf, 4, 16).build().unwrap();
+        let lines: std::collections::HashSet<u64> =
+            eps.iter().map(|t| f.buf(t.buf).cacheline()).collect();
+        assert_eq!(lines.len(), 4);
+        // BUF sharing does not change any communication-resource count
+        // (§V-A): 16 QPs, 16 CQs regardless of x.
+        let u = ResourceUsage::of_fabric(&f);
+        assert_eq!((u.qps, u.cqs), (16, 16));
+    }
+
+    #[test]
+    fn ctx_sharing_reduces_uars() {
+        let u = |ways| {
+            let (f, _) = SharingSpec::new(SharedResource::Ctx, ways, 16).build().unwrap();
+            ResourceUsage::of_fabric(&f)
+        };
+        // 1-way: 16 CTXs x (8 static + 1 dynamic) = 144 UARs (Fig 3: the
+        // naive approach's UAR usage grows 9x vs threads).
+        assert_eq!(u(1).uars_allocated, 144);
+        // 16-way: 1 CTX x (8 + 16) = 24 UARs (Fig 7 right panel).
+        assert_eq!(u(16).uars_allocated, 24);
+        assert_eq!(u(16).ctxs, 1);
+    }
+
+    #[test]
+    fn ctx_2xqps_uses_even_tds() {
+        let (f, eps) = SharingSpec::new(SharedResource::CtxTwoXQps, 16, 16).build().unwrap();
+        // 32 TDs allocated, threads on every other page -> 16 distinct
+        // pages with a gap between consecutive ones.
+        let mut pages: Vec<u32> =
+            eps.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 16);
+        for w in pages.windows(2) {
+            assert!(w[1] - w[0] >= 2, "even TDs leave a page gap");
+        }
+    }
+
+    #[test]
+    fn sharing2_pairs_on_pages() {
+        let (f, eps) = SharingSpec::new(SharedResource::CtxSharing2, 16, 16).build().unwrap();
+        let mut pages: Vec<u32> =
+            eps.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 8);
+    }
+
+    #[test]
+    fn pd_mr_sharing_leaves_hw_untouched() {
+        for res in [SharedResource::Pd, SharedResource::Mr] {
+            let base = {
+                let (f, _) = SharingSpec::new(res, 1, 16).build().unwrap();
+                ResourceUsage::of_fabric(&f)
+            };
+            let shared = {
+                let (f, _) = SharingSpec::new(res, 16, 16).build().unwrap();
+                ResourceUsage::of_fabric(&f)
+            };
+            assert_eq!(base.uars_allocated, shared.uars_allocated, "{res:?}");
+            assert_eq!(base.uuars_allocated, shared.uuars_allocated, "{res:?}");
+            assert_eq!(base.qps, shared.qps, "{res:?}");
+            assert_eq!(base.cqs, shared.cqs, "{res:?}");
+        }
+    }
+
+    #[test]
+    fn cq_sharing_reduces_cqs_only() {
+        let u = |ways| {
+            let (f, _) = SharingSpec::new(SharedResource::Cq, ways, 16).build().unwrap();
+            ResourceUsage::of_fabric(&f)
+        };
+        assert_eq!(u(1).cqs, 16);
+        assert_eq!(u(16).cqs, 1);
+        assert_eq!(u(1).qps, u(16).qps);
+        assert_eq!(u(1).uars_allocated, u(16).uars_allocated);
+    }
+
+    #[test]
+    fn qp_sharing_reduces_qps_and_cqs() {
+        let u = |ways| {
+            let (f, _) = SharingSpec::new(SharedResource::Qp, ways, 16).build().unwrap();
+            ResourceUsage::of_fabric(&f)
+        };
+        assert_eq!((u(1).qps, u(1).cqs), (16, 16));
+        assert_eq!((u(16).qps, u(16).cqs), (1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn invalid_ways_rejected() {
+        SharingSpec::new(SharedResource::Qp, 3, 16);
+    }
+}

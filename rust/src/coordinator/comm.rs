@@ -1,0 +1,278 @@
+//! The communicator: nodes, ranks, endpoints, and timed phases.
+
+use crate::bench::{MsgRateConfig, MsgRateResult, Runner};
+use crate::endpoints::{Category, EndpointBuilder, EndpointSet, ResourceUsage, ThreadEndpoint};
+use crate::verbs::error::Result;
+use crate::verbs::{Fabric, Opcode, QueueState, Wqe};
+
+use super::job::Job;
+use super::rma::{Memory, Window};
+
+/// One simulated host: a NIC fabric plus the ranks placed on it.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    pub fabric: Fabric,
+    pub ranks: Vec<u32>,
+    /// Functional send/completion queues over the fabric.
+    pub queues: QueueState,
+}
+
+/// A rank's communication state.
+#[derive(Debug, Clone)]
+pub struct RankComm {
+    pub rank: u32,
+    pub node: u32,
+    /// Endpoint set built per the job's category (one QP per thread).
+    pub set: EndpointSet,
+}
+
+/// The launched job: every rank wired up, one fabric per node.
+pub struct Universe {
+    pub job: Job,
+    pub nodes: Vec<NodeState>,
+    pub ranks: Vec<RankComm>,
+    /// Per-rank functional memory for RMA.
+    pub memories: Vec<Memory>,
+}
+
+impl Universe {
+    /// Materialize a job: build per-rank endpoint sets by category and
+    /// connect consecutive ranks' QPs ring-wise (the apps re-connect as
+    /// they need; connections model RC pairing).
+    pub fn launch(job: Job, rank_mem_bytes: usize) -> Result<Self> {
+        let mut nodes = Vec::with_capacity(job.nodes as usize);
+        let mut ranks = Vec::new();
+        let mut memories = Vec::new();
+        for n in 0..job.nodes {
+            let mut fabric = Fabric::connectx4();
+            let mut node_ranks = Vec::new();
+            for r in 0..job.spec.ranks_per_node {
+                let rank = n * job.spec.ranks_per_node + r;
+                let mut builder = EndpointBuilder::new(job.category, job.spec.threads_per_rank);
+                // RMA staging region per thread: large enough that reads
+                // land inside the registered MR (writes <= 60 B inline).
+                builder.msg_size = 4096;
+                let set = builder.build(&mut fabric)?;
+                ranks.push(RankComm { rank, node: n, set });
+                memories.push(Memory::new(rank_mem_bytes));
+                node_ranks.push(rank);
+            }
+            // Bring every endpoint QP to RTS (RESET->INIT->RTR->RTS); the
+            // remote side lives in the peer node's fabric, so pairing is
+            // by rank/thread position rather than a QP id in this arena.
+            let qps: Vec<_> = fabric.qps.iter().map(|q| q.id).collect();
+            for qp in qps {
+                use crate::verbs::QpState::*;
+                fabric.modify_qp(qp, Init)?;
+                fabric.modify_qp(qp, Rtr)?;
+                fabric.modify_qp(qp, Rts)?;
+            }
+            let queues = QueueState::for_fabric(&fabric);
+            nodes.push(NodeState { fabric, ranks: node_ranks, queues });
+        }
+        Ok(Self { job, nodes, ranks, memories })
+    }
+
+    /// One-sided RDMA through the verbs queues: thread `thread` of rank
+    /// `src` posts a write/read WQE on its QP, the simulated NIC retires
+    /// it, the payload moves between the rank memories, and the CQE is
+    /// polled. Returns the completion record count (1 on success).
+    pub fn rma(
+        &mut self,
+        src: u32,
+        thread: usize,
+        op: Opcode,
+        local_off: usize,
+        dst_win: Window,
+        dst_off: usize,
+        len: u32,
+    ) -> Result<usize> {
+        let rc = &self.ranks[src as usize];
+        let node = rc.node as usize;
+        let ep = rc.set.threads[thread];
+        let laddr = self.nodes[node].fabric.buf(ep.buf).addr + local_off as u64;
+        let wqe = Wqe {
+            wr_id: (src as u64) << 32 | thread as u64,
+            opcode: op,
+            laddr,
+            raddr: (dst_win.base + dst_off) as u64,
+            len,
+            signaled: true,
+            inline: matches!(op, Opcode::RdmaWrite) && len <= 60,
+        };
+        // Scratch staging keyed by laddr emulates the pinned local buffer.
+        let (fabric, queues) = {
+            let n = &mut self.nodes[node];
+            (&n.fabric, &mut n.queues)
+        };
+        queues.post_send(fabric, ep.qp, std::slice::from_ref(&wqe))?;
+        let retired = queues.retire_all(fabric, ep.qp)?;
+        for w in &retired {
+            match w.opcode {
+                Opcode::RdmaWrite => {
+                    let data =
+                        self.memories[src as usize].read(local_off, w.len as usize).to_vec();
+                    self.memories[dst_win.rank as usize]
+                        .write(w.raddr as usize, &data);
+                }
+                Opcode::RdmaRead => {
+                    let data = self.memories[dst_win.rank as usize]
+                        .read(w.raddr as usize, w.len as usize)
+                        .to_vec();
+                    self.memories[src as usize].write(local_off, &data);
+                }
+            }
+        }
+        let n = &mut self.nodes[node];
+        let cqes = n.queues.poll_cq(&n.fabric, ep.cq, 16)?;
+        Ok(cqes.len())
+    }
+
+    pub fn nranks(&self) -> u32 {
+        self.ranks.len() as u32
+    }
+
+    /// Expose `[base, base+len)` of a rank's memory as an RMA window.
+    pub fn window(&self, rank: u32, base: usize, len: usize) -> Window {
+        assert!(base + len <= self.memories[rank as usize].len(), "window out of bounds");
+        Window { rank, base, len }
+    }
+
+    /// One-sided put: copy `data` into `win` at `off`. (Functional data
+    /// movement; the DES phases account the time separately.)
+    pub fn put(&mut self, win: Window, off: usize, data: &[u8]) {
+        assert!(win.contains(off, data.len()), "put out of window bounds");
+        self.memories[win.rank as usize].write(win.base + off, data);
+    }
+
+    /// One-sided get: read `len` bytes from `win` at `off`.
+    pub fn get(&self, win: Window, off: usize, len: usize) -> Vec<u8> {
+        assert!(win.contains(off, len), "get out of window bounds");
+        self.memories[win.rank as usize].read(win.base + off, len).to_vec()
+    }
+
+    pub fn put_f32(&mut self, win: Window, off_elems: usize, xs: &[f32]) {
+        assert!(win.contains(off_elems * 4, xs.len() * 4), "put_f32 out of bounds");
+        self.memories[win.rank as usize].write_f32(win.base + off_elems * 4, xs);
+    }
+
+    pub fn get_f32(&self, win: Window, off_elems: usize, n: usize) -> Vec<f32> {
+        assert!(win.contains(off_elems * 4, n * 4), "get_f32 out of bounds");
+        self.memories[win.rank as usize].read_f32(win.base + off_elems * 4, n)
+    }
+
+    /// Time a communication phase on one node: every listed thread resolves
+    /// its endpoints against the node's fabric and the virtual-clock NIC
+    /// model runs the §IV loop with the given config.
+    pub fn time_phase(
+        &self,
+        node: u32,
+        threads: &[Vec<ThreadEndpoint>],
+        cfg: MsgRateConfig,
+    ) -> MsgRateResult {
+        Runner::new_multi(&self.nodes[node as usize].fabric, threads, cfg).run()
+    }
+
+    /// All thread endpoints of every rank on a node (one QP per thread),
+    /// in rank-major order — the common phase shape.
+    pub fn node_thread_endpoints(&self, node: u32) -> Vec<Vec<ThreadEndpoint>> {
+        let mut out = Vec::new();
+        for &r in &self.nodes[node as usize].ranks {
+            for t in &self.ranks[r as usize].set.threads {
+                out.push(vec![*t]);
+            }
+        }
+        out
+    }
+
+    /// Resource usage of one node's fabric.
+    pub fn node_resources(&self, node: u32) -> ResourceUsage {
+        ResourceUsage::of_fabric(&self.nodes[node as usize].fabric)
+    }
+
+    /// Whether the job's category takes the shared-QP code path.
+    pub fn shared_qp_code_path(&self) -> bool {
+        self.job.category == Category::MpiThreads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobSpec;
+
+    #[test]
+    fn launch_builds_ranks_and_fabrics() {
+        let job = Job::two_node(JobSpec::new(4, 4), Category::Dynamic);
+        let u = Universe::launch(job, 1 << 16).unwrap();
+        assert_eq!(u.nranks(), 8);
+        assert_eq!(u.nodes.len(), 2);
+        assert_eq!(u.nodes[0].ranks.len(), 4);
+        // Each rank has its own CTX (category built per rank).
+        let usage = u.node_resources(0);
+        assert_eq!(usage.ctxs, 4);
+        assert_eq!(usage.qps, 16);
+    }
+
+    #[test]
+    fn rma_put_get_round_trip() {
+        let job = Job::two_node(JobSpec::new(1, 2), Category::Static);
+        let mut u = Universe::launch(job, 4096).unwrap();
+        let w = u.window(1, 128, 512);
+        u.put(w, 0, &[1, 2, 3, 4]);
+        assert_eq!(u.get(w, 0, 4), vec![1, 2, 3, 4]);
+        u.put_f32(w, 4, &[2.5]);
+        assert_eq!(u.get_f32(w, 4, 1), vec![2.5]);
+    }
+
+    #[test]
+    fn timed_phase_runs() {
+        let job = Job::two_node(JobSpec::new(2, 2), Category::Dynamic);
+        let u = Universe::launch(job, 4096).unwrap();
+        let eps = u.node_thread_endpoints(0);
+        assert_eq!(eps.len(), 4);
+        let cfg = MsgRateConfig { msgs_per_thread: 1024, ..Default::default() };
+        let r = u.time_phase(0, &eps, cfg);
+        assert_eq!(r.messages, 4 * 1024);
+    }
+
+    #[test]
+    fn rma_write_and_read_through_verbs_queues() {
+        use crate::verbs::Opcode;
+        let job = Job::two_node(JobSpec::new(1, 4), Category::Dynamic);
+        let mut u = Universe::launch(job, 1 << 16).unwrap();
+        // Rank 0 thread 2 writes 16 bytes into rank 1's window.
+        u.memories[0].write(0, &[7u8; 16]);
+        let w1 = u.window(1, 256, 1024);
+        let n = u.rma(0, 2, Opcode::RdmaWrite, 0, w1, 8, 16).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(u.get(w1, 8, 16), vec![7u8; 16]);
+        // Rank 1 thread 0 reads it back into its own memory.
+        let n = u.rma(1, 0, Opcode::RdmaRead, 128, w1, 8, 16).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(u.memories[1].read(128, 16), &[7u8; 16]);
+    }
+
+    #[test]
+    fn rma_on_unconnected_state_is_guarded() {
+        use crate::verbs::Opcode;
+        // Endpoints are created RESET; rma must surface BadQpState until
+        // the app connects them — unless launch pre-connects. Verify the
+        // error path by resetting a QP first.
+        let job = Job::two_node(JobSpec::new(1, 1), Category::Static);
+        let mut u = Universe::launch(job, 4096).unwrap();
+        let qp = u.ranks[0].set.threads[0].qp;
+        u.nodes[0].fabric.modify_qp(qp, crate::verbs::QpState::Reset).unwrap();
+        let w = u.window(1, 0, 64);
+        assert!(u.rma(0, 0, Opcode::RdmaWrite, 0, w, 0, 8).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of window bounds")]
+    fn put_bounds_checked() {
+        let job = Job::two_node(JobSpec::new(1, 1), Category::Static);
+        let mut u = Universe::launch(job, 64).unwrap();
+        let w = u.window(0, 0, 8);
+        u.put(w, 6, &[0, 0, 0, 0]);
+    }
+}

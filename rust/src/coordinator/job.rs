@@ -1,0 +1,82 @@
+//! Job specification: the paper's `P.T` notation (§VII, Fig 14).
+
+use crate::endpoints::Category;
+
+/// `P.T`: P ranks per node, T threads per rank. The paper sweeps
+/// 16.1, 8.2, 4.4, 2.8, 1.16 so that `P*T = 16` hardware threads per
+/// socket are engaged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobSpec {
+    pub ranks_per_node: u32,
+    pub threads_per_rank: u32,
+}
+
+impl JobSpec {
+    pub fn new(ranks_per_node: u32, threads_per_rank: u32) -> Self {
+        assert!(ranks_per_node > 0 && threads_per_rank > 0);
+        Self { ranks_per_node, threads_per_rank }
+    }
+
+    /// Parse the paper's dotted notation, e.g. `"4.4"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (p, t) = s.split_once('.')?;
+        Some(Self::new(p.parse().ok()?, t.parse().ok()?))
+    }
+
+    /// The Fig 14 sweep for 16 hardware threads.
+    pub fn paper_sweep() -> Vec<JobSpec> {
+        vec![
+            JobSpec::new(16, 1),
+            JobSpec::new(8, 2),
+            JobSpec::new(4, 4),
+            JobSpec::new(2, 8),
+            JobSpec::new(1, 16),
+        ]
+    }
+
+    pub fn hw_threads(&self) -> u32 {
+        self.ranks_per_node * self.threads_per_rank
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}.{}", self.ranks_per_node, self.threads_per_rank)
+    }
+}
+
+/// A full job: topology split + endpoint category + node count.
+#[derive(Debug, Clone, Copy)]
+pub struct Job {
+    pub nodes: u32,
+    pub spec: JobSpec,
+    pub category: Category,
+}
+
+impl Job {
+    /// The paper's two-node testbed.
+    pub fn two_node(spec: JobSpec, category: Category) -> Self {
+        Self { nodes: 2, spec, category }
+    }
+
+    pub fn total_ranks(&self) -> u32 {
+        self.nodes * self.spec.ranks_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_dotted() {
+        assert_eq!(JobSpec::parse("16.1"), Some(JobSpec::new(16, 1)));
+        assert_eq!(JobSpec::parse("1.16"), Some(JobSpec::new(1, 16)));
+        assert_eq!(JobSpec::parse("x"), None);
+    }
+
+    #[test]
+    fn sweep_engages_16_threads() {
+        for s in JobSpec::paper_sweep() {
+            assert_eq!(s.hw_threads(), 16);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Mini MPI+threads runtime with scalable endpoints as a first-class
+//! feature.
+//!
+//! A [`Job`] describes the paper's `P.T` hybrid split (P ranks per node,
+//! T threads per rank); [`Universe::launch`] materializes it: one
+//! [`Fabric`](crate::verbs::Fabric) per node, per-rank endpoint sets built
+//! by category, RC QP connections between peers, and a byte-addressable
+//! memory per rank for RMA windows. Communication phases are timed on the
+//! virtual-clock NIC model; payloads move functionally through
+//! [`rma::Window`] so applications (e.g. the global-array DGEMM) compute
+//! on real data.
+
+pub mod comm;
+pub mod job;
+pub mod rma;
+
+pub use comm::{RankComm, Universe};
+pub use job::{Job, JobSpec};
+pub use rma::Window;

@@ -1,0 +1,83 @@
+//! RMA windows: functional one-sided data movement between rank heaps.
+//!
+//! The DES times the transfers; the window moves the actual bytes so that
+//! applications compute on real data (the global-array DGEMM validates
+//! its result numerically against the Pallas oracle).
+
+/// A byte-addressable memory exposed for one-sided access. Each rank owns
+/// one heap; a [`Window`] names a `[base, base+len)` range of it.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    bytes: Vec<u8>,
+}
+
+impl Memory {
+    pub fn new(len: usize) -> Self {
+        Self { bytes: vec![0; len] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn read(&self, off: usize, len: usize) -> &[u8] {
+        &self.bytes[off..off + len]
+    }
+
+    pub fn write(&mut self, off: usize, data: &[u8]) {
+        self.bytes[off..off + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_f32(&self, off: usize, n: usize) -> Vec<f32> {
+        self.read(off, n * 4)
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn write_f32(&mut self, off: usize, xs: &[f32]) {
+        let mut buf = Vec::with_capacity(xs.len() * 4);
+        for x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.write(off, &buf);
+    }
+}
+
+/// An RMA window over a rank's memory.
+#[derive(Debug, Clone, Copy)]
+pub struct Window {
+    /// Owning rank (global index).
+    pub rank: u32,
+    pub base: usize,
+    pub len: usize,
+}
+
+impl Window {
+    pub fn contains(&self, off: usize, len: usize) -> bool {
+        off + len <= self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let mut m = Memory::new(64);
+        m.write_f32(8, &[1.5, -2.25, 3.0]);
+        assert_eq!(m.read_f32(8, 3), vec![1.5, -2.25, 3.0]);
+    }
+
+    #[test]
+    fn window_bounds() {
+        let w = Window { rank: 0, base: 0, len: 100 };
+        assert!(w.contains(90, 10));
+        assert!(!w.contains(95, 10));
+    }
+}

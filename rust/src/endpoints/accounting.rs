@@ -1,0 +1,231 @@
+//! Resource-usage accounting — the right-hand panel of every figure.
+//!
+//! The paper counts four communication resources (QPs, CQs, UAR pages,
+//! uUARs) plus bytes of pinned/driver memory (Table I). *Allocated* counts
+//! what the driver handed out; *used* counts what at least one QP actually
+//! drives; *wasted = allocated - used* (§III: the naïve endpoint wastes
+//! 17 of its 18 uUARs, 94 %).
+
+use crate::verbs::Fabric;
+
+use super::builder::EndpointSet;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceUsage {
+    pub ctxs: u32,
+    pub qps: u32,
+    pub cqs: u32,
+    pub uars_allocated: u32,
+    pub uars_used: u32,
+    pub uuars_allocated: u32,
+    pub uuars_used: u32,
+    pub memory_bytes: u64,
+}
+
+impl ResourceUsage {
+    /// Account every live object in the fabric.
+    pub fn of_fabric(f: &Fabric) -> Self {
+        let mut u = ResourceUsage::default();
+        for ctx in f.ctxs.iter().filter(|c| c.live) {
+            u.ctxs += 1;
+            u.memory_bytes += f.mem.ctx_bytes;
+            for page in &ctx.uars {
+                u.uars_allocated += 1;
+                u.uuars_allocated += 2;
+                u.uuars_used += page.used_uuars();
+                if page.is_used() {
+                    u.uars_used += 1;
+                }
+            }
+        }
+        for qp in f.qps.iter().filter(|q| q.live) {
+            u.qps += 1;
+            u.memory_bytes += f.mem.qp_bytes(qp.caps.depth);
+        }
+        for cq in f.cqs.iter().filter(|c| c.live) {
+            u.cqs += 1;
+            u.memory_bytes += f.mem.cq_bytes(cq.depth);
+        }
+        u.memory_bytes += f.pds.iter().filter(|p| p.live).count() as u64 * f.mem.pd_bytes;
+        u.memory_bytes += f.mrs.iter().filter(|m| m.live).count() as u64 * f.mem.mr_bytes;
+        u
+    }
+
+    /// Account only the objects belonging to one endpoint set (used when
+    /// several processes share a fabric, e.g. the stencil's hybrid cases).
+    pub fn of_set(f: &Fabric, set: &EndpointSet) -> Self {
+        let mut u = ResourceUsage::default();
+        for &ctx in &set.ctxs {
+            let c = &f.ctxs[ctx.index()];
+            u.ctxs += 1;
+            u.memory_bytes += f.mem.ctx_bytes;
+            for page in &c.uars {
+                u.uars_allocated += 1;
+                u.uuars_allocated += 2;
+                u.uuars_used += page.used_uuars();
+                if page.is_used() {
+                    u.uars_used += 1;
+                }
+            }
+        }
+        for &qp in &set.qps {
+            u.qps += 1;
+            u.memory_bytes += f.mem.qp_bytes(f.qps[qp.index()].caps.depth);
+        }
+        for &cq in &set.cqs {
+            u.cqs += 1;
+            u.memory_bytes += f.mem.cq_bytes(f.cqs[cq.index()].depth);
+        }
+        u.memory_bytes += set.pds.len() as u64 * f.mem.pd_bytes;
+        u
+    }
+
+    pub fn uars_wasted(&self) -> u32 {
+        self.uars_allocated - self.uars_used
+    }
+
+    pub fn uuars_wasted(&self) -> u32 {
+        self.uuars_allocated - self.uuars_used
+    }
+
+    /// Fraction of allocated uUARs wasted (the paper's headline 93.75 %).
+    pub fn uuar_waste_fraction(&self) -> f64 {
+        if self.uuars_allocated == 0 {
+            0.0
+        } else {
+            self.uuars_wasted() as f64 / self.uuars_allocated as f64
+        }
+    }
+
+    pub fn memory_mib(&self) -> f64 {
+        self.memory_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+impl std::fmt::Display for ResourceUsage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ctx={} qp={} cq={} uar={}/{} uuar={}/{} mem={:.2}MiB",
+            self.ctxs,
+            self.qps,
+            self.cqs,
+            self.uars_used,
+            self.uars_allocated,
+            self.uuars_used,
+            self.uuars_allocated,
+            self.memory_mib()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::{Category, EndpointBuilder};
+
+    fn usage(cat: Category, n: u32) -> ResourceUsage {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        ResourceUsage::of_set(&f, &set)
+    }
+
+    #[test]
+    fn mpi_everywhere_wastes_93_75_percent() {
+        // §I / Fig 2a: each process uses 1 of its CTX's 16 static uUARs.
+        let u = usage(Category::MpiEverywhere, 16);
+        assert_eq!(u.uuars_allocated, 256);
+        assert_eq!(u.uuars_used, 16);
+        assert!((u.uuar_waste_fraction() - 0.9375).abs() < 1e-12);
+        assert_eq!(u.uars_allocated, 128);
+    }
+
+    #[test]
+    fn naive_td_endpoint_wastes_94_percent() {
+        // §III: one TD-assigned QP in its own CTX uses 1 of 18 uUARs.
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(crate::mlx5::Mlx5Env::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 2).unwrap();
+        let td = f.alloc_td(ctx, crate::verbs::TdInitAttr::independent()).unwrap();
+        f.create_qp(pd, cq, crate::verbs::QpCaps::default(), Some(td)).unwrap();
+        let u = ResourceUsage::of_fabric(&f);
+        assert_eq!(u.uuars_allocated, 18);
+        assert_eq!(u.uuars_used, 1);
+        assert_eq!(u.uars_allocated, 9);
+        assert!((u.uuar_waste_fraction() - 17.0 / 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig12_uuar_ratios_hold_exactly() {
+        // §VII: hardware resource usage relative to MPI everywhere at 16
+        // threads: 2xDynamic 31.25%, Dynamic 18.75%, SharedDynamic 12.5%,
+        // Static 6.25%, MPI+threads 6.25%.
+        let base = usage(Category::MpiEverywhere, 16).uuars_allocated as f64;
+        let pct = |c| usage(c, 16).uuars_allocated as f64 / base;
+        assert_eq!(usage(Category::MpiEverywhere, 16).uuars_allocated, 256);
+        assert_eq!(usage(Category::TwoXDynamic, 16).uuars_allocated, 80);
+        assert_eq!(usage(Category::Dynamic, 16).uuars_allocated, 48);
+        assert_eq!(usage(Category::SharedDynamic, 16).uuars_allocated, 32);
+        assert_eq!(usage(Category::Static, 16).uuars_allocated, 16);
+        assert_eq!(usage(Category::MpiThreads, 16).uuars_allocated, 16);
+        assert!((pct(Category::TwoXDynamic) - 0.3125).abs() < 1e-12);
+        assert!((pct(Category::Dynamic) - 0.1875).abs() < 1e-12);
+        assert!((pct(Category::SharedDynamic) - 0.125).abs() < 1e-12);
+        assert!((pct(Category::Static) - 0.0625).abs() < 1e-12);
+        assert!((pct(Category::MpiThreads) - 0.0625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig12_uar_counts() {
+        // UAR pages: 128 / 40 / 24 / 16 / 8 / 8 (DESIGN.md §4).
+        assert_eq!(usage(Category::MpiEverywhere, 16).uars_allocated, 128);
+        assert_eq!(usage(Category::TwoXDynamic, 16).uars_allocated, 40);
+        assert_eq!(usage(Category::Dynamic, 16).uars_allocated, 24);
+        assert_eq!(usage(Category::SharedDynamic, 16).uars_allocated, 16);
+        assert_eq!(usage(Category::Static, 16).uars_allocated, 8);
+        assert_eq!(usage(Category::MpiThreads, 16).uars_allocated, 8);
+    }
+
+    #[test]
+    fn abstract_claim_3_2x_fewer_resources() {
+        // Abstract: same performance as dedicated endpoints "using just a
+        // third of the resources"; §VII: 3.2x fewer uUARs.
+        let every = usage(Category::MpiEverywhere, 16).uuars_allocated as f64;
+        let twox = usage(Category::TwoXDynamic, 16).uuars_allocated as f64;
+        assert!((every / twox - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qp_cq_counts_per_category() {
+        for (cat, qps, cqs) in [
+            (Category::MpiEverywhere, 16, 16),
+            (Category::TwoXDynamic, 32, 32),
+            (Category::Dynamic, 16, 16),
+            (Category::SharedDynamic, 16, 16),
+            (Category::Static, 16, 16),
+            (Category::MpiThreads, 1, 1),
+        ] {
+            let u = usage(cat, 16);
+            assert_eq!((u.qps, u.cqs), (qps, cqs), "{cat}");
+        }
+    }
+
+    #[test]
+    fn memory_mpi_everywhere_is_5_39_mib() {
+        // §VII: "1.64 MB vs 5.39 MB" — our model reproduces the 5.39 MiB
+        // side exactly (16 x (CTX + QP + CQ + PD + MR)).
+        let u = usage(Category::MpiEverywhere, 16);
+        assert!((u.memory_mib() - 5.39).abs() < 0.01, "got {:.3} MiB", u.memory_mib());
+    }
+
+    #[test]
+    fn ctx_sharing_memory_reduction_about_9x() {
+        // §V-B: sharing the CTX between 16 threads reduces overall memory
+        // consumption ~9x.
+        let every = usage(Category::MpiEverywhere, 16).memory_bytes as f64;
+        let dynamic = usage(Category::Dynamic, 16).memory_bytes as f64;
+        let ratio = every / dynamic;
+        assert!(ratio > 3.0, "CTX sharing should cut memory substantially, got {ratio:.2}x");
+    }
+}

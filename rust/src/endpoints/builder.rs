@@ -1,0 +1,241 @@
+//! Construct the verbs-object topology of each endpoint category.
+
+use crate::mlx5::Mlx5Env;
+use crate::verbs::error::Result;
+use crate::verbs::types::{BufId, CqId, CtxId, MrId, PdId, QpCaps, QpId, TdInitAttr};
+use crate::verbs::Fabric;
+
+/// The endpoint handed to one thread: the QP it posts on and the CQ it
+/// polls. Several threads may receive the same QP/CQ (sharing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThreadEndpoint {
+    pub qp: QpId,
+    pub cq: CqId,
+    pub buf: BufId,
+    pub mr: MrId,
+}
+
+/// The full set of endpoints built for an N-thread process, plus every
+/// object created along the way (for accounting).
+#[derive(Debug, Clone)]
+pub struct EndpointSet {
+    pub category: super::Category,
+    pub threads: Vec<ThreadEndpoint>,
+    pub ctxs: Vec<CtxId>,
+    pub pds: Vec<PdId>,
+    pub qps: Vec<QpId>,
+    pub cqs: Vec<CqId>,
+}
+
+/// Options controlling endpoint construction.
+#[derive(Debug, Clone, Copy)]
+pub struct EndpointBuilder {
+    pub category: super::Category,
+    pub nthreads: u32,
+    pub qp_caps: QpCaps,
+    /// CQ depth per endpoint (c = d/q in the §IV benchmark).
+    pub cq_depth: u32,
+    /// Give each thread a cache-aligned payload buffer (the paper's
+    /// lesson #1); unaligned packs 2 B buffers on one line (Fig 6).
+    pub cache_aligned_bufs: bool,
+    /// Payload size per message in bytes (2 B in §IV).
+    pub msg_size: u32,
+    /// Share one BUF between all threads (Fig 5 x-way sharing uses a
+    /// variant of the builder; this models 16-way).
+    pub shared_buf: bool,
+}
+
+impl EndpointBuilder {
+    pub fn new(category: super::Category, nthreads: u32) -> Self {
+        Self {
+            category,
+            nthreads,
+            qp_caps: QpCaps::default(),
+            cq_depth: 2,
+            cache_aligned_bufs: true,
+            msg_size: 2,
+            shared_buf: false,
+        }
+    }
+
+    /// Build the category's object topology on `fabric`.
+    pub fn build(&self, fabric: &mut Fabric) -> Result<EndpointSet> {
+        use super::Category::*;
+        let n = self.nthreads;
+        let mut set = EndpointSet {
+            category: self.category,
+            threads: Vec::with_capacity(n as usize),
+            ctxs: Vec::new(),
+            pds: Vec::new(),
+            qps: Vec::new(),
+            cqs: Vec::new(),
+        };
+
+        // Payload buffers: one per thread (aligned or packed), or one
+        // shared. Base address keeps each build's range disjoint.
+        let base = 0x10_0000 * (fabric.bufs.len() as u64 + 1);
+        let buf_for = |fabric: &mut Fabric, i: u32| -> BufId {
+            if self.shared_buf {
+                if i == 0 {
+                    fabric.declare_buf(base, self.msg_size as u64)
+                } else {
+                    BufId(fabric.bufs.len() as u32 - 1)
+                }
+            } else if self.cache_aligned_bufs {
+                fabric.declare_buf(base + i as u64 * 64, self.msg_size as u64)
+            } else {
+                fabric.declare_buf(base + i as u64 * self.msg_size as u64, self.msg_size as u64)
+            }
+        };
+
+        match self.category {
+            MpiEverywhere => {
+                for i in 0..n {
+                    let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                    let pd = fabric.alloc_pd(ctx)?;
+                    let cq = fabric.create_cq(ctx, self.cq_depth)?;
+                    let qp = fabric.create_qp(pd, cq, self.qp_caps, None)?;
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, self.msg_size as u64)?;
+                    set.ctxs.push(ctx);
+                    set.pds.push(pd);
+                    set.cqs.push(cq);
+                    set.qps.push(qp);
+                    set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            TwoXDynamic | Dynamic | SharedDynamic => {
+                let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                let pd = fabric.alloc_pd(ctx)?;
+                set.ctxs.push(ctx);
+                set.pds.push(pd);
+                let attr = if self.category == SharedDynamic {
+                    TdInitAttr::paired()
+                } else {
+                    TdInitAttr::independent()
+                };
+                let qps_to_make = if self.category == TwoXDynamic { 2 * n } else { n };
+                let mut all_qps = Vec::new();
+                for _ in 0..qps_to_make {
+                    let td = fabric.alloc_td(ctx, attr)?;
+                    let cq = fabric.create_cq(ctx, self.cq_depth)?;
+                    let qp = fabric.create_qp(pd, cq, self.qp_caps, Some(td))?;
+                    set.cqs.push(cq);
+                    set.qps.push(qp);
+                    all_qps.push((qp, cq));
+                }
+                for i in 0..n {
+                    // 2xDynamic: use only the even QPs (§VI).
+                    let k = if self.category == TwoXDynamic { 2 * i } else { i } as usize;
+                    let (qp, cq) = all_qps[k];
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, self.msg_size as u64)?;
+                    set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            Static => {
+                let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                let pd = fabric.alloc_pd(ctx)?;
+                set.ctxs.push(ctx);
+                set.pds.push(pd);
+                for i in 0..n {
+                    let cq = fabric.create_cq(ctx, self.cq_depth)?;
+                    let qp = fabric.create_qp(pd, cq, self.qp_caps, None)?;
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, self.msg_size as u64)?;
+                    set.cqs.push(cq);
+                    set.qps.push(qp);
+                    set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            MpiThreads => {
+                let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                let pd = fabric.alloc_pd(ctx)?;
+                let cq = fabric.create_cq(ctx, self.cq_depth.max(n * 2))?;
+                let qp = fabric.create_qp(pd, cq, self.qp_caps, None)?;
+                set.ctxs.push(ctx);
+                set.pds.push(pd);
+                set.cqs.push(cq);
+                set.qps.push(qp);
+                for i in 0..n {
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, self.msg_size as u64)?;
+                    set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+        }
+        Ok(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::Category;
+
+    fn build(cat: Category, n: u32) -> (Fabric, EndpointSet) {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        (f, set)
+    }
+
+    #[test]
+    fn mpi_everywhere_is_one_ctx_per_thread() {
+        let (_, set) = build(Category::MpiEverywhere, 16);
+        assert_eq!(set.ctxs.len(), 16);
+        assert_eq!(set.qps.len(), 16);
+        assert_eq!(set.cqs.len(), 16);
+        // All endpoints distinct.
+        let mut qps: Vec<_> = set.threads.iter().map(|t| t.qp).collect();
+        qps.dedup();
+        assert_eq!(qps.len(), 16);
+    }
+
+    #[test]
+    fn two_x_dynamic_uses_even_qps() {
+        let (f, set) = build(Category::TwoXDynamic, 16);
+        assert_eq!(set.ctxs.len(), 1);
+        assert_eq!(set.qps.len(), 32);
+        for (i, t) in set.threads.iter().enumerate() {
+            assert_eq!(t.qp, set.qps[2 * i]);
+        }
+        // Each used QP sits alone on its own UAR page.
+        let mut pages: Vec<u32> = set.threads.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 16);
+    }
+
+    #[test]
+    fn shared_dynamic_pairs_threads_on_pages() {
+        let (f, set) = build(Category::SharedDynamic, 16);
+        let mut pages: Vec<u32> = set.threads.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 8); // two threads per dynamic UAR page
+    }
+
+    #[test]
+    fn mpi_threads_shares_one_qp() {
+        let (_, set) = build(Category::MpiThreads, 16);
+        assert_eq!(set.qps.len(), 1);
+        assert!(set.threads.iter().all(|t| t.qp == set.qps[0]));
+    }
+
+    #[test]
+    fn static_uses_no_dynamic_pages() {
+        let (f, set) = build(Category::Static, 16);
+        assert_eq!(f.ctx(set.ctxs[0]).unwrap().dynamic_uar_pages(), 0);
+    }
+
+    #[test]
+    fn unaligned_bufs_pack_one_cacheline() {
+        let mut f = Fabric::connectx4();
+        let mut b = EndpointBuilder::new(Category::Dynamic, 16);
+        b.cache_aligned_bufs = false;
+        let set = b.build(&mut f).unwrap();
+        let lines: std::collections::HashSet<u64> =
+            set.threads.iter().map(|t| f.buf(t.buf).cacheline()).collect();
+        assert_eq!(lines.len(), 1, "16 x 2B unaligned buffers fit one 64B line");
+    }
+}

@@ -1,0 +1,100 @@
+//! The six endpoint categories of §VI.
+
+/// A scalable-endpoint category (paper §VI). Ordered from most independent
+/// (fastest, most resource-hungry) to most shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    /// One CTX per thread, each with its own QP and CQ — emulates multiple
+    /// ranks per node (level 1 of Fig 4b).
+    MpiEverywhere,
+    /// One shared CTX; twice as many maximally independent TD-assigned QPs
+    /// as threads, threads use only the even ones. Best performance —
+    /// avoids the contiguous-UAR BlueFlame anomaly (§V-B).
+    TwoXDynamic,
+    /// One shared CTX; one maximally independent TD-assigned QP per
+    /// thread.
+    Dynamic,
+    /// One shared CTX; TDs created with `sharing=2` so even/odd TD pairs
+    /// share a UAR page (level 2 of Fig 4b).
+    SharedDynamic,
+    /// One shared CTX; plain QPs mapped onto the statically allocated
+    /// uUARs by the Appendix B policy (mix of levels 2 and 3).
+    Static,
+    /// One CTX, one QP, one CQ shared by every thread (level 4) — the
+    /// state-of-the-art MPI+threads configuration.
+    MpiThreads,
+}
+
+impl Category {
+    /// All six, in the paper's presentation order.
+    pub const ALL: [Category; 6] = [
+        Category::MpiEverywhere,
+        Category::TwoXDynamic,
+        Category::Dynamic,
+        Category::SharedDynamic,
+        Category::Static,
+        Category::MpiThreads,
+    ];
+
+    /// Label used in the paper's figures.
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::MpiEverywhere => "MPI everywhere",
+            Category::TwoXDynamic => "2xDynamic",
+            Category::Dynamic => "Dynamic",
+            Category::SharedDynamic => "Shared Dynamic",
+            Category::Static => "Static",
+            Category::MpiThreads => "MPI+threads",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        let k = s.to_ascii_lowercase().replace(['-', '_', ' '], "");
+        Some(match k.as_str() {
+            "mpieverywhere" | "everywhere" => Category::MpiEverywhere,
+            "2xdynamic" | "twoxdynamic" => Category::TwoXDynamic,
+            "dynamic" => Category::Dynamic,
+            "shareddynamic" => Category::SharedDynamic,
+            "static" => Category::Static,
+            "mpithreads" | "mpi+threads" => Category::MpiThreads,
+            _ => return None,
+        })
+    }
+
+    /// Thread-to-uUAR mapping level in Fig 4(b) (1 = maximally
+    /// independent … 4 = shared QP). `Static` is a mix of 2 and 3; we
+    /// report its dominant level for <= 16 threads.
+    pub fn sharing_level(self) -> u8 {
+        match self {
+            Category::MpiEverywhere | Category::TwoXDynamic | Category::Dynamic => 1,
+            Category::SharedDynamic | Category::Static => 2,
+            Category::MpiThreads => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for Category {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for c in Category::ALL {
+            assert_eq!(Category::parse(c.label()), Some(c), "{c}");
+        }
+        assert_eq!(Category::parse("2xdynamic"), Some(Category::TwoXDynamic));
+        assert_eq!(Category::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ordering_matches_independence() {
+        assert!(Category::MpiEverywhere < Category::MpiThreads);
+    }
+}

@@ -1,0 +1,28 @@
+//! Scalable communication endpoints — the paper's §VI contribution.
+//!
+//! Six categories of endpoint configurations span the design space between
+//! *MPI everywhere* (one CTX per thread, maximum performance, 93.75 %
+//! hardware wastage) and *MPI+threads* (one QP for all threads, minimum
+//! resources, up to 7x worse throughput):
+//!
+//! | Category        | Fig 4(b) level | CTXs | TDs              | QPs/thread |
+//! |-----------------|----------------|------|------------------|------------|
+//! | MpiEverywhere   | 1              | N    | none             | 1          |
+//! | TwoXDynamic     | 1              | 1    | 2N independent   | 1 (even)   |
+//! | Dynamic         | 1              | 1    | N independent    | 1          |
+//! | SharedDynamic   | 2              | 1    | N paired         | 1          |
+//! | Static          | 2+3            | 1    | none             | 1          |
+//! | MpiThreads      | 4              | 1    | none             | shared 1   |
+//!
+//! [`EndpointBuilder`] constructs the exact verbs-object topology of each
+//! category on a [`Fabric`](crate::verbs::Fabric); [`ResourceUsage`]
+//! reports the QP/CQ/UAR/uUAR/memory accounting the paper's right-hand
+//! figure panels show.
+
+pub mod accounting;
+pub mod builder;
+pub mod category;
+
+pub use accounting::ResourceUsage;
+pub use builder::{EndpointBuilder, EndpointSet, ThreadEndpoint};
+pub use category::Category;

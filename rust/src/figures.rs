@@ -1,0 +1,465 @@
+//! One generator per paper table/figure. The `cargo bench` harnesses and
+//! the `scep bench` CLI subcommand both call into here, so every number
+//! in EXPERIMENTS.md comes from a single code path.
+//!
+//! `quick` trims the per-thread message counts so the full suite stays
+//! interactive; the shapes are insensitive to it (deterministic model,
+//! no sampling noise).
+
+use crate::apps::stencil::DEFAULT_HALO_BYTES;
+use crate::apps::{GlobalArray, StencilBench};
+use crate::bench::{FeatureSet, Features, MsgRateConfig, MsgRateResult, Runner, SharedResource, SharingSpec};
+use crate::coordinator::JobSpec;
+use crate::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use crate::mlx5::MemModel;
+use crate::report::{f2, pct, Table};
+use crate::verbs::Fabric;
+
+fn msgs(quick: bool) -> u64 {
+    if quick {
+        8 * 1024
+    } else {
+        64 * 1024
+    }
+}
+
+fn run_spec(spec: &SharingSpec, features: Features, quick: bool) -> MsgRateResult {
+    let (fabric, eps) = spec.build().expect("topology build");
+    let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), features, ..Default::default() };
+    Runner::new(&fabric, &eps, cfg).run()
+}
+
+fn usage_of(spec: &SharingSpec) -> ResourceUsage {
+    let (fabric, _) = spec.build().expect("topology build");
+    ResourceUsage::of_fabric(&fabric)
+}
+
+fn usage_row(label: &str, u: &ResourceUsage) -> Vec<String> {
+    vec![
+        label.to_string(),
+        u.qps.to_string(),
+        u.cqs.to_string(),
+        u.uars_allocated.to_string(),
+        u.uuars_allocated.to_string(),
+        u.uuars_used.to_string(),
+        f2(u.memory_mib()),
+    ]
+}
+
+const USAGE_HEADER: [&str; 7] = ["config", "QPs", "CQs", "UARs", "uUARs", "uUARs_used", "mem_MiB"];
+
+/// Table I: bytes per mlx5 verbs resource.
+pub fn table1() -> Vec<Table> {
+    let m = MemModel::table1();
+    let mut t = Table::new("Table I: bytes per mlx5 verbs resource", &["CTX", "PD", "MR", "QP", "CQ", "total"]);
+    let total = m.ctx_bytes + m.pd_bytes + m.mr_bytes + m.qp_bytes(128) + m.cq_bytes(2);
+    t.row(vec![
+        format!("{}K", m.ctx_bytes / 1024),
+        m.pd_bytes.to_string(),
+        m.mr_bytes.to_string(),
+        format!("{}K", m.qp_bytes(128) / 1024),
+        format!("{}K", m.cq_bytes(2) / 1024),
+        format!("{}K", total / 1024),
+    ]);
+    vec![t]
+}
+
+/// Fig 2(b): throughput and wasted hardware resources of the two
+/// state-of-the-art extremes, 1-16 threads.
+pub fn fig02(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 2b(i): state-of-the-art endpoints, 2B RDMA-write rate (Mmsg/s)",
+        &["threads", "MPI everywhere", "MPI+threads", "ratio"],
+    );
+    let mut waste = Table::new(
+        "Fig 2b(ii): wasted hardware resources (uUARs)",
+        &["threads", "MPI everywhere", "MPI+threads"],
+    );
+    for n in [1u32, 2, 4, 8, 16] {
+        let rate = |cat| {
+            let mut f = Fabric::connectx4();
+            let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+            let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), ..Default::default() };
+            let r = Runner::new(&f, &set.threads, cfg).run();
+            let u = ResourceUsage::of_set(&f, &set);
+            (r.mmsgs_per_sec, u.uuars_wasted())
+        };
+        let (re, we) = rate(Category::MpiEverywhere);
+        let (rt, wt) = rate(Category::MpiThreads);
+        perf.row(vec![n.to_string(), f2(re), f2(rt), f2(re / rt)]);
+        waste.row(vec![n.to_string(), we.to_string(), wt.to_string()]);
+    }
+    vec![perf, waste]
+}
+
+/// Fig 3: scalability of naïve endpoints (TD-assigned QP per CTX per
+/// thread) across features, plus resource usage vs thread count.
+pub fn fig03(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 3(left): naive endpoints, rate (Mmsg/s) across features",
+        &["threads", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
+    );
+    for n in [1u32, 2, 4, 8, 16] {
+        let mut row = vec![n.to_string()];
+        for fs in FeatureSet::ALL_SETS {
+            // Naive endpoints = 1-way CTX sharing topology.
+            let spec = SharingSpec::new(SharedResource::Ctx, 1, n);
+            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        }
+        perf.row(row);
+    }
+    let mut usage = Table::new("Fig 3(right): naive endpoints, resource usage", &USAGE_HEADER);
+    for n in [1u32, 2, 4, 8, 16] {
+        let u = usage_of(&SharingSpec::new(SharedResource::Ctx, 1, n));
+        usage.row(usage_row(&format!("{n} threads"), &u));
+    }
+    vec![perf, usage]
+}
+
+/// Fig 5: BUF sharing across 16 threads.
+pub fn fig05(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 5(left): BUF sharing, rate (Mmsg/s)",
+        &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
+    );
+    for ways in [1u32, 2, 4, 8, 16] {
+        let mut row = vec![ways.to_string()];
+        for fs in FeatureSet::ALL_SETS {
+            let spec = SharingSpec::new(SharedResource::Buf, ways, 16);
+            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        }
+        perf.row(row);
+    }
+    let mut usage = Table::new("Fig 5(right): BUF sharing, resource usage", &USAGE_HEADER);
+    for ways in [1u32, 2, 4, 8, 16] {
+        let u = usage_of(&SharingSpec::new(SharedResource::Buf, ways, 16));
+        usage.row(usage_row(&format!("{ways}-way"), &u));
+    }
+    vec![perf, usage]
+}
+
+/// Fig 6: cache-aligned vs unaligned independent 2 B buffers (16
+/// threads): message rate and PCIe reads.
+pub fn fig06(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 6: cache alignment of independent 2B buffers (w/o Inlining)",
+        &["buffers", "rate_Mmsg/s", "pcie_reads", "pcie_reads_M/s"],
+    );
+    for aligned in [true, false] {
+        let mut spec = SharingSpec::new(SharedResource::Buf, 1, 16);
+        spec.cache_aligned = aligned;
+        let r = run_spec(&spec, Features::all().without_inlining(), quick);
+        t.row(vec![
+            if aligned { "64B-aligned" } else { "unaligned" }.to_string(),
+            f2(r.mmsgs_per_sec),
+            r.pcie.dma_reads.to_string(),
+            f2(r.pcie_read_rate / 1e6),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 7: CTX sharing across 16 threads.
+pub fn fig07(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 7(left): CTX sharing, rate (Mmsg/s)",
+        &["x-way", "All", "All w/o Postlist", "w/o Postlist 2xQPs", "w/o Postlist Sharing 2"],
+    );
+    for ways in [1u32, 2, 4, 8, 16] {
+        let all = run_spec(&SharingSpec::new(SharedResource::Ctx, ways, 16), Features::all(), quick);
+        let wo_pl = run_spec(
+            &SharingSpec::new(SharedResource::Ctx, ways, 16),
+            Features::all().without_postlist(),
+            quick,
+        );
+        let twox = run_spec(
+            &SharingSpec::new(SharedResource::CtxTwoXQps, ways, 16),
+            Features::all().without_postlist(),
+            quick,
+        );
+        let sh2 = run_spec(
+            &SharingSpec::new(SharedResource::CtxSharing2, ways, 16),
+            Features::all().without_postlist(),
+            quick,
+        );
+        perf.row(vec![
+            ways.to_string(),
+            f2(all.mmsgs_per_sec),
+            f2(wo_pl.mmsgs_per_sec),
+            f2(twox.mmsgs_per_sec),
+            f2(sh2.mmsgs_per_sec),
+        ]);
+    }
+    let mut usage = Table::new("Fig 7(right): CTX sharing, resource usage", &USAGE_HEADER);
+    for ways in [1u32, 2, 4, 8, 16] {
+        usage.row(usage_row(
+            &format!("{ways}-way"),
+            &usage_of(&SharingSpec::new(SharedResource::Ctx, ways, 16)),
+        ));
+    }
+    usage.row(usage_row("16-way 2xQPs", &usage_of(&SharingSpec::new(SharedResource::CtxTwoXQps, 16, 16))));
+    usage.row(usage_row(
+        "16-way Sharing2",
+        &usage_of(&SharingSpec::new(SharedResource::CtxSharing2, 16, 16)),
+    ));
+    vec![perf, usage]
+}
+
+/// Fig 8: PD and MR sharing across 16 threads.
+pub fn fig08(quick: bool) -> Vec<Table> {
+    let mut out = Vec::new();
+    for (res, name) in [(SharedResource::Pd, "PD"), (SharedResource::Mr, "MR")] {
+        let mut perf = Table::new(
+            &format!("Fig 8: {name} sharing, rate (Mmsg/s)"),
+            &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
+        );
+        for ways in [1u32, 2, 4, 8, 16] {
+            let mut row = vec![ways.to_string()];
+            for fs in FeatureSet::ALL_SETS {
+                row.push(f2(run_spec(&SharingSpec::new(res, ways, 16), fs.features(), quick).mmsgs_per_sec));
+            }
+            perf.row(row);
+        }
+        let mut usage = Table::new(&format!("Fig 8: {name} sharing, resource usage"), &USAGE_HEADER);
+        for ways in [1u32, 16] {
+            usage.row(usage_row(&format!("{ways}-way"), &usage_of(&SharingSpec::new(res, ways, 16))));
+        }
+        out.push(perf);
+        out.push(usage);
+    }
+    out
+}
+
+/// Fig 9: CQ sharing across 16 threads.
+pub fn fig09(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 9(left): CQ sharing, rate (Mmsg/s)",
+        &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
+    );
+    for ways in [1u32, 2, 4, 8, 16] {
+        let mut row = vec![ways.to_string()];
+        for fs in FeatureSet::ALL_SETS {
+            let spec = SharingSpec::new(SharedResource::Cq, ways, 16);
+            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        }
+        perf.row(row);
+    }
+    let mut usage = Table::new("Fig 9(right): CQ sharing, resource usage", &USAGE_HEADER);
+    for ways in [1u32, 2, 4, 8, 16] {
+        usage.row(usage_row(&format!("{ways}-way"), &usage_of(&SharingSpec::new(SharedResource::Cq, ways, 16))));
+    }
+    vec![perf, usage]
+}
+
+/// Fig 10: the Unsignaled-vs-CQ-sharing tradeoff at Postlist 32 and 1.
+pub fn fig10(quick: bool) -> Vec<Table> {
+    let mut out = Vec::new();
+    for (p, title) in [(32u32, "Fig 10(a): Postlist 32"), (1, "Fig 10(b): Postlist 1")] {
+        let mut t = Table::new(title, &["x-way", "q=1", "q=4", "q=16", "q=64"]);
+        for ways in [1u32, 2, 4, 8, 16] {
+            let mut row = vec![ways.to_string()];
+            for q in [1u32, 4, 16, 64] {
+                let features = Features { postlist: p, unsignaled: q, inlining: true, blueflame: true };
+                let spec = SharingSpec::new(SharedResource::Cq, ways, 16);
+                row.push(f2(run_spec(&spec, features, quick).mmsgs_per_sec));
+            }
+            t.row(row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 11: QP sharing across 16 threads.
+pub fn fig11(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 11(left): QP sharing, rate (Mmsg/s)",
+        &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
+    );
+    for ways in [1u32, 2, 4, 8, 16] {
+        let mut row = vec![ways.to_string()];
+        for fs in FeatureSet::ALL_SETS {
+            let spec = SharingSpec::new(SharedResource::Qp, ways, 16);
+            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        }
+        perf.row(row);
+    }
+    let mut usage = Table::new("Fig 11(right): QP sharing, resource usage", &USAGE_HEADER);
+    for ways in [1u32, 2, 4, 8, 16] {
+        usage.row(usage_row(&format!("{ways}-way"), &usage_of(&SharingSpec::new(SharedResource::Qp, ways, 16))));
+    }
+    vec![perf, usage]
+}
+
+/// Fig 12: scalable endpoints on the global-array kernel, 16 threads.
+pub fn fig12(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 12(left): global array, RDMA-write rate (Mmsg/s)",
+        &["category", "rate", "% of MPI everywhere", "uUARs", "% of MPI everywhere uUARs"],
+    );
+    let mut usage = Table::new("Fig 12(right): global array, resource usage", &USAGE_HEADER);
+    let mut base_rate = None;
+    let mut base_uuars = None;
+    for cat in Category::ALL {
+        let ga = GlobalArray::new(cat, 16).expect("build");
+        let r = ga.time_comm(msgs(quick) / 4, 2);
+        let u = ga.resources();
+        let b = *base_rate.get_or_insert(r.mmsgs_per_sec);
+        let bu = *base_uuars.get_or_insert(u.uuars_allocated as f64);
+        perf.row(vec![
+            cat.label().to_string(),
+            f2(r.mmsgs_per_sec),
+            pct(r.mmsgs_per_sec / b),
+            u.uuars_allocated.to_string(),
+            pct(u.uuars_allocated as f64 / bu),
+        ]);
+        usage.row(usage_row(cat.label(), &u));
+    }
+    vec![perf, usage]
+}
+
+/// Fig 14: scalable endpoints on the 5-pt stencil across hybrid splits.
+pub fn fig14(quick: bool) -> Vec<Table> {
+    let mut perf = Table::new(
+        "Fig 14(a): 5-pt stencil halo-exchange rate (Mmsg/s)",
+        &["P.T", "MPI everywhere", "2xDynamic", "Dynamic", "Shared Dynamic", "Static", "MPI+threads"],
+    );
+    let iterations = msgs(quick) / 16;
+    for spec in JobSpec::paper_sweep() {
+        let mut row = vec![spec.label()];
+        for cat in Category::ALL {
+            let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).expect("build");
+            row.push(f2(s.time_exchange(iterations).mmsgs_per_sec));
+        }
+        perf.row(row);
+    }
+    let mut usage = Table::new(
+        "Fig 14(b): 5-pt stencil resource usage per node",
+        &["P.T / category", "QPs", "CQs", "UARs", "uUARs", "uUARs_used", "mem_MiB"],
+    );
+    for spec in JobSpec::paper_sweep() {
+        for cat in Category::ALL {
+            let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).expect("build");
+            let u = s.resources();
+            usage.row(usage_row(&format!("{} {}", spec.label(), cat.label()), &u));
+        }
+    }
+    vec![perf, usage]
+}
+
+/// Ablation A: the mlx5 QP-lock removal (rdma-core PR #327, §V-B). With
+/// the stock provider the lock on a TD-assigned QP is kept, costing every
+/// TD category its edge over MPI everywhere.
+pub fn ablation_qp_lock(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation: TD QP-lock removal (global array, 16 threads, Mmsg/s)",
+        &["category", "optimized (lock removed)", "stock mlx5 (lock kept)", "delta"],
+    );
+    for cat in [Category::TwoXDynamic, Category::Dynamic, Category::SharedDynamic] {
+        let run = |optimized: bool| {
+            let mut fabric = Fabric::connectx4();
+            fabric.qp_lock_optimization = optimized;
+            let set = EndpointBuilder::new(cat, 16).build(&mut fabric).unwrap();
+            let cfg = MsgRateConfig {
+                msgs_per_thread: msgs(quick) / 4,
+                features: Features::conservative(),
+                ..Default::default()
+            };
+            Runner::new(&fabric, &set.threads, cfg).run().mmsgs_per_sec
+        };
+        let opt = run(true);
+        let stock = run(false);
+        t.row(vec![cat.label().to_string(), f2(opt), f2(stock), pct(stock / opt - 1.0)]);
+    }
+    vec![t]
+}
+
+/// Ablation B: the flush-group quirk model (§V-B's unexplained 16-way
+/// BlueFlame drop) on vs off — quantifies how much of Fig 7/12 it drives.
+pub fn ablation_quirk(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation: flush-group anomaly model (CTX sharing w/o Postlist, Mmsg/s)",
+        &["x-way", "quirk on", "quirk off"],
+    );
+    for ways in [8u32, 16] {
+        let run = |on: bool| {
+            let spec = SharingSpec::new(SharedResource::Ctx, ways, 16);
+            let (fabric, eps) = spec.build().unwrap();
+            let mut cost = crate::nicsim::CostModel::calibrated();
+            if !on {
+                cost.flushgroup_extra = 0;
+            }
+            let cfg = MsgRateConfig {
+                msgs_per_thread: msgs(quick),
+                features: Features::all().without_postlist(),
+                cost,
+                ..Default::default()
+            };
+            Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
+        };
+        t.row(vec![ways.to_string(), f2(run(true)), f2(run(false))]);
+    }
+    vec![t]
+}
+
+/// Ablation C: message-size sweep over the 60 B inline cutoff — where the
+/// Inlining feature stops applying and the payload DMA read appears.
+pub fn ablation_msg_size(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation: message size sweep (naive endpoints, 16 threads, Mmsg/s)",
+        &["bytes", "inline eligible", "rate"],
+    );
+    for size in [2u32, 16, 60, 61, 256, 1024, 4096] {
+        let spec = SharingSpec::new(SharedResource::Ctx, 1, 16);
+        let (fabric, eps) = spec.build().unwrap();
+        let cfg = MsgRateConfig {
+            msgs_per_thread: msgs(quick) / 4,
+            msg_size: size,
+            ..Default::default()
+        };
+        let r = Runner::new(&fabric, &eps, cfg).run();
+        t.row(vec![size.to_string(), (size <= 60).to_string(), f2(r.mmsgs_per_sec)]);
+    }
+    vec![t]
+}
+
+/// Run a named figure.
+pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
+    Some(match name {
+        "table1" | "t1" => table1(),
+        "fig2" | "2" | "2b" => fig02(quick),
+        "fig3" | "3" => fig03(quick),
+        "fig5" | "5" => fig05(quick),
+        "fig6" | "6" => fig06(quick),
+        "fig7" | "7" => fig07(quick),
+        "fig8" | "8" => fig08(quick),
+        "fig9" | "9" => fig09(quick),
+        "fig10" | "10" => fig10(quick),
+        "fig11" | "11" => fig11(quick),
+        "fig12" | "12" => fig12(quick),
+        "fig14" | "14" => fig14(quick),
+        "ablation-qp-lock" => ablation_qp_lock(quick),
+        "ablation-quirk" => ablation_quirk(quick),
+        "ablation-msg-size" => ablation_msg_size(quick),
+        _ => return None,
+    })
+}
+
+/// Every figure id, in paper order, plus the design-choice ablations.
+pub const ALL_FIGURES: [&str; 15] = [
+    "table1",
+    "fig2",
+    "fig3",
+    "fig5",
+    "fig6",
+    "fig7",
+    "fig8",
+    "fig9",
+    "fig10",
+    "fig11",
+    "fig12",
+    "fig14",
+    "ablation-qp-lock",
+    "ablation-quirk",
+    "ablation-msg-size",
+];

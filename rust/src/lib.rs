@@ -1,0 +1,47 @@
+//! # scalable-ep
+//!
+//! A reproduction of *"Scalable Communication Endpoints for MPI+Threads
+//! Applications"* (Zambre, Chandramowlishwaran, Balaji — ICPADS 2018) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The paper studies the tradeoff between communication throughput and
+//! hardware/software resource usage when the threads of an MPI+threads
+//! application share InfiniBand (mlx5) communication resources at different
+//! levels (BUF, CTX, PD, MR, CQ, QP), and distills the analysis into six
+//! *scalable endpoint* categories.
+//!
+//! The original evaluation needs Mellanox ConnectX-4 hardware; this crate
+//! substitutes a deterministic discrete-event simulation of the NIC datapath
+//! (see `DESIGN.md` §1) while keeping the *resource model* exact:
+//!
+//! * [`verbs`] — the IB object model (CTX/PD/MR/QP/CQ/TD) with the paper's
+//!   proposed `sharing` thread-domain attribute.
+//! * [`mlx5`] — the mlx5 provider policy: UAR pages, uUAR classes, the
+//!   uUAR-to-QP assignment policy of Appendix B, and the Table I memory
+//!   model.
+//! * [`sim`] — the discrete-event core (virtual clock, FIFO servers, locks).
+//! * [`nicsim`] — the NIC/PCIe/TLB/wire cost model.
+//! * [`bench`] — the perftest-style multithreaded RDMA-write message-rate
+//!   benchmark of §IV, as a virtual-time state machine.
+//! * [`endpoints`] — the six scalable-endpoint categories of §VI.
+//! * [`coordinator`] — a mini MPI+threads runtime (ranks, threads, RMA
+//!   windows) with endpoint categories as a first-class feature.
+//! * [`runtime`] — PJRT loader executing the AOT-compiled Pallas/JAX
+//!   artifacts (DGEMM tile, 5-pt stencil) from Rust.
+//! * [`apps`] — the global-array DGEMM and 5-pt stencil benchmarks of §VII.
+//! * [`report`] — table/CSV emitters used by the figure benches.
+
+pub mod apps;
+pub mod bench;
+pub mod coordinator;
+pub mod endpoints;
+pub mod figures;
+pub mod mlx5;
+pub mod nicsim;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod verbs;
+
+pub use endpoints::Category;

@@ -1,0 +1,145 @@
+//! `scep` — the scalable-endpoints launcher CLI.
+//!
+//! ```text
+//! scep bench --figure fig12 [--quick]     regenerate a paper figure
+//! scep bench --all [--quick]              regenerate every figure
+//! scep resources --category 2xdynamic --threads 16
+//! scep run global-array [--n 256] [--category 2xdynamic]
+//! scep run stencil [--spec 4.4] [--category dynamic]
+//! scep calibrate                          print model calibration points
+//! ```
+
+use std::process::ExitCode;
+
+use scalable_ep::apps::{GlobalArray, StencilBench};
+use scalable_ep::bench::{Features, MsgRateConfig, Runner};
+use scalable_ep::coordinator::JobSpec;
+use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::runtime::ArtifactRuntime;
+use scalable_ep::verbs::Fabric;
+use scalable_ep::{figures, report};
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage:\n  scep bench (--figure <id> | --all) [--quick]\n  \
+         scep resources --category <cat> --threads <n>\n  \
+         scep run global-array [--n <elems>] [--category <cat>]\n  \
+         scep run stencil [--spec P.T] [--category <cat>] [--iters <n>]\n  \
+         scep calibrate\nfigures: {}",
+        figures::ALL_FIGURES.join(", ")
+    );
+    ExitCode::from(2)
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { return usage() };
+    match cmd.as_str() {
+        "bench" => {
+            let quick = args.iter().any(|a| a == "--quick");
+            if args.iter().any(|a| a == "--all") {
+                for name in figures::ALL_FIGURES {
+                    for t in figures::by_name(name, quick).unwrap() {
+                        t.print();
+                    }
+                }
+                return ExitCode::SUCCESS;
+            }
+            let Some(fig) = flag_value(&args, "--figure") else { return usage() };
+            match figures::by_name(&fig, quick) {
+                Some(tables) => {
+                    for t in tables {
+                        t.print();
+                    }
+                    ExitCode::SUCCESS
+                }
+                None => {
+                    eprintln!("unknown figure '{fig}'");
+                    usage()
+                }
+            }
+        }
+        "resources" => {
+            let cat = flag_value(&args, "--category")
+                .and_then(|c| Category::parse(&c))
+                .unwrap_or(Category::TwoXDynamic);
+            let threads: u32 =
+                flag_value(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(16);
+            let mut f = Fabric::connectx4();
+            let set = EndpointBuilder::new(cat, threads).build(&mut f).expect("build");
+            let u = ResourceUsage::of_set(&f, &set);
+            println!("{} x {} threads:\n  {}", cat, threads, u);
+            println!("  uUAR waste: {}", report::pct(u.uuar_waste_fraction()));
+            ExitCode::SUCCESS
+        }
+        "run" => {
+            let cat = flag_value(&args, "--category")
+                .and_then(|c| Category::parse(&c))
+                .unwrap_or(Category::TwoXDynamic);
+            match args.get(1).map(String::as_str) {
+                Some("global-array") => {
+                    let n: usize = flag_value(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(256);
+                    let ga = GlobalArray::new(cat, 16).expect("build");
+                    let r = ga.time_comm(16 * 1024, 2);
+                    println!(
+                        "global-array [{}]: comm {:.2} Mmsg/s over {} msgs; {}",
+                        cat, r.mmsgs_per_sec, r.messages, ga.resources()
+                    );
+                    let mut rt = ArtifactRuntime::new(ArtifactRuntime::default_dir())
+                        .expect("PJRT client");
+                    match ga.run_dgemm(&mut rt, n) {
+                        Ok(err) => println!("dgemm {n}x{n} via Pallas/PJRT: max |err| = {err:.3e}"),
+                        Err(e) => {
+                            eprintln!("dgemm failed: {e:#}");
+                            return ExitCode::FAILURE;
+                        }
+                    }
+                    ExitCode::SUCCESS
+                }
+                Some("stencil") => {
+                    let spec = flag_value(&args, "--spec")
+                        .and_then(|s| JobSpec::parse(&s))
+                        .unwrap_or(JobSpec::new(4, 4));
+                    let iters: u64 =
+                        flag_value(&args, "--iters").and_then(|v| v.parse().ok()).unwrap_or(2048);
+                    let s = StencilBench::new(
+                        spec,
+                        cat,
+                        scalable_ep::apps::stencil::DEFAULT_HALO_BYTES,
+                    )
+                    .expect("build");
+                    let r = s.time_exchange(iters);
+                    println!(
+                        "stencil {} [{}]: halo exchange {:.2} Mmsg/s; {}",
+                        spec.label(),
+                        cat,
+                        r.mmsgs_per_sec,
+                        s.resources()
+                    );
+                    ExitCode::SUCCESS
+                }
+                _ => usage(),
+            }
+        }
+        "calibrate" => {
+            // Calibration points the cost model is tuned against.
+            for (label, n, features) in [
+                ("1 thread, All", 1u32, Features::all()),
+                ("16 threads, All", 16, Features::all()),
+                ("16 threads, conservative", 16, Features::conservative()),
+            ] {
+                let mut f = Fabric::connectx4();
+                let set = EndpointBuilder::new(Category::MpiEverywhere, n).build(&mut f).unwrap();
+                let cfg = MsgRateConfig { msgs_per_thread: 32 * 1024, features, ..Default::default() };
+                let r = Runner::new(&f, &set.threads, cfg).run();
+                println!("{label:>26}: {:.2} Mmsg/s", r.mmsgs_per_sec);
+            }
+            ExitCode::SUCCESS
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,68 @@
+//! Device-level hardware limits.
+
+/// Hardware limits of a simulated mlx5 adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceCaps {
+    /// Total UAR pages in the NIC's user access region. 8 K on ConnectX-4
+    /// (paper §III).
+    pub total_uar_pages: u32,
+    /// UAR pages reserved by firmware/kernel and never handed to user
+    /// contexts. 29 reproduces the paper's "8K UARs translates to a
+    /// maximum of 907 CTXs" for 9-UAR contexts: (8192-29)/9 = 907.
+    pub reserved_uar_pages: u32,
+    /// Maximum dynamically allocated UAR pages per CTX (mlx5 limit,
+    /// paper Appendix B).
+    pub max_dynamic_uars_per_ctx: u32,
+    /// Number of NIC processing units available for concurrent doorbell
+    /// streams.
+    pub processing_units: u32,
+    /// Number of parallel TLB translation rails (paper §V-A's "multirail
+    /// TLB design").
+    pub tlb_rails: u32,
+}
+
+impl DeviceCaps {
+    /// Mellanox ConnectX-4, the paper's testbed NIC.
+    pub fn connectx4() -> Self {
+        Self {
+            total_uar_pages: 8192,
+            reserved_uar_pages: 29,
+            max_dynamic_uars_per_ctx: 512,
+            processing_units: 16,
+            tlb_rails: 8,
+        }
+    }
+
+    /// UAR pages available to user contexts.
+    pub fn usable_uar_pages(&self) -> u32 {
+        self.total_uar_pages - self.reserved_uar_pages
+    }
+
+    /// Maximum number of maximally independent paths within one CTX:
+    /// half the dynamic-UAR limit, because an independent TD wastes the
+    /// second uUAR of its page (paper §V-B: 256 in mlx5).
+    pub fn max_independent_paths_per_ctx(&self) -> u32 {
+        self.max_dynamic_uars_per_ctx / 2
+    }
+}
+
+impl Default for DeviceCaps {
+    fn default() -> Self {
+        Self::connectx4()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_limits_hold() {
+        let d = DeviceCaps::connectx4();
+        // §V-B: "the maximum number of maximally independent paths is 256".
+        assert_eq!(d.max_independent_paths_per_ctx(), 256);
+        // §III: 8K UARs -> max 907 CTXs of one TD-assigned QP each
+        // (8 static + 1 dynamic = 9 UARs per CTX).
+        assert_eq!(d.usable_uar_pages() / 9, 907);
+    }
+}

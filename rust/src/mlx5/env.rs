@@ -1,0 +1,59 @@
+//! mlx5 environment knobs (paper Appendix B and §IV).
+
+/// Per-context configuration that real mlx5 reads from environment
+/// variables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mlx5Env {
+    /// `MLX5_TOTAL_UUARS`: statically allocated data-path uUARs per CTX.
+    /// Default 16 (8 UAR pages x 2 data-path uUARs).
+    pub total_uuars: u32,
+    /// `MLX5_NUM_LOW_LAT_UUARS`: how many of the static uUARs are
+    /// low-latency (single QP, lock disabled). Default 4 (uUAR12-15).
+    /// At most `total_uuars - 1` (the zeroth is always high-latency).
+    pub num_low_lat_uuars: u32,
+    /// `MLX5_SHUT_UP_BF`: disable BlueFlame (programmed-I/O WQE writes);
+    /// doorbells ring via 8-byte MMIO and the NIC DMA-reads WQEs.
+    pub shut_up_bf: bool,
+}
+
+impl Mlx5Env {
+    pub fn validated(self) -> Self {
+        assert!(self.total_uuars >= 2 && self.total_uuars % 2 == 0, "uUARs come in UAR-page pairs");
+        assert!(
+            self.num_low_lat_uuars <= self.total_uuars - 1,
+            "at most all-but-one static uUARs may be low-latency (Appendix B)"
+        );
+        self
+    }
+
+    /// Static UAR pages allocated at CTX creation.
+    pub fn static_uar_pages(&self) -> u32 {
+        self.total_uuars / 2
+    }
+}
+
+impl Default for Mlx5Env {
+    fn default() -> Self {
+        Self { total_uuars: 16, num_low_lat_uuars: 4, shut_up_bf: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let e = Mlx5Env::default();
+        // §II-A: "By default, a CTX contains eight UARs and, hence, 16 uUARs."
+        assert_eq!(e.static_uar_pages(), 8);
+        assert_eq!(e.total_uuars, 16);
+        assert_eq!(e.num_low_lat_uuars, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "all-but-one")]
+    fn too_many_low_lat_rejected() {
+        Mlx5Env { total_uuars: 16, num_low_lat_uuars: 16, shut_up_bf: false }.validated();
+    }
+}

@@ -1,0 +1,91 @@
+//! Memory model of the mlx5 verbs resources — paper Table I.
+//!
+//! | CTX | PD | MR | QP | CQ | total |
+//! |-----|----|----|----|----|-------|
+//! | 256K| 144| 144| 80K| 9K | 345K  |
+//!
+//! QP and CQ bytes are dominated by their pinned circular buffers, so they
+//! scale with queue depth; Table I's numbers correspond to the paper's
+//! message-rate configuration (QP depth 128, 64 B WQE slots -> 8 KiB ring
+//! + 72 KiB driver/doorbell/tso state modelled as a fixed overhead).
+
+/// Bytes per object kind, depth-aware for QP/CQ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemModel {
+    pub ctx_bytes: u64,
+    pub pd_bytes: u64,
+    pub mr_bytes: u64,
+    /// Fixed part of a QP's footprint (driver state etc.).
+    pub qp_base_bytes: u64,
+    /// Per-WQE-slot bytes in the pinned send-queue ring.
+    pub qp_slot_bytes: u64,
+    /// Fixed part of a CQ's footprint.
+    pub cq_base_bytes: u64,
+    /// Per-CQE-slot bytes in the pinned completion ring.
+    pub cq_slot_bytes: u64,
+}
+
+pub const KIB: u64 = 1024;
+
+impl MemModel {
+    /// Calibrated to Table I at the §IV reference depths (QP depth 128,
+    /// CQ depth 2 with q=64, c=d/q): QP = 80 KiB, CQ = 9 KiB.
+    pub fn table1() -> Self {
+        Self {
+            ctx_bytes: 256 * KIB,
+            pd_bytes: 144,
+            mr_bytes: 144,
+            qp_base_bytes: 72 * KIB,
+            qp_slot_bytes: 64,
+            cq_base_bytes: 9 * KIB - 2 * 64,
+            cq_slot_bytes: 64,
+        }
+    }
+
+    pub fn qp_bytes(&self, depth: u32) -> u64 {
+        self.qp_base_bytes + self.qp_slot_bytes * depth as u64
+    }
+
+    pub fn cq_bytes(&self, depth: u32) -> u64 {
+        self.cq_base_bytes + self.cq_slot_bytes * depth as u64
+    }
+}
+
+impl Default for MemModel {
+    fn default() -> Self {
+        Self::table1()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reference_depths() {
+        let m = MemModel::table1();
+        // Table I: QP 80K, CQ 9K, CTX 256K, PD/MR 144 B.
+        assert_eq!(m.qp_bytes(128), 80 * KIB);
+        assert_eq!(m.cq_bytes(2), 9 * KIB);
+        assert_eq!(m.ctx_bytes, 256 * KIB);
+        assert_eq!(m.pd_bytes, 144);
+        assert_eq!(m.mr_bytes, 144);
+        // Table I total: one endpoint = 345K.
+        let total = m.ctx_bytes + m.pd_bytes + m.mr_bytes + m.qp_bytes(128) + m.cq_bytes(2);
+        assert_eq!(total, 345 * KIB + 288);
+        // §III: the CTX is 74.2% of one endpoint's memory.
+        let frac = m.ctx_bytes as f64 / total as f64;
+        assert!((frac - 0.742).abs() < 0.002, "ctx fraction {frac}");
+    }
+
+    #[test]
+    fn qp_cq_memory_is_kilobytes_scale() {
+        // §III: "memory usage of the QP and the CQ is on the order of
+        // kilobytes" — one thread's QP+CQ = 89 KB (§IV: 89 KB with one
+        // thread, 1.39 MB with 16).
+        let m = MemModel::table1();
+        let per_thread = m.qp_bytes(128) + m.cq_bytes(2);
+        assert_eq!(per_thread, 89 * KIB);
+        assert_eq!(16 * per_thread, 1424 * KIB); // ~1.39 MiB
+    }
+}

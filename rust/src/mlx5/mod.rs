@@ -1,0 +1,14 @@
+//! mlx5 provider policy: UAR pages, uUAR classes, the uUAR-to-QP
+//! assignment policy (paper Appendix B), dynamic thread-domain UAR
+//! allocation, environment knobs, device limits, and the Table I memory
+//! model.
+
+pub mod device;
+pub mod env;
+pub mod mem;
+pub mod uar;
+
+pub use device::DeviceCaps;
+pub use env::Mlx5Env;
+pub use mem::MemModel;
+pub use uar::{UarPage, Uuar, UuarClass, UuarRef, DATA_PATH_UUARS_PER_PAGE};

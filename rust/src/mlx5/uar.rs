@@ -1,0 +1,132 @@
+//! UAR pages and micro-UARs (paper Appendix A + B).
+//!
+//! A 4 KiB UAR page holds four uUARs of which only the first two are
+//! data-path uUARs (the last two execute NIC priority control tasks), so
+//! the model tracks two uUAR slots per page. Each uUAR belongs to a class
+//! that determines its locking discipline:
+//!
+//! * **High latency** (uUAR 0): many QPs, atomic DoorBells only, no
+//!   BlueFlame, no lock.
+//! * **Medium latency**: multiple QPs round-robined onto it; a lock
+//!   protects concurrent BlueFlame writes.
+//! * **Low latency**: exactly one QP; lock disabled.
+//! * **Dedicated (TD)**: dynamically allocated for a thread domain; the
+//!   user guarantees single-threaded access, lock disabled.
+
+use crate::verbs::types::{QpId, TdId};
+
+/// Number of data-path uUARs on one UAR page.
+pub const DATA_PATH_UUARS_PER_PAGE: usize = 2;
+
+/// Reference to a uUAR: `(page, slot)` within a context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct UuarRef {
+    /// Index of the UAR page within its context's page table.
+    pub page: u32,
+    /// Data-path uUAR slot on the page (0 or 1).
+    pub slot: u8,
+}
+
+/// Latency/locking class of a uUAR (Appendix B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UuarClass {
+    /// The zeroth static uUAR: atomic DoorBells only, never BlueFlame.
+    HighLatency,
+    /// Shared by multiple QPs; BlueFlame writes need its lock.
+    MediumLatency,
+    /// Single QP, lock disabled.
+    LowLatency,
+    /// Dynamically allocated for this thread domain; lock disabled.
+    Dedicated(TdId),
+    /// Allocated but not usable for the data path (e.g. the second uUAR
+    /// of a maximally independent TD's page — pure waste, §V-B).
+    Unused,
+}
+
+/// One data-path uUAR.
+#[derive(Debug, Clone)]
+pub struct Uuar {
+    pub class: UuarClass,
+    /// QPs whose doorbells land here.
+    pub qps: Vec<QpId>,
+}
+
+impl Uuar {
+    pub fn new(class: UuarClass) -> Self {
+        Self { class, qps: Vec::new() }
+    }
+
+    /// A uUAR counts as *used* if at least one QP maps to it.
+    pub fn is_used(&self) -> bool {
+        !self.qps.is_empty()
+    }
+
+    /// Whether BlueFlame writes to this uUAR are serialized by a lock.
+    pub fn needs_lock(&self) -> bool {
+        matches!(self.class, UuarClass::MediumLatency)
+    }
+
+    /// Whether BlueFlame (programmed I/O) is permitted on this uUAR.
+    pub fn allows_blueflame(&self) -> bool {
+        !matches!(self.class, UuarClass::HighLatency)
+    }
+}
+
+/// One 4 KiB UAR page holding two data-path uUARs.
+#[derive(Debug, Clone)]
+pub struct UarPage {
+    /// Device-global page index (used by the flush-group quirk model).
+    pub global_index: u32,
+    /// Dynamically allocated (by a TD) vs static (at CTX creation).
+    pub dynamic: bool,
+    pub uuars: [Uuar; DATA_PATH_UUARS_PER_PAGE],
+}
+
+impl UarPage {
+    pub fn new_static(global_index: u32, classes: [UuarClass; 2]) -> Self {
+        Self {
+            global_index,
+            dynamic: false,
+            uuars: [Uuar::new(classes[0]), Uuar::new(classes[1])],
+        }
+    }
+
+    pub fn new_dynamic(global_index: u32, classes: [UuarClass; 2]) -> Self {
+        Self {
+            global_index,
+            dynamic: true,
+            uuars: [Uuar::new(classes[0]), Uuar::new(classes[1])],
+        }
+    }
+
+    /// A UAR page counts as used if any of its data-path uUARs is used.
+    pub fn is_used(&self) -> bool {
+        self.uuars.iter().any(Uuar::is_used)
+    }
+
+    pub fn used_uuars(&self) -> u32 {
+        self.uuars.iter().filter(|u| u.is_used()).count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locking_classes() {
+        assert!(Uuar::new(UuarClass::MediumLatency).needs_lock());
+        assert!(!Uuar::new(UuarClass::LowLatency).needs_lock());
+        assert!(!Uuar::new(UuarClass::HighLatency).allows_blueflame());
+        assert!(Uuar::new(UuarClass::Dedicated(TdId(0))).allows_blueflame());
+    }
+
+    #[test]
+    fn usage_requires_a_qp() {
+        let mut page = UarPage::new_static(0, [UuarClass::HighLatency, UuarClass::MediumLatency]);
+        assert!(!page.is_used());
+        page.uuars[1].qps.push(QpId(0));
+        assert!(page.is_used());
+        assert_eq!(page.used_uuars(), 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! All timing constants of the simulation in one place.
+//!
+//! Calibration (DESIGN.md §5): a single §IV sender (p=32, q=64, inline,
+//! 2 B RDMA writes) should sustain ~10 M msg/s, and 16 fully independent
+//! senders should approach the ConnectX-4 port limit (the paper cites
+//! 150 M msg/s as the maximum reported for this NIC). Absolute numbers are
+//! NOT the reproduction target — ratios and crossovers are — but keeping
+//! them in hardware ballpark keeps the model honest.
+
+use crate::sim::{ns, Time};
+
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    // ------------------------------------------------------------- CPU
+    /// Preparing one device WQE in the send queue.
+    pub wqe_prep: Time,
+    /// Extra CPU cost per inlined payload byte (memcpy into the WQE).
+    pub inline_per_byte: Time,
+    /// 8-byte atomic MMIO DoorBell write (posted).
+    pub doorbell_mmio: Time,
+    /// 64-byte BlueFlame WQE write through a write-combining buffer.
+    pub blueflame_write: Time,
+    /// Lock acquire+release, uncontended.
+    pub lock_uncontended: Time,
+    /// Extra lock cost when ownership migrates between cores.
+    pub lock_handoff: Time,
+    /// Atomic RMW base cost (line in local cache).
+    pub atomic_base: Time,
+    /// Extra atomic cost when the cacheline bounces from another core.
+    pub atomic_bounce: Time,
+    /// Entering/figuring out one `ibv_poll_cq` call.
+    pub cq_poll_base: Time,
+    /// Reading + validating one CQE.
+    pub cq_poll_per_cqe: Time,
+    /// Branchy software overhead per WQE when a QP is shared between
+    /// threads (§VII: MPI+threads loses 13% even with one thread per QP
+    /// "because of the overhead of atomics and additional branches").
+    pub shared_qp_branch: Time,
+    /// MPI-rank-wide progress bookkeeping atomic, base cost. Threads of
+    /// one rank serialize here even with fully independent endpoints —
+    /// why processes-only beats fully-hybrid in the §VII stencil.
+    pub progress_atomic_base: Time,
+    /// Extra cost when the rank's progress cacheline bounces cores.
+    pub progress_atomic_bounce: Time,
+
+    // ------------------------------------------------------------- NIC
+    /// PCIe round-trip latency of a DMA read (WQE or payload fetch).
+    pub dma_read_latency: Time,
+    /// PCIe link occupancy per 64 B TLP.
+    pub pcie_tlp: Time,
+    /// Outstanding DMA-read capacity of the NIC (parallel channels).
+    pub dma_read_channels: usize,
+    /// TLB translation service time per payload address (one rail).
+    pub tlb_translate: Time,
+    /// NIC processing-unit occupancy per WQE.
+    pub engine_per_wqe: Time,
+    /// Extra engine occupancy to expand a doorbell into a fetch.
+    pub engine_doorbell: Time,
+    /// Register-port occupancy of a UAR page per BlueFlame write: two
+    /// uUARs on one page share this port, so concurrent BlueFlame writes
+    /// to one page serialize here (level-2 penalty, §V-B).
+    pub uar_port_blueflame: Time,
+    /// Extra occupancy when consecutive BlueFlame writes to one UAR page
+    /// come from *different QPs* (different cores): the page's
+    /// write-combining mapping is PAT page-granular (§V-B), so an
+    /// interleaved writer forces the previous core's WC buffer to flush
+    /// before the new 64 B burst can land.
+    pub wc_flush_conflict: Time,
+    /// Register-port occupancy per plain DoorBell ring (much smaller:
+    /// 8 B vs a 64 B WQE).
+    pub uar_port_doorbell: Time,
+    /// CQE DMA write (posted, overlaps; latency until CPU-visible).
+    pub cqe_write_latency: Time,
+    /// Wire slot per message (port message-rate limit; 6.25 ns =
+    /// 160 M msg/s).
+    pub wire_slot: Time,
+    /// Wire cost per payload byte (100 Gb/s EDR = 0.08 ns/B).
+    pub wire_per_byte_ps: Time,
+    /// One-way wire latency to the peer (switch hop included).
+    pub wire_latency: Time,
+    /// Extra doorbell-path time per BlueFlame write when the
+    /// contiguous-UAR anomaly engages (§V-B; `quirks.rs`). Calibrated so
+    /// the 16-way-CTX-sharing drop of Fig 7 is the paper's 1.15x.
+    pub flushgroup_extra: Time,
+    /// Number of contiguous active dynamic UAR pages in one CTX above
+    /// which the anomaly engages.
+    pub flushgroup_threshold: u32,
+}
+
+impl CostModel {
+    /// Default calibration (see module docs).
+    pub fn calibrated() -> Self {
+        Self {
+            wqe_prep: ns(70.0),
+            inline_per_byte: ns(0.25),
+            doorbell_mmio: ns(70.0),
+            blueflame_write: ns(90.0),
+            lock_uncontended: ns(16.0),
+            lock_handoff: ns(35.0),
+            atomic_base: ns(18.0),
+            atomic_bounce: ns(30.0),
+            cq_poll_base: ns(30.0),
+            cq_poll_per_cqe: ns(12.0),
+            shared_qp_branch: ns(10.0),
+            progress_atomic_base: ns(12.0),
+            progress_atomic_bounce: ns(20.0),
+            dma_read_latency: ns(450.0),
+            pcie_tlp: ns(4.0),
+            dma_read_channels: 16,
+            tlb_translate: ns(30.0),
+            engine_per_wqe: ns(24.0),
+            engine_doorbell: ns(20.0),
+            uar_port_blueflame: ns(55.0),
+            wc_flush_conflict: ns(120.0),
+            uar_port_doorbell: ns(8.0),
+            cqe_write_latency: ns(350.0),
+            wire_slot: ns(6.25),
+            wire_per_byte_ps: ns(0.08),
+            wire_latency: ns(900.0),
+            flushgroup_extra: ns(32.0),
+            flushgroup_threshold: 8,
+        }
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_rate_is_160m() {
+        let c = CostModel::calibrated();
+        let per_sec = 1e12 / c.wire_slot as f64;
+        assert!((per_sec - 160e6).abs() < 1e3);
+    }
+
+    #[test]
+    fn inline_cheaper_than_dma_for_small() {
+        let c = CostModel::calibrated();
+        // For a 2 B payload, inlining (CPU copy) must be far cheaper than
+        // a payload DMA read — that's the whole point of the feature.
+        assert!(2 * c.inline_per_byte < c.dma_read_latency / 10);
+    }
+}

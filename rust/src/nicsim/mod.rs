@@ -1,0 +1,33 @@
+//! Discrete-event model of the mlx5 NIC datapath (paper §II-B, §III,
+//! Appendix C).
+//!
+//! The sender-side critical path of one `ibv_post_send` is (Appendix C):
+//! one MMIO DoorBell write, a WQE DMA read, a payload DMA read, and a CQE
+//! DMA write — and each of the paper's operational features removes one of
+//! those legs:
+//!
+//! * **Postlist** — one DoorBell per linked list of WQEs;
+//! * **Inlining** — payload travels inside the WQE, no payload DMA read;
+//! * **Unsignaled completions** — one CQE per `q` WQEs;
+//! * **BlueFlame** — the WQE travels with the DoorBell (programmed I/O),
+//!   no WQE DMA read (not combined with Postlist).
+//!
+//! The simulator charges each leg to a FIFO resource so every sharing
+//! level of Fig 4(b) exposes its serialization point:
+//!
+//! * shared QP     → QP lock + depth atomics ([`crate::bench`]),
+//! * shared uUAR   → uUAR lock around BlueFlame writes,
+//! * shared UAR    → the page's register port ([`Nic::cpu_ring`]),
+//! * shared BUF    → TLB-rail hash collisions ([`Tlb`]),
+//! * shared CQ     → CQ lock + counter atomics ([`crate::bench`]).
+
+pub mod config;
+pub mod nic;
+pub mod pcie;
+pub mod quirks;
+pub mod tlb;
+
+pub use config::CostModel;
+pub use nic::Nic;
+pub use pcie::PcieCounters;
+pub use tlb::Tlb;

@@ -1,0 +1,361 @@
+//! The simulated NIC: doorbell ingress, WQE/payload fetch, per-QP
+//! processing, wire transmission, CQE write-back.
+
+use std::collections::HashMap;
+
+use crate::sim::{ParallelServer, Server, Time};
+use crate::verbs::{Fabric, QpId};
+
+use super::config::CostModel;
+use super::pcie::PcieCounters;
+use super::quirks;
+use super::tlb::Tlb;
+
+/// Dynamic (timed) state of one simulated mlx5 adapter, built from the
+/// static object topology of a [`Fabric`].
+#[derive(Debug, Clone)]
+pub struct Nic {
+    pub cost: CostModel,
+    /// Outstanding DMA-read capacity (shared by WQE and payload fetches).
+    dma: ParallelServer,
+    /// Multi-rail address-translation unit.
+    tlb: Tlb,
+    /// Per-QP in-order processing chain (a QP's WQEs serialize on the
+    /// processing unit assigned to its doorbell stream — this is why a
+    /// single shared QP "does not utilize the NIC's parallel
+    /// capabilities", §V-F).
+    qp_engine: Vec<Server>,
+    /// Register port of each UAR page, indexed by device-global page
+    /// index: concurrent doorbell/BlueFlame writes to the two uUARs of
+    /// one page serialize here (level-2 sharing penalty, §V-B).
+    uar_port: Vec<Server>,
+    /// Last *core* (thread) that BlueFlame-wrote each page: the WC flush
+    /// conflict is a property of write-combining buffers, which are
+    /// per-core — one thread alternating two QPs on one page pays
+    /// nothing, two threads interleaving on one page flush each other.
+    uar_last_writer: Vec<u32>,
+    /// Egress port (message-rate + bandwidth limited).
+    wire: Server,
+    /// Whether the BlueFlame flush-group anomaly applies to each QP's CTX
+    /// (`quirks`), resolved at construction.
+    qp_quirk: Vec<bool>,
+    /// Device-global UAR page of each QP's uUAR.
+    qp_page: Vec<u32>,
+    pub counters: PcieCounters,
+}
+
+impl Nic {
+    /// Build the timed state for `fabric`. `active_qps` lists the QPs the
+    /// workload will actually drive — the flush-group anomaly depends on
+    /// which dynamic UAR pages are concurrently *active*, not allocated
+    /// (that is exactly how 2xDynamic escapes it).
+    pub fn new(fabric: &Fabric, cost: CostModel, active_qps: &[QpId]) -> Self {
+        let nqps = fabric.qps.len();
+        let total_pages = fabric
+            .ctxs
+            .iter()
+            .flat_map(|c| c.uars.iter().map(|p| p.global_index as usize + 1))
+            .max()
+            .unwrap_or(0);
+        let mut qp_page = vec![0u32; nqps];
+        for qp in &fabric.qps {
+            qp_page[qp.id.index()] =
+                fabric.ctxs[qp.ctx.index()].uars[qp.uuar.page as usize].global_index;
+        }
+
+        // Resolve the quirk per CTX from the active QPs' dynamic pages.
+        let mut active_dyn_pages: HashMap<u32, Vec<u32>> = HashMap::new();
+        for &qp in active_qps {
+            let q = &fabric.qps[qp.index()];
+            let page = &fabric.ctxs[q.ctx.index()].uars[q.uuar.page as usize];
+            if page.dynamic {
+                active_dyn_pages.entry(q.ctx.0).or_default().push(page.global_index);
+            }
+        }
+        let mut ctx_quirk: HashMap<u32, bool> = HashMap::new();
+        for (ctx, mut pages) in active_dyn_pages {
+            pages.sort_unstable();
+            pages.dedup();
+            ctx_quirk.insert(ctx, quirks::flushgroup_penalty_applies(&cost, &pages));
+        }
+        let mut qp_quirk = vec![false; nqps];
+        for qp in &fabric.qps {
+            qp_quirk[qp.id.index()] = *ctx_quirk.get(&qp.ctx.0).unwrap_or(&false);
+        }
+
+        Self {
+            cost,
+            dma: ParallelServer::new(cost.dma_read_channels),
+            tlb: Tlb::new(fabric.caps.tlb_rails, cost.tlb_translate),
+            qp_engine: vec![Server::new(); nqps],
+            uar_port: vec![Server::new(); total_pages],
+            uar_last_writer: vec![u32::MAX; total_pages],
+            wire: Server::new(),
+            qp_quirk,
+            qp_page,
+            counters: PcieCounters::default(),
+        }
+    }
+
+    /// CPU-blocking part of ringing a doorbell at `now` from core
+    /// `writer`: the MMIO (or BlueFlame WC) write must drain through the
+    /// UAR page's register port. Returns the time the CPU's write is
+    /// accepted.
+    pub fn cpu_ring(&mut self, now: Time, qp: QpId, blueflame: bool, writer: u32) -> Time {
+        let page = self.qp_page[qp.index()];
+        let quirk = self.qp_quirk[qp.index()];
+        let occ = if blueflame {
+            // WC flush conflict: an interleaved BlueFlame writer from
+            // another core on the same page forces that core's WC buffer
+            // to flush before this 64 B burst lands (§V-B level-2
+            // penalty).
+            let prev = std::mem::replace(&mut self.uar_last_writer[page as usize], writer);
+            let conflict = if prev != u32::MAX && prev != writer {
+                self.cost.wc_flush_conflict
+            } else {
+                0
+            };
+            quirks::apply_penalty(&self.cost, self.cost.uar_port_blueflame + conflict, quirk)
+        } else {
+            self.cost.uar_port_doorbell
+        };
+        self.counters.mmio_writes += 1;
+        self.uar_port[page as usize].request(now, occ).1
+    }
+
+    /// NIC-side processing of a batch of `n` WQEs whose doorbell landed at
+    /// `t`. Returns the CPU-visible arrival time of each *signaled* CQE
+    /// (`signal_idx` are 0-based WQE indices within the batch).
+    ///
+    /// * `inline`: payload rides in the WQE — no payload DMA read.
+    /// * `blueflame`: the WQE arrived with the doorbell — no WQE DMA read
+    ///   (callers guarantee `n == 1`; BlueFlame is not used with Postlist,
+    ///   §II-B).
+    /// * `cacheline`: the payload buffer's cacheline (TLB rail key).
+    ///
+    /// The pipeline stages are requested at *batch* granularity: a
+    /// Postlist burst moves through the engine, the TLB rail, the DMA
+    /// unit and the wire as one work item whose service time scales with
+    /// `n`. (Per-WQE reservations at future timestamps would leave
+    /// unusable holes in the FIFO servers — phantom head-of-line blocking
+    /// a real work-conserving NIC does not have.) Signaled positions
+    /// inside the burst complete proportionally.
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_batch(
+        &mut self,
+        t: Time,
+        qp: QpId,
+        n: u32,
+        inline: bool,
+        blueflame: bool,
+        cacheline: u64,
+        msg_bytes: u32,
+        signal_idx: &[u32],
+    ) -> Vec<Time> {
+        debug_assert!(!blueflame || n == 1, "BlueFlame is per-WQE (no Postlist)");
+        let c = self.cost;
+        let chain = &mut self.qp_engine[qp.index()];
+
+        // 1. WQE availability at the NIC.
+        let wqes_at = if blueflame {
+            t
+        } else {
+            // DoorBell decode + DMA read of the n-WQE linked list. 64 B
+            // WQEs, 256 B read completions -> ceil(n/4) PCIe reads.
+            self.counters.dma_reads += n.div_ceil(4) as u64;
+            let fetch_start = chain.request(t, c.engine_doorbell).1;
+            self.dma.request_latency(fetch_start, n as u64 * c.pcie_tlp, c.dma_read_latency)
+        };
+
+        // 2. In-order processing on the QP's chain (a shared QP's messages
+        //    serialize here — §V-F).
+        let (_, eng_end) = self.qp_engine[qp.index()].request(wqes_at, n as u64 * c.engine_per_wqe);
+
+        // 3. Payload fetch: translate on the buffer's TLB rail, then DMA.
+        let payload_done = if inline {
+            eng_end
+        } else {
+            self.counters.dma_reads += n as u64;
+            let translated = self.tlb.translate_batch(eng_end, cacheline, n);
+            self.dma.request_latency(translated, n as u64 * c.pcie_tlp, c.dma_read_latency)
+        };
+
+        // 4. Wire transmission.
+        let per_msg_wire = c.wire_slot + msg_bytes as u64 * c.wire_per_byte_ps;
+        let (w_start, _) = self.wire.request(payload_done, n as u64 * per_msg_wire);
+
+        // 5. Signaled CQEs: hardware ack from the peer NIC, then CQE DMA
+        //    write, at the WQE's position within the burst.
+        let mut completions = Vec::with_capacity(signal_idx.len());
+        for &i in signal_idx {
+            debug_assert!(i < n);
+            self.counters.dma_writes += 1;
+            completions
+                .push(w_start + (i as u64 + 1) * per_msg_wire + c.wire_latency + c.cqe_write_latency);
+        }
+        completions
+    }
+
+    /// Earliest time the wire is free (used to detect port saturation in
+    /// reports).
+    pub fn wire_avail(&self) -> Time {
+        self.wire.avail()
+    }
+
+    /// Wire busy time (for utilization reporting).
+    pub fn wire_busy(&self) -> Time {
+        self.wire.busy()
+    }
+
+    /// Messages transmitted.
+    pub fn wire_served(&self) -> u64 {
+        self.wire.served()
+    }
+
+    /// Whether the flush-group anomaly applies to this QP (test hook).
+    pub fn quirk_applies(&self, qp: QpId) -> bool {
+        self.qp_quirk[qp.index()]
+    }
+
+    /// Utilization diagnostics over a virtual horizon (perf reports).
+    pub fn stats(&self, horizon: Time) -> String {
+        let h = horizon.max(1) as f64;
+        let busiest_engine = self.qp_engine.iter().map(|e| e.busy()).max().unwrap_or(0);
+        format!(
+            "wire {:.0}% ({} msgs) | dma {:.0}%x{} | busiest-qp-engine {:.0}% | mmio {}",
+            100.0 * self.wire.busy() as f64 / h,
+            self.wire.served(),
+            100.0 * self.dma.busy() as f64 / (h * self.dma.channels() as f64),
+            self.dma.channels(),
+            100.0 * busiest_engine as f64 / h,
+            self.counters.mmio_writes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::{Category, EndpointBuilder};
+    use crate::verbs::QpCaps;
+
+    fn small_fabric() -> (Fabric, QpId, QpId) {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Default::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let a = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        let b = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        (f, a, b)
+    }
+
+    #[test]
+    fn inline_skips_payload_dma() {
+        let (f, a, _) = small_fabric();
+        let cost = CostModel::calibrated();
+        let mut nic = Nic::new(&f, cost, &[a]);
+        nic.process_batch(0, a, 1, true, true, 0, 2, &[0]);
+        assert_eq!(nic.counters.dma_reads, 0);
+        let mut nic2 = Nic::new(&f, cost, &[a]);
+        nic2.process_batch(0, a, 1, false, true, 0, 2, &[0]);
+        assert_eq!(nic2.counters.dma_reads, 1); // payload only (BlueFlame)
+        let mut nic3 = Nic::new(&f, cost, &[a]);
+        nic3.process_batch(0, a, 1, false, false, 0, 2, &[0]);
+        assert_eq!(nic3.counters.dma_reads, 2); // WQE fetch + payload
+    }
+
+    #[test]
+    fn postlist_batches_wqe_fetch() {
+        let (f, a, _) = small_fabric();
+        let mut nic = Nic::new(&f, CostModel::calibrated(), &[a]);
+        // 32 WQEs, inline: ceil(32/4) = 8 WQE-fetch reads, no payload.
+        nic.process_batch(0, a, 32, true, false, 0, 2, &[31]);
+        assert_eq!(nic.counters.dma_reads, 8);
+    }
+
+    #[test]
+    fn unsignaled_reduces_cqe_writes() {
+        let (f, a, _) = small_fabric();
+        let mut nic = Nic::new(&f, CostModel::calibrated(), &[a]);
+        let comps = nic.process_batch(0, a, 32, true, false, 0, 2, &[15, 31]);
+        assert_eq!(comps.len(), 2);
+        assert_eq!(nic.counters.dma_writes, 2);
+        assert!(comps[0] < comps[1]);
+    }
+
+    #[test]
+    fn same_qp_serializes_distinct_qps_overlap() {
+        let (f, a, b) = small_fabric();
+        let cost = CostModel::calibrated();
+        let mut nic = Nic::new(&f, cost, &[a, b]);
+        let c1 = nic.process_batch(0, a, 1, true, true, 0, 2, &[0])[0];
+        let c2 = nic.process_batch(0, a, 1, true, true, 0, 2, &[0])[0];
+        let mut nic2 = Nic::new(&f, cost, &[a, b]);
+        let d1 = nic2.process_batch(0, a, 1, true, true, 0, 2, &[0])[0];
+        let d2 = nic2.process_batch(0, b, 1, true, true, 64, 2, &[0])[0];
+        // Two QPs overlap better than one QP back-to-back, up to the wire.
+        assert_eq!(c1, d1);
+        assert!(d2 <= c2);
+    }
+
+    #[test]
+    fn quirk_resolved_per_category() {
+        // Dynamic (16 contiguous active dynamic pages) triggers; 2xDynamic
+        // (even pages of 32) does not; MPI everywhere (static pages) does
+        // not.
+        let cost = CostModel::calibrated();
+        for (cat, expect) in [
+            (Category::Dynamic, true),
+            (Category::TwoXDynamic, false),
+            (Category::MpiEverywhere, false),
+            (Category::SharedDynamic, false),
+        ] {
+            let mut f = Fabric::connectx4();
+            let set = EndpointBuilder::new(cat, 16).build(&mut f).unwrap();
+            let active: Vec<QpId> = set.threads.iter().map(|t| t.qp).collect();
+            let nic = Nic::new(&f, cost, &active);
+            assert_eq!(nic.quirk_applies(active[0]), expect, "{cat}");
+        }
+    }
+
+    #[test]
+    fn uar_port_serializes_blueflame_on_shared_page() {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(Category::SharedDynamic, 2).build(&mut f).unwrap();
+        let (a, b) = (set.threads[0].qp, set.threads[1].qp);
+        let cost = CostModel::calibrated();
+        let mut nic = Nic::new(&f, cost, &[a, b]);
+        let t0 = nic.cpu_ring(0, a, true, 0);
+        let t1 = nic.cpu_ring(0, b, true, 1); // same UAR page -> serializes + WC flush
+        assert_eq!(t0, cost.uar_port_blueflame);
+        assert_eq!(t1, 2 * cost.uar_port_blueflame + cost.wc_flush_conflict);
+
+        // Independent pages (Dynamic) do not serialize.
+        let mut f2 = Fabric::connectx4();
+        let set2 = EndpointBuilder::new(Category::Dynamic, 2).build(&mut f2).unwrap();
+        let (a2, b2) = (set2.threads[0].qp, set2.threads[1].qp);
+        let mut nic2 = Nic::new(&f2, cost, &[a2, b2]);
+        let u0 = nic2.cpu_ring(0, a2, true, 0);
+        let u1 = nic2.cpu_ring(0, b2, true, 1);
+        assert_eq!(u0, u1);
+    }
+
+    #[test]
+    fn same_core_alternating_qps_pays_no_wc_conflict() {
+        // One thread driving two QPs on one page (the stencil's
+        // MPI-everywhere shape) must not pay the cross-core flush.
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Default::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let a = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        let b = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        // Low-latency uUARs 12 and 13 share static page 6.
+        assert_eq!(f.qp(a).unwrap().uuar.page, f.qp(b).unwrap().uuar.page);
+        let cost = CostModel::calibrated();
+        let mut nic = Nic::new(&f, cost, &[a, b]);
+        let t0 = nic.cpu_ring(0, a, true, 0);
+        let t1 = nic.cpu_ring(t0, b, true, 0); // same writer core
+        assert_eq!(t1 - t0, cost.uar_port_blueflame);
+    }
+}

@@ -1,0 +1,43 @@
+//! PCIe transaction counters (the paper measures PCIe reads with PMU
+//! tools in Fig 6; we count the same transactions in the model).
+
+/// Counts of PCIe transactions initiated during a simulation, plus the
+/// virtual time of the last one — enough to report both totals and rates
+/// like Fig 6(b).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PcieCounters {
+    /// MMIO writes from CPU to NIC (DoorBells + BlueFlame).
+    pub mmio_writes: u64,
+    /// DMA reads issued by the NIC (WQE fetches + payload fetches).
+    pub dma_reads: u64,
+    /// DMA writes issued by the NIC (CQEs).
+    pub dma_writes: u64,
+}
+
+impl PcieCounters {
+    pub fn total_reads(&self) -> u64 {
+        self.dma_reads
+    }
+
+    /// Reads per second over a virtual horizon.
+    pub fn read_rate(&self, horizon: crate::sim::Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.dma_reads as f64 / crate::sim::to_secs(horizon)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let c = PcieCounters { mmio_writes: 0, dma_reads: 1000, dma_writes: 0 };
+        // 1000 reads over 1 us = 1e9 reads/s.
+        let rate = c.read_rate(1_000_000);
+        assert!((rate - 1e9).abs() < 1.0);
+    }
+}

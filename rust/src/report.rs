@@ -1,0 +1,117 @@
+//! Table/CSV emitters shared by the figure benches and the CLI.
+//!
+//! Each figure bench prints (a) a human-readable aligned table matching
+//! the paper's series and (b) machine-readable CSV lines prefixed with
+//! `csv,` so results can be grepped into plotting tools.
+
+/// A simple column-aligned table printer.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Emit `csv,<title>,<header...>` + one `csv,` line per row.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        let slug = self.title.replace([' ', ','], "_");
+        out.push_str(&format!("csv,{},{}\n", slug, self.header.join(",")));
+        for row in &self.rows {
+            out.push_str(&format!("csv,{},{}\n", slug, row.join(",")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+        print!("{}", self.render_csv());
+        println!();
+    }
+}
+
+/// Format a float with sensible precision for tables.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+/// Format a fraction as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long_header"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_lines() {
+        let mut t = Table::new("fig x", &["col"]);
+        t.row(vec!["v".into()]);
+        let s = t.render_csv();
+        assert!(s.contains("csv,fig_x,col"));
+        assert!(s.contains("csv,fig_x,v"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        Table::new("t", &["a"]).row(vec![]);
+    }
+}

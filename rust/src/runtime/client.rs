@@ -1,0 +1,99 @@
+//! Typed executors over the compiled artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Tile edge of the DGEMM kernel (MXU-shaped 128x128 tiles; see
+/// `python/compile/kernels/dgemm.py`).
+pub const DGEMM_TILE: usize = 128;
+
+/// Interior tile rows/cols of the stencil kernel (the artifact consumes a
+/// `(TILE+2) x (TILE+2)` haloed input).
+pub const STENCIL_TILE: usize = 64;
+
+/// A PJRT CPU client holding the compiled executables of every artifact
+/// in `artifacts/`.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Load and compile `<name>.hlo.txt` artifacts from `dir` on the PJRT
+    /// CPU client. Missing files surface as errors when first used.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, exes: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifact directory: `$SCEP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SCEP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Execute the `dgemm_tile` artifact: `C += A @ B` over
+    /// `DGEMM_TILE`-square f32 tiles. Inputs are row-major flat slices of
+    /// length `DGEMM_TILE * DGEMM_TILE`.
+    pub fn dgemm_tile(&mut self, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        let n = DGEMM_TILE * DGEMM_TILE;
+        if a.len() != n || b.len() != n || c.len() != n {
+            bail!("dgemm_tile expects {n}-element tiles (got {}, {}, {})", a.len(), b.len(), c.len());
+        }
+        let d = DGEMM_TILE;
+        let la = xla::Literal::vec1(a).reshape(&[d as i64, d as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[d as i64, d as i64])?;
+        let lc = xla::Literal::vec1(c).reshape(&[d as i64, d as i64])?;
+        let exe = self.exe("dgemm_tile")?;
+        let result = exe.execute::<xla::Literal>(&[la, lb, lc])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the `stencil_tile` artifact: one 5-point Jacobi sweep over
+    /// a `(STENCIL_TILE+2)`-square haloed f32 tile, returning the
+    /// `STENCIL_TILE`-square interior.
+    pub fn stencil_tile(&mut self, haloed: &[f32]) -> Result<Vec<f32>> {
+        let h = STENCIL_TILE + 2;
+        if haloed.len() != h * h {
+            bail!("stencil_tile expects a {h}x{h} haloed tile (got {})", haloed.len());
+        }
+        let lx = xla::Literal::vec1(haloed).reshape(&[h as i64, h as i64])?;
+        let exe = self.exe("stencil_tile")?;
+        let result = exe.execute::<xla::Literal>(&[lx])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

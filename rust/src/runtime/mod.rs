@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from Rust. Python never runs on the request path — `make
+//! artifacts` lowers the kernels to HLO *text* once, and this module
+//! compiles and executes them through the `xla` crate's PJRT CPU client.
+//!
+//! HLO text (not a serialized `HloModuleProto`) is the interchange format:
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+pub mod client;
+
+pub use client::{ArtifactRuntime, DGEMM_TILE, STENCIL_TILE};

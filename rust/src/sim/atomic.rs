@@ -1,0 +1,76 @@
+//! Shared-cacheline atomic cost model.
+//!
+//! QP sharing needs an atomic fetch-and-decrement on the shared QP's depth
+//! (§V-F) and CQ sharing needs atomic completion counters (§V-E). An
+//! atomic RMW on a cacheline owned by another core pays a coherence
+//! transfer; the line ping-pongs between the sharers. We model the atomic
+//! unit as a FIFO server (RMWs to one line serialize in hardware) whose
+//! service time is `base` for a line already in the requester's cache and
+//! `base + bounce` when the previous RMW came from a different thread.
+
+use super::server::Server;
+use super::Time;
+
+#[derive(Debug, Clone)]
+pub struct SimAtomic {
+    server: Server,
+    base: Time,
+    bounce: Time,
+    last: Option<u32>,
+    bounces: u64,
+}
+
+impl SimAtomic {
+    pub fn new(base: Time, bounce: Time) -> Self {
+        Self { server: Server::new(), base, bounce, last: None, bounces: 0 }
+    }
+
+    /// Perform one RMW by `tid` arriving at `now`; returns completion time.
+    #[inline]
+    pub fn rmw(&mut self, now: Time, tid: u32) -> Time {
+        let migrated = self.last.is_some_and(|l| l != tid);
+        if migrated {
+            self.bounces += 1;
+        }
+        let service = self.base + if migrated { self.bounce } else { 0 };
+        self.last = Some(tid);
+        self.server.request(now, service).1
+    }
+
+    /// `n` back-to-back RMWs from one thread (e.g. batched counter
+    /// updates); only the first can bounce.
+    pub fn rmw_n(&mut self, now: Time, tid: u32, n: u64) -> Time {
+        let mut t = now;
+        for _ in 0..n {
+            t = self.rmw(t, tid);
+        }
+        t
+    }
+
+    pub fn bounces(&self) -> u64 {
+        self.bounces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_thread_never_bounces() {
+        let mut a = SimAtomic::new(20, 25);
+        let t = a.rmw_n(0, 7, 4);
+        assert_eq!(t, 80);
+        assert_eq!(a.bounces(), 0);
+    }
+
+    #[test]
+    fn alternating_threads_bounce() {
+        let mut a = SimAtomic::new(20, 25);
+        let t0 = a.rmw(0, 0); // 20
+        let t1 = a.rmw(0, 1); // queued: 20 + 45
+        assert_eq!(t0, 20);
+        assert_eq!(t1, 65);
+        assert_eq!(a.bounces(), 1);
+    }
+}

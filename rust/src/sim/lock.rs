@@ -1,0 +1,179 @@
+//! Lock contention model.
+//!
+//! The paper's serialization points — the QP lock, the CQ lock, the
+//! medium-latency uUAR lock — are pthread spinlocks in `rdma-core`. In the
+//! simulator a lock is a FIFO [`Server`](super::Server) plus two costs:
+//!
+//! * `uncontended`: acquire+release overhead paid even by a lone thread
+//!   (this is why *MPI everywhere* is "closest to but not the best
+//!   possible" — §VI: the QP lock is still taken with no contender), and
+//! * `handoff`: extra cost when ownership migrates between threads (the
+//!   lock word's cacheline bounces between cores).
+//!
+//! A disabled lock (`SimLock::disabled()`) models the paper's optimized
+//! mlx5 where TD-assigned QPs skip the QP lock entirely [mlx5 PR #327].
+
+use super::server::Server;
+use super::Time;
+
+/// Token identifying the previous holder, used to bill the handoff cost
+/// only when ownership actually migrates.
+pub type HolderId = u32;
+
+#[derive(Debug, Clone)]
+pub struct SimLock {
+    server: Server,
+    uncontended: Time,
+    handoff: Time,
+    last_holder: Option<HolderId>,
+    enabled: bool,
+    contended_acquires: u64,
+    migrations: u64,
+}
+
+impl SimLock {
+    /// A normal lock with the given acquire/release and migration costs.
+    pub fn new(uncontended: Time, handoff: Time) -> Self {
+        Self {
+            server: Server::new(),
+            uncontended,
+            handoff,
+            last_holder: None,
+            enabled: true,
+            contended_acquires: 0,
+            migrations: 0,
+        }
+    }
+
+    /// A compiled-out lock: zero cost, no serialization. Models
+    /// single-threaded-access guarantees (TD-assigned QP with the lock
+    /// removed, `IBV_CREATE_CQ_ATTR_SINGLE_THREADED` extended CQs).
+    pub fn disabled() -> Self {
+        let mut l = Self::new(0, 0);
+        l.enabled = false;
+        l
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Acquire at `now`, hold for `hold`, release. Returns `(start, end)`
+    /// where `start` is when the critical section begins and `end` when the
+    /// lock is free again (the caller resumes at `end`).
+    ///
+    /// `hold` must include everything done under the lock; nested resource
+    /// requests can extend it via [`SimLock::scope`].
+    pub fn acquire(&mut self, now: Time, holder: HolderId, hold: Time) -> (Time, Time) {
+        if !self.enabled {
+            return (now, now + hold);
+        }
+        let migrated = self.last_holder.is_some_and(|h| h != holder);
+        let overhead = self.uncontended + if migrated { self.handoff } else { 0 };
+        if migrated {
+            self.migrations += 1;
+        }
+        if self.server.avail() > now {
+            self.contended_acquires += 1;
+        }
+        let (start, end) = self.server.request(now, overhead + hold);
+        self.last_holder = Some(holder);
+        (start + overhead, end)
+    }
+
+    /// Acquire at `now` and run `body` inside the critical section. `body`
+    /// receives the time the critical section starts and returns the time
+    /// its work completes; the lock stays held until then. Returns the
+    /// release time.
+    pub fn scope<F>(&mut self, now: Time, holder: HolderId, body: F) -> Time
+    where
+        F: FnOnce(Time) -> Time,
+    {
+        if !self.enabled {
+            return body(now);
+        }
+        let migrated = self.last_holder.is_some_and(|h| h != holder);
+        let overhead = self.uncontended + if migrated { self.handoff } else { 0 };
+        if migrated {
+            self.migrations += 1;
+        }
+        if self.server.avail() > now {
+            self.contended_acquires += 1;
+        }
+        let start = self.server.avail().max(now) + overhead;
+        let end = body(start);
+        // Manually extend the server to the body's completion.
+        let hold = end - (start - overhead);
+        let (_, release) = self.server.request(now, hold);
+        self.last_holder = Some(holder);
+        release
+    }
+
+    pub fn contended_acquires(&self) -> u64 {
+        self.contended_acquires
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    pub fn busy(&self) -> Time {
+        self.server.busy()
+    }
+
+    pub fn mean_queue_delay(&self) -> f64 {
+        self.server.mean_queue_delay()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lone_thread_pays_uncontended_only() {
+        let mut l = SimLock::new(16, 30);
+        let (start, end) = l.acquire(0, 0, 100);
+        assert_eq!(start, 16);
+        assert_eq!(end, 116);
+        // Same holder again: no handoff.
+        let (s2, e2) = l.acquire(end, 0, 100);
+        assert_eq!(s2, end + 16);
+        assert_eq!(e2, end + 116);
+        assert_eq!(l.migrations(), 0);
+        assert_eq!(l.contended_acquires(), 0);
+    }
+
+    #[test]
+    fn contention_serializes_and_bills_handoff() {
+        let mut l = SimLock::new(16, 30);
+        let (_, e0) = l.acquire(0, 0, 100); // free at 116
+        let (s1, e1) = l.acquire(10, 1, 100); // queued
+        assert_eq!(s1, e0 + 16 + 30);
+        assert_eq!(e1, e0 + 16 + 30 + 100);
+        assert_eq!(l.migrations(), 1);
+        assert_eq!(l.contended_acquires(), 1);
+    }
+
+    #[test]
+    fn disabled_lock_is_free() {
+        let mut l = SimLock::disabled();
+        let (s, e) = l.acquire(50, 3, 100);
+        assert_eq!((s, e), (50, 150));
+        let (s2, e2) = l.acquire(60, 4, 100);
+        assert_eq!((s2, e2), (60, 160)); // no serialization at all
+    }
+
+    #[test]
+    fn scope_extends_hold_to_body_completion() {
+        let mut l = SimLock::new(10, 0);
+        let release = l.scope(0, 0, |start| {
+            assert_eq!(start, 10);
+            start + 500
+        });
+        assert_eq!(release, 510);
+        // Next acquire queues behind the extended hold.
+        let (s, _) = l.acquire(0, 1, 10);
+        assert_eq!(s, 520);
+    }
+}

@@ -1,0 +1,100 @@
+//! Virtual-time thread scheduler.
+//!
+//! The benchmark's sender threads are coroutine-like state machines. The
+//! scheduler holds a min-heap of `(resume_time, seq, thread)` and always
+//! advances the earliest thread by one *step* (one bounded program phase:
+//! prepare+post a batch, or one poll of the CQ). Steps therefore begin in
+//! nondecreasing virtual-time order, which is what makes the FIFO
+//! [`Server`](super::Server) queueing model faithful.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Time;
+
+/// What a thread wants after a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Run the next step no earlier than this virtual time.
+    Resume(Time),
+    /// The thread's program finished at this time.
+    Done(Time),
+}
+
+/// Run `threads` to completion. `step(world, tid, now)` advances thread
+/// `tid` one step from `now`. Returns the virtual completion time of each
+/// thread.
+pub struct Scheduler {
+    heap: BinaryHeap<Reverse<(Time, u64, u32)>>,
+    seq: u64,
+    done: Vec<Option<Time>>,
+}
+
+impl Scheduler {
+    pub fn new(nthreads: u32) -> Self {
+        let mut heap = BinaryHeap::with_capacity(nthreads as usize);
+        for tid in 0..nthreads {
+            heap.push(Reverse((0, tid as u64, tid)));
+        }
+        Self { heap, seq: nthreads as u64, done: vec![None; nthreads as usize] }
+    }
+
+    /// Drive all threads to completion; `step` is invoked as
+    /// `step(tid, now)` and returns the thread's next action.
+    pub fn run<F>(mut self, mut step: F) -> Vec<Time>
+    where
+        F: FnMut(u32, Time) -> Step,
+    {
+        while let Some(Reverse((now, _, tid))) = self.heap.pop() {
+            match step(tid, now) {
+                Step::Resume(t) => {
+                    debug_assert!(t >= now, "time must not go backwards");
+                    self.heap.push(Reverse((t, self.seq, tid)));
+                    self.seq += 1;
+                }
+                Step::Done(t) => {
+                    self.done[tid as usize] = Some(t);
+                }
+            }
+        }
+        self.done.into_iter().map(|d| d.expect("thread finished")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleaves_in_time_order() {
+        // Two threads, each does 3 steps of 10ns / 15ns; record order.
+        let mut order = Vec::new();
+        let mut counts = [0u32; 2];
+        let done = Scheduler::new(2).run(|tid, now| {
+            order.push((now, tid));
+            counts[tid as usize] += 1;
+            let dt = if tid == 0 { 10_000 } else { 15_000 };
+            if counts[tid as usize] == 3 {
+                Step::Done(now + dt)
+            } else {
+                Step::Resume(now + dt)
+            }
+        });
+        assert_eq!(done, vec![30_000, 45_000]);
+        // Times nondecreasing.
+        for w in order.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "thread finished")]
+    fn unfinished_thread_panics() {
+        // A scheduler whose step never returns Done for tid 1 would hang;
+        // so instead verify the accounting: mark tid 0 done, drop tid 1
+        // from the heap by marking it done at once too — then force the
+        // panic path by constructing a scheduler with an empty heap.
+        let sched = Scheduler { heap: BinaryHeap::new(), seq: 0, done: vec![None] };
+        let _ = sched.run(|_, _| Step::Done(0));
+    }
+}

@@ -1,0 +1,69 @@
+//! In-repo property-testing helper (no external `proptest` available in
+//! the offline build environment).
+//!
+//! [`check`] runs a property over `iters` pseudo-random cases drawn from a
+//! deterministic generator; on failure it reports the seed and case index
+//! so the exact case can be replayed.
+
+use crate::sim::XorShift;
+
+/// Run `prop(rng, case_index)` for `iters` cases; panic with replay info
+/// on the first failing case. The property signals failure by returning
+/// `Err(reason)`.
+pub fn check<F>(name: &str, seed: u64, iters: u64, mut prop: F)
+where
+    F: FnMut(&mut XorShift, u64) -> Result<(), String>,
+{
+    for case in 0..iters {
+        // Derive a per-case RNG so shrinking/replay is trivial.
+        let mut rng = XorShift::new(seed ^ (case.wrapping_mul(0x9E37_79B9)));
+        if let Err(reason) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {reason}\n\
+                 replay: check(\"{name}\", {seed}, {iters}, ...) case {case}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are relatively close.
+pub fn assert_rel_close(a: f64, b: f64, tol: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    let rel = (a - b).abs() / denom;
+    assert!(rel <= tol, "{what}: {a} vs {b} (rel err {rel:.4} > tol {tol})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("commutativity", 1, 100, |rng, _| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check("always-fails", 7, 10, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn rel_close() {
+        assert_rel_close(100.0, 100.4, 0.01, "ok");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rel_far_panics() {
+        assert_rel_close(100.0, 150.0, 0.01, "far");
+    }
+}

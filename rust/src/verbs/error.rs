@@ -1,0 +1,49 @@
+//! Error type for verbs object creation/use.
+
+use thiserror::Error;
+
+use super::types::{CqId, CtxId, PdId, QpId, TdId};
+
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+pub enum VerbsError {
+    #[error("device out of UAR pages (allocated {allocated}, limit {limit})")]
+    DeviceOutOfUars { allocated: u32, limit: u32 },
+
+    #[error("context {0} reached the per-CTX dynamic UAR limit ({1})")]
+    CtxOutOfDynamicUars(CtxId, u32),
+
+    #[error("invalid sharing level {0} (mlx5 supports 1 or 2)")]
+    InvalidSharingLevel(u32),
+
+    #[error("{0} and {1} belong to different contexts")]
+    CrossContext(String, String),
+
+    #[error("unknown context {0}")]
+    UnknownCtx(CtxId),
+
+    #[error("unknown protection domain {0}")]
+    UnknownPd(PdId),
+
+    #[error("unknown completion queue {0}")]
+    UnknownCq(CqId),
+
+    #[error("unknown queue pair {0}")]
+    UnknownQp(QpId),
+
+    #[error("unknown thread domain {0}")]
+    UnknownTd(TdId),
+
+    #[error("queue pair {0} is in state {1}, expected {2}")]
+    BadQpState(QpId, String, String),
+
+    #[error("send queue of {0} is full (depth {1})")]
+    SendQueueFull(QpId, u32),
+
+    #[error("inline payload of {size} B exceeds max_inline {max} B")]
+    InlineTooLarge { size: u32, max: u32 },
+
+    #[error("{0} still has live children ({1})")]
+    Busy(String, String),
+}
+
+pub type Result<T> = std::result::Result<T, VerbsError>;

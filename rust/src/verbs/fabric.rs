@@ -1,0 +1,637 @@
+//! The [`Fabric`]: arena of verbs objects for one simulated device, plus
+//! the creation API (`ibv_*`-shaped) and the mlx5 uUAR-to-QP assignment
+//! policy of Appendix B.
+
+use crate::mlx5::uar::{UarPage, Uuar, UuarClass, UuarRef, DATA_PATH_UUARS_PER_PAGE};
+use crate::mlx5::{DeviceCaps, MemModel, Mlx5Env};
+
+use super::error::{Result, VerbsError};
+use super::objects::{Buf, Cq, Ctx, Mr, Pd, Qp, QpState, Td};
+use super::types::{
+    BufId, CqId, CtxId, MrId, PdId, QpCaps, QpId, TdId, TdInitAttr, SHARING_INDEPENDENT,
+    SHARING_PAIRED,
+};
+
+/// Arena of all verbs objects on one device.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub caps: DeviceCaps,
+    pub mem: MemModel,
+    /// Models the paper's mlx5 optimization (rdma-core PR #327): the lock
+    /// on a TD-assigned QP is removed, not just the uUAR lock. The paper's
+    /// evaluation runs with this patch applied.
+    pub qp_lock_optimization: bool,
+    pub ctxs: Vec<Ctx>,
+    pub pds: Vec<Pd>,
+    pub mrs: Vec<Mr>,
+    pub cqs: Vec<Cq>,
+    pub qps: Vec<Qp>,
+    pub tds: Vec<Td>,
+    pub bufs: Vec<Buf>,
+    /// Device-wide UAR pages handed out (static + dynamic).
+    pub uar_pages_allocated: u32,
+    /// Device-global index generator for UAR pages (contiguous allocation,
+    /// which is what the flush-group quirk keys on).
+    next_uar_global: u32,
+    /// Open half-filled UAR page per ctx for `sharing=2` TD pairing.
+    open_pair_page: Vec<Option<u32>>,
+}
+
+impl Fabric {
+    pub fn new(caps: DeviceCaps) -> Self {
+        Self {
+            caps,
+            mem: MemModel::table1(),
+            qp_lock_optimization: true,
+            ctxs: Vec::new(),
+            pds: Vec::new(),
+            mrs: Vec::new(),
+            cqs: Vec::new(),
+            qps: Vec::new(),
+            tds: Vec::new(),
+            bufs: Vec::new(),
+            uar_pages_allocated: 0,
+            next_uar_global: 0,
+            open_pair_page: Vec::new(),
+        }
+    }
+
+    pub fn connectx4() -> Self {
+        Self::new(DeviceCaps::connectx4())
+    }
+
+    // ---------------------------------------------------------------- CTX
+
+    /// `ibv_open_device` + context allocation: statically allocates
+    /// `env.static_uar_pages()` UAR pages and classifies their uUARs
+    /// (Appendix B): uUAR 0 high-latency, the last `num_low_lat_uuars`
+    /// low-latency, the rest medium-latency.
+    pub fn open_ctx(&mut self, env: Mlx5Env) -> Result<CtxId> {
+        let env = env.validated();
+        let pages = env.static_uar_pages();
+        self.take_uar_pages(pages)?;
+        let id = CtxId(self.ctxs.len() as u32);
+        let total = env.total_uuars;
+        let low_start = total - env.num_low_lat_uuars;
+        let mut uars = Vec::with_capacity(pages as usize);
+        for p in 0..pages {
+            let class_of = |slot: u32| {
+                let i = p * DATA_PATH_UUARS_PER_PAGE as u32 + slot;
+                if i == 0 {
+                    UuarClass::HighLatency
+                } else if i >= low_start {
+                    UuarClass::LowLatency
+                } else {
+                    UuarClass::MediumLatency
+                }
+            };
+            uars.push(UarPage::new_static(self.alloc_uar_global(), [class_of(0), class_of(1)]));
+        }
+        self.ctxs.push(Ctx {
+            id,
+            env,
+            uars,
+            medium_rr: 0,
+            low_lat_used: 0,
+            tds: Vec::new(),
+            pds: Vec::new(),
+            cqs: Vec::new(),
+            live: true,
+        });
+        self.open_pair_page.push(None);
+        Ok(id)
+    }
+
+    // ----------------------------------------------------------------- PD
+
+    /// `ibv_alloc_pd`.
+    pub fn alloc_pd(&mut self, ctx: CtxId) -> Result<PdId> {
+        self.ctx(ctx)?;
+        let id = PdId(self.pds.len() as u32);
+        self.pds.push(Pd { id, ctx, mrs: Vec::new(), qps: Vec::new(), live: true });
+        self.ctxs[ctx.index()].pds.push(id);
+        Ok(id)
+    }
+
+    // ----------------------------------------------------------------- MR
+
+    /// `ibv_reg_mr`: register `[addr, addr+len)` for NIC access.
+    pub fn reg_mr(&mut self, pd: PdId, addr: u64, len: u64) -> Result<MrId> {
+        self.pd(pd)?;
+        let id = MrId(self.mrs.len() as u32);
+        self.mrs.push(Mr { id, pd, addr, len, live: true });
+        self.pds[pd.index()].mrs.push(id);
+        Ok(id)
+    }
+
+    /// Declare a payload buffer (non-IB resource, §V-A). `aligned` places
+    /// it on its own 64 B cacheline; unaligned buffers are packed
+    /// back-to-back from `base`.
+    pub fn declare_buf(&mut self, addr: u64, len: u64) -> BufId {
+        let id = BufId(self.bufs.len() as u32);
+        self.bufs.push(Buf { id, addr, len });
+        id
+    }
+
+    // ----------------------------------------------------------------- CQ
+
+    /// `ibv_create_cq`.
+    pub fn create_cq(&mut self, ctx: CtxId, depth: u32) -> Result<CqId> {
+        self.create_cq_ex(ctx, depth, false)
+    }
+
+    /// `ibv_create_cq_ex`, optionally with
+    /// `IBV_CREATE_CQ_ATTR_SINGLE_THREADED` (disables the CQ lock, §V-E).
+    pub fn create_cq_ex(&mut self, ctx: CtxId, depth: u32, single_threaded: bool) -> Result<CqId> {
+        self.ctx(ctx)?;
+        let id = CqId(self.cqs.len() as u32);
+        self.cqs.push(Cq { id, ctx, depth, single_threaded, qps: Vec::new(), live: true });
+        self.ctxs[ctx.index()].cqs.push(id);
+        Ok(id)
+    }
+
+    // ----------------------------------------------------------------- TD
+
+    /// `ibv_alloc_td` with the paper's proposed `sharing` attribute.
+    ///
+    /// * `sharing == 1`: maximally independent — a fresh UAR page whose
+    ///   second uUAR is left unused (wasted).
+    /// * `sharing == 2`: mlx5's hardcoded pairing — every even TD
+    ///   allocates a page; the following odd TD takes its second uUAR.
+    pub fn alloc_td(&mut self, ctx: CtxId, attr: TdInitAttr) -> Result<TdId> {
+        self.ctx(ctx)?;
+        let id = TdId(self.tds.len() as u32);
+        let uuar = match attr.sharing {
+            SHARING_INDEPENDENT => {
+                let page = self.alloc_dynamic_page(ctx, [UuarClass::Dedicated(id), UuarClass::Unused])?;
+                UuarRef { page, slot: 0 }
+            }
+            SHARING_PAIRED => {
+                if let Some(page) = self.open_pair_page[ctx.index()].take() {
+                    let c = &mut self.ctxs[ctx.index()];
+                    c.uars[page as usize].uuars[1] = Uuar::new(UuarClass::Dedicated(id));
+                    UuarRef { page, slot: 1 }
+                } else {
+                    let page = self
+                        .alloc_dynamic_page(ctx, [UuarClass::Dedicated(id), UuarClass::Unused])?;
+                    self.open_pair_page[ctx.index()] = Some(page);
+                    UuarRef { page, slot: 0 }
+                }
+            }
+            other => return Err(VerbsError::InvalidSharingLevel(other)),
+        };
+        self.tds.push(Td { id, ctx, sharing: attr.sharing, uuar, qps: Vec::new(), live: true });
+        self.ctxs[ctx.index()].tds.push(id);
+        Ok(id)
+    }
+
+    // ----------------------------------------------------------------- QP
+
+    /// `ibv_create_qp`: create an RC QP on `pd`, completing into `cq`,
+    /// optionally assigned to a thread domain.
+    ///
+    /// uUAR assignment follows Appendix B: TD-assigned QPs land on the
+    /// TD's dedicated uUAR (lock disabled under the paper's optimization);
+    /// otherwise QPs fill the low-latency uUARs first, then round-robin
+    /// over the medium-latency ones — unless the user classified the
+    /// maximum number of uUARs as low-latency, in which case overflow QPs
+    /// land on the high-latency uUAR 0.
+    pub fn create_qp(
+        &mut self,
+        pd: PdId,
+        cq: CqId,
+        caps: QpCaps,
+        td: Option<TdId>,
+    ) -> Result<QpId> {
+        let ctx = self.pd(pd)?.ctx;
+        if self.cq(cq)?.ctx != ctx {
+            return Err(VerbsError::CrossContext(pd.to_string(), cq.to_string()));
+        }
+        let id = QpId(self.qps.len() as u32);
+        let (uuar, lock_enabled) = match td {
+            Some(td_id) => {
+                let t = self.td(td_id)?;
+                if t.ctx != ctx {
+                    return Err(VerbsError::CrossContext(pd.to_string(), td_id.to_string()));
+                }
+                (t.uuar, !self.qp_lock_optimization)
+            }
+            None => (self.assign_static_uuar(ctx), true),
+        };
+        self.ctxs[ctx.index()].uars[uuar.page as usize].uuars[uuar.slot as usize].qps.push(id);
+        self.qps.push(Qp {
+            id,
+            ctx,
+            pd,
+            cq,
+            td,
+            caps,
+            uuar,
+            lock_enabled,
+            state: QpState::Reset,
+            peer: None,
+            live: true,
+        });
+        self.pds[pd.index()].qps.push(id);
+        self.cqs[cq.index()].qps.push(id);
+        if let Some(td_id) = td {
+            self.tds[td_id.index()].qps.push(id);
+        }
+        Ok(id)
+    }
+
+    /// Connect two RC QPs (possibly across fabrics in spirit; here both
+    /// live in this arena, which also models the loopback case — intranode
+    /// IB communication still traverses the NIC, §VII footnote).
+    pub fn connect(&mut self, a: QpId, b: QpId) -> Result<()> {
+        self.qp(a)?;
+        self.qp(b)?;
+        for (x, y) in [(a, b), (b, a)] {
+            let q = &mut self.qps[x.index()];
+            q.state = QpState::Rts;
+            q.peer = Some(y);
+        }
+        Ok(())
+    }
+
+    /// Simplified `ibv_modify_qp` transition checking.
+    pub fn modify_qp(&mut self, qp: QpId, to: QpState) -> Result<()> {
+        let q = self.qp(qp)?;
+        let ok = matches!(
+            (q.state, to),
+            (QpState::Reset, QpState::Init)
+                | (QpState::Init, QpState::Rtr)
+                | (QpState::Rtr, QpState::Rts)
+                | (_, QpState::Error)
+                | (_, QpState::Reset)
+        );
+        if !ok {
+            return Err(VerbsError::BadQpState(qp, q.state.to_string(), to.to_string()));
+        }
+        self.qps[qp.index()].state = to;
+        Ok(())
+    }
+
+    /// Validate an inline send (paper §II-B: inline payload must fit
+    /// `max_inline`, 60 B on ConnectX-4).
+    pub fn check_inline(&self, qp: QpId, size: u32) -> Result<()> {
+        let q = self.qp(qp)?;
+        if size > q.caps.max_inline {
+            return Err(VerbsError::InlineTooLarge { size, max: q.caps.max_inline });
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ destroy
+
+    /// Destroy a QP, unmapping it from its uUAR/CQ/PD/TD.
+    pub fn destroy_qp(&mut self, qp: QpId) -> Result<()> {
+        let q = self.qp(qp)?.clone();
+        self.qps[qp.index()].live = false;
+        let remove = |v: &mut Vec<QpId>| v.retain(|x| *x != qp);
+        remove(&mut self.ctxs[q.ctx.index()].uars[q.uuar.page as usize].uuars[q.uuar.slot as usize].qps);
+        remove(&mut self.pds[q.pd.index()].qps);
+        remove(&mut self.cqs[q.cq.index()].qps);
+        if let Some(td) = q.td {
+            remove(&mut self.tds[td.index()].qps);
+        }
+        Ok(())
+    }
+
+    /// Destroy a CQ; fails while QPs still complete into it.
+    pub fn destroy_cq(&mut self, cq: CqId) -> Result<()> {
+        let c = self.cq(cq)?;
+        if !c.qps.is_empty() {
+            return Err(VerbsError::Busy(cq.to_string(), format!("{} QPs", c.qps.len())));
+        }
+        self.cqs[cq.index()].live = false;
+        Ok(())
+    }
+
+    /// Deallocate a PD; fails while MRs/QPs are attached.
+    pub fn dealloc_pd(&mut self, pd: PdId) -> Result<()> {
+        let p = self.pd(pd)?;
+        let live_mrs = p.mrs.iter().filter(|m| self.mrs[m.index()].live).count();
+        if !p.qps.is_empty() || live_mrs > 0 {
+            return Err(VerbsError::Busy(
+                pd.to_string(),
+                format!("{} QPs, {} MRs", p.qps.len(), live_mrs),
+            ));
+        }
+        self.pds[pd.index()].live = false;
+        Ok(())
+    }
+
+    /// Deregister an MR.
+    pub fn dereg_mr(&mut self, mr: MrId) -> Result<()> {
+        if mr.index() >= self.mrs.len() {
+            return Err(VerbsError::UnknownPd(PdId(mr.0)));
+        }
+        self.mrs[mr.index()].live = false;
+        self.pds[self.mrs[mr.index()].pd.index()].mrs.retain(|m| *m != mr);
+        Ok(())
+    }
+
+    // ---------------------------------------------------------- accessors
+
+    pub fn ctx(&self, id: CtxId) -> Result<&Ctx> {
+        self.ctxs.get(id.index()).filter(|c| c.live).ok_or(VerbsError::UnknownCtx(id))
+    }
+
+    pub fn pd(&self, id: PdId) -> Result<&Pd> {
+        self.pds.get(id.index()).filter(|p| p.live).ok_or(VerbsError::UnknownPd(id))
+    }
+
+    pub fn cq(&self, id: CqId) -> Result<&Cq> {
+        self.cqs.get(id.index()).filter(|c| c.live).ok_or(VerbsError::UnknownCq(id))
+    }
+
+    pub fn qp(&self, id: QpId) -> Result<&Qp> {
+        self.qps.get(id.index()).filter(|q| q.live).ok_or(VerbsError::UnknownQp(id))
+    }
+
+    pub fn td(&self, id: TdId) -> Result<&Td> {
+        self.tds.get(id.index()).filter(|t| t.live).ok_or(VerbsError::UnknownTd(id))
+    }
+
+    pub fn buf(&self, id: BufId) -> &Buf {
+        &self.bufs[id.index()]
+    }
+
+    /// The uUAR object a QP maps to.
+    pub fn uuar_of(&self, qp: QpId) -> &Uuar {
+        let q = &self.qps[qp.index()];
+        &self.ctxs[q.ctx.index()].uars[q.uuar.page as usize].uuars[q.uuar.slot as usize]
+    }
+
+    // ----------------------------------------------------------- internal
+
+    fn take_uar_pages(&mut self, n: u32) -> Result<()> {
+        let limit = self.caps.usable_uar_pages();
+        if self.uar_pages_allocated + n > limit {
+            return Err(VerbsError::DeviceOutOfUars {
+                allocated: self.uar_pages_allocated,
+                limit,
+            });
+        }
+        self.uar_pages_allocated += n;
+        Ok(())
+    }
+
+    fn alloc_uar_global(&mut self) -> u32 {
+        let g = self.next_uar_global;
+        self.next_uar_global += 1;
+        g
+    }
+
+    fn alloc_dynamic_page(&mut self, ctx: CtxId, classes: [UuarClass; 2]) -> Result<u32> {
+        let dyn_pages = self.ctxs[ctx.index()].dynamic_uar_pages();
+        if dyn_pages >= self.caps.max_dynamic_uars_per_ctx {
+            return Err(VerbsError::CtxOutOfDynamicUars(ctx, self.caps.max_dynamic_uars_per_ctx));
+        }
+        self.take_uar_pages(1)?;
+        let g = self.alloc_uar_global();
+        let c = &mut self.ctxs[ctx.index()];
+        c.uars.push(UarPage::new_dynamic(g, classes));
+        Ok((c.uars.len() - 1) as u32)
+    }
+
+    /// Appendix B assignment for QPs without a TD.
+    fn assign_static_uuar(&mut self, ctx: CtxId) -> UuarRef {
+        let c = &mut self.ctxs[ctx.index()];
+        let total = c.env.total_uuars;
+        let n_low = c.env.num_low_lat_uuars;
+        let low_start = total - n_low;
+        if c.low_lat_used < n_low {
+            let i = low_start + c.low_lat_used;
+            c.low_lat_used += 1;
+            return UuarRef { page: i / 2, slot: (i % 2) as u8 };
+        }
+        let n_medium = low_start.saturating_sub(1);
+        if n_medium == 0 {
+            // User declared the max number of low-latency uUARs: overflow
+            // QPs all land on the high-latency uUAR 0 (Appendix B).
+            return UuarRef { page: 0, slot: 0 };
+        }
+        let i = 1 + (c.medium_rr % n_medium);
+        c.medium_rr += 1;
+        UuarRef { page: i / 2, slot: (i % 2) as u8 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric_ctx() -> (Fabric, CtxId) {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        (f, ctx)
+    }
+
+    #[test]
+    fn ctx_allocates_8_static_uars() {
+        let (f, ctx) = fabric_ctx();
+        let c = f.ctx(ctx).unwrap();
+        assert_eq!(c.static_uar_pages(), 8);
+        assert_eq!(c.dynamic_uar_pages(), 0);
+        assert_eq!(f.uar_pages_allocated, 8);
+    }
+
+    #[test]
+    fn appendix_b_assignment_low_then_medium_rr() {
+        // Default env: uUAR0 high, uUAR1-11 medium, uUAR12-15 low.
+        let (mut f, ctx) = fabric_ctx();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let qps: Vec<QpId> =
+            (0..16).map(|_| f.create_qp(pd, cq, QpCaps::default(), None).unwrap()).collect();
+        let slot = |q: QpId| {
+            let u = f.qp(q).unwrap().uuar;
+            u.page * 2 + u.slot as u32
+        };
+        // First four QPs take the low-latency uUARs 12..15.
+        assert_eq!((0..4).map(|i| slot(qps[i])).collect::<Vec<_>>(), vec![12, 13, 14, 15]);
+        // Next QPs round-robin medium uUARs 1..=11.
+        assert_eq!(slot(qps[4]), 1);
+        assert_eq!(slot(qps[14]), 11);
+        // §VI "Static": the 5th and 16th QP share a uUAR (third level).
+        assert_eq!(slot(qps[4]), slot(qps[15]));
+        let shared = f.uuar_of(qps[4]);
+        assert_eq!(shared.qps.len(), 2);
+    }
+
+    #[test]
+    fn max_low_lat_overflows_to_high_latency_uuar0() {
+        let mut f = Fabric::connectx4();
+        let ctx = f
+            .open_ctx(Mlx5Env { total_uuars: 16, num_low_lat_uuars: 15, shut_up_bf: false })
+            .unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let qps: Vec<QpId> =
+            (0..17).map(|_| f.create_qp(pd, cq, QpCaps::default(), None).unwrap()).collect();
+        let slot = |q: QpId| {
+            let u = f.qp(q).unwrap().uuar;
+            u.page * 2 + u.slot as u32
+        };
+        // 15 low-latency QPs then overflow onto uUAR0.
+        assert_eq!(slot(qps[14]), 15);
+        assert_eq!(slot(qps[15]), 0);
+        assert_eq!(slot(qps[16]), 0);
+        assert!(matches!(f.uuar_of(qps[15]).class, UuarClass::HighLatency));
+    }
+
+    #[test]
+    fn independent_td_wastes_second_uuar() {
+        let (mut f, ctx) = fabric_ctx();
+        let td = f.alloc_td(ctx, TdInitAttr::independent()).unwrap();
+        let t = f.td(td).unwrap();
+        assert_eq!(t.uuar.slot, 0);
+        let c = f.ctx(ctx).unwrap();
+        assert_eq!(c.dynamic_uar_pages(), 1);
+        let page = &c.uars[t.uuar.page as usize];
+        assert!(matches!(page.uuars[1].class, UuarClass::Unused));
+    }
+
+    #[test]
+    fn paired_tds_share_a_uar_page() {
+        let (mut f, ctx) = fabric_ctx();
+        let t0 = f.alloc_td(ctx, TdInitAttr::paired()).unwrap();
+        let t1 = f.alloc_td(ctx, TdInitAttr::paired()).unwrap();
+        let t2 = f.alloc_td(ctx, TdInitAttr::paired()).unwrap();
+        let (u0, u1, u2) =
+            (f.td(t0).unwrap().uuar, f.td(t1).unwrap().uuar, f.td(t2).unwrap().uuar);
+        assert_eq!(u0.page, u1.page);
+        assert_eq!((u0.slot, u1.slot), (0, 1));
+        assert_ne!(u2.page, u0.page);
+        // Appendix B: every even TD allocates a page -> 3 TDs = 2 pages.
+        assert_eq!(f.ctx(ctx).unwrap().dynamic_uar_pages(), 2);
+    }
+
+    #[test]
+    fn td_qp_lock_removed_under_optimization() {
+        let (mut f, ctx) = fabric_ctx();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let td = f.alloc_td(ctx, TdInitAttr::independent()).unwrap();
+        let qp = f.create_qp(pd, cq, QpCaps::default(), Some(td)).unwrap();
+        assert!(!f.qp(qp).unwrap().lock_enabled);
+        // Without the optimization (stock mlx5), the QP lock is kept
+        // (§V-B: "the lock on the QP is still obtained").
+        let mut f2 = Fabric::connectx4();
+        f2.qp_lock_optimization = false;
+        let ctx2 = f2.open_ctx(Mlx5Env::default()).unwrap();
+        let pd2 = f2.alloc_pd(ctx2).unwrap();
+        let cq2 = f2.create_cq(ctx2, 64).unwrap();
+        let td2 = f2.alloc_td(ctx2, TdInitAttr::independent()).unwrap();
+        let qp2 = f2.create_qp(pd2, cq2, QpCaps::default(), Some(td2)).unwrap();
+        assert!(f2.qp(qp2).unwrap().lock_enabled);
+    }
+
+    #[test]
+    fn dynamic_uar_limit_enforced() {
+        let mut f = Fabric::new(DeviceCaps {
+            max_dynamic_uars_per_ctx: 2,
+            ..DeviceCaps::connectx4()
+        });
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        f.alloc_td(ctx, TdInitAttr::independent()).unwrap();
+        f.alloc_td(ctx, TdInitAttr::independent()).unwrap();
+        let err = f.alloc_td(ctx, TdInitAttr::independent()).unwrap_err();
+        assert!(matches!(err, VerbsError::CtxOutOfDynamicUars(_, 2)));
+    }
+
+    #[test]
+    fn device_uar_budget_enforced() {
+        let mut f = Fabric::new(DeviceCaps {
+            total_uar_pages: 20,
+            reserved_uar_pages: 3,
+            ..DeviceCaps::connectx4()
+        });
+        // 17 usable pages -> two CTXs (8 pages each) fit, a third doesn't.
+        f.open_ctx(Mlx5Env::default()).unwrap();
+        f.open_ctx(Mlx5Env::default()).unwrap();
+        let err = f.open_ctx(Mlx5Env::default()).unwrap_err();
+        assert!(matches!(err, VerbsError::DeviceOutOfUars { allocated: 16, limit: 17 }));
+    }
+
+    #[test]
+    fn max_907_single_td_ctxs_on_connectx4() {
+        // §III: 8K UARs -> 907 CTXs when each holds one TD-assigned QP.
+        let mut f = Fabric::connectx4();
+        let mut n = 0;
+        loop {
+            let ctx = match f.open_ctx(Mlx5Env::default()) {
+                Ok(c) => c,
+                Err(_) => break,
+            };
+            if f.alloc_td(ctx, TdInitAttr::independent()).is_err() {
+                break;
+            }
+            n += 1;
+        }
+        assert_eq!(n, 907);
+    }
+
+    #[test]
+    fn cross_context_rejected() {
+        let mut f = Fabric::connectx4();
+        let c0 = f.open_ctx(Mlx5Env::default()).unwrap();
+        let c1 = f.open_ctx(Mlx5Env::default()).unwrap();
+        let pd0 = f.alloc_pd(c0).unwrap();
+        let cq1 = f.create_cq(c1, 64).unwrap();
+        assert!(matches!(
+            f.create_qp(pd0, cq1, QpCaps::default(), None),
+            Err(VerbsError::CrossContext(..))
+        ));
+    }
+
+    #[test]
+    fn qp_state_machine() {
+        let (mut f, ctx) = fabric_ctx();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let qp = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        assert_eq!(f.qp(qp).unwrap().state, QpState::Reset);
+        f.modify_qp(qp, QpState::Init).unwrap();
+        f.modify_qp(qp, QpState::Rtr).unwrap();
+        f.modify_qp(qp, QpState::Rts).unwrap();
+        // Illegal jump.
+        let (mut f2, ctx2) = fabric_ctx();
+        let pd2 = f2.alloc_pd(ctx2).unwrap();
+        let cq2 = f2.create_cq(ctx2, 64).unwrap();
+        let qp2 = f2.create_qp(pd2, cq2, QpCaps::default(), None).unwrap();
+        assert!(f2.modify_qp(qp2, QpState::Rts).is_err());
+    }
+
+    #[test]
+    fn inline_limit_checked() {
+        let (mut f, ctx) = fabric_ctx();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let qp = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        assert!(f.check_inline(qp, 60).is_ok());
+        assert!(matches!(
+            f.check_inline(qp, 61),
+            Err(VerbsError::InlineTooLarge { size: 61, max: 60 })
+        ));
+    }
+
+    #[test]
+    fn destroy_unlinks_and_guards() {
+        let (mut f, ctx) = fabric_ctx();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let mr = f.reg_mr(pd, 0x1000, 4096).unwrap();
+        let qp = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        // CQ/PD busy while the QP/MR live.
+        assert!(f.destroy_cq(cq).is_err());
+        assert!(f.dealloc_pd(pd).is_err());
+        f.destroy_qp(qp).unwrap();
+        f.destroy_cq(cq).unwrap();
+        assert!(f.dealloc_pd(pd).is_err()); // MR still registered
+        f.dereg_mr(mr).unwrap();
+        f.dealloc_pd(pd).unwrap();
+    }
+}

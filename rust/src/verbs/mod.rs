@@ -1,0 +1,28 @@
+//! Software model of the InfiniBand Verbs objects (paper §II-A, §III,
+//! Fig 4a) with the paper's proposed `sharing` thread-domain attribute
+//! (§V-B).
+//!
+//! The object model follows the hierarchical parent/child relation of
+//! Fig 4(a): `CTX ← PD ← {MR, QP}`, `CTX ← CQ`, `CTX ← TD`, and each
+//! resource has exactly one parent. All objects live in flat arenas on a
+//! [`Fabric`] (one per simulated NIC/device) and are referenced by typed
+//! ids, so resource accounting is a pure fold over the arenas.
+//!
+//! The uUAR-to-QP assignment policy — *which* hardware resource a QP's
+//! doorbells land on — is the mlx5 provider's decision and lives in
+//! [`crate::mlx5`]; creation functions here delegate to it.
+
+pub mod error;
+pub mod fabric;
+pub mod objects;
+pub mod queues;
+pub mod types;
+
+pub use error::VerbsError;
+pub use fabric::Fabric;
+pub use objects::{Buf, Cq, Ctx, Mr, Pd, Qp, QpState, Td};
+pub use queues::{Cqe, Opcode, QueueState, Wqe};
+pub use types::{
+    BufId, CqId, CtxId, MrId, PdId, QpCaps, QpId, TdId, TdInitAttr, SHARING_INDEPENDENT,
+    SHARING_PAIRED,
+};

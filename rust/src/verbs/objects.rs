@@ -1,0 +1,181 @@
+//! The verbs objects stored in the [`Fabric`](super::Fabric) arenas.
+
+use crate::mlx5::{Mlx5Env, UarPage, UuarRef};
+
+use super::types::{BufId, CqId, CtxId, MrId, PdId, QpCaps, QpId, TdId};
+
+/// Device context: the container of all IB resources and a slice of the
+/// NIC's hardware (its UAR pages).
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    pub id: CtxId,
+    pub env: Mlx5Env,
+    /// UAR page table: static pages first, then dynamically allocated ones
+    /// in TD-creation order.
+    pub uars: Vec<UarPage>,
+    /// Round-robin cursor over medium-latency uUARs (Appendix B policy).
+    pub medium_rr: u32,
+    /// Number of QPs assigned to low-latency uUARs so far.
+    pub low_lat_used: u32,
+    /// TDs created in this context, in creation order (the even/odd
+    /// pairing of `sharing=2` depends on this order).
+    pub tds: Vec<TdId>,
+    pub pds: Vec<PdId>,
+    pub cqs: Vec<CqId>,
+    pub live: bool,
+}
+
+impl Ctx {
+    pub fn dynamic_uar_pages(&self) -> u32 {
+        self.uars.iter().filter(|p| p.dynamic).count() as u32
+    }
+
+    pub fn static_uar_pages(&self) -> u32 {
+        self.uars.iter().filter(|p| !p.dynamic).count() as u32
+    }
+}
+
+/// Protection domain: isolates a collection of IB resources; never on the
+/// critical data path (checks happen in the NIC) — paper §V-C.
+#[derive(Debug, Clone)]
+pub struct Pd {
+    pub id: PdId,
+    pub ctx: CtxId,
+    pub mrs: Vec<MrId>,
+    pub qps: Vec<QpId>,
+    pub live: bool,
+}
+
+/// Registered memory region (paper §V-D): pins virtual memory for NIC DMA.
+#[derive(Debug, Clone)]
+pub struct Mr {
+    pub id: MrId,
+    pub pd: PdId,
+    /// Base virtual address of the registered range (model coordinate).
+    pub addr: u64,
+    pub len: u64,
+    pub live: bool,
+}
+
+impl Mr {
+    pub fn contains(&self, addr: u64, len: u64) -> bool {
+        addr >= self.addr && addr + len <= self.addr + self.len
+    }
+}
+
+/// A message payload buffer — the non-IB resource of §V-A. Identified by
+/// its virtual address so the TLB model can hash it to a translation rail
+/// by cacheline.
+#[derive(Debug, Clone, Copy)]
+pub struct Buf {
+    pub id: BufId,
+    pub addr: u64,
+    pub len: u64,
+}
+
+impl Buf {
+    /// 64-byte cacheline index, the TLB rail hash key (§V-A).
+    pub fn cacheline(&self) -> u64 {
+        self.addr / 64
+    }
+}
+
+/// Completion queue.
+#[derive(Debug, Clone)]
+pub struct Cq {
+    pub id: CqId,
+    pub ctx: CtxId,
+    pub depth: u32,
+    /// Extended-CQ single-threaded flag
+    /// (`IBV_CREATE_CQ_ATTR_SINGLE_THREADED`, §V-E): disables the CQ lock.
+    pub single_threaded: bool,
+    pub qps: Vec<QpId>,
+    pub live: bool,
+}
+
+/// Thread domain: single-threaded-access hint; maps its QPs onto a
+/// dynamically allocated uUAR (paper §II-A, Appendix B).
+#[derive(Debug, Clone)]
+pub struct Td {
+    pub id: TdId,
+    pub ctx: CtxId,
+    /// The paper's proposed sharing level used at creation.
+    pub sharing: u32,
+    /// The uUAR dedicated to this TD.
+    pub uuar: UuarRef,
+    pub qps: Vec<QpId>,
+    pub live: bool,
+}
+
+/// Queue-pair connection state (simplified RC state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QpState {
+    Reset,
+    Init,
+    /// Ready to receive.
+    Rtr,
+    /// Ready to send.
+    Rts,
+    Error,
+}
+
+impl std::fmt::Display for QpState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            QpState::Reset => "RESET",
+            QpState::Init => "INIT",
+            QpState::Rtr => "RTR",
+            QpState::Rts => "RTS",
+            QpState::Error => "ERROR",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Queue pair: the software transmit queue.
+#[derive(Debug, Clone)]
+pub struct Qp {
+    pub id: QpId,
+    pub ctx: CtxId,
+    pub pd: PdId,
+    pub cq: CqId,
+    pub td: Option<TdId>,
+    pub caps: QpCaps,
+    /// The uUAR this QP's doorbells land on (mlx5 assignment policy).
+    pub uuar: UuarRef,
+    /// Whether posting requires the QP lock. True unless the QP is
+    /// TD-assigned and the paper's mlx5 optimization (PR #327) removed it.
+    pub lock_enabled: bool,
+    pub state: QpState,
+    /// Remote QP once connected (RC).
+    pub peer: Option<QpId>,
+    pub live: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mr_containment() {
+        let mr = Mr { id: MrId(0), pd: PdId(0), addr: 4096, len: 1024, live: true };
+        assert!(mr.contains(4096, 1));
+        assert!(mr.contains(5119, 1));
+        assert!(!mr.contains(5119, 2));
+        assert!(!mr.contains(4095, 1));
+    }
+
+    #[test]
+    fn buf_cachelines() {
+        let a = Buf { id: BufId(0), addr: 0, len: 2 };
+        let b = Buf { id: BufId(1), addr: 2, len: 2 };
+        let c = Buf { id: BufId(2), addr: 64, len: 2 };
+        assert_eq!(a.cacheline(), b.cacheline()); // same line -> same TLB rail
+        assert_ne!(a.cacheline(), c.cacheline());
+    }
+
+    #[test]
+    fn qp_state_display() {
+        assert_eq!(QpState::Rts.to_string(), "RTS");
+    }
+}

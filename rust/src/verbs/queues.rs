@@ -1,0 +1,214 @@
+//! Functional queue semantics: `post_send` / `poll_cq` with real WQE and
+//! CQE records. The coordinator's RMA layer drives these so data actually
+//! moves message-by-message through the verbs objects (the DES times the
+//! same operations; see `bench::msgrate`).
+
+use super::error::{Result, VerbsError};
+use super::fabric::Fabric;
+use super::objects::QpState;
+use super::types::{CqId, QpId};
+
+/// RDMA opcode subset used by the paper's benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Opcode {
+    RdmaWrite,
+    RdmaRead,
+}
+
+/// A posted work-queue entry (send side).
+#[derive(Debug, Clone)]
+pub struct Wqe {
+    pub wr_id: u64,
+    pub opcode: Opcode,
+    /// Local payload address (source for writes, destination for reads).
+    pub laddr: u64,
+    /// Remote address.
+    pub raddr: u64,
+    pub len: u32,
+    pub signaled: bool,
+    pub inline: bool,
+}
+
+/// A completion-queue entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cqe {
+    pub wr_id: u64,
+    pub qp: QpId,
+    pub ok: bool,
+}
+
+/// Per-QP send queue + per-CQ completion queue state, layered over the
+/// object arena (kept separate so the pure resource model stays cheap to
+/// clone for accounting sweeps).
+#[derive(Debug, Default, Clone)]
+pub struct QueueState {
+    /// Outstanding (unretired) WQEs per QP, bounded by QP depth.
+    sq: Vec<Vec<Wqe>>,
+    /// Delivered CQEs per CQ awaiting poll.
+    cq: Vec<Vec<Cqe>>,
+}
+
+impl QueueState {
+    pub fn for_fabric(fabric: &Fabric) -> Self {
+        Self { sq: vec![Vec::new(); fabric.qps.len()], cq: vec![Vec::new(); fabric.cqs.len()] }
+    }
+
+    fn sync(&mut self, fabric: &Fabric) {
+        if self.sq.len() < fabric.qps.len() {
+            self.sq.resize(fabric.qps.len(), Vec::new());
+        }
+        if self.cq.len() < fabric.cqs.len() {
+            self.cq.resize(fabric.cqs.len(), Vec::new());
+        }
+    }
+
+    /// `ibv_post_send` of a linked list of WQEs (Postlist). Validates QP
+    /// state, queue depth, inline size and MR coverage of local buffers.
+    pub fn post_send(&mut self, fabric: &Fabric, qp: QpId, wqes: &[Wqe]) -> Result<()> {
+        self.sync(fabric);
+        let q = fabric.qp(qp)?;
+        if q.state != QpState::Rts {
+            return Err(VerbsError::BadQpState(qp, q.state.to_string(), QpState::Rts.to_string()));
+        }
+        let outstanding = self.sq[qp.index()].len();
+        if outstanding + wqes.len() > q.caps.depth as usize {
+            return Err(VerbsError::SendQueueFull(qp, q.caps.depth));
+        }
+        for w in wqes {
+            if w.inline {
+                fabric.check_inline(qp, w.len)?;
+            } else {
+                // The NIC DMA-reads the payload: an MR on this PD must
+                // cover it.
+                let covered = fabric
+                    .pds[q.pd.index()]
+                    .mrs
+                    .iter()
+                    .any(|m| fabric.mrs[m.index()].live && fabric.mrs[m.index()].contains(w.laddr, w.len as u64));
+                if !covered {
+                    return Err(VerbsError::Busy(
+                        qp.to_string(),
+                        format!("no MR covers [{:#x}, +{}]", w.laddr, w.len),
+                    ));
+                }
+            }
+            self.sq[qp.index()].push(w.clone());
+        }
+        Ok(())
+    }
+
+    /// The simulated NIC retires every outstanding WQE of `qp` (the DES
+    /// decides *when*; this decides *what*): returns the retired WQEs for
+    /// the data plane to apply and deposits CQEs for the signaled ones.
+    pub fn retire_all(&mut self, fabric: &Fabric, qp: QpId) -> Result<Vec<Wqe>> {
+        self.sync(fabric);
+        let q = fabric.qp(qp)?;
+        let wqes = std::mem::take(&mut self.sq[qp.index()]);
+        let cq = q.cq;
+        for w in &wqes {
+            if w.signaled {
+                self.cq[cq.index()].push(Cqe { wr_id: w.wr_id, qp, ok: true });
+            }
+        }
+        Ok(wqes)
+    }
+
+    /// `ibv_poll_cq`: drain up to `max` CQEs.
+    pub fn poll_cq(&mut self, fabric: &Fabric, cq: CqId, max: usize) -> Result<Vec<Cqe>> {
+        self.sync(fabric);
+        fabric.cq(cq)?;
+        let q = &mut self.cq[cq.index()];
+        let n = max.min(q.len());
+        Ok(q.drain(..n).collect())
+    }
+
+    /// Outstanding send-queue occupancy (tests/backpressure).
+    pub fn sq_len(&self, qp: QpId) -> usize {
+        self.sq.get(qp.index()).map_or(0, Vec::len)
+    }
+
+    /// Undrained completions.
+    pub fn cq_len(&self, cq: CqId) -> usize {
+        self.cq.get(cq.index()).map_or(0, Vec::len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlx5::Mlx5Env;
+    use crate::verbs::types::QpCaps;
+
+    fn setup() -> (Fabric, QpId, CqId, QueueState) {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let qp = f.create_qp(pd, cq, QpCaps { depth: 8, max_inline: 60 }, None).unwrap();
+        let peer = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        f.reg_mr(pd, 0x1000, 4096).unwrap();
+        f.connect(qp, peer).unwrap();
+        let qs = QueueState::for_fabric(&f);
+        (f, qp, cq, qs)
+    }
+
+    fn wqe(wr_id: u64, signaled: bool, inline: bool) -> Wqe {
+        Wqe { wr_id, opcode: Opcode::RdmaWrite, laddr: 0x1000, raddr: 0x9000, len: 2, signaled, inline }
+    }
+
+    #[test]
+    fn post_retire_poll_round_trip() {
+        let (f, qp, cq, mut qs) = setup();
+        qs.post_send(&f, qp, &[wqe(1, false, true), wqe(2, true, true)]).unwrap();
+        assert_eq!(qs.sq_len(qp), 2);
+        let retired = qs.retire_all(&f, qp).unwrap();
+        assert_eq!(retired.len(), 2);
+        let cqes = qs.poll_cq(&f, cq, 16).unwrap();
+        assert_eq!(cqes, vec![Cqe { wr_id: 2, qp, ok: true }]);
+        assert_eq!(qs.cq_len(cq), 0);
+    }
+
+    #[test]
+    fn depth_enforced() {
+        let (f, qp, _, mut qs) = setup();
+        let batch: Vec<Wqe> = (0..8).map(|i| wqe(i, false, true)).collect();
+        qs.post_send(&f, qp, &batch).unwrap();
+        let err = qs.post_send(&f, qp, &[wqe(9, true, true)]).unwrap_err();
+        assert!(matches!(err, VerbsError::SendQueueFull(_, 8)));
+        // Retiring frees the ring.
+        qs.retire_all(&f, qp).unwrap();
+        qs.post_send(&f, qp, &[wqe(9, true, true)]).unwrap();
+    }
+
+    #[test]
+    fn unconnected_qp_rejected() {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 64).unwrap();
+        let qp = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        let mut qs = QueueState::for_fabric(&f);
+        let err = qs.post_send(&f, qp, &[wqe(0, true, true)]).unwrap_err();
+        assert!(matches!(err, VerbsError::BadQpState(..)));
+    }
+
+    #[test]
+    fn non_inline_requires_mr_coverage() {
+        let (f, qp, _, mut qs) = setup();
+        // Covered by the registered MR [0x1000, +4096).
+        qs.post_send(&f, qp, &[wqe(0, true, false)]).unwrap();
+        // Outside any MR.
+        let bad = Wqe { laddr: 0xdead_0000, ..wqe(1, true, false) };
+        assert!(qs.post_send(&f, qp, &[bad]).is_err());
+    }
+
+    #[test]
+    fn oversized_inline_rejected() {
+        let (f, qp, _, mut qs) = setup();
+        let bad = Wqe { len: 61, ..wqe(0, true, true) };
+        assert!(matches!(
+            qs.post_send(&f, qp, &[bad]),
+            Err(VerbsError::InlineTooLarge { size: 61, max: 60 })
+        ));
+    }
+}

@@ -1,0 +1,119 @@
+//! Typed ids and creation attributes for the verbs object model.
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            #[inline]
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, concat!(stringify!($name), "#{}"), self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// Device context (`ibv_context`): the container of all IB resources
+    /// and a slice of the NIC's hardware (UAR pages).
+    CtxId
+);
+id_type!(
+    /// Protection domain (`ibv_pd`).
+    PdId
+);
+id_type!(
+    /// Memory region (`ibv_mr`): pinned, NIC-addressable memory.
+    MrId
+);
+id_type!(
+    /// Queue pair (`ibv_qp`): the software transmit queue.
+    QpId
+);
+id_type!(
+    /// Completion queue (`ibv_cq`).
+    CqId
+);
+id_type!(
+    /// Thread domain (`ibv_td`): a single-threaded-access hint that maps
+    /// its QPs to a dynamically allocated uUAR.
+    TdId
+);
+id_type!(
+    /// A message payload buffer (non-IB resource; paper §V-A).
+    BufId
+);
+
+/// `sharing` value requesting maximally independent paths (level 1 of
+/// Fig 4b): the TD gets its own UAR page; its second uUAR is wasted.
+pub const SHARING_INDEPENDENT: u32 = 1;
+
+/// `sharing` value for mlx5's hardcoded default (level 2 of Fig 4b):
+/// even/odd TD pairs share one UAR page, one uUAR each.
+pub const SHARING_PAIRED: u32 = 2;
+
+/// Thread-domain initialization attributes (`struct ibv_td_init_attr`)
+/// with the paper's proposed `sharing` extension (§V-B): "the higher the
+/// value of sharing, the higher the amount of hardware resource sharing
+/// between multiple TDs".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TdInitAttr {
+    pub sharing: u32,
+}
+
+impl TdInitAttr {
+    pub fn independent() -> Self {
+        Self { sharing: SHARING_INDEPENDENT }
+    }
+
+    pub fn paired() -> Self {
+        Self { sharing: SHARING_PAIRED }
+    }
+}
+
+impl Default for TdInitAttr {
+    /// mlx5 today is hardcoded to the second level of sharing (§V-B).
+    fn default() -> Self {
+        Self::paired()
+    }
+}
+
+/// QP creation capabilities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QpCaps {
+    /// Send-queue depth `d` (WQE slots).
+    pub depth: u32,
+    /// Maximum inline payload in bytes. ConnectX-4 exposes 60 B through
+    /// Verbs (§V-A).
+    pub max_inline: u32,
+}
+
+impl Default for QpCaps {
+    fn default() -> Self {
+        Self { depth: 128, max_inline: 60 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_display_and_index() {
+        assert_eq!(QpId(3).to_string(), "QpId#3");
+        assert_eq!(QpId(3).index(), 3);
+    }
+
+    #[test]
+    fn default_td_attr_is_mlx5_hardcoded_level2() {
+        assert_eq!(TdInitAttr::default().sharing, SHARING_PAIRED);
+    }
+}

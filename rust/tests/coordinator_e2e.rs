@@ -1,0 +1,89 @@
+//! End-to-end coordinator tests: launch hybrid jobs, move data through
+//! RMA windows, time communication phases, and (when artifacts exist)
+//! run the full Pallas-backed applications.
+
+use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
+use scalable_ep::apps::{GlobalArray, StencilBench};
+use scalable_ep::bench::MsgRateConfig;
+use scalable_ep::coordinator::{Job, JobSpec, Universe};
+use scalable_ep::endpoints::Category;
+use scalable_ep::runtime::ArtifactRuntime;
+
+fn artifacts_available() -> bool {
+    ArtifactRuntime::default_dir().join("dgemm_tile.hlo.txt").exists()
+}
+
+#[test]
+fn every_category_launches_every_split() {
+    for cat in Category::ALL {
+        for spec in JobSpec::paper_sweep() {
+            let job = Job::two_node(spec, cat);
+            let u = Universe::launch(job, 4096).unwrap();
+            assert_eq!(u.nranks(), 2 * spec.ranks_per_node, "{cat} {}", spec.label());
+            let eps = u.node_thread_endpoints(0);
+            assert_eq!(eps.len() as u32, spec.hw_threads(), "{cat} {}", spec.label());
+        }
+    }
+}
+
+#[test]
+fn phase_timing_scales_with_message_count() {
+    let job = Job::two_node(JobSpec::new(2, 4), Category::Dynamic);
+    let u = Universe::launch(job, 4096).unwrap();
+    let eps = u.node_thread_endpoints(0);
+    let short = u.time_phase(0, &eps, MsgRateConfig { msgs_per_thread: 512, ..Default::default() });
+    let long = u.time_phase(0, &eps, MsgRateConfig { msgs_per_thread: 2048, ..Default::default() });
+    assert!(long.duration > short.duration * 3, "virtual time should scale");
+}
+
+#[test]
+fn rma_data_integrity_across_ranks() {
+    let job = Job::two_node(JobSpec::new(2, 2), Category::Static);
+    let mut u = Universe::launch(job, 1 << 20).unwrap();
+    // Scatter a pattern from rank 0 into every rank's window; gather back.
+    for r in 0..u.nranks() {
+        let w = u.window(r, 64, 4096);
+        let pattern: Vec<f32> = (0..128).map(|i| (i as f32) * 0.5 + r as f32).collect();
+        u.put_f32(w, 0, &pattern);
+        assert_eq!(u.get_f32(w, 0, 128), pattern, "rank {r}");
+    }
+}
+
+#[test]
+fn global_array_dgemm_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = ArtifactRuntime::new(ArtifactRuntime::default_dir()).unwrap();
+    let ga = GlobalArray::new(Category::TwoXDynamic, 4).unwrap();
+    // 256x256 = 2x2 tiles of 128: exercises the multi-tile accumulate.
+    let err = ga.run_dgemm(&mut rt, 256).unwrap();
+    assert!(err < 1e-2, "DGEMM max |err| {err}");
+}
+
+#[test]
+fn stencil_jacobi_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = ArtifactRuntime::new(ArtifactRuntime::default_dir()).unwrap();
+    // 130x130 grid: 2x2 tiles of 64 interior. 3 sweeps.
+    let err = StencilBench::run_jacobi(&mut rt, 130, 130, 3).unwrap();
+    assert!(err < 1e-4, "stencil max |err| {err}");
+}
+
+#[test]
+fn stencil_comm_and_compute_compose() {
+    // The full loop a user would run: timed exchange + functional sweep.
+    let s = StencilBench::new(JobSpec::new(4, 4), Category::TwoXDynamic, DEFAULT_HALO_BYTES).unwrap();
+    let r = s.time_exchange(256);
+    assert!(r.mmsgs_per_sec > 0.0);
+    assert_eq!(r.messages, 16 * 512);
+    if artifacts_available() {
+        let mut rt = ArtifactRuntime::new(ArtifactRuntime::default_dir()).unwrap();
+        let err = StencilBench::run_jacobi(&mut rt, 66, 66, 2).unwrap();
+        assert!(err < 1e-4);
+    }
+}

@@ -1,0 +1,268 @@
+//! Shape-level assertions over the paper's figures: who wins, by roughly
+//! what factor, where crossovers fall. These are the reproduction
+//! acceptance tests (EXPERIMENTS.md cites them).
+
+use scalable_ep::bench::{
+    Features, MsgRateConfig, Runner, SharedResource, SharingSpec,
+};
+use scalable_ep::coordinator::JobSpec;
+use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
+use scalable_ep::apps::{GlobalArray, StencilBench};
+use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::verbs::Fabric;
+
+const MSGS: u64 = 16 * 1024;
+
+fn run_sharing(res: SharedResource, ways: u32, features: Features) -> f64 {
+    let (fabric, eps) = SharingSpec::new(res, ways, 16).build().unwrap();
+    let cfg = MsgRateConfig { msgs_per_thread: MSGS, features, ..Default::default() };
+    Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
+}
+
+fn run_category(cat: Category, n: u32, features: Features) -> f64 {
+    let mut f = Fabric::connectx4();
+    let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+    let cfg = MsgRateConfig { msgs_per_thread: MSGS, features, ..Default::default() };
+    Runner::new(&f, &set.threads, cfg).run().mmsgs_per_sec
+}
+
+// ------------------------------------------------------------- Fig 2(b)
+
+#[test]
+fn fig02_extremes_gap_is_several_fold_at_16_threads() {
+    let every = run_category(Category::MpiEverywhere, 16, Features::all());
+    let threads = run_category(Category::MpiThreads, 16, Features::all());
+    let ratio = every / threads;
+    // §IX: "perform up to 7x worse with multiple threads".
+    assert!(ratio > 4.0 && ratio < 20.0, "ratio {ratio:.1}");
+}
+
+#[test]
+fn fig02_waste_is_93_75_percent_for_mpi_everywhere() {
+    let mut f = Fabric::connectx4();
+    let set = EndpointBuilder::new(Category::MpiEverywhere, 16).build(&mut f).unwrap();
+    let u = ResourceUsage::of_set(&f, &set);
+    assert!((u.uuar_waste_fraction() - 0.9375).abs() < 1e-9);
+}
+
+// --------------------------------------------------------------- Fig 3
+
+#[test]
+fn fig03_all_features_scale_linearly() {
+    let spec1 = SharingSpec::new(SharedResource::Ctx, 1, 1);
+    let spec16 = SharingSpec::new(SharedResource::Ctx, 1, 16);
+    let r1 = {
+        let (f, eps) = spec1.build().unwrap();
+        Runner::new(&f, &eps, MsgRateConfig { msgs_per_thread: MSGS, ..Default::default() })
+            .run()
+            .mmsgs_per_sec
+    };
+    let r16 = {
+        let (f, eps) = spec16.build().unwrap();
+        Runner::new(&f, &eps, MsgRateConfig { msgs_per_thread: MSGS, ..Default::default() })
+            .run()
+            .mmsgs_per_sec
+    };
+    assert!(r16 / r1 > 8.0, "naive endpoints should scale: {r1:.1} -> {r16:.1}");
+}
+
+#[test]
+fn fig03_feature_removal_costs_throughput() {
+    let all = run_sharing(SharedResource::Ctx, 1, Features::all());
+    let wo_postlist = run_sharing(SharedResource::Ctx, 1, Features::all().without_postlist());
+    let wo_unsignaled = run_sharing(SharedResource::Ctx, 1, Features::all().without_unsignaled());
+    assert!(all > wo_postlist, "Postlist should help: {all:.1} vs {wo_postlist:.1}");
+    assert!(all > wo_unsignaled * 0.99, "Unsignaled should not hurt");
+}
+
+// --------------------------------------------------------------- Fig 5
+
+#[test]
+fn fig05_buf_sharing_hurts_only_without_inlining() {
+    let f = Features::all().without_inlining();
+    let independent = run_sharing(SharedResource::Buf, 1, f);
+    let shared = run_sharing(SharedResource::Buf, 16, f);
+    assert!(
+        independent / shared > 1.5,
+        "16-way BUF sharing w/o inlining should serialize the TLB: {independent:.1} vs {shared:.1}"
+    );
+    // With inlining the CPU reads the payload: sharing is harmless.
+    let with_inline = Features::all();
+    let ind2 = run_sharing(SharedResource::Buf, 1, with_inline);
+    let sh2 = run_sharing(SharedResource::Buf, 16, with_inline);
+    assert!((ind2 / sh2 - 1.0).abs() < 0.05, "inlined BUF sharing harmless: {ind2:.1} vs {sh2:.1}");
+}
+
+// --------------------------------------------------------------- Fig 6
+
+#[test]
+fn fig06_unaligned_buffers_hurt_and_equal_pcie_reads() {
+    let mk = |aligned: bool| {
+        let mut spec = SharingSpec::new(SharedResource::Buf, 1, 16);
+        spec.cache_aligned = aligned;
+        let (fabric, eps) = spec.build().unwrap();
+        let cfg = MsgRateConfig {
+            msgs_per_thread: MSGS,
+            features: Features::all().without_inlining(),
+            ..Default::default()
+        };
+        Runner::new(&fabric, &eps, cfg).run()
+    };
+    let aligned = mk(true);
+    let unaligned = mk(false);
+    // Fig 6(a): slower when 16 buffers share a cacheline...
+    assert!(aligned.mmsgs_per_sec / unaligned.mmsgs_per_sec > 1.5);
+    // Fig 6(b): ...with the SAME total number of PCIe reads, at lower rate.
+    assert_eq!(aligned.pcie.dma_reads, unaligned.pcie.dma_reads);
+    assert!(aligned.pcie_read_rate > unaligned.pcie_read_rate);
+}
+
+// --------------------------------------------------------------- Fig 7
+
+#[test]
+fn fig07_ctx_sharing_is_free_with_postlist() {
+    let all = Features::all();
+    let one = run_sharing(SharedResource::Ctx, 1, all);
+    let sixteen = run_sharing(SharedResource::Ctx, 16, all);
+    assert!((one / sixteen - 1.0).abs() < 0.05, "{one:.1} vs {sixteen:.1}");
+}
+
+#[test]
+fn fig07_blueflame_16way_drop_and_2xqps_fix() {
+    let f = Features::all().without_postlist();
+    let w8 = run_sharing(SharedResource::Ctx, 8, f);
+    let w16 = run_sharing(SharedResource::Ctx, 16, f);
+    let drop = w8 / w16;
+    // §V-B: "a 1.15x drop ... going from 8-way to 16-way CTX sharing".
+    assert!(drop > 1.08 && drop < 1.25, "drop {drop:.3}");
+    // 2xQPs eliminates the drop.
+    let w16_2x = run_sharing(SharedResource::CtxTwoXQps, 16, f);
+    assert!((w8 / w16_2x - 1.0).abs() < 0.03, "2xQPs should recover: {w8:.1} vs {w16_2x:.1}");
+    // Sharing 2 (level-2 assignment) is distinctly worse.
+    let w16_s2 = run_sharing(SharedResource::CtxSharing2, 16, f);
+    assert!(w16_2x / w16_s2 > 1.3, "Sharing 2 should hurt: {w16_2x:.1} vs {w16_s2:.1}");
+}
+
+// --------------------------------------------------------------- Fig 8
+
+#[test]
+fn fig08_pd_and_mr_sharing_are_performance_neutral() {
+    for res in [SharedResource::Pd, SharedResource::Mr] {
+        for f in [Features::all(), Features::all().without_postlist()] {
+            let one = run_sharing(res, 1, f);
+            let sixteen = run_sharing(res, 16, f);
+            assert!(
+                (one / sixteen - 1.0).abs() < 0.05,
+                "{res:?}: {one:.1} vs {sixteen:.1}"
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------- Fig 9/10
+
+#[test]
+fn fig09_cq_sharing_hurts_most_without_unsignaled() {
+    let wo_unsig = Features::all().without_unsignaled();
+    let one = run_sharing(SharedResource::Cq, 1, wo_unsig);
+    let sixteen = run_sharing(SharedResource::Cq, 16, wo_unsig);
+    assert!(one / sixteen > 2.0, "w/o Unsignaled CQ sharing: {one:.1} vs {sixteen:.1}");
+    // With q=64 the drop is much smaller (benefits of batching dominate).
+    let all = Features::all();
+    let one_all = run_sharing(SharedResource::Cq, 1, all);
+    let sixteen_all = run_sharing(SharedResource::Cq, 16, all);
+    assert!(one_all / sixteen_all < one / sixteen, "q=64 should soften CQ contention");
+}
+
+#[test]
+fn fig10_lower_unsignaled_values_contend_more() {
+    // At 16-way CQ sharing, throughput should increase with q.
+    let rate_q = |q| {
+        let f = Features { postlist: 1, unsignaled: q, inlining: true, blueflame: true };
+        run_sharing(SharedResource::Cq, 16, f)
+    };
+    let r1 = rate_q(1);
+    let r16 = rate_q(16);
+    let r64 = rate_q(64);
+    assert!(r64 >= r16 && r16 > r1, "q sweep at 16-way: {r1:.1}, {r16:.1}, {r64:.1}");
+}
+
+// --------------------------------------------------------------- Fig 11
+
+#[test]
+fn fig11_qp_sharing_declines_monotonically() {
+    let f = Features::all();
+    let rates: Vec<f64> = [1u32, 2, 4, 8, 16]
+        .iter()
+        .map(|&w| run_sharing(SharedResource::Qp, w, f))
+        .collect();
+    for w in rates.windows(2) {
+        assert!(w[0] > w[1] * 0.98, "QP sharing should decline: {rates:?}");
+    }
+    assert!(rates[0] / rates[4] > 4.0, "16-way QP sharing drop: {rates:?}");
+}
+
+#[test]
+fn fig11_removing_postlist_hurts_shared_qp_more() {
+    // §V-F: "Removing Postlist is more detrimental than removing
+    // Unsignaled Completion" under QP sharing.
+    let base = run_sharing(SharedResource::Qp, 16, Features::all());
+    let wo_pl = run_sharing(SharedResource::Qp, 16, Features::all().without_postlist());
+    let wo_un = run_sharing(SharedResource::Qp, 16, Features::all().without_unsignaled());
+    assert!(wo_pl < wo_un, "w/o Postlist {wo_pl:.1} should be < w/o Unsignaled {wo_un:.1}");
+    assert!(base > wo_pl);
+}
+
+// --------------------------------------------------------------- Fig 12
+
+#[test]
+fn fig12_categories_tradeoff_matches_paper() {
+    let rate = |cat| {
+        let ga = GlobalArray::new(cat, 16).unwrap();
+        ga.time_comm(MSGS / 2, 2).mmsgs_per_sec
+    };
+    let every = rate(Category::MpiEverywhere);
+    let p = |cat| rate(cat) / every;
+    // Paper: 108%, 94%, 65%, 64%, 3% — allow generous bands.
+    let twox = p(Category::TwoXDynamic);
+    assert!(twox > 1.0 && twox < 1.2, "2xDynamic {twox:.2}");
+    let dynamic = p(Category::Dynamic);
+    assert!(dynamic > 0.85 && dynamic < 1.02, "Dynamic {dynamic:.2}");
+    let shared = p(Category::SharedDynamic);
+    assert!(shared > 0.5 && shared < 0.8, "SharedDynamic {shared:.2}");
+    let statik = p(Category::Static);
+    assert!(statik > 0.4 && statik < 0.8, "Static {statik:.2}");
+    let threads = p(Category::MpiThreads);
+    assert!(threads < 0.1, "MPI+threads {threads:.2}");
+}
+
+// --------------------------------------------------------------- Fig 14
+
+#[test]
+fn fig14_processes_only_beats_fully_hybrid_for_mpi_everywhere() {
+    let rate = |spec: JobSpec| {
+        let s = StencilBench::new(spec, Category::MpiEverywhere, DEFAULT_HALO_BYTES).unwrap();
+        s.time_exchange(512).mmsgs_per_sec
+    };
+    let procs = rate(JobSpec::new(16, 1));
+    let hybrid = rate(JobSpec::new(1, 16));
+    // §VII: "the fully hybrid approach performs 1.4x worse".
+    let ratio = procs / hybrid;
+    assert!(ratio > 1.0 && ratio < 3.0, "processes-only advantage {ratio:.2}");
+}
+
+#[test]
+fn fig14_16_1_td_categories_beat_locked_ones() {
+    // §VII: TD categories 106%, Static 100%, MPI+threads 87% at 16.1.
+    let rate = |cat| {
+        let s = StencilBench::new(JobSpec::new(16, 1), cat, DEFAULT_HALO_BYTES).unwrap();
+        s.time_exchange(512).mmsgs_per_sec
+    };
+    let every = rate(Category::MpiEverywhere);
+    let dynamic = rate(Category::Dynamic) / every;
+    let statik = rate(Category::Static) / every;
+    let threads = rate(Category::MpiThreads) / every;
+    assert!(dynamic > 1.0 && dynamic < 1.15, "Dynamic {dynamic:.3}");
+    assert!((statik - 1.0).abs() < 0.06, "Static {statik:.3}");
+    assert!(threads > 0.75 && threads < 0.97, "MPI+threads {threads:.3}");
+}

@@ -1,0 +1,292 @@
+//! Property-based tests over the resource model and simulator invariants
+//! (in-repo `testing::check` harness; no external proptest offline).
+
+use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
+use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::mlx5::Mlx5Env;
+use scalable_ep::sim::{Server, SimLock};
+use scalable_ep::testing::check;
+use scalable_ep::verbs::{Fabric, QpCaps, TdInitAttr};
+
+#[test]
+fn prop_uuar_accounting_conserves() {
+    // allocated == used + wasted, for arbitrary build sequences.
+    check("uuar-conservation", 0xA11C, 60, |rng, _| {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 16).unwrap();
+        let n_ops = rng.range(1, 24);
+        for _ in 0..n_ops {
+            match rng.below(3) {
+                0 => {
+                    let _ = f.create_qp(pd, cq, QpCaps::default(), None);
+                }
+                1 => {
+                    if let Ok(td) = f.alloc_td(ctx, TdInitAttr::independent()) {
+                        let _ = f.create_qp(pd, cq, QpCaps::default(), Some(td));
+                    }
+                }
+                _ => {
+                    if let Ok(td) = f.alloc_td(ctx, TdInitAttr::paired()) {
+                        let _ = f.create_qp(pd, cq, QpCaps::default(), Some(td));
+                    }
+                }
+            }
+        }
+        let u = ResourceUsage::of_fabric(&f);
+        if u.uuars_allocated != u.uuars_used + u.uuars_wasted() {
+            return Err(format!("{u:?}"));
+        }
+        if u.uars_used > u.uars_allocated {
+            return Err("more used than allocated UARs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_qp_maps_to_exactly_one_uuar() {
+    check("qp-uuar-unique", 0xBEE, 40, |rng, _| {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 16).unwrap();
+        for _ in 0..rng.range(1, 40) {
+            let td = if rng.below(2) == 0 {
+                Some(f.alloc_td(ctx, TdInitAttr::default()).unwrap())
+            } else {
+                None
+            };
+            f.create_qp(pd, cq, QpCaps::default(), td).unwrap();
+        }
+        // Count mappings from the UAR side; must equal the QP count.
+        let c = f.ctx(ctx).unwrap();
+        let mapped: usize = c.uars.iter().flat_map(|p| p.uuars.iter()).map(|u| u.qps.len()).sum();
+        if mapped != f.qps.len() {
+            return Err(format!("{} uuar mappings vs {} QPs", mapped, f.qps.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_server_fifo_monotone() {
+    // Completion times are nondecreasing when arrivals are nondecreasing.
+    check("server-fifo", 0x5EF, 200, |rng, _| {
+        let mut s = Server::new();
+        let mut now = 0u64;
+        let mut last_end = 0u64;
+        for _ in 0..rng.range(1, 50) {
+            now += rng.below(500);
+            let (_, end) = s.request(now, rng.range(1, 300));
+            if end < last_end {
+                return Err(format!("end {end} < previous {last_end}"));
+            }
+            last_end = end;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lock_serializes_holds() {
+    // Under arbitrary acquire patterns, total busy time >= sum of holds.
+    check("lock-serializes", 0x10C, 100, |rng, _| {
+        let mut l = SimLock::new(10, 20);
+        let mut sum = 0u64;
+        let mut now = 0u64;
+        let mut last_release = 0u64;
+        for i in 0..rng.range(2, 30) {
+            now += rng.below(100);
+            let hold = rng.range(1, 200);
+            sum += hold;
+            let (start, end) = l.acquire(now, (i % 4) as u32, hold);
+            if start + hold != end {
+                return Err("hold not honored".into());
+            }
+            if start < last_release.saturating_sub(0) && start != 0 {
+                // starts must not precede the previous release
+                if start < last_release {
+                    return Err(format!("start {start} before prior release {last_release}"));
+                }
+            }
+            last_release = end;
+        }
+        if l.busy() < sum {
+            return Err(format!("busy {} < sum of holds {sum}", l.busy()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_msgrate_determinism_and_completeness() {
+    // Any sharing topology: every message completes, runs are
+    // bit-deterministic, and throughput is finite and positive.
+    let resources = [
+        SharedResource::Buf,
+        SharedResource::Ctx,
+        SharedResource::Cq,
+        SharedResource::Qp,
+        SharedResource::Pd,
+        SharedResource::Mr,
+    ];
+    check("msgrate-deterministic", 0xD15C, 24, |rng, _| {
+        let res = *rng.choose(&resources);
+        let ways = [1u32, 2, 4, 8, 16][rng.below(5) as usize];
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let spec = SharingSpec::new(res, ways, 16);
+        let (fabric, eps) = spec.build().map_err(|e| e.to_string())?;
+        let cfg = MsgRateConfig { msgs_per_thread: 512, features, ..Default::default() };
+        let a = Runner::new(&fabric, &eps, cfg).run();
+        let b = Runner::new(&fabric, &eps, cfg).run();
+        if a.duration != b.duration {
+            return Err(format!("nondeterministic: {} vs {}", a.duration, b.duration));
+        }
+        if a.messages < 16 * 512 {
+            return Err(format!("lost messages: {}", a.messages));
+        }
+        if !(a.mmsgs_per_sec.is_finite() && a.mmsgs_per_sec > 0.0) {
+            return Err(format!("bad rate {}", a.mmsgs_per_sec));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_sharing_never_increases_uuars() {
+    // Hardware resource usage is monotone nonincreasing in sharing degree.
+    for res in [SharedResource::Ctx, SharedResource::Cq, SharedResource::Qp] {
+        let mut prev = u32::MAX;
+        for ways in [1u32, 2, 4, 8, 16] {
+            let (f, _) = SharingSpec::new(res, ways, 16).build().unwrap();
+            let u = ResourceUsage::of_fabric(&f);
+            assert!(
+                u.uuars_allocated <= prev,
+                "{res:?} {ways}-way: {} uUARs > previous {prev}",
+                u.uuars_allocated
+            );
+            prev = u.uuars_allocated;
+        }
+    }
+}
+
+#[test]
+fn prop_category_rate_vs_resources_pareto() {
+    // Check the headline tradeoff is a proper frontier: every category
+    // with fewer uUARs than another must not also be strictly faster than
+    // every cheaper configuration (i.e. the six points form the paper's
+    // performance/resource tradeoff, not noise).
+    let mut points = Vec::new();
+    for cat in Category::ALL {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(cat, 16).build(&mut f).unwrap();
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 4096,
+            features: Features::conservative(),
+            force_shared_qp_path: cat == Category::MpiThreads,
+            ..Default::default()
+        };
+        let r = Runner::new(&f, &set.threads, cfg).run();
+        let u = ResourceUsage::of_set(&f, &set);
+        points.push((cat, u.uuars_allocated, r.mmsgs_per_sec));
+    }
+    // MPI everywhere must be the most expensive; MPI+threads the slowest.
+    let max_uuars = points.iter().map(|p| p.1).max().unwrap();
+    assert_eq!(points[0].1, max_uuars);
+    let min_rate = points.iter().map(|p| p.2).fold(f64::INFINITY, f64::min);
+    assert!((points[5].2 - min_rate).abs() < 1e-9, "MPI+threads should be slowest");
+}
+
+#[test]
+fn appendix_b_fig16_assignment_example() {
+    // Fig 16: a CTX with six static uUARs, two of them low-latency
+    // (uUAR4-5). Seven QPs and three TDs are assigned:
+    //   QP0 -> uUAR4, QP1 -> uUAR5 (low latency, one QP each)
+    //   QP2..QP6 -> uUAR1,2,3,1,2 (medium latency, round robin)
+    //   TD0/TD1 -> the two uUARs of one fresh dynamic page; TD2 -> the
+    //   first uUAR of a second dynamic page.
+    let mut f = Fabric::connectx4();
+    let ctx = f
+        .open_ctx(Mlx5Env { total_uuars: 6, num_low_lat_uuars: 2, shut_up_bf: false })
+        .unwrap();
+    let pd = f.alloc_pd(ctx).unwrap();
+    let cq = f.create_cq(ctx, 16).unwrap();
+    let slot = |f: &Fabric, qp| {
+        let u = f.qp(qp).unwrap().uuar;
+        u.page * 2 + u.slot as u32
+    };
+    let qps: Vec<_> =
+        (0..7).map(|_| f.create_qp(pd, cq, QpCaps::default(), None).unwrap()).collect();
+    let got: Vec<u32> = qps.iter().map(|&q| slot(&f, q)).collect();
+    assert_eq!(got, vec![4, 5, 1, 2, 3, 1, 2]);
+
+    let t0 = f.alloc_td(ctx, TdInitAttr::paired()).unwrap();
+    let t1 = f.alloc_td(ctx, TdInitAttr::paired()).unwrap();
+    let t2 = f.alloc_td(ctx, TdInitAttr::paired()).unwrap();
+    let (u0, u1, u2) = (f.td(t0).unwrap().uuar, f.td(t1).unwrap().uuar, f.td(t2).unwrap().uuar);
+    assert_eq!(u0.page, 3, "first dynamic page follows the 3 static pages");
+    assert_eq!((u0.slot, u1.slot), (0, 1));
+    assert_eq!(u0.page, u1.page);
+    assert_eq!((u2.page, u2.slot), (4, 0));
+}
+
+#[test]
+fn appendix_b_env_knobs_reshape_the_ctx() {
+    // MLX5_TOTAL_UUARS / MLX5_NUM_LOW_LAT_UUARS change the static layout.
+    let mut f = Fabric::connectx4();
+    let ctx = f
+        .open_ctx(Mlx5Env { total_uuars: 32, num_low_lat_uuars: 8, shut_up_bf: false })
+        .unwrap();
+    let c = f.ctx(ctx).unwrap();
+    assert_eq!(c.static_uar_pages(), 16);
+    let pd = f.alloc_pd(ctx).unwrap();
+    let cq = f.create_cq(ctx, 16).unwrap();
+    // 8 QPs fill the low-latency range 24..31 before any medium reuse.
+    let mut slots = Vec::new();
+    for _ in 0..8 {
+        let qp = f.create_qp(pd, cq, QpCaps::default(), None).unwrap();
+        let u = f.qp(qp).unwrap().uuar;
+        slots.push(u.page * 2 + u.slot as u32);
+    }
+    assert_eq!(slots, (24..32).collect::<Vec<u32>>());
+}
+
+#[test]
+fn prop_failure_injection_destroy_rebuild() {
+    // Destroy/rebuild churn keeps accounting consistent (failure
+    // injection over the object lifecycle).
+    check("destroy-rebuild", 0xDEAD, 30, |rng, _| {
+        let mut f = Fabric::connectx4();
+        let ctx = f.open_ctx(Mlx5Env::default()).unwrap();
+        let pd = f.alloc_pd(ctx).unwrap();
+        let cq = f.create_cq(ctx, 16).unwrap();
+        let mut live = Vec::new();
+        for _ in 0..rng.range(5, 40) {
+            if rng.below(3) == 0 && !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                let qp = live.swap_remove(idx);
+                f.destroy_qp(qp).map_err(|e| e.to_string())?;
+            } else {
+                live.push(f.create_qp(pd, cq, QpCaps::default(), None).unwrap());
+            }
+        }
+        let u = ResourceUsage::of_fabric(&f);
+        if u.qps as usize != live.len() {
+            return Err(format!("{} live QPs accounted, expected {}", u.qps, live.len()));
+        }
+        // uUAR mappings must match live QPs exactly.
+        let c = f.ctx(ctx).unwrap();
+        let mapped: usize = c.uars.iter().flat_map(|p| p.uuars.iter()).map(|u| u.qps.len()).sum();
+        if mapped != live.len() {
+            return Err(format!("{mapped} mappings vs {} live", live.len()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,106 @@
+//! Integration: the AOT artifacts load, compile and execute through the
+//! PJRT CPU client, and the numerics match host-side oracles.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo
+//! test` stays runnable from a clean checkout).
+
+use scalable_ep::runtime::{ArtifactRuntime, DGEMM_TILE, STENCIL_TILE};
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let dir = ArtifactRuntime::default_dir();
+    if !dir.join("dgemm_tile.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactRuntime::new(dir).expect("PJRT CPU client"))
+}
+
+fn xorshift_f32(state: &mut u64) -> f32 {
+    let mut x = *state;
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    *state = x;
+    ((x >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+}
+
+#[test]
+fn dgemm_tile_matches_host_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    let n = DGEMM_TILE;
+    let mut s = 0xDEADBEEFu64;
+    let a: Vec<f32> = (0..n * n).map(|_| xorshift_f32(&mut s)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| xorshift_f32(&mut s)).collect();
+    let c: Vec<f32> = (0..n * n).map(|_| xorshift_f32(&mut s)).collect();
+    let got = rt.dgemm_tile(&a, &b, &c).expect("execute");
+    // Host oracle in f64.
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = c[i * n + j] as f64;
+            for k in 0..n {
+                acc += a[i * n + k] as f64 * b[k * n + j] as f64;
+            }
+            let err = (acc - got[i * n + j] as f64).abs();
+            assert!(err < 1e-3, "({i},{j}): {} vs {acc} (err {err})", got[i * n + j]);
+        }
+    }
+}
+
+#[test]
+fn dgemm_identity_b() {
+    let Some(mut rt) = runtime() else { return };
+    let n = DGEMM_TILE;
+    let mut s = 7u64;
+    let a: Vec<f32> = (0..n * n).map(|_| xorshift_f32(&mut s)).collect();
+    let mut b = vec![0f32; n * n];
+    for i in 0..n {
+        b[i * n + i] = 1.0;
+    }
+    let c = vec![0f32; n * n];
+    let got = rt.dgemm_tile(&a, &b, &c).expect("execute");
+    for i in 0..n * n {
+        assert!((got[i] - a[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn stencil_tile_matches_host_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    let h = STENCIL_TILE + 2;
+    let mut s = 0xFACEu64;
+    let x: Vec<f32> = (0..h * h).map(|_| xorshift_f32(&mut s)).collect();
+    let got = rt.stencil_tile(&x).expect("execute");
+    for r in 0..STENCIL_TILE {
+        for c in 0..STENCIL_TILE {
+            let (i, j) = (r + 1, c + 1);
+            let want = 0.25
+                * (x[(i - 1) * h + j] + x[(i + 1) * h + j] + x[i * h + j - 1] + x[i * h + j + 1]);
+            let err = (want - got[r * STENCIL_TILE + c]).abs();
+            assert!(err < 1e-5, "({r},{c}): err {err}");
+        }
+    }
+}
+
+#[test]
+fn stencil_constant_fixed_point() {
+    let Some(mut rt) = runtime() else { return };
+    let h = STENCIL_TILE + 2;
+    let x = vec![2.5f32; h * h];
+    let got = rt.stencil_tile(&x).expect("execute");
+    assert!(got.iter().all(|&v| (v - 2.5).abs() < 1e-6));
+}
+
+#[test]
+fn bad_tile_sizes_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    assert!(rt.dgemm_tile(&[0.0; 4], &[0.0; 4], &[0.0; 4]).is_err());
+    assert!(rt.stencil_tile(&[0.0; 9]).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let mut rt = ArtifactRuntime::new("/nonexistent-artifacts").expect("client");
+    let n = DGEMM_TILE * DGEMM_TILE;
+    let err = rt.dgemm_tile(&vec![0.0; n], &vec![0.0; n], &vec![0.0; n]).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
