@@ -1,10 +1,9 @@
 //! Design-choice ablations (DESIGN.md): QP-lock removal, the flush-group
-//! anomaly model, and the inline-cutoff message-size sweep.
+//! anomaly model, and the inline-cutoff message-size sweep. Accepts the
+//! uniform `--quick` flag; cells run on the shared worker pool.
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    for name in ["ablation-qp-lock", "ablation-quirk", "ablation-msg-size"] {
-        for table in scalable_ep::figures::by_name(name, quick).expect("known") {
-            table.print();
-        }
-    }
+    scalable_ep::figures::bench_main(
+        "ablations",
+        &["ablation-qp-lock", "ablation-quirk", "ablation-msg-size"],
+    );
 }

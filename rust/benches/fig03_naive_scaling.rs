@@ -1,10 +1,6 @@
 //! Bench harness regenerating paper fig3 (see rust/src/figures.rs for
-//! the workload; EXPERIMENTS.md records paper-vs-measured).
+//! the workload; EXPERIMENTS.md records paper-vs-measured). Accepts the
+//! uniform `--quick` flag; cells run on the shared worker pool.
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let t0 = std::time::Instant::now();
-    for table in scalable_ep::figures::by_name("fig3", quick).expect("known figure") {
-        table.print();
-    }
-    eprintln!("[fig03_naive_scaling] regenerated in {:.2?}", t0.elapsed());
+    scalable_ep::figures::bench_main("fig03_naive_scaling", &["fig3"]);
 }

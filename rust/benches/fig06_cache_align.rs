@@ -1,10 +1,6 @@
 //! Bench harness regenerating paper fig6 (see rust/src/figures.rs for
-//! the workload; EXPERIMENTS.md records paper-vs-measured).
+//! the workload; EXPERIMENTS.md records paper-vs-measured). Accepts the
+//! uniform `--quick` flag; cells run on the shared worker pool.
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let t0 = std::time::Instant::now();
-    for table in scalable_ep::figures::by_name("fig6", quick).expect("known figure") {
-        table.print();
-    }
-    eprintln!("[fig06_cache_align] regenerated in {:.2?}", t0.elapsed());
+    scalable_ep::figures::bench_main("fig06_cache_align", &["fig6"]);
 }

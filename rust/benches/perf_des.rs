@@ -1,29 +1,90 @@
 //! Wallclock performance of the DES hot loop itself (EXPERIMENTS.md
 //! §Perf): simulated messages per wallclock second across representative
-//! topologies. The figure suite's runtime is dominated by this loop.
+//! topologies. The figure suite's runtime is dominated by this loop, so
+//! its trajectory is tracked from PR 1 onward via `BENCH_des.json`.
+//!
+//! ```sh
+//! cargo bench --bench perf_des [-- --quick]
+//! ```
+//!
+//! Emits `BENCH_des.json` (override the path with `SCEP_BENCH_JSON`) with
+//! per-scenario simulated-msgs-per-wallclock-second plus the suite
+//! wallclock; CI uploads it as an artifact so regressions are visible
+//! across PRs. The virtual-time rate is also recorded: it must stay
+//! constant across engine optimizations (the DES result is bit-stable),
+//! so a drift there flags a semantic change rather than a perf one.
 
 use std::time::Instant;
 
 use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
 
-fn measure(label: &str, res: SharedResource, ways: u32, features: Features, msgs: u64) {
-    let (fabric, eps) = SharingSpec::new(res, ways, 16).build().unwrap();
+struct Row {
+    label: &'static str,
+    messages: u64,
+    wallclock_s: f64,
+    sim_msgs_per_wallclock_s: f64,
+    virtual_mmsgs_per_sec: f64,
+}
+
+fn measure(
+    label: &'static str,
+    res: SharedResource,
+    ways: u32,
+    nthreads: u32,
+    features: Features,
+    msgs: u64,
+) -> Row {
+    let (fabric, eps) = SharingSpec::new(res, ways, nthreads).build().unwrap();
     let cfg = MsgRateConfig { msgs_per_thread: msgs, features, ..Default::default() };
     let t0 = Instant::now();
     let r = Runner::new(&fabric, &eps, cfg).run();
     let dt = t0.elapsed();
+    let wallclock_s = dt.as_secs_f64();
+    let rate = r.messages as f64 / wallclock_s;
     println!(
-        "{label:>28}: {:>6.1} M simulated msgs/s wallclock ({} msgs in {:.2?})",
-        r.messages as f64 / dt.as_secs_f64() / 1e6,
+        "{label:>28}: {:>7.1} M simulated msgs/s wallclock ({} msgs in {:.2?})",
+        rate / 1e6,
         r.messages,
         dt
     );
+    Row {
+        label,
+        messages: r.messages,
+        wallclock_s,
+        sim_msgs_per_wallclock_s: rate,
+        virtual_mmsgs_per_sec: r.mmsgs_per_sec,
+    }
 }
 
 fn main() {
-    let msgs = 256 * 1024;
-    measure("independent, All", SharedResource::Ctx, 1, Features::all(), msgs);
-    measure("independent, conservative", SharedResource::Ctx, 1, Features::conservative(), msgs / 4);
-    measure("16-way shared QP, All", SharedResource::Qp, 16, Features::all(), msgs / 4);
-    measure("16-way shared CQ, w/o unsig", SharedResource::Cq, 16, Features::all().without_unsignaled(), msgs / 8);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let msgs: u64 = if quick { 32 * 1024 } else { 256 * 1024 };
+    let suite0 = Instant::now();
+    let rows = vec![
+        measure("independent, All", SharedResource::Ctx, 1, 16, Features::all(), msgs),
+        measure("independent, conservative", SharedResource::Ctx, 1, 16, Features::conservative(), msgs / 4),
+        measure("single thread, All", SharedResource::Ctx, 1, 1, Features::all(), 4 * msgs),
+        measure("16-way shared QP, All", SharedResource::Qp, 16, 16, Features::all(), msgs / 4),
+        measure("16-way shared CQ, w/o unsig", SharedResource::Cq, 16, 16, Features::all().without_unsignaled(), msgs / 8),
+    ];
+    let suite_s = suite0.elapsed().as_secs_f64();
+
+    // Hand-rolled JSON (no serde in the offline build environment).
+    let mut json = String::from("{\n");
+    json.push_str("  \"suite\": \"perf_des\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!("  \"suite_wallclock_s\": {suite_s:.6},\n"));
+    json.push_str("  \"scenarios\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"messages\": {}, \"wallclock_s\": {:.6}, \
+             \"sim_msgs_per_wallclock_s\": {:.1}, \"virtual_mmsgs_per_sec\": {:.4}}}{sep}\n",
+            r.label, r.messages, r.wallclock_s, r.sim_msgs_per_wallclock_s, r.virtual_mmsgs_per_sec
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::env::var("SCEP_BENCH_JSON").unwrap_or_else(|_| "BENCH_des.json".to_string());
+    std::fs::write(&path, &json).expect("write BENCH_des.json");
+    eprintln!("[perf_des] suite {suite_s:.2}s -> {path}");
 }

@@ -72,10 +72,14 @@ impl GlobalArray {
 
     /// Functional end-to-end DGEMM `C = A x B` over `n x n` matrices
     /// (`n` a multiple of the 128-tile), tiles moving through RMA windows
-    /// and the compute running the Pallas artifact via PJRT. Returns the
-    /// max absolute error against a host-side oracle.
-    pub fn run_dgemm(&self, rt: &mut ArtifactRuntime, n: usize) -> anyhow::Result<f64> {
-        anyhow::ensure!(n % DGEMM_TILE == 0, "n must be a multiple of {DGEMM_TILE}");
+    /// and the compute running the Pallas artifact. Returns the max
+    /// absolute error against a host-side oracle.
+    pub fn run_dgemm(&self, rt: &mut ArtifactRuntime, n: usize) -> crate::runtime::Result<f64> {
+        if n % DGEMM_TILE != 0 {
+            return Err(crate::runtime::Error::msg(format!(
+                "n must be a multiple of {DGEMM_TILE}"
+            )));
+        }
         let tiles = n / DGEMM_TILE;
 
         // Server = rank 0 (node 0), client threads = rank 1 (node 1).

@@ -165,11 +165,13 @@ impl StencilBench {
         rows: usize,
         cols: usize,
         sweeps: usize,
-    ) -> anyhow::Result<f64> {
-        anyhow::ensure!(
-            (rows - 2) % STENCIL_TILE == 0 && (cols - 2) % STENCIL_TILE == 0,
-            "interior must tile by {STENCIL_TILE}"
-        );
+    ) -> crate::runtime::Result<f64> {
+        if rows < 3 || cols < 3 || (rows - 2) % STENCIL_TILE != 0 || (cols - 2) % STENCIL_TILE != 0
+        {
+            return Err(crate::runtime::Error::msg(format!(
+                "interior must tile by {STENCIL_TILE} (got {rows}x{cols})"
+            )));
+        }
         let mut rng = crate::sim::XorShift::new(0x57E7C11);
         let mut grid: Vec<f32> = (0..rows * cols).map(|_| rng.unit_f64() as f32).collect();
         let mut oracle = grid.clone();

@@ -25,12 +25,32 @@
 //! A thread may own several endpoints (the 5-pt stencil gives each thread
 //! one QP per neighbor, completing into one CQ); post calls round-robin
 //! over them.
+//!
+//! # The fast path
+//!
+//! The scheduler dispatch loop is the DES engine's overhead budget: every
+//! post call and every poll is one heap event. For a thread whose QP and
+//! CQ each have exactly one sharer — and with no uUAR lock or rank-wide
+//! progress state in play — consecutive steps can be coalesced into a
+//! single scheduler event whenever the continuation begins strictly
+//! before the *horizon* (the earliest resume time of any other thread,
+//! provided by [`Scheduler::run`]). The scheduler would have re-dispatched
+//! this thread next in exactly that case, with exactly this state, so the
+//! coalesced execution is *bit-identical* to the stepped one — including
+//! FIFO tie-breaks, which depend only on the relative order in which
+//! resume events reach the scheduler (unchanged: all skipped events would
+//! have been consecutive). A single-threaded run coalesces into O(1)
+//! scheduler events total. Threads that share anything keep the original
+//! one-event-per-step path, untouched. `prop_fast_path_matches_general_path`
+//! (tests/properties.rs) pins the equivalence across randomized sharing
+//! topologies.
 
 use std::collections::HashMap;
 
 use crate::endpoints::ThreadEndpoint;
 use crate::nicsim::{CostModel, Nic};
 use crate::sim::atomic::SimAtomic;
+use crate::sim::ring::ArrivalRing;
 use crate::sim::sched::{Scheduler, Step};
 use crate::sim::{to_secs, SimLock, Time};
 use crate::verbs::{CqId, Fabric, QpId};
@@ -54,6 +74,10 @@ pub struct MsgRateConfig {
     /// the processes-only stencil "because of the overhead of atomics and
     /// additional branches associated with QP-sharing").
     pub force_shared_qp_path: bool,
+    /// Disable the coalescing fast path even for single-sharer threads
+    /// (diagnostics + the fast-vs-general equivalence property test).
+    /// Results must be identical either way.
+    pub force_general_path: bool,
 }
 
 impl Default for MsgRateConfig {
@@ -65,6 +89,7 @@ impl Default for MsgRateConfig {
             features: Features::all(),
             cost: CostModel::calibrated(),
             force_shared_qp_path: false,
+            force_general_path: false,
         }
     }
 }
@@ -92,14 +117,36 @@ pub struct MsgRateResult {
     pub p99_latency_ns: f64,
 }
 
-/// Per-thread effective parameters after QP-window clamping.
+/// Per-thread effective parameters after QP-window clamping. Everything
+/// that is constant for the whole run is resolved here once, off the hot
+/// loop.
 #[derive(Debug, Clone, Copy)]
 struct Effective {
     window: u32,
     postlist: u32,
     signal_every: u32,
     use_blueflame: bool,
+    /// Signaled completions per iteration; also the `ibv_poll_cq` batch
+    /// limit `c = window/q`.
     signals_per_iter: u32,
+    /// Post calls per iteration (`window / postlist`).
+    batches_per_iter: u32,
+}
+
+/// One endpoint of a thread with its run-constant costs pre-resolved.
+#[derive(Debug, Clone, Copy)]
+struct EpState {
+    qp: QpId,
+    /// CPU work under the QP lock per post call: WQE prep (+ shared-QP
+    /// branches) + inline copy. Constant per run.
+    prep: Time,
+    /// Whether this QP takes the shared-QP code path.
+    shared_qp: bool,
+    /// Dense index into `Runner::uuar_locks` when this QP's BlueFlame
+    /// writes must serialize on a shared medium-latency uUAR.
+    uuar_lock: Option<u32>,
+    /// Payload buffer cacheline (TLB rail key).
+    cacheline: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,7 +157,7 @@ enum Phase {
 
 #[derive(Debug, Clone)]
 struct ThreadState {
-    eps: Vec<ThreadEndpoint>,
+    eps: Vec<EpState>,
     cq: CqId,
     eff: Effective,
     phase: Phase,
@@ -134,21 +181,25 @@ pub struct Runner {
     /// CQ state, indexed by `CqId::index()` (dense: fabrics are small).
     cq_locks: Vec<SimLock>,
     cq_sharers: Vec<u32>,
-    /// Min-heap of (arrival, owner tid) per CQ.
-    cq_arrivals: Vec<std::collections::BinaryHeap<std::cmp::Reverse<(Time, u32)>>>,
-    /// Reusable scratch for signaled indices / polled CQEs (avoids an
-    /// allocation per post/poll call on the hot path).
+    /// Per-CQ arrival FIFO (the NIC emits CQEs in nondecreasing time per
+    /// CQ, so a monotonic ring replaces the seed's binary heap).
+    cq_arrivals: Vec<ArrivalRing>,
+    /// Reusable scratch for signaled indices / NIC completions / polled
+    /// CQEs (no allocation on the hot path).
     sig_buf: Vec<u32>,
+    comp_buf: Vec<Time>,
     got_buf: Vec<(Time, u32)>,
     /// Per-thread credit atomics (bounce when another thread credits us).
     credit_atomic: Vec<SimAtomic>,
     /// uUAR locks for medium-latency uUARs shared by several *QPs*
-    /// (level-3 sharing): key = (ctx, page, slot).
-    uuar_locks: HashMap<(u32, u32, u8), SimLock>,
-    /// Per-QP key into `uuar_locks` (None when its uUAR needs no lock).
-    qp_uuar_key: Vec<Option<(u32, u32, u8)>>,
-    /// Per-thread, per-endpoint cacheline of the payload buffer.
-    buf_cacheline: Vec<Vec<u64>>,
+    /// (level-3 sharing), interned into a dense vec; each `EpState`
+    /// carries its index (the seed keyed a HashMap by (ctx, page, slot)
+    /// on every post call).
+    uuar_locks: Vec<SimLock>,
+    /// Whether inlining applies to this run (feature + size cutoff).
+    inline: bool,
+    /// Per-thread fast-path eligibility (resolved at `run()`).
+    fast_ok: Vec<bool>,
     /// Rank (process) of each thread, when the workload models an MPI
     /// library: threads of one rank serialize on rank-wide progress state
     /// (request pool bookkeeping) even with fully independent endpoints —
@@ -215,19 +266,24 @@ impl Runner {
             .collect();
 
         // uUAR locks for medium-latency uUARs (multiple QPs, BlueFlame
-        // needs serialization — Appendix B).
-        let mut uuar_locks = HashMap::new();
-        let mut qp_uuar_key = vec![None; fabric.qps.len()];
+        // needs serialization — Appendix B), interned into a dense vec
+        // keyed by a per-QP index.
+        let mut uuar_locks: Vec<SimLock> = Vec::new();
+        let mut uuar_index: HashMap<(u32, u32, u8), u32> = HashMap::new();
+        let mut qp_uuar_lock: Vec<Option<u32>> = vec![None; fabric.qps.len()];
         for qp in &fabric.qps {
             let u = fabric.uuar_of(qp.id);
             if u.needs_lock() {
                 let key = (qp.ctx.0, qp.uuar.page, qp.uuar.slot);
-                uuar_locks
-                    .entry(key)
-                    .or_insert_with(|| SimLock::new(c.lock_uncontended, c.lock_handoff));
-                qp_uuar_key[qp.id.index()] = Some(key);
+                let idx = *uuar_index.entry(key).or_insert_with(|| {
+                    uuar_locks.push(SimLock::new(c.lock_uncontended, c.lock_handoff));
+                    (uuar_locks.len() - 1) as u32
+                });
+                qp_uuar_lock[qp.id.index()] = Some(idx);
             }
         }
+
+        let inline = cfg.features.inlining && cfg.msg_size <= 60;
 
         // Per-thread effective parameters + state.
         let f = cfg.features;
@@ -248,10 +304,32 @@ impl Runner {
                 signal_every,
                 use_blueflame,
                 signals_per_iter: (window / signal_every).max(1),
+                batches_per_iter: window / postlist,
             };
+            let ep_states: Vec<EpState> = eps
+                .iter()
+                .map(|t| {
+                    let qi = t.qp.index();
+                    let shared_qp = qp_sharers[qi] > 1 || cfg.force_shared_qp_path;
+                    let prep = postlist as u64
+                        * (c.wqe_prep + if shared_qp { c.shared_qp_branch } else { 0 })
+                        + if inline {
+                            postlist as u64 * cfg.msg_size as u64 * c.inline_per_byte
+                        } else {
+                            0
+                        };
+                    EpState {
+                        qp: t.qp,
+                        prep,
+                        shared_qp,
+                        uuar_lock: if use_blueflame { qp_uuar_lock[qi] } else { None },
+                        cacheline: fabric.buf(t.buf).cacheline(),
+                    }
+                })
+                .collect();
             let iters = cfg.msgs_per_thread.max(1).div_ceil(window as u64);
             tstates.push(ThreadState {
-                eps: eps.clone(),
+                eps: ep_states,
                 cq: eps[0].cq,
                 eff,
                 phase: Phase::Post { batch: 0 },
@@ -261,13 +339,6 @@ impl Runner {
                 msgs_total: iters * window as u64,
             });
         }
-
-        let cq_arrivals = vec![std::collections::BinaryHeap::new(); fabric.cqs.len()];
-
-        let buf_cacheline = threads
-            .iter()
-            .map(|eps| eps.iter().map(|t| fabric.buf(t.buf).cacheline()).collect())
-            .collect();
 
         Self {
             cfg,
@@ -280,15 +351,16 @@ impl Runner {
             qp_sharers,
             cq_locks,
             cq_sharers,
-            cq_arrivals,
+            cq_arrivals: vec![ArrivalRing::new(); fabric.cqs.len()],
             sig_buf: Vec::new(),
+            comp_buf: Vec::new(),
             got_buf: Vec::new(),
             credit_atomic: (0..threads.len())
                 .map(|_| SimAtomic::new(c.atomic_base, c.atomic_bounce))
                 .collect(),
             uuar_locks,
-            qp_uuar_key,
-            buf_cacheline,
+            inline,
+            fast_ok: Vec::new(),
             thread_rank: None,
             rank_atomic: Vec::new(),
             latencies: crate::sim::stats::Sample::new(),
@@ -309,10 +381,38 @@ impl Runner {
         self.thread_rank = Some(ranks.to_vec());
     }
 
+    /// A thread may take the coalescing fast path only when nothing it
+    /// touches is shared with another thread: its QP(s) and CQ have
+    /// exactly one sharer, no uUAR lock serializes its doorbells, and no
+    /// rank-wide progress state applies. (The horizon guard in `step`
+    /// makes coalescing exact even beyond these conditions; they keep the
+    /// contended path bit-for-bit on the original one-event-per-step
+    /// code.)
+    fn compute_fast_ok(&self) -> Vec<bool> {
+        if self.cfg.force_general_path
+            || self.cfg.force_shared_qp_path
+            || self.thread_rank.is_some()
+        {
+            return vec![false; self.threads.len()];
+        }
+        self.threads
+            .iter()
+            .map(|t| {
+                self.cq_sharers[t.cq.index()] == 1
+                    && t.eps.iter().all(|e| {
+                        self.qp_sharers[e.qp.index()] == 1
+                            && !e.shared_qp
+                            && e.uuar_lock.is_none()
+                    })
+            })
+            .collect()
+    }
+
     /// Run to completion and report.
     pub fn run(mut self) -> MsgRateResult {
+        self.fast_ok = self.compute_fast_ok();
         let n = self.threads.len() as u32;
-        let done = Scheduler::new(n).run(|tid, now| self.step(tid, now));
+        let done = Scheduler::new(n).run(|tid, now, horizon| self.step(tid, now, horizon));
         let duration = *done.iter().max().unwrap_or(&0);
         let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
         let secs = to_secs(duration.max(1));
@@ -328,8 +428,26 @@ impl Runner {
         }
     }
 
-    fn step(&mut self, tid: u32, now: Time) -> Step {
+    /// One scheduler event. Contended threads run exactly one bounded
+    /// phase; fast-path threads coalesce consecutive phases while the
+    /// continuation begins strictly before `horizon` (see module docs for
+    /// why that is exact).
+    fn step(&mut self, tid: u32, now: Time, horizon: Time) -> Step {
         let ti = tid as usize;
+        if !self.fast_ok[ti] {
+            return self.step_once(ti, now);
+        }
+        let mut now = now;
+        loop {
+            match self.step_once(ti, now) {
+                Step::Resume(t) if t < horizon => now = t,
+                other => return other,
+            }
+        }
+    }
+
+    #[inline]
+    fn step_once(&mut self, ti: usize, now: Time) -> Step {
         match self.threads[ti].phase {
             Phase::Post { batch } => self.step_post(ti, now, batch),
             Phase::Poll => self.step_poll(ti, now),
@@ -344,34 +462,29 @@ impl Runner {
         let tid = ti as u32;
         let p = eff.postlist;
         // Round-robin over the thread's endpoints per post call.
-        let ep_idx = ((t.posted / p as u64) % t.eps.len() as u64) as usize;
-        let ep = t.eps[ep_idx];
+        let ep = if t.eps.len() == 1 {
+            t.eps[0]
+        } else {
+            t.eps[((t.posted / p as u64) % t.eps.len() as u64) as usize]
+        };
         let qp = ep.qp;
         let qi = qp.index();
-        let shared_qp = self.qp_sharers[qi] > 1 || self.cfg.force_shared_qp_path;
-        let inline = self.cfg.features.inlining && self.cfg.msg_size <= 60;
-        let cacheline = self.buf_cacheline[ti][ep_idx];
-
-        // CPU work under the QP lock: WQE preparation (+ inline copy),
-        // depth reservation, doorbell.
-        let prep: Time = p as u64 * (c.wqe_prep + if shared_qp { c.shared_qp_branch } else { 0 })
-            + if inline { p as u64 * self.cfg.msg_size as u64 * c.inline_per_byte } else { 0 };
+        let inline = self.inline;
 
         // Level-3 sharing: distinct QPs on one medium-latency uUAR
         // serialize their BlueFlame writes with the uUAR lock. (A shared
         // QP's own lock already covers the BlueFlame write, §V: "The lock
         // on the QP also protects concurrent BlueFlame writes".)
-        let uuar_key = self.qp_uuar_key[qi].filter(|_| eff.use_blueflame);
-
+        //
         // Destructure so the lock, the NIC and the atomics borrow
         // disjoint fields (no swaps on the hot path).
         let Runner { qp_locks, uuar_locks, nic, qp_depth_atomic, .. } = self;
-        let mut uuar_lock = uuar_key.map(|k| uuar_locks.get_mut(&k).unwrap());
+        let mut uuar_lock = ep.uuar_lock.map(|i| uuar_locks.get_mut(i as usize).unwrap());
         let depth_atomic = &mut qp_depth_atomic[qi];
 
         let release = qp_locks[qi].scope(now, tid, |start| {
-            let mut tt = start + prep;
-            if shared_qp {
+            let mut tt = start + ep.prep;
+            if ep.shared_qp {
                 tt = depth_atomic.rmw(tt, tid);
             }
             // Ring: BlueFlame (64 B PIO WQE) or plain 8 B DoorBell. The
@@ -393,39 +506,47 @@ impl Runner {
             None => release,
         };
 
-        // NIC-side pipeline from the accepted doorbell.
+        // Signaled positions within this batch: i such that
+        // (posted + i + 1) % q == 0, i.e. i ≡ q-1-posted (mod q) —
+        // computed arithmetically instead of testing all p positions.
         let base_idx = self.threads[ti].posted;
         self.sig_buf.clear();
-        for i in 0..p {
-            if (base_idx + i as u64 + 1) % eff.signal_every as u64 == 0 {
-                self.sig_buf.push(i);
-            }
+        let q = eff.signal_every;
+        let mut i = (q as u64 - 1 - base_idx % q as u64) as u32;
+        while i < p {
+            self.sig_buf.push(i);
+            i += q;
         }
-        let completions = self.nic.process_batch(
-            release,
-            qp,
-            p,
-            inline,
-            eff.use_blueflame,
-            cacheline,
-            self.cfg.msg_size,
-            &self.sig_buf,
-        );
-        let cq = self.threads[ti].cq;
-        let heap = &mut self.cq_arrivals[cq.index()];
-        for ct in completions {
+
+        // NIC-side pipeline from the accepted doorbell.
+        {
+            let Runner { nic, sig_buf, comp_buf, cfg, .. } = self;
+            nic.process_batch(
+                release,
+                qp,
+                p,
+                inline,
+                eff.use_blueflame,
+                ep.cacheline,
+                cfg.msg_size,
+                sig_buf,
+                comp_buf,
+            );
+        }
+        let cq_ix = self.threads[ti].cq.index();
+        for k in 0..self.comp_buf.len() {
+            let ct = self.comp_buf[k];
             self.lat_decim = self.lat_decim.wrapping_add(1);
             if self.lat_decim % 8 == 0 {
                 self.latencies.add(crate::sim::to_ns(ct.saturating_sub(now)));
             }
-            heap.push(std::cmp::Reverse((ct, tid)));
+            self.cq_arrivals[cq_ix].push(ct, tid);
         }
 
         // Advance thread state.
         let t = &mut self.threads[ti];
         t.posted += p as u64;
-        let batches_per_iter = eff.window / p;
-        if batch + 1 < batches_per_iter {
+        if batch + 1 < eff.batches_per_iter {
             t.phase = Phase::Post { batch: batch + 1 };
         } else {
             t.credit_target += eff.signals_per_iter as u64;
@@ -450,27 +571,27 @@ impl Runner {
         // An MPI_THREAD_MULTIPLE library's completion path does atomic
         // counter updates even when a single thread polls (§VII).
         let shared_cq = self.cq_sharers[cq.index()] > 1 || self.cfg.force_shared_qp_path;
-        let heap = &mut self.cq_arrivals[cq.index()];
+        let ring = &mut self.cq_arrivals[cq.index()];
         // Nothing visible yet: sleep until the next arrival. (Arrivals are
-        // pushed at post time, so an empty heap with unmet credits cannot
+        // pushed at post time, so an empty ring with unmet credits cannot
         // happen — our outstanding CQEs are either queued or were consumed
         // and credited by another poller, which the check above catches.)
-        match heap.peek() {
+        match ring.peek() {
             None => panic!("poll with empty CQ and unmet credits (thread {tid})"),
-            Some(&std::cmp::Reverse((arr, _))) if arr > now => {
+            Some(&(arr, _)) if arr > now => {
                 return Step::Resume(arr);
             }
             _ => {}
         }
 
         // Read up to c CQEs under the CQ lock.
-        let cmax = (eff.window / eff.signal_every).max(1);
+        let cmax = eff.signals_per_iter;
         let got = &mut self.got_buf;
         got.clear();
         while got.len() < cmax as usize {
-            match heap.peek() {
-                Some(&std::cmp::Reverse((arr, owner))) if arr <= now => {
-                    heap.pop();
+            match ring.peek() {
+                Some(&(arr, owner)) if arr <= now => {
+                    ring.pop();
                     got.push((arr, owner));
                 }
                 _ => break,
@@ -568,6 +689,34 @@ mod tests {
         let r = run_category(Category::Static, 16, Features::all());
         assert_eq!(r.messages, 16 * 4096);
         assert!(r.thread_done.iter().all(|&d| d > 0));
+    }
+
+    #[test]
+    fn fast_path_matches_general_path_smoke() {
+        // The full randomized equivalence lives in tests/properties.rs;
+        // this in-module smoke check covers the flagship shapes.
+        for (cat, n) in [
+            (Category::MpiEverywhere, 1),
+            (Category::MpiEverywhere, 16),
+            (Category::Dynamic, 8),
+        ] {
+            for features in [Features::all(), Features::conservative()] {
+                let mut f = Fabric::connectx4();
+                let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+                let cfg = MsgRateConfig { features, msgs_per_thread: 1024, ..Default::default() };
+                let fast = Runner::new(&f, &set.threads, cfg).run();
+                let general = Runner::new(
+                    &f,
+                    &set.threads,
+                    MsgRateConfig { force_general_path: true, ..cfg },
+                )
+                .run();
+                assert_eq!(fast.duration, general.duration, "{cat} x{n}");
+                assert_eq!(fast.thread_done, general.thread_done, "{cat} x{n}");
+                assert_eq!(fast.pcie, general.pcie, "{cat} x{n}");
+                assert_eq!(fast.mmsgs_per_sec, general.mmsgs_per_sec, "{cat} x{n}");
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! `quick` trims the per-thread message counts so the full suite stays
 //! interactive; the shapes are insensitive to it (deterministic model,
 //! no sampling noise).
+//!
+//! Every figure cell — one `run_spec`/`usage_of` evaluation — builds its
+//! own fabric and runner, so cells are fully independent; they are fanned
+//! out over [`crate::par::par_map`]'s scoped worker pool and reassembled
+//! in order, making the suite wallclock scale with cores while the table
+//! bytes stay identical to a sequential run.
 
 use crate::apps::stencil::DEFAULT_HALO_BYTES;
 use crate::apps::{GlobalArray, StencilBench};
@@ -12,8 +18,12 @@ use crate::bench::{FeatureSet, Features, MsgRateConfig, MsgRateResult, Runner, S
 use crate::coordinator::JobSpec;
 use crate::endpoints::{Category, EndpointBuilder, ResourceUsage};
 use crate::mlx5::MemModel;
+use crate::par::par_map;
 use crate::report::{f2, pct, Table};
 use crate::verbs::Fabric;
+
+/// The thread/way sweep shared by most figures.
+const SWEEP: [u32; 5] = [1, 2, 4, 8, 16];
 
 fn msgs(quick: bool) -> u64 {
     if quick {
@@ -32,6 +42,12 @@ fn run_spec(spec: &SharingSpec, features: Features, quick: bool) -> MsgRateResul
 fn usage_of(spec: &SharingSpec) -> ResourceUsage {
     let (fabric, _) = spec.build().expect("topology build");
     ResourceUsage::of_fabric(&fabric)
+}
+
+/// Fan a `(spec, features)` grid out over the worker pool, returning the
+/// rates in cell order.
+fn par_rates(cells: Vec<(SharingSpec, Features)>, quick: bool) -> Vec<f64> {
+    par_map(cells, move |(spec, f)| run_spec(&spec, f, quick).mmsgs_per_sec)
 }
 
 fn usage_row(label: &str, u: &ResourceUsage) -> Vec<String> {
@@ -75,17 +91,21 @@ pub fn fig02(quick: bool) -> Vec<Table> {
         "Fig 2b(ii): wasted hardware resources (uUARs)",
         &["threads", "MPI everywhere", "MPI+threads"],
     );
-    for n in [1u32, 2, 4, 8, 16] {
-        let rate = |cat| {
-            let mut f = Fabric::connectx4();
-            let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
-            let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), ..Default::default() };
-            let r = Runner::new(&f, &set.threads, cfg).run();
-            let u = ResourceUsage::of_set(&f, &set);
-            (r.mmsgs_per_sec, u.uuars_wasted())
-        };
-        let (re, we) = rate(Category::MpiEverywhere);
-        let (rt, wt) = rate(Category::MpiThreads);
+    let cells: Vec<(u32, Category)> = SWEEP
+        .iter()
+        .flat_map(|&n| [Category::MpiEverywhere, Category::MpiThreads].into_iter().map(move |c| (n, c)))
+        .collect();
+    let results = par_map(cells, |(n, cat)| {
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), ..Default::default() };
+        let r = Runner::new(&f, &set.threads, cfg).run();
+        let u = ResourceUsage::of_set(&f, &set);
+        (r.mmsgs_per_sec, u.uuars_wasted())
+    });
+    for (i, &n) in SWEEP.iter().enumerate() {
+        let (re, we) = results[2 * i];
+        let (rt, wt) = results[2 * i + 1];
         perf.row(vec![n.to_string(), f2(re), f2(rt), f2(re / rt)]);
         waste.row(vec![n.to_string(), we.to_string(), wt.to_string()]);
     }
@@ -99,19 +119,26 @@ pub fn fig03(quick: bool) -> Vec<Table> {
         "Fig 3(left): naive endpoints, rate (Mmsg/s) across features",
         &["threads", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    for n in [1u32, 2, 4, 8, 16] {
+    let cells: Vec<(SharingSpec, Features)> = SWEEP
+        .iter()
+        .flat_map(|&n| {
+            FeatureSet::ALL_SETS
+                .iter()
+                .map(move |fs| (SharingSpec::new(SharedResource::Ctx, 1, n), fs.features()))
+        })
+        .collect();
+    let rates = par_rates(cells, quick);
+    for (i, &n) in SWEEP.iter().enumerate() {
         let mut row = vec![n.to_string()];
-        for fs in FeatureSet::ALL_SETS {
-            // Naive endpoints = 1-way CTX sharing topology.
-            let spec = SharingSpec::new(SharedResource::Ctx, 1, n);
-            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        for j in 0..FeatureSet::ALL_SETS.len() {
+            row.push(f2(rates[i * FeatureSet::ALL_SETS.len() + j]));
         }
         perf.row(row);
     }
     let mut usage = Table::new("Fig 3(right): naive endpoints, resource usage", &USAGE_HEADER);
-    for n in [1u32, 2, 4, 8, 16] {
-        let u = usage_of(&SharingSpec::new(SharedResource::Ctx, 1, n));
-        usage.row(usage_row(&format!("{n} threads"), &u));
+    let usages = par_map(SWEEP.to_vec(), |n| usage_of(&SharingSpec::new(SharedResource::Ctx, 1, n)));
+    for (&n, u) in SWEEP.iter().zip(&usages) {
+        usage.row(usage_row(&format!("{n} threads"), u));
     }
     vec![perf, usage]
 }
@@ -122,18 +149,26 @@ pub fn fig05(quick: bool) -> Vec<Table> {
         "Fig 5(left): BUF sharing, rate (Mmsg/s)",
         &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    for ways in [1u32, 2, 4, 8, 16] {
+    let cells: Vec<(SharingSpec, Features)> = SWEEP
+        .iter()
+        .flat_map(|&ways| {
+            FeatureSet::ALL_SETS
+                .iter()
+                .map(move |fs| (SharingSpec::new(SharedResource::Buf, ways, 16), fs.features()))
+        })
+        .collect();
+    let rates = par_rates(cells, quick);
+    for (i, &ways) in SWEEP.iter().enumerate() {
         let mut row = vec![ways.to_string()];
-        for fs in FeatureSet::ALL_SETS {
-            let spec = SharingSpec::new(SharedResource::Buf, ways, 16);
-            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        for j in 0..FeatureSet::ALL_SETS.len() {
+            row.push(f2(rates[i * FeatureSet::ALL_SETS.len() + j]));
         }
         perf.row(row);
     }
     let mut usage = Table::new("Fig 5(right): BUF sharing, resource usage", &USAGE_HEADER);
-    for ways in [1u32, 2, 4, 8, 16] {
-        let u = usage_of(&SharingSpec::new(SharedResource::Buf, ways, 16));
-        usage.row(usage_row(&format!("{ways}-way"), &u));
+    let usages = par_map(SWEEP.to_vec(), |ways| usage_of(&SharingSpec::new(SharedResource::Buf, ways, 16)));
+    for (&ways, u) in SWEEP.iter().zip(&usages) {
+        usage.row(usage_row(&format!("{ways}-way"), u));
     }
     vec![perf, usage]
 }
@@ -145,10 +180,12 @@ pub fn fig06(quick: bool) -> Vec<Table> {
         "Fig 6: cache alignment of independent 2B buffers (w/o Inlining)",
         &["buffers", "rate_Mmsg/s", "pcie_reads", "pcie_reads_M/s"],
     );
-    for aligned in [true, false] {
+    let results = par_map(vec![true, false], |aligned| {
         let mut spec = SharingSpec::new(SharedResource::Buf, 1, 16);
         spec.cache_aligned = aligned;
-        let r = run_spec(&spec, Features::all().without_inlining(), quick);
+        run_spec(&spec, Features::all().without_inlining(), quick)
+    });
+    for (aligned, r) in [true, false].into_iter().zip(&results) {
         t.row(vec![
             if aligned { "64B-aligned" } else { "unaligned" }.to_string(),
             f2(r.mmsgs_per_sec),
@@ -165,43 +202,39 @@ pub fn fig07(quick: bool) -> Vec<Table> {
         "Fig 7(left): CTX sharing, rate (Mmsg/s)",
         &["x-way", "All", "All w/o Postlist", "w/o Postlist 2xQPs", "w/o Postlist Sharing 2"],
     );
-    for ways in [1u32, 2, 4, 8, 16] {
-        let all = run_spec(&SharingSpec::new(SharedResource::Ctx, ways, 16), Features::all(), quick);
-        let wo_pl = run_spec(
-            &SharingSpec::new(SharedResource::Ctx, ways, 16),
-            Features::all().without_postlist(),
-            quick,
-        );
-        let twox = run_spec(
-            &SharingSpec::new(SharedResource::CtxTwoXQps, ways, 16),
-            Features::all().without_postlist(),
-            quick,
-        );
-        let sh2 = run_spec(
-            &SharingSpec::new(SharedResource::CtxSharing2, ways, 16),
-            Features::all().without_postlist(),
-            quick,
-        );
+    let wo_pl = Features::all().without_postlist();
+    let cells: Vec<(SharingSpec, Features)> = SWEEP
+        .iter()
+        .flat_map(|&ways| {
+            [
+                (SharingSpec::new(SharedResource::Ctx, ways, 16), Features::all()),
+                (SharingSpec::new(SharedResource::Ctx, ways, 16), wo_pl),
+                (SharingSpec::new(SharedResource::CtxTwoXQps, ways, 16), wo_pl),
+                (SharingSpec::new(SharedResource::CtxSharing2, ways, 16), wo_pl),
+            ]
+        })
+        .collect();
+    let rates = par_rates(cells, quick);
+    for (i, &ways) in SWEEP.iter().enumerate() {
         perf.row(vec![
             ways.to_string(),
-            f2(all.mmsgs_per_sec),
-            f2(wo_pl.mmsgs_per_sec),
-            f2(twox.mmsgs_per_sec),
-            f2(sh2.mmsgs_per_sec),
+            f2(rates[4 * i]),
+            f2(rates[4 * i + 1]),
+            f2(rates[4 * i + 2]),
+            f2(rates[4 * i + 3]),
         ]);
     }
     let mut usage = Table::new("Fig 7(right): CTX sharing, resource usage", &USAGE_HEADER);
-    for ways in [1u32, 2, 4, 8, 16] {
-        usage.row(usage_row(
-            &format!("{ways}-way"),
-            &usage_of(&SharingSpec::new(SharedResource::Ctx, ways, 16)),
-        ));
+    let mut usage_specs: Vec<(String, SharingSpec)> = SWEEP
+        .iter()
+        .map(|&ways| (format!("{ways}-way"), SharingSpec::new(SharedResource::Ctx, ways, 16)))
+        .collect();
+    usage_specs.push(("16-way 2xQPs".to_string(), SharingSpec::new(SharedResource::CtxTwoXQps, 16, 16)));
+    usage_specs.push(("16-way Sharing2".to_string(), SharingSpec::new(SharedResource::CtxSharing2, 16, 16)));
+    let usages = par_map(usage_specs, |(label, spec)| (label, usage_of(&spec)));
+    for (label, u) in &usages {
+        usage.row(usage_row(label, u));
     }
-    usage.row(usage_row("16-way 2xQPs", &usage_of(&SharingSpec::new(SharedResource::CtxTwoXQps, 16, 16))));
-    usage.row(usage_row(
-        "16-way Sharing2",
-        &usage_of(&SharingSpec::new(SharedResource::CtxSharing2, 16, 16)),
-    ));
     vec![perf, usage]
 }
 
@@ -213,16 +246,26 @@ pub fn fig08(quick: bool) -> Vec<Table> {
             &format!("Fig 8: {name} sharing, rate (Mmsg/s)"),
             &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
         );
-        for ways in [1u32, 2, 4, 8, 16] {
+        let cells: Vec<(SharingSpec, Features)> = SWEEP
+            .iter()
+            .flat_map(|&ways| {
+                FeatureSet::ALL_SETS
+                    .iter()
+                    .map(move |fs| (SharingSpec::new(res, ways, 16), fs.features()))
+            })
+            .collect();
+        let rates = par_rates(cells, quick);
+        for (i, &ways) in SWEEP.iter().enumerate() {
             let mut row = vec![ways.to_string()];
-            for fs in FeatureSet::ALL_SETS {
-                row.push(f2(run_spec(&SharingSpec::new(res, ways, 16), fs.features(), quick).mmsgs_per_sec));
+            for j in 0..FeatureSet::ALL_SETS.len() {
+                row.push(f2(rates[i * FeatureSet::ALL_SETS.len() + j]));
             }
             perf.row(row);
         }
         let mut usage = Table::new(&format!("Fig 8: {name} sharing, resource usage"), &USAGE_HEADER);
-        for ways in [1u32, 16] {
-            usage.row(usage_row(&format!("{ways}-way"), &usage_of(&SharingSpec::new(res, ways, 16))));
+        let usages = par_map(vec![1u32, 16], move |ways| usage_of(&SharingSpec::new(res, ways, 16)));
+        for (&ways, u) in [1u32, 16].iter().zip(&usages) {
+            usage.row(usage_row(&format!("{ways}-way"), u));
         }
         out.push(perf);
         out.push(usage);
@@ -236,32 +279,50 @@ pub fn fig09(quick: bool) -> Vec<Table> {
         "Fig 9(left): CQ sharing, rate (Mmsg/s)",
         &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    for ways in [1u32, 2, 4, 8, 16] {
+    let cells: Vec<(SharingSpec, Features)> = SWEEP
+        .iter()
+        .flat_map(|&ways| {
+            FeatureSet::ALL_SETS
+                .iter()
+                .map(move |fs| (SharingSpec::new(SharedResource::Cq, ways, 16), fs.features()))
+        })
+        .collect();
+    let rates = par_rates(cells, quick);
+    for (i, &ways) in SWEEP.iter().enumerate() {
         let mut row = vec![ways.to_string()];
-        for fs in FeatureSet::ALL_SETS {
-            let spec = SharingSpec::new(SharedResource::Cq, ways, 16);
-            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        for j in 0..FeatureSet::ALL_SETS.len() {
+            row.push(f2(rates[i * FeatureSet::ALL_SETS.len() + j]));
         }
         perf.row(row);
     }
     let mut usage = Table::new("Fig 9(right): CQ sharing, resource usage", &USAGE_HEADER);
-    for ways in [1u32, 2, 4, 8, 16] {
-        usage.row(usage_row(&format!("{ways}-way"), &usage_of(&SharingSpec::new(SharedResource::Cq, ways, 16))));
+    let usages = par_map(SWEEP.to_vec(), |ways| usage_of(&SharingSpec::new(SharedResource::Cq, ways, 16)));
+    for (&ways, u) in SWEEP.iter().zip(&usages) {
+        usage.row(usage_row(&format!("{ways}-way"), u));
     }
     vec![perf, usage]
 }
 
 /// Fig 10: the Unsignaled-vs-CQ-sharing tradeoff at Postlist 32 and 1.
 pub fn fig10(quick: bool) -> Vec<Table> {
+    const QS: [u32; 4] = [1, 4, 16, 64];
     let mut out = Vec::new();
     for (p, title) in [(32u32, "Fig 10(a): Postlist 32"), (1, "Fig 10(b): Postlist 1")] {
         let mut t = Table::new(title, &["x-way", "q=1", "q=4", "q=16", "q=64"]);
-        for ways in [1u32, 2, 4, 8, 16] {
+        let cells: Vec<(SharingSpec, Features)> = SWEEP
+            .iter()
+            .flat_map(|&ways| {
+                QS.iter().map(move |&q| {
+                    let features = Features { postlist: p, unsignaled: q, inlining: true, blueflame: true };
+                    (SharingSpec::new(SharedResource::Cq, ways, 16), features)
+                })
+            })
+            .collect();
+        let rates = par_rates(cells, quick);
+        for (i, &ways) in SWEEP.iter().enumerate() {
             let mut row = vec![ways.to_string()];
-            for q in [1u32, 4, 16, 64] {
-                let features = Features { postlist: p, unsignaled: q, inlining: true, blueflame: true };
-                let spec = SharingSpec::new(SharedResource::Cq, ways, 16);
-                row.push(f2(run_spec(&spec, features, quick).mmsgs_per_sec));
+            for j in 0..QS.len() {
+                row.push(f2(rates[i * QS.len() + j]));
             }
             t.row(row);
         }
@@ -276,17 +337,26 @@ pub fn fig11(quick: bool) -> Vec<Table> {
         "Fig 11(left): QP sharing, rate (Mmsg/s)",
         &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    for ways in [1u32, 2, 4, 8, 16] {
+    let cells: Vec<(SharingSpec, Features)> = SWEEP
+        .iter()
+        .flat_map(|&ways| {
+            FeatureSet::ALL_SETS
+                .iter()
+                .map(move |fs| (SharingSpec::new(SharedResource::Qp, ways, 16), fs.features()))
+        })
+        .collect();
+    let rates = par_rates(cells, quick);
+    for (i, &ways) in SWEEP.iter().enumerate() {
         let mut row = vec![ways.to_string()];
-        for fs in FeatureSet::ALL_SETS {
-            let spec = SharingSpec::new(SharedResource::Qp, ways, 16);
-            row.push(f2(run_spec(&spec, fs.features(), quick).mmsgs_per_sec));
+        for j in 0..FeatureSet::ALL_SETS.len() {
+            row.push(f2(rates[i * FeatureSet::ALL_SETS.len() + j]));
         }
         perf.row(row);
     }
     let mut usage = Table::new("Fig 11(right): QP sharing, resource usage", &USAGE_HEADER);
-    for ways in [1u32, 2, 4, 8, 16] {
-        usage.row(usage_row(&format!("{ways}-way"), &usage_of(&SharingSpec::new(SharedResource::Qp, ways, 16))));
+    let usages = par_map(SWEEP.to_vec(), |ways| usage_of(&SharingSpec::new(SharedResource::Qp, ways, 16)));
+    for (&ways, u) in SWEEP.iter().zip(&usages) {
+        usage.row(usage_row(&format!("{ways}-way"), u));
     }
     vec![perf, usage]
 }
@@ -298,12 +368,15 @@ pub fn fig12(quick: bool) -> Vec<Table> {
         &["category", "rate", "% of MPI everywhere", "uUARs", "% of MPI everywhere uUARs"],
     );
     let mut usage = Table::new("Fig 12(right): global array, resource usage", &USAGE_HEADER);
-    let mut base_rate = None;
-    let mut base_uuars = None;
-    for cat in Category::ALL {
+    let results = par_map(Category::ALL.to_vec(), |cat| {
         let ga = GlobalArray::new(cat, 16).expect("build");
         let r = ga.time_comm(msgs(quick) / 4, 2);
         let u = ga.resources();
+        (cat, r, u)
+    });
+    let mut base_rate = None;
+    let mut base_uuars = None;
+    for (cat, r, u) in &results {
         let b = *base_rate.get_or_insert(r.mmsgs_per_sec);
         let bu = *base_uuars.get_or_insert(u.uuars_allocated as f64);
         perf.row(vec![
@@ -313,7 +386,7 @@ pub fn fig12(quick: bool) -> Vec<Table> {
             u.uuars_allocated.to_string(),
             pct(u.uuars_allocated as f64 / bu),
         ]);
-        usage.row(usage_row(cat.label(), &u));
+        usage.row(usage_row(cat.label(), u));
     }
     vec![perf, usage]
 }
@@ -325,11 +398,19 @@ pub fn fig14(quick: bool) -> Vec<Table> {
         &["P.T", "MPI everywhere", "2xDynamic", "Dynamic", "Shared Dynamic", "Static", "MPI+threads"],
     );
     let iterations = msgs(quick) / 16;
-    for spec in JobSpec::paper_sweep() {
+    let sweep = JobSpec::paper_sweep();
+    let cells: Vec<(JobSpec, Category)> = sweep
+        .iter()
+        .flat_map(|&spec| Category::ALL.into_iter().map(move |cat| (spec, cat)))
+        .collect();
+    let rates = par_map(cells.clone(), move |(spec, cat)| {
+        let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).expect("build");
+        s.time_exchange(iterations).mmsgs_per_sec
+    });
+    for (i, spec) in sweep.iter().enumerate() {
         let mut row = vec![spec.label()];
-        for cat in Category::ALL {
-            let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).expect("build");
-            row.push(f2(s.time_exchange(iterations).mmsgs_per_sec));
+        for j in 0..Category::ALL.len() {
+            row.push(f2(rates[i * Category::ALL.len() + j]));
         }
         perf.row(row);
     }
@@ -337,12 +418,12 @@ pub fn fig14(quick: bool) -> Vec<Table> {
         "Fig 14(b): 5-pt stencil resource usage per node",
         &["P.T / category", "QPs", "CQs", "UARs", "uUARs", "uUARs_used", "mem_MiB"],
     );
-    for spec in JobSpec::paper_sweep() {
-        for cat in Category::ALL {
-            let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).expect("build");
-            let u = s.resources();
-            usage.row(usage_row(&format!("{} {}", spec.label(), cat.label()), &u));
-        }
+    let usages = par_map(cells, |(spec, cat)| {
+        let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).expect("build");
+        (spec, cat, s.resources())
+    });
+    for (spec, cat, u) in &usages {
+        usage.row(usage_row(&format!("{} {}", spec.label(), cat.label()), u));
     }
     vec![perf, usage]
 }
@@ -355,20 +436,22 @@ pub fn ablation_qp_lock(quick: bool) -> Vec<Table> {
         "Ablation: TD QP-lock removal (global array, 16 threads, Mmsg/s)",
         &["category", "optimized (lock removed)", "stock mlx5 (lock kept)", "delta"],
     );
-    for cat in [Category::TwoXDynamic, Category::Dynamic, Category::SharedDynamic] {
-        let run = |optimized: bool| {
-            let mut fabric = Fabric::connectx4();
-            fabric.qp_lock_optimization = optimized;
-            let set = EndpointBuilder::new(cat, 16).build(&mut fabric).unwrap();
-            let cfg = MsgRateConfig {
-                msgs_per_thread: msgs(quick) / 4,
-                features: Features::conservative(),
-                ..Default::default()
-            };
-            Runner::new(&fabric, &set.threads, cfg).run().mmsgs_per_sec
+    let cats = [Category::TwoXDynamic, Category::Dynamic, Category::SharedDynamic];
+    let cells: Vec<(Category, bool)> =
+        cats.iter().flat_map(|&c| [(c, true), (c, false)]).collect();
+    let rates = par_map(cells, |(cat, optimized)| {
+        let mut fabric = Fabric::connectx4();
+        fabric.qp_lock_optimization = optimized;
+        let set = EndpointBuilder::new(cat, 16).build(&mut fabric).unwrap();
+        let cfg = MsgRateConfig {
+            msgs_per_thread: msgs(quick) / 4,
+            features: Features::conservative(),
+            ..Default::default()
         };
-        let opt = run(true);
-        let stock = run(false);
+        Runner::new(&fabric, &set.threads, cfg).run().mmsgs_per_sec
+    });
+    for (i, cat) in cats.iter().enumerate() {
+        let (opt, stock) = (rates[2 * i], rates[2 * i + 1]);
         t.row(vec![cat.label().to_string(), f2(opt), f2(stock), pct(stock / opt - 1.0)]);
     }
     vec![t]
@@ -381,23 +464,24 @@ pub fn ablation_quirk(quick: bool) -> Vec<Table> {
         "Ablation: flush-group anomaly model (CTX sharing w/o Postlist, Mmsg/s)",
         &["x-way", "quirk on", "quirk off"],
     );
-    for ways in [8u32, 16] {
-        let run = |on: bool| {
-            let spec = SharingSpec::new(SharedResource::Ctx, ways, 16);
-            let (fabric, eps) = spec.build().unwrap();
-            let mut cost = crate::nicsim::CostModel::calibrated();
-            if !on {
-                cost.flushgroup_extra = 0;
-            }
-            let cfg = MsgRateConfig {
-                msgs_per_thread: msgs(quick),
-                features: Features::all().without_postlist(),
-                cost,
-                ..Default::default()
-            };
-            Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
+    let cells: Vec<(u32, bool)> = [8u32, 16].iter().flat_map(|&w| [(w, true), (w, false)]).collect();
+    let rates = par_map(cells, |(ways, on)| {
+        let spec = SharingSpec::new(SharedResource::Ctx, ways, 16);
+        let (fabric, eps) = spec.build().unwrap();
+        let mut cost = crate::nicsim::CostModel::calibrated();
+        if !on {
+            cost.flushgroup_extra = 0;
+        }
+        let cfg = MsgRateConfig {
+            msgs_per_thread: msgs(quick),
+            features: Features::all().without_postlist(),
+            cost,
+            ..Default::default()
         };
-        t.row(vec![ways.to_string(), f2(run(true)), f2(run(false))]);
+        Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
+    });
+    for (i, &ways) in [8u32, 16].iter().enumerate() {
+        t.row(vec![ways.to_string(), f2(rates[2 * i]), f2(rates[2 * i + 1])]);
     }
     vec![t]
 }
@@ -409,7 +493,8 @@ pub fn ablation_msg_size(quick: bool) -> Vec<Table> {
         "Ablation: message size sweep (naive endpoints, 16 threads, Mmsg/s)",
         &["bytes", "inline eligible", "rate"],
     );
-    for size in [2u32, 16, 60, 61, 256, 1024, 4096] {
+    const SIZES: [u32; 7] = [2, 16, 60, 61, 256, 1024, 4096];
+    let rates = par_map(SIZES.to_vec(), |size| {
         let spec = SharingSpec::new(SharedResource::Ctx, 1, 16);
         let (fabric, eps) = spec.build().unwrap();
         let cfg = MsgRateConfig {
@@ -417,8 +502,10 @@ pub fn ablation_msg_size(quick: bool) -> Vec<Table> {
             msg_size: size,
             ..Default::default()
         };
-        let r = Runner::new(&fabric, &eps, cfg).run();
-        t.row(vec![size.to_string(), (size <= 60).to_string(), f2(r.mmsgs_per_sec)]);
+        Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
+    });
+    for (&size, &rate) in SIZES.iter().zip(&rates) {
+        t.row(vec![size.to_string(), (size <= 60).to_string(), f2(rate)]);
     }
     vec![t]
 }
@@ -463,3 +550,22 @@ pub const ALL_FIGURES: [&str; 15] = [
     "ablation-quirk",
     "ablation-msg-size",
 ];
+
+/// Shared entry point for the `fig*` / `table1` / `ablations` bench
+/// binaries: uniform `--quick` flag, table + CSV printing, one wallclock
+/// line on stderr. Each binary is three lines calling this.
+pub fn bench_main(label: &str, names: &[&str]) {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = std::time::Instant::now();
+    for name in names {
+        for table in by_name(name, quick).expect("known figure") {
+            table.print();
+        }
+    }
+    eprintln!(
+        "[{label}] regenerated in {:.2?} ({} workers{})",
+        t0.elapsed(),
+        crate::par::workers(),
+        if quick { ", --quick" } else { "" }
+    );
+}

@@ -26,8 +26,11 @@
 //! * [`endpoints`] — the six scalable-endpoint categories of §VI.
 //! * [`coordinator`] — a mini MPI+threads runtime (ranks, threads, RMA
 //!   windows) with endpoint categories as a first-class feature.
-//! * [`runtime`] — PJRT loader executing the AOT-compiled Pallas/JAX
-//!   artifacts (DGEMM tile, 5-pt stencil) from Rust.
+//! * [`runtime`] — executes the AOT-compiled Pallas/JAX artifacts (DGEMM
+//!   tile, 5-pt stencil) from Rust; the PJRT client is gated out offline
+//!   in favor of a built-in native evaluator (see `runtime` docs).
+//! * [`par`] — std-only scoped-thread worker pool fanning the figure
+//!   suite's independent simulation cells across cores.
 //! * [`apps`] — the global-array DGEMM and 5-pt stencil benchmarks of §VII.
 //! * [`report`] — table/CSV emitters used by the figure benches.
 
@@ -38,6 +41,7 @@ pub mod endpoints;
 pub mod figures;
 pub mod mlx5;
 pub mod nicsim;
+pub mod par;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -124,8 +124,11 @@ impl Nic {
     }
 
     /// NIC-side processing of a batch of `n` WQEs whose doorbell landed at
-    /// `t`. Returns the CPU-visible arrival time of each *signaled* CQE
-    /// (`signal_idx` are 0-based WQE indices within the batch).
+    /// `t`. Writes the CPU-visible arrival time of each *signaled* CQE
+    /// into `completions` (cleared first; `signal_idx` are 0-based WQE
+    /// indices within the batch). The out-parameter keeps the DES hot
+    /// loop allocation-free — callers reuse one buffer across millions of
+    /// post calls. Arrival times are emitted in nondecreasing order.
     ///
     /// * `inline`: payload rides in the WQE — no payload DMA read.
     /// * `blueflame`: the WQE arrived with the doorbell — no WQE DMA read
@@ -151,7 +154,8 @@ impl Nic {
         cacheline: u64,
         msg_bytes: u32,
         signal_idx: &[u32],
-    ) -> Vec<Time> {
+        completions: &mut Vec<Time>,
+    ) {
         debug_assert!(!blueflame || n == 1, "BlueFlame is per-WQE (no Postlist)");
         let c = self.cost;
         let chain = &mut self.qp_engine[qp.index()];
@@ -186,14 +190,13 @@ impl Nic {
 
         // 5. Signaled CQEs: hardware ack from the peer NIC, then CQE DMA
         //    write, at the WQE's position within the burst.
-        let mut completions = Vec::with_capacity(signal_idx.len());
+        completions.clear();
         for &i in signal_idx {
             debug_assert!(i < n);
             self.counters.dma_writes += 1;
             completions
                 .push(w_start + (i as u64 + 1) * per_msg_wire + c.wire_latency + c.cqe_write_latency);
         }
-        completions
     }
 
     /// Earliest time the wire is free (used to detect port saturation in
@@ -249,18 +252,35 @@ mod tests {
         (f, a, b)
     }
 
+    /// Test shorthand: run one batch, return the signaled arrival times.
+    #[allow(clippy::too_many_arguments)]
+    fn batch(
+        nic: &mut Nic,
+        t: Time,
+        qp: QpId,
+        n: u32,
+        inline: bool,
+        blueflame: bool,
+        cacheline: u64,
+        signal_idx: &[u32],
+    ) -> Vec<Time> {
+        let mut comps = Vec::new();
+        nic.process_batch(t, qp, n, inline, blueflame, cacheline, 2, signal_idx, &mut comps);
+        comps
+    }
+
     #[test]
     fn inline_skips_payload_dma() {
         let (f, a, _) = small_fabric();
         let cost = CostModel::calibrated();
         let mut nic = Nic::new(&f, cost, &[a]);
-        nic.process_batch(0, a, 1, true, true, 0, 2, &[0]);
+        batch(&mut nic, 0, a, 1, true, true, 0, &[0]);
         assert_eq!(nic.counters.dma_reads, 0);
         let mut nic2 = Nic::new(&f, cost, &[a]);
-        nic2.process_batch(0, a, 1, false, true, 0, 2, &[0]);
+        batch(&mut nic2, 0, a, 1, false, true, 0, &[0]);
         assert_eq!(nic2.counters.dma_reads, 1); // payload only (BlueFlame)
         let mut nic3 = Nic::new(&f, cost, &[a]);
-        nic3.process_batch(0, a, 1, false, false, 0, 2, &[0]);
+        batch(&mut nic3, 0, a, 1, false, false, 0, &[0]);
         assert_eq!(nic3.counters.dma_reads, 2); // WQE fetch + payload
     }
 
@@ -269,7 +289,7 @@ mod tests {
         let (f, a, _) = small_fabric();
         let mut nic = Nic::new(&f, CostModel::calibrated(), &[a]);
         // 32 WQEs, inline: ceil(32/4) = 8 WQE-fetch reads, no payload.
-        nic.process_batch(0, a, 32, true, false, 0, 2, &[31]);
+        batch(&mut nic, 0, a, 32, true, false, 0, &[31]);
         assert_eq!(nic.counters.dma_reads, 8);
     }
 
@@ -277,10 +297,22 @@ mod tests {
     fn unsignaled_reduces_cqe_writes() {
         let (f, a, _) = small_fabric();
         let mut nic = Nic::new(&f, CostModel::calibrated(), &[a]);
-        let comps = nic.process_batch(0, a, 32, true, false, 0, 2, &[15, 31]);
+        let comps = batch(&mut nic, 0, a, 32, true, false, 0, &[15, 31]);
         assert_eq!(comps.len(), 2);
         assert_eq!(nic.counters.dma_writes, 2);
         assert!(comps[0] < comps[1]);
+    }
+
+    #[test]
+    fn completion_buffer_is_reusable() {
+        // A previous batch's stale contents must not leak into the next.
+        let (f, a, _) = small_fabric();
+        let mut nic = Nic::new(&f, CostModel::calibrated(), &[a]);
+        let mut comps = vec![1, 2, 3];
+        nic.process_batch(0, a, 32, true, false, 0, 2, &[15, 31], &mut comps);
+        assert_eq!(comps.len(), 2);
+        nic.process_batch(comps[1], a, 1, true, true, 0, 2, &[], &mut comps);
+        assert!(comps.is_empty());
     }
 
     #[test]
@@ -288,11 +320,11 @@ mod tests {
         let (f, a, b) = small_fabric();
         let cost = CostModel::calibrated();
         let mut nic = Nic::new(&f, cost, &[a, b]);
-        let c1 = nic.process_batch(0, a, 1, true, true, 0, 2, &[0])[0];
-        let c2 = nic.process_batch(0, a, 1, true, true, 0, 2, &[0])[0];
+        let c1 = batch(&mut nic, 0, a, 1, true, true, 0, &[0])[0];
+        let c2 = batch(&mut nic, 0, a, 1, true, true, 0, &[0])[0];
         let mut nic2 = Nic::new(&f, cost, &[a, b]);
-        let d1 = nic2.process_batch(0, a, 1, true, true, 0, 2, &[0])[0];
-        let d2 = nic2.process_batch(0, b, 1, true, true, 64, 2, &[0])[0];
+        let d1 = batch(&mut nic2, 0, a, 1, true, true, 0, &[0])[0];
+        let d2 = batch(&mut nic2, 0, b, 1, true, true, 64, &[0])[0];
         // Two QPs overlap better than one QP back-to-back, up to the wire.
         assert_eq!(c1, d1);
         assert!(d2 <= c2);

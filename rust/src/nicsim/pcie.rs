@@ -4,7 +4,7 @@
 /// Counts of PCIe transactions initiated during a simulation, plus the
 /// virtual time of the last one — enough to report both totals and rates
 /// like Fig 6(b).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PcieCounters {
     /// MMIO writes from CPU to NIC (DoorBells + BlueFlame).
     pub mmio_writes: u64,

@@ -1,0 +1,111 @@
+//! Scoped-thread worker pool for embarrassingly parallel figure cells.
+//!
+//! Every `run_spec` / `usage_of` cell in [`crate::figures`] builds its own
+//! [`Fabric`](crate::verbs::Fabric) and [`Runner`](crate::bench::Runner):
+//! the simulations share no state, so the full figure suite scales with
+//! cores. std-only (no rayon offline): a `std::thread::scope` pool pulls
+//! job indices from an atomic counter, and results keep job order so table
+//! output is byte-identical to a sequential run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: the `SCEP_WORKERS` env var when set (≥ 1), else the
+/// machine's available parallelism. `SCEP_WORKERS=1` forces sequential
+/// execution (useful for profiling a single DES loop).
+pub fn workers() -> usize {
+    if let Ok(v) = std::env::var("SCEP_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on a scoped worker pool; the result vector
+/// keeps item order. Falls back to sequential execution for empty/tiny
+/// batches or a single worker. A panic inside `f` propagates to the
+/// caller (the scope re-raises it), so `expect`s inside figure builders
+/// behave as they did sequentially.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let nworkers = workers().min(n);
+    if nworkers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let fref = &f;
+    std::thread::scope(|s| {
+        for _ in 0..nworkers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("each job taken once");
+                let r = fref(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker stored a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(items.clone(), |x| x * 3 + 1);
+        assert_eq!(out, items.iter().map(|x| x * 3 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(par_map(vec![7u32], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn actually_uses_many_threads_when_available() {
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        let ids = par_map((0..64).collect::<Vec<u32>>(), |_| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            std::thread::current().id()
+        });
+        let distinct: HashSet<ThreadId> = ids.into_iter().collect();
+        if workers() > 1 {
+            // A silent fall-through to sequential execution (all 64 jobs on
+            // one thread) is a real regression on multi-core hosts.
+            assert!(distinct.len() > 1, "par_map ran sequentially despite {} workers", workers());
+        } else {
+            assert_eq!(distinct.len(), 1, "single worker must run sequentially");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "job panicked")]
+    fn worker_panics_propagate() {
+        par_map(vec![1u32, 2, 3, 4], |x| {
+            if x == 3 {
+                panic!("job panicked");
+            }
+            x
+        });
+    }
+}

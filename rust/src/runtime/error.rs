@@ -1,0 +1,57 @@
+//! Minimal string-carrying error for the runtime/app layers (the offline
+//! build container has no crates.io access, so no `anyhow`).
+
+use std::fmt;
+
+/// An opaque, human-readable error. Converts from the lower layers'
+/// typed errors so `?` composes across the runtime, coordinator and app
+/// code the way `anyhow::Error` did.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<crate::verbs::VerbsError> for Error {
+    fn from(e: crate::verbs::VerbsError) -> Self {
+        Self(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Self(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Self(s.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_conversions() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        let v: Error = crate::verbs::VerbsError::InvalidSharingLevel(3).into();
+        assert!(v.to_string().contains("sharing level 3"));
+    }
+}

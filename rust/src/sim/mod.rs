@@ -17,12 +17,14 @@
 
 pub mod atomic;
 pub mod lock;
+pub mod ring;
 pub mod rng;
 pub mod sched;
 pub mod server;
 pub mod stats;
 
 pub use lock::SimLock;
+pub use ring::ArrivalRing;
 pub use rng::XorShift;
 pub use sched::Scheduler;
 pub use server::{ParallelServer, Server};

@@ -1,14 +1,25 @@
 //! Virtual-time thread scheduler.
 //!
 //! The benchmark's sender threads are coroutine-like state machines. The
-//! scheduler holds a min-heap of `(resume_time, seq, thread)` and always
-//! advances the earliest thread by one *step* (one bounded program phase:
-//! prepare+post a batch, or one poll of the CQ). Steps therefore begin in
-//! nondecreasing virtual-time order, which is what makes the FIFO
+//! scheduler holds a flat indexed min-heap of per-thread resume keys and
+//! always advances the earliest thread by one *step* (one bounded program
+//! phase: prepare+post a batch, or one poll of the CQ). Steps therefore
+//! begin in nondecreasing virtual-time order, which is what makes the FIFO
 //! [`Server`](super::Server) queueing model faithful.
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//!
+//! Unlike the classic `BinaryHeap<Reverse<(Time, seq, tid)>>` event queue,
+//! each thread here owns exactly one slot: a resume is a key *increase* on
+//! the root followed by one sift-down (no pop+push pair, no allocation, no
+//! decrease-key). Ties are broken by a monotone sequence number exactly as
+//! the heap-of-tuples version broke them, so the dispatch order is
+//! bit-identical to the original scheduler.
+//!
+//! The step callback also receives the *horizon*: the earliest resume time
+//! of any other thread. A step that can prove its continuation begins
+//! strictly before the horizon may run that continuation inline (the
+//! scheduler would have re-dispatched it next anyway) — this is the hook
+//! the message-rate engine's fast path uses to coalesce a whole
+//! post-window + poll iteration into O(1) scheduler events.
 
 use super::Time;
 
@@ -21,43 +32,110 @@ pub enum Step {
     Done(Time),
 }
 
-/// Run `threads` to completion. `step(world, tid, now)` advances thread
-/// `tid` one step from `now`. Returns the virtual completion time of each
-/// thread.
+/// Run `threads` to completion. `step(tid, now, horizon)` advances thread
+/// `tid` one step (or, below `horizon`, several coalesced steps) from
+/// `now`. Returns the virtual completion time of each thread.
 pub struct Scheduler {
-    heap: BinaryHeap<Reverse<(Time, u64, u32)>>,
+    /// `(resume_time, seq)` per thread; `seq` is the FIFO tie-breaker.
+    key: Vec<(Time, u64)>,
+    /// Min-heap of thread ids ordered by `key`.
+    heap: Vec<u32>,
+    /// Live prefix length of `heap` (finished threads are swapped out).
+    len: usize,
     seq: u64,
     done: Vec<Option<Time>>,
 }
 
 impl Scheduler {
     pub fn new(nthreads: u32) -> Self {
-        let mut heap = BinaryHeap::with_capacity(nthreads as usize);
-        for tid in 0..nthreads {
-            heap.push(Reverse((0, tid as u64, tid)));
+        let n = nthreads as usize;
+        Self {
+            key: (0..nthreads as u64).map(|i| (0, i)).collect(),
+            heap: (0..nthreads).collect(),
+            len: n,
+            seq: nthreads as u64,
+            done: vec![None; n],
         }
-        Self { heap, seq: nthreads as u64, done: vec![None; nthreads as usize] }
+    }
+
+    #[inline]
+    fn less(&self, a: u32, b: u32) -> bool {
+        self.key[a as usize] < self.key[b as usize]
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            if l >= self.len {
+                break;
+            }
+            let r = l + 1;
+            let mut m = l;
+            if r < self.len && self.less(self.heap[r], self.heap[l]) {
+                m = r;
+            }
+            if self.less(self.heap[m], self.heap[i]) {
+                self.heap.swap(i, m);
+                i = m;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Earliest resume time of any thread other than the root (the
+    /// second-smallest key lives in one of the root's children).
+    #[inline]
+    fn horizon(&self) -> Time {
+        let mut h = Time::MAX;
+        if self.len > 1 {
+            h = self.key[self.heap[1] as usize].0;
+        }
+        if self.len > 2 {
+            h = h.min(self.key[self.heap[2] as usize].0);
+        }
+        h
     }
 
     /// Drive all threads to completion; `step` is invoked as
-    /// `step(tid, now)` and returns the thread's next action.
+    /// `step(tid, now, horizon)` and returns the thread's next action.
     pub fn run<F>(mut self, mut step: F) -> Vec<Time>
     where
-        F: FnMut(u32, Time) -> Step,
+        F: FnMut(u32, Time, Time) -> Step,
     {
-        while let Some(Reverse((now, _, tid))) = self.heap.pop() {
-            match step(tid, now) {
+        while self.len > 0 {
+            let tid = self.heap[0];
+            let now = self.key[tid as usize].0;
+            let horizon = self.horizon();
+            match step(tid, now, horizon) {
                 Step::Resume(t) => {
                     debug_assert!(t >= now, "time must not go backwards");
-                    self.heap.push(Reverse((t, self.seq, tid)));
+                    self.key[tid as usize] = (t, self.seq);
                     self.seq += 1;
+                    self.sift_down(0);
                 }
                 Step::Done(t) => {
                     self.done[tid as usize] = Some(t);
+                    self.len -= 1;
+                    self.heap.swap(0, self.len);
+                    if self.len > 1 {
+                        self.sift_down(0);
+                    }
                 }
             }
         }
-        self.done.into_iter().map(|d| d.expect("thread finished")).collect()
+        self.done
+            .into_iter()
+            .enumerate()
+            .map(|(tid, d)| {
+                d.unwrap_or_else(|| {
+                    panic!(
+                        "scheduler drained but thread {tid} never reported Step::Done — \
+                         its program hung or it was never enqueued"
+                    )
+                })
+            })
+            .collect()
     }
 }
 
@@ -70,7 +148,7 @@ mod tests {
         // Two threads, each does 3 steps of 10ns / 15ns; record order.
         let mut order = Vec::new();
         let mut counts = [0u32; 2];
-        let done = Scheduler::new(2).run(|tid, now| {
+        let done = Scheduler::new(2).run(|tid, now, _horizon| {
             order.push((now, tid));
             counts[tid as usize] += 1;
             let dt = if tid == 0 { 10_000 } else { 15_000 };
@@ -88,13 +166,90 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "thread finished")]
-    fn unfinished_thread_panics() {
-        // A scheduler whose step never returns Done for tid 1 would hang;
-        // so instead verify the accounting: mark tid 0 done, drop tid 1
-        // from the heap by marking it done at once too — then force the
-        // panic path by constructing a scheduler with an empty heap.
-        let sched = Scheduler { heap: BinaryHeap::new(), seq: 0, done: vec![None] };
-        let _ = sched.run(|_, _| Step::Done(0));
+    fn horizon_is_next_other_thread() {
+        let mut seen = Vec::new();
+        Scheduler::new(2).run(|tid, now, horizon| {
+            seen.push((tid, horizon));
+            match tid {
+                0 if now < 20_000 => Step::Resume(now + 5_000),
+                0 => Step::Done(now),
+                _ => Step::Done(now + 100),
+            }
+        });
+        // Both threads start queued at 0: thread 0 dispatches first (FIFO
+        // tie-break) and sees thread 1's key as its horizon.
+        assert_eq!(seen[0], (0, 0));
+        // Thread 0 resumed to 5000, so thread 1 (still at 0) runs next and
+        // sees 5000 as its horizon; it then finishes.
+        assert_eq!(seen[1], (1, 5_000));
+        // Thread 0 runs alone from then on: horizon is Time::MAX.
+        assert!(seen[2..].iter().all(|&(tid, h)| tid == 0 && h == Time::MAX));
+        // Thread 0 steps at 0, 5000, 10000, 15000, 20000; thread 1 once.
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn indexed_heap_matches_reference_binaryheap_order() {
+        // The satellite ordering test: dispatch order must be bit-identical
+        // to the seed's `BinaryHeap<Reverse<(Time, seq, tid)>>` scheduler,
+        // including FIFO tie-breaks (durations below collide on purpose).
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let nthreads = 7u32;
+        let steps_per_thread = 60u32;
+        let dur = |tid: u32, k: u32| -> Time {
+            let x = (tid as u64).wrapping_mul(1_000_003).wrapping_add(k as u64 * 7919);
+            (x % 5) * 16 // 0, 16, 32, 48, 64 — plenty of exact ties
+        };
+
+        // Reference implementation (the seed scheduler).
+        let mut heap = BinaryHeap::new();
+        for tid in 0..nthreads {
+            heap.push(Reverse((0u64, tid as u64, tid)));
+        }
+        let mut seq = nthreads as u64;
+        let mut count = vec![0u32; nthreads as usize];
+        let mut ref_order = Vec::new();
+        while let Some(Reverse((now, _, tid))) = heap.pop() {
+            ref_order.push((now, tid));
+            let k = count[tid as usize];
+            count[tid as usize] += 1;
+            if k + 1 < steps_per_thread {
+                heap.push(Reverse((now + dur(tid, k), seq, tid)));
+                seq += 1;
+            }
+        }
+
+        // Indexed heap under test.
+        let mut got_order = Vec::new();
+        let mut count2 = vec![0u32; nthreads as usize];
+        let done = Scheduler::new(nthreads).run(|tid, now, _| {
+            got_order.push((now, tid));
+            let k = count2[tid as usize];
+            count2[tid as usize] += 1;
+            if k + 1 < steps_per_thread {
+                Step::Resume(now + dur(tid, k))
+            } else {
+                Step::Done(now)
+            }
+        });
+        assert_eq!(got_order, ref_order);
+        assert_eq!(done.len(), nthreads as usize);
+    }
+
+    #[test]
+    #[should_panic(expected = "thread 0 never reported Step::Done")]
+    fn unfinished_thread_panics_with_thread_id() {
+        // A scheduler whose heap drained without thread 0 completing must
+        // name the hung thread in its panic message.
+        let sched = Scheduler {
+            key: vec![(0, 0)],
+            heap: vec![0],
+            len: 0,
+            seq: 1,
+            done: vec![None],
+        };
+        let _ = sched.run(|_, _, _| Step::Done(0));
     }
 }

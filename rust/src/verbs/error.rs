@@ -1,49 +1,83 @@
 //! Error type for verbs object creation/use.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build container has
+//! no crates.io access, so no `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 use super::types::{CqId, CtxId, PdId, QpId, TdId};
 
-#[derive(Debug, Error, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum VerbsError {
-    #[error("device out of UAR pages (allocated {allocated}, limit {limit})")]
     DeviceOutOfUars { allocated: u32, limit: u32 },
-
-    #[error("context {0} reached the per-CTX dynamic UAR limit ({1})")]
     CtxOutOfDynamicUars(CtxId, u32),
-
-    #[error("invalid sharing level {0} (mlx5 supports 1 or 2)")]
     InvalidSharingLevel(u32),
-
-    #[error("{0} and {1} belong to different contexts")]
     CrossContext(String, String),
-
-    #[error("unknown context {0}")]
     UnknownCtx(CtxId),
-
-    #[error("unknown protection domain {0}")]
     UnknownPd(PdId),
-
-    #[error("unknown completion queue {0}")]
     UnknownCq(CqId),
-
-    #[error("unknown queue pair {0}")]
     UnknownQp(QpId),
-
-    #[error("unknown thread domain {0}")]
     UnknownTd(TdId),
-
-    #[error("queue pair {0} is in state {1}, expected {2}")]
     BadQpState(QpId, String, String),
-
-    #[error("send queue of {0} is full (depth {1})")]
     SendQueueFull(QpId, u32),
-
-    #[error("inline payload of {size} B exceeds max_inline {max} B")]
     InlineTooLarge { size: u32, max: u32 },
-
-    #[error("{0} still has live children ({1})")]
     Busy(String, String),
 }
 
+impl fmt::Display for VerbsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerbsError::DeviceOutOfUars { allocated, limit } => {
+                write!(f, "device out of UAR pages (allocated {allocated}, limit {limit})")
+            }
+            VerbsError::CtxOutOfDynamicUars(ctx, limit) => {
+                write!(f, "context {ctx} reached the per-CTX dynamic UAR limit ({limit})")
+            }
+            VerbsError::InvalidSharingLevel(level) => {
+                write!(f, "invalid sharing level {level} (mlx5 supports 1 or 2)")
+            }
+            VerbsError::CrossContext(a, b) => {
+                write!(f, "{a} and {b} belong to different contexts")
+            }
+            VerbsError::UnknownCtx(id) => write!(f, "unknown context {id}"),
+            VerbsError::UnknownPd(id) => write!(f, "unknown protection domain {id}"),
+            VerbsError::UnknownCq(id) => write!(f, "unknown completion queue {id}"),
+            VerbsError::UnknownQp(id) => write!(f, "unknown queue pair {id}"),
+            VerbsError::UnknownTd(id) => write!(f, "unknown thread domain {id}"),
+            VerbsError::BadQpState(qp, got, want) => {
+                write!(f, "queue pair {qp} is in state {got}, expected {want}")
+            }
+            VerbsError::SendQueueFull(qp, depth) => {
+                write!(f, "send queue of {qp} is full (depth {depth})")
+            }
+            VerbsError::InlineTooLarge { size, max } => {
+                write!(f, "inline payload of {size} B exceeds max_inline {max} B")
+            }
+            VerbsError::Busy(what, children) => {
+                write!(f, "{what} still has live children ({children})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerbsError {}
+
 pub type Result<T> = std::result::Result<T, VerbsError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_descriptive() {
+        assert_eq!(
+            VerbsError::DeviceOutOfUars { allocated: 512, limit: 512 }.to_string(),
+            "device out of UAR pages (allocated 512, limit 512)"
+        );
+        assert_eq!(VerbsError::UnknownQp(QpId(3)).to_string(), "unknown queue pair QpId#3");
+        assert_eq!(
+            VerbsError::InlineTooLarge { size: 61, max: 60 }.to_string(),
+            "inline payload of 61 B exceeds max_inline 60 B"
+        );
+    }
+}

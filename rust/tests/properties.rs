@@ -160,6 +160,102 @@ fn prop_msgrate_determinism_and_completeness() {
 }
 
 #[test]
+fn prop_fast_path_matches_general_path() {
+    // The DES fast path (single-sharer coalescing, ring-buffer CQs,
+    // indexed-heap scheduling) must produce *identical* virtual-time
+    // results to the stepped general path across randomized sharing
+    // topologies — bit-for-bit, not approximately.
+    let resources = [
+        SharedResource::Buf,
+        SharedResource::Ctx,
+        SharedResource::CtxTwoXQps,
+        SharedResource::CtxSharing2,
+        SharedResource::Pd,
+        SharedResource::Mr,
+        SharedResource::Cq,
+        SharedResource::Qp,
+    ];
+    check("fast-vs-general", 0xFA57, 32, |rng, _| {
+        let res = *rng.choose(&resources);
+        let nthreads = [1u32, 2, 4, 8, 16][rng.below(5) as usize];
+        let ways_opts: Vec<u32> =
+            [1u32, 2, 4, 8, 16].iter().copied().filter(|w| nthreads % w == 0).collect();
+        let ways = *rng.choose(&ways_opts);
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let spec = SharingSpec::new(res, ways, nthreads);
+        let (fabric, eps) = spec.build().map_err(|e| e.to_string())?;
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 256 + rng.below(1024),
+            features,
+            ..Default::default()
+        };
+        let fast = Runner::new(&fabric, &eps, cfg).run();
+        let general =
+            Runner::new(&fabric, &eps, MsgRateConfig { force_general_path: true, ..cfg }).run();
+        if fast.duration != general.duration {
+            return Err(format!(
+                "duration diverged: fast {} vs general {} ({res:?} {ways}-way x{nthreads}, {features:?})",
+                fast.duration, general.duration
+            ));
+        }
+        if fast.thread_done != general.thread_done {
+            return Err(format!("per-thread completion times diverged ({res:?} {ways}-way)"));
+        }
+        if fast.mmsgs_per_sec != general.mmsgs_per_sec {
+            return Err(format!(
+                "rate diverged: {} vs {}",
+                fast.mmsgs_per_sec, general.mmsgs_per_sec
+            ));
+        }
+        if fast.pcie != general.pcie {
+            return Err(format!("PCIe counters diverged: {:?} vs {:?}", fast.pcie, general.pcie));
+        }
+        if fast.p50_latency_ns != general.p50_latency_ns
+            || fast.p99_latency_ns != general.p99_latency_ns
+        {
+            return Err("latency percentiles diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fast_path_matches_general_path_multi_endpoint() {
+    // Stencil-shaped threads (two QPs round-robin into one CQ) exercise
+    // the multi-endpoint fast path; rank-grouped runs must fall back to
+    // the general path and still agree trivially.
+    use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
+    use scalable_ep::apps::StencilBench;
+    use scalable_ep::coordinator::JobSpec;
+
+    for cat in [Category::MpiEverywhere, Category::Dynamic, Category::MpiThreads] {
+        let s = StencilBench::new(JobSpec::new(2, 4), cat, DEFAULT_HALO_BYTES).unwrap();
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 512,
+            msg_size: DEFAULT_HALO_BYTES,
+            features: Features::conservative(),
+            force_shared_qp_path: cat == Category::MpiThreads,
+            ..Default::default()
+        };
+        let fast = Runner::new_multi(&s.fabric, &s.threads, cfg).run();
+        let general = Runner::new_multi(
+            &s.fabric,
+            &s.threads,
+            MsgRateConfig { force_general_path: true, ..cfg },
+        )
+        .run();
+        assert_eq!(fast.duration, general.duration, "{cat}");
+        assert_eq!(fast.thread_done, general.thread_done, "{cat}");
+        assert_eq!(fast.pcie, general.pcie, "{cat}");
+    }
+}
+
+#[test]
 fn prop_more_sharing_never_increases_uuars() {
     // Hardware resource usage is monotone nonincreasing in sharing degree.
     for res in [SharedResource::Ctx, SharedResource::Cq, SharedResource::Qp] {
