@@ -13,6 +13,14 @@
 //! across PRs. The virtual-time rate is also recorded: it must stay
 //! constant across engine optimizations (the DES result is bit-stable),
 //! so a drift there flags a semantic change rather than a perf one.
+//!
+//! Each scenario also records its scheduler-event accounting:
+//! `sched_events` (heap dispatches actually performed), `sched_steps`
+//! (bounded program phases executed — exactly what the general path
+//! dispatches, since it runs one event per phase) and their difference
+//! `coalesced_steps`. Single-sharer scenarios must show
+//! `sched_events < sched_steps`; shared-QP/CQ scenarios run
+//! one-event-per-step and show zero coalescing.
 
 use std::time::Instant;
 
@@ -24,6 +32,13 @@ struct Row {
     wallclock_s: f64,
     sim_msgs_per_wallclock_s: f64,
     virtual_mmsgs_per_sec: f64,
+    /// Scheduler events actually dispatched (heap pops).
+    sched_events: u64,
+    /// Bounded program phases executed. The general path dispatches one
+    /// event per phase, so `sched_steps - sched_events` is the number of
+    /// coalesced (dispatch-free) steps — the EXPERIMENTS.md §Perf
+    /// before/after column.
+    sched_steps: u64,
 }
 
 fn measure(
@@ -42,10 +57,12 @@ fn measure(
     let wallclock_s = dt.as_secs_f64();
     let rate = r.messages as f64 / wallclock_s;
     println!(
-        "{label:>28}: {:>7.1} M simulated msgs/s wallclock ({} msgs in {:.2?})",
+        "{label:>28}: {:>7.1} M simulated msgs/s wallclock ({} msgs in {:.2?}, {} of {} steps dispatched)",
         rate / 1e6,
         r.messages,
-        dt
+        dt,
+        r.sched_events,
+        r.sched_steps,
     );
     Row {
         label,
@@ -53,6 +70,8 @@ fn measure(
         wallclock_s,
         sim_msgs_per_wallclock_s: rate,
         virtual_mmsgs_per_sec: r.mmsgs_per_sec,
+        sched_events: r.sched_events,
+        sched_steps: r.sched_steps,
     }
 }
 
@@ -63,6 +82,7 @@ fn main() {
     let rows = vec![
         measure("independent, All", SharedResource::Ctx, 1, 16, Features::all(), msgs),
         measure("independent, conservative", SharedResource::Ctx, 1, 16, Features::conservative(), msgs / 4),
+        measure("independent x32, All", SharedResource::Ctx, 1, 32, Features::all(), msgs / 2),
         measure("single thread, All", SharedResource::Ctx, 1, 1, Features::all(), 4 * msgs),
         measure("16-way shared QP, All", SharedResource::Qp, 16, 16, Features::all(), msgs / 4),
         measure("16-way shared CQ, w/o unsig", SharedResource::Cq, 16, 16, Features::all().without_unsignaled(), msgs / 8),
@@ -79,8 +99,16 @@ fn main() {
         let sep = if i + 1 < rows.len() { "," } else { "" };
         json.push_str(&format!(
             "    {{\"label\": \"{}\", \"messages\": {}, \"wallclock_s\": {:.6}, \
-             \"sim_msgs_per_wallclock_s\": {:.1}, \"virtual_mmsgs_per_sec\": {:.4}}}{sep}\n",
-            r.label, r.messages, r.wallclock_s, r.sim_msgs_per_wallclock_s, r.virtual_mmsgs_per_sec
+             \"sim_msgs_per_wallclock_s\": {:.1}, \"virtual_mmsgs_per_sec\": {:.4}, \
+             \"sched_events\": {}, \"sched_steps\": {}, \"coalesced_steps\": {}}}{sep}\n",
+            r.label,
+            r.messages,
+            r.wallclock_s,
+            r.sim_msgs_per_wallclock_s,
+            r.virtual_mmsgs_per_sec,
+            r.sched_events,
+            r.sched_steps,
+            r.sched_steps - r.sched_events,
         ));
     }
     json.push_str("  ]\n}\n");

@@ -26,7 +26,7 @@
 //! one QP per neighbor, completing into one CQ); post calls round-robin
 //! over them.
 //!
-//! # The fast path
+//! # The fast path and its three exactness invariants
 //!
 //! The scheduler dispatch loop is the DES engine's overhead budget: every
 //! post call and every poll is one heap event. For a thread whose QP and
@@ -41,9 +41,41 @@
 //! resume events reach the scheduler (unchanged: all skipped events would
 //! have been consecutive). A single-threaded run coalesces into O(1)
 //! scheduler events total. Threads that share anything keep the original
-//! one-event-per-step path, untouched. `prop_fast_path_matches_general_path`
-//! (tests/properties.rs) pins the equivalence across randomized sharing
-//! topologies.
+//! one-event-per-step path, untouched.
+//!
+//! Three invariants make the fast path exact, each pinned by a test:
+//!
+//! 1. **Affine batch** — a postlist's n per-WQE server updates fuse into
+//!    one closed-form `Server::request_batch` (same timing, same
+//!    accounting). Pinned by `sim::server`'s
+//!    `request_batch_matches_sequential_*` unit tests.
+//! 2. **Idle-stage skip** — single-sharer QPs take the NIC's
+//!    straight-line stage arithmetic ([`Nic::set_qp_fast`], resolved
+//!    here in `install_nic_fast` with the page-exclusivity proof).
+//!    Pinned by `nicsim::nic`'s `qp_fast_path_is_bit_identical`.
+//! 3. **Per-CQ interaction horizon** — once a thread has posted its last
+//!    window, its remaining program drains its single-sharer CQ: polls
+//!    that touch only thread-private state (its arrival ring, its
+//!    credits, its own CQ lock) and then `Done`, which enqueues nothing.
+//!    That tail commutes with any other thread's step — in state *and*
+//!    in scheduler enqueue order — so it coalesces even at or past the
+//!    horizon ([`crate::sim::sched::may_coalesce`]). This is what lets
+//!    symmetric lock-step threads — which tie at equal timestamps and
+//!    would otherwise fall off the fast path on every terminal step —
+//!    batch their whole drain into the final post's event. Mid-run
+//!    polls do NOT qualify even though their state is private: the
+//!    thread will post again, resume keys are FIFO tie-broken by
+//!    enqueue order, and coalescing past the horizon would move our
+//!    next post's enqueue ahead of steps the general path dispatches
+//!    first — flipping the call order on shared servers if those later
+//!    keys tie (see [`crate::sim::sched::Interaction`]). *Post* steps
+//!    and everything preceding one keep the strict-horizon guard.
+//!    Pinned by `sim::sched`'s tie tests and
+//!    `prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce`.
+//!
+//! `prop_fast_path_matches_general_path` and its fuzzed variant
+//! (tests/properties.rs) pin end-to-end bit-exactness across randomized
+//! sharing topologies, QP depths, postlist sizes and >16-thread configs.
 
 use std::collections::HashMap;
 
@@ -51,7 +83,7 @@ use crate::endpoints::ThreadEndpoint;
 use crate::nicsim::{CostModel, Nic};
 use crate::sim::atomic::SimAtomic;
 use crate::sim::ring::ArrivalRing;
-use crate::sim::sched::{Scheduler, Step};
+use crate::sim::sched::{may_coalesce, Interaction, Scheduler, Step};
 use crate::sim::{to_secs, SimLock, Time};
 use crate::verbs::{CqId, Fabric, QpId};
 
@@ -115,6 +147,17 @@ pub struct MsgRateResult {
     pub p50_latency_ns: f64,
     /// 99th-percentile signaled-completion latency, nanoseconds.
     pub p99_latency_ns: f64,
+    /// Scheduler events dispatched (heap pops). The general path
+    /// dispatches exactly one event per step, so on a fast-path run the
+    /// gap to [`MsgRateResult::sched_steps`] is the number of coalesced
+    /// steps. Engine diagnostics only: NOT a virtual-time observable
+    /// (the differential suite asserts it never *exceeds* the general
+    /// path's, not equality).
+    pub sched_events: u64,
+    /// Bounded program phases executed (post calls + polls). Identical
+    /// between fast and general runs — trajectories are bit-equal — so
+    /// this doubles as "what the general path would have dispatched".
+    pub sched_steps: u64,
 }
 
 /// Per-thread effective parameters after QP-window clamping. Everything
@@ -212,6 +255,10 @@ pub struct Runner {
     /// off the hot path).
     latencies: crate::sim::stats::Sample,
     lat_decim: u32,
+    /// Scheduler events dispatched / program phases executed (see
+    /// [`MsgRateResult::sched_events`]).
+    sched_events: u64,
+    sched_steps: u64,
 }
 
 impl Runner {
@@ -365,6 +412,8 @@ impl Runner {
             rank_atomic: Vec::new(),
             latencies: crate::sim::stats::Sample::new(),
             lat_decim: 0,
+            sched_events: 0,
+            sched_steps: 0,
         }
     }
 
@@ -381,6 +430,21 @@ impl Runner {
         self.thread_rank = Some(ranks.to_vec());
     }
 
+    /// Whether any run-wide switch forces every thread onto the general
+    /// one-event-per-step path (and every QP onto the general NIC path).
+    fn forces_general(&self) -> bool {
+        self.cfg.force_general_path
+            || self.cfg.force_shared_qp_path
+            || self.thread_rank.is_some()
+    }
+
+    /// The shared per-endpoint exclusivity predicate behind both fast
+    /// paths: exactly one thread posts to this QP, it takes no shared-QP
+    /// branches, and no uUAR lock serializes its doorbells.
+    fn exclusive_ep(&self, e: &EpState) -> bool {
+        self.qp_sharers[e.qp.index()] == 1 && !e.shared_qp && e.uuar_lock.is_none()
+    }
+
     /// A thread may take the coalescing fast path only when nothing it
     /// touches is shared with another thread: its QP(s) and CQ have
     /// exactly one sharer, no uUAR lock serializes its doorbells, and no
@@ -389,28 +453,52 @@ impl Runner {
     /// contended path bit-for-bit on the original one-event-per-step
     /// code.)
     fn compute_fast_ok(&self) -> Vec<bool> {
-        if self.cfg.force_general_path
-            || self.cfg.force_shared_qp_path
-            || self.thread_rank.is_some()
-        {
+        if self.forces_general() {
             return vec![false; self.threads.len()];
         }
         self.threads
             .iter()
             .map(|t| {
                 self.cq_sharers[t.cq.index()] == 1
-                    && t.eps.iter().all(|e| {
-                        self.qp_sharers[e.qp.index()] == 1
-                            && !e.shared_qp
-                            && e.uuar_lock.is_none()
-                    })
+                    && t.eps.iter().all(|e| self.exclusive_ep(e))
             })
             .collect()
+    }
+
+    /// Resolve which QPs may take the NIC-side straight-line fast path
+    /// (exactness invariant #2, see [`crate::nicsim`] nic module docs):
+    /// exactly one thread posts to the QP, it takes no shared-QP
+    /// branches, no uUAR lock serializes its doorbells, and no other
+    /// active QP maps to its UAR page — the page's register port and
+    /// write-combining tracker are then provably private to the one
+    /// posting thread, whose rings serialize CPU-side.
+    fn install_nic_fast(&mut self) {
+        if self.forces_general() {
+            return; // every QP stays on the general path
+        }
+        let mut page_users: HashMap<u32, u32> = HashMap::new();
+        for t in &self.threads {
+            for e in &t.eps {
+                *page_users.entry(self.nic.page_of(e.qp)).or_insert(0) += 1;
+            }
+        }
+        let mut decisions: Vec<(QpId, bool)> = Vec::new();
+        for t in &self.threads {
+            for e in &t.eps {
+                let fast =
+                    self.exclusive_ep(e) && page_users[&self.nic.page_of(e.qp)] == 1;
+                decisions.push((e.qp, fast));
+            }
+        }
+        for (qp, fast) in decisions {
+            self.nic.set_qp_fast(qp, fast);
+        }
     }
 
     /// Run to completion and report.
     pub fn run(mut self) -> MsgRateResult {
         self.fast_ok = self.compute_fast_ok();
+        self.install_nic_fast();
         let n = self.threads.len() as u32;
         let done = Scheduler::new(n).run(|tid, now, horizon| self.step(tid, now, horizon));
         let duration = *done.iter().max().unwrap_or(&0);
@@ -425,23 +513,47 @@ impl Runner {
             pcie_read_rate: self.nic.counters.read_rate(duration.max(1)),
             p50_latency_ns: self.latencies.percentile(50.0),
             p99_latency_ns: self.latencies.percentile(99.0),
+            sched_events: self.sched_events,
+            sched_steps: self.sched_steps,
         }
     }
 
     /// One scheduler event. Contended threads run exactly one bounded
-    /// phase; fast-path threads coalesce consecutive phases while the
-    /// continuation begins strictly before `horizon` (see module docs for
-    /// why that is exact).
+    /// phase; fast-path threads coalesce consecutive phases under the
+    /// per-phase interaction bound (module docs, invariant #3): any step
+    /// below the horizon coalesces (the scheduler would have
+    /// re-dispatched us next anyway), and a thread *draining* its final
+    /// window — all WQEs posted, only private polls of its single-sharer
+    /// CQ and `Done` remain — coalesces even at or past the horizon,
+    /// including the equal-timestamp ties symmetric lock-step threads
+    /// produce on every step. Mid-run polls must NOT cross the horizon:
+    /// the thread will post again, and moving that post's enqueue ahead
+    /// of other threads' dispatches could flip a later equal-time FIFO
+    /// tie-break on shared servers (see [`Interaction`]).
     fn step(&mut self, tid: u32, now: Time, horizon: Time) -> Step {
         let ti = tid as usize;
+        self.sched_events += 1;
         if !self.fast_ok[ti] {
+            self.sched_steps += 1;
             return self.step_once(ti, now);
         }
         let mut now = now;
         loop {
+            self.sched_steps += 1;
             match self.step_once(ti, now) {
-                Step::Resume(t) if t < horizon => now = t,
-                other => return other,
+                Step::Resume(t) => {
+                    let th = &self.threads[ti];
+                    let draining =
+                        matches!(th.phase, Phase::Poll) && th.posted >= th.msgs_total;
+                    let interaction =
+                        if draining { Interaction::Private } else { Interaction::Shared };
+                    if may_coalesce(t, horizon, interaction) {
+                        now = t;
+                    } else {
+                        return Step::Resume(t);
+                    }
+                }
+                done => return done,
             }
         }
     }
@@ -717,6 +829,58 @@ mod tests {
                 assert_eq!(fast.mmsgs_per_sec, general.mmsgs_per_sec, "{cat} x{n}");
             }
         }
+    }
+
+    #[test]
+    fn single_thread_coalesces_to_one_event() {
+        // A lone thread has horizon Time::MAX: its whole program is one
+        // scheduler event regardless of phase mix.
+        for features in [Features::all(), Features::conservative()] {
+            let r = run_category(Category::MpiEverywhere, 1, features);
+            assert_eq!(r.sched_events, 1, "events {}", r.sched_events);
+            assert!(r.sched_steps > 1);
+        }
+    }
+
+    #[test]
+    fn per_cq_horizon_coalesces_symmetric_lockstep_threads() {
+        // 16 identical independent threads tie at equal timestamps every
+        // step; only the per-CQ interaction bound lets each thread's
+        // terminal drain (final window posted, private polls + Done
+        // remaining) coalesce into its last post's event. The trajectory
+        // must stay bit-identical to the stepped path, which dispatches
+        // one event per step.
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(Category::MpiEverywhere, 16).build(&mut f).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 4096, ..Default::default() };
+        let fast = Runner::new(&f, &set.threads, cfg).run();
+        let general = Runner::new(
+            &f,
+            &set.threads,
+            MsgRateConfig { force_general_path: true, ..cfg },
+        )
+        .run();
+        assert_eq!(fast.duration, general.duration);
+        assert_eq!(fast.thread_done, general.thread_done);
+        assert_eq!(fast.pcie, general.pcie);
+        // Identical trajectories execute identical phase counts...
+        assert_eq!(fast.sched_steps, general.sched_steps);
+        // ...the general path dispatches one event per phase...
+        assert_eq!(general.sched_events, general.sched_steps);
+        // ...and the fast path dispatches measurably fewer.
+        assert!(
+            fast.sched_events < general.sched_events,
+            "no coalescing under symmetric ties: {} vs {}",
+            fast.sched_events,
+            general.sched_events
+        );
+    }
+
+    #[test]
+    fn contended_threads_never_coalesce() {
+        // Shared-QP threads stay on the one-event-per-step path.
+        let r = run_category(Category::MpiThreads, 8, Features::all());
+        assert_eq!(r.sched_events, r.sched_steps);
     }
 
     #[test]

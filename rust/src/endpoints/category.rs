@@ -62,6 +62,20 @@ impl Category {
         })
     }
 
+    /// Whether threads share a QP (and its CQ) in this category — the
+    /// Fig 4(b) level-4 configuration. Threads of such a category are
+    /// excluded from every DES engine fast path (coalescing, NIC
+    /// straight-line stages) and must run one-event-per-step; the
+    /// differential suite uses this to assert the fast paths stay off
+    /// exactly where the exactness proofs stop holding. Note the
+    /// converse is weaker: categories that share only UAR pages or
+    /// uUARs (SharedDynamic, Static) keep private QPs/CQs but may still
+    /// be kept off parts of the fast path by uUAR locks or page
+    /// sharing.
+    pub fn shares_qp(self) -> bool {
+        self == Category::MpiThreads
+    }
+
     /// Thread-to-uUAR mapping level in Fig 4(b) (1 = maximally
     /// independent … 4 = shared QP). `Static` is a mix of 2 and 3; we
     /// report its dominant level for <= 16 threads.
@@ -96,5 +110,12 @@ mod tests {
     #[test]
     fn ordering_matches_independence() {
         assert!(Category::MpiEverywhere < Category::MpiThreads);
+    }
+
+    #[test]
+    fn only_mpi_threads_shares_qps() {
+        for c in Category::ALL {
+            assert_eq!(c.shares_qp(), c == Category::MpiThreads, "{c}");
+        }
     }
 }

@@ -532,6 +532,24 @@ pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
     })
 }
 
+/// Canonical byte rendering of a figure's tables — aligned table then
+/// CSV block per table, exactly what [`Table::print`] writes minus the
+/// trailing blank line. The golden-snapshot tests
+/// (tests/figures_shape.rs) pin these bytes for fig2/fig9/fig11 under
+/// `--quick`, so any engine change that perturbs results fails loudly;
+/// determinism across worker counts is what makes byte-level pinning
+/// possible at all.
+pub fn render_bytes(name: &str, quick: bool) -> Option<String> {
+    by_name(name, quick).map(|tables| {
+        let mut out = String::new();
+        for t in &tables {
+            out.push_str(&t.render());
+            out.push_str(&t.render_csv());
+        }
+        out
+    })
+}
+
 /// Every figure id, in paper order, plus the design-choice ablations.
 pub const ALL_FIGURES: [&str; 15] = [
     "table1",

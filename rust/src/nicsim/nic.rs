@@ -1,5 +1,44 @@
 //! The simulated NIC: doorbell ingress, WQE/payload fetch, per-QP
 //! processing, wire transmission, CQE write-back.
+//!
+//! # The three exactness invariants of the DES fast path
+//!
+//! The hot loop ships three fast paths, each with a proof obligation and
+//! a test that pins it. All three are *bit-exact*: every virtual-time
+//! observable (durations, per-thread done-times, rates, PCIe counters,
+//! latency percentiles) is identical with the fast paths on or off.
+//!
+//! 1. **Affine batch.** A Postlist burst's `n` per-WQE updates on a FIFO
+//!    [`Server`] are affine in the WQE index, so they fuse into one
+//!    closed-form update ([`Server::request_batch`]): same start, same
+//!    end, same busy/served/queueing accounting as `n` sequential
+//!    `request` calls. Used for the per-WQE engine stage, the TLB rail
+//!    slots and the per-message wire slots below. Pinned by
+//!    `sim::server` unit tests (`request_batch_matches_sequential_*`)
+//!    and end-to-end by the differential suite in `tests/properties.rs`.
+//!
+//! 2. **Idle-stage skip.** For a QP marked fast ([`Nic::set_qp_fast`]:
+//!    exactly one posting thread and no other active QP on its UAR
+//!    page), two pipeline stages are *provably idle* at their arrival
+//!    times, so their queue-max is straight-line arithmetic
+//!    ([`Server::request_idle`] / [`Server::request_batch_idle`]):
+//!    the UAR register port (the CPU blocks on each ring, so the next
+//!    ring arrives at or after the previous accept time — the port's
+//!    `avail`), and the post-fetch engine stage (the WQE DMA round-trip
+//!    returns at or after the doorbell decode that is the engine's
+//!    `avail`). Pinned by `qp_fast_path_is_bit_identical` below and the
+//!    differential suite.
+//!
+//! 3. **Per-CQ interaction horizon.** Not in this module but relied on
+//!    by it: the benchmark engine may coalesce a continuation past the
+//!    scheduler horizon only for a thread draining its final window —
+//!    private CQ polls then `Done`, which neither touches a shared
+//!    server nor enqueues another contending resume
+//!    ([`crate::sim::sched::may_coalesce`]). Everything the NIC owns
+//!    here (wire, DMA, TLB) is shared, so post steps stay strictly
+//!    horizon-ordered and the request order every `Server` sees is the
+//!    general path's. Pinned by `sim::sched` tie tests and
+//!    `prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce`.
 
 use std::collections::HashMap;
 
@@ -41,6 +80,11 @@ pub struct Nic {
     qp_quirk: Vec<bool>,
     /// Device-global UAR page of each QP's uUAR.
     qp_page: Vec<u32>,
+    /// QPs eligible for the straight-line fast path (exactness invariant
+    /// #2, module docs): exactly one thread posts to the QP and no other
+    /// active QP maps to its UAR page. Resolved by the benchmark runner;
+    /// defaults to the general path everywhere.
+    qp_fast: Vec<bool>,
     pub counters: PcieCounters,
 }
 
@@ -93,8 +137,25 @@ impl Nic {
             wire: Server::new(),
             qp_quirk,
             qp_page,
+            qp_fast: vec![false; nqps],
             counters: PcieCounters::default(),
         }
+    }
+
+    /// Mark `qp` eligible (or not) for the straight-line pipeline fast
+    /// path. The caller owns the proof: exactly one thread posts to the
+    /// QP, its posts serialize CPU-side (each blocks until the previous
+    /// doorbell is accepted), and no other active QP maps to the QP's
+    /// UAR page. Violations are caught by debug asserts on the idle-path
+    /// requests and by the differential test suite.
+    pub fn set_qp_fast(&mut self, qp: QpId, fast: bool) {
+        self.qp_fast[qp.index()] = fast;
+    }
+
+    /// Device-global UAR page of a QP's uUAR (used by the runner to
+    /// resolve page-exclusivity for [`Nic::set_qp_fast`]).
+    pub fn page_of(&self, qp: QpId) -> u32 {
+        self.qp_page[qp.index()]
     }
 
     /// CPU-blocking part of ringing a doorbell at `now` from core
@@ -104,6 +165,25 @@ impl Nic {
     pub fn cpu_ring(&mut self, now: Time, qp: QpId, blueflame: bool, writer: u32) -> Time {
         let page = self.qp_page[qp.index()];
         let quirk = self.qp_quirk[qp.index()];
+        if self.qp_fast[qp.index()] {
+            // Straight-line path (invariant #2): the single posting
+            // thread blocks on every ring, so this ring arrives at or
+            // after the port's previous accept time — the port is
+            // provably idle — and a WC flush conflict (another core's
+            // interleaved BlueFlame write on this page) is impossible.
+            let occ = if blueflame {
+                let prev = std::mem::replace(&mut self.uar_last_writer[page as usize], writer);
+                debug_assert!(
+                    prev == u32::MAX || prev == writer,
+                    "fast QP's UAR page was BlueFlame-written by another core"
+                );
+                quirks::apply_penalty(&self.cost, self.cost.uar_port_blueflame, quirk)
+            } else {
+                self.cost.uar_port_doorbell
+            };
+            self.counters.mmio_writes += 1;
+            return self.uar_port[page as usize].request_idle(now, occ);
+        }
         let occ = if blueflame {
             // WC flush conflict: an interleaved BlueFlame writer from
             // another core on the same page forces that core's WC buffer
@@ -158,7 +238,8 @@ impl Nic {
     ) {
         debug_assert!(!blueflame || n == 1, "BlueFlame is per-WQE (no Postlist)");
         let c = self.cost;
-        let chain = &mut self.qp_engine[qp.index()];
+        let qi = qp.index();
+        let fast = self.qp_fast[qi];
 
         // 1. WQE availability at the NIC.
         let wqes_at = if blueflame {
@@ -167,13 +248,21 @@ impl Nic {
             // DoorBell decode + DMA read of the n-WQE linked list. 64 B
             // WQEs, 256 B read completions -> ceil(n/4) PCIe reads.
             self.counters.dma_reads += n.div_ceil(4) as u64;
-            let fetch_start = chain.request(t, c.engine_doorbell).1;
+            let fetch_start = self.qp_engine[qi].request(t, c.engine_doorbell).1;
             self.dma.request_latency(fetch_start, n as u64 * c.pcie_tlp, c.dma_read_latency)
         };
 
         // 2. In-order processing on the QP's chain (a shared QP's messages
-        //    serialize here — §V-F).
-        let (_, eng_end) = self.qp_engine[qp.index()].request(wqes_at, n as u64 * c.engine_per_wqe);
+        //    serialize here — §V-F). The n per-WQE slots fuse into one
+        //    affine update (invariant #1); after a WQE fetch the chain is
+        //    provably idle — the DMA round-trip returns at or after the
+        //    doorbell decode that set the chain's `avail` — so the fast
+        //    path also skips the queue max (invariant #2).
+        let (_, eng_end) = if fast && !blueflame {
+            self.qp_engine[qi].request_batch_idle(wqes_at, c.engine_per_wqe, n as u64)
+        } else {
+            self.qp_engine[qi].request_batch(wqes_at, c.engine_per_wqe, n as u64)
+        };
 
         // 3. Payload fetch: translate on the buffer's TLB rail, then DMA.
         let payload_done = if inline {
@@ -184,9 +273,10 @@ impl Nic {
             self.dma.request_latency(translated, n as u64 * c.pcie_tlp, c.dma_read_latency)
         };
 
-        // 4. Wire transmission.
+        // 4. Wire transmission: n per-message slots as one affine batch,
+        //    so `wire.served()` counts messages, not postlists.
         let per_msg_wire = c.wire_slot + msg_bytes as u64 * c.wire_per_byte_ps;
-        let (w_start, _) = self.wire.request(payload_done, n as u64 * per_msg_wire);
+        let (w_start, _) = self.wire.request_batch(payload_done, per_msg_wire, n as u64);
 
         // 5. Signaled CQEs: hardware ack from the peer NIC, then CQE DMA
         //    write, at the WQE's position within the burst.
@@ -225,13 +315,14 @@ impl Nic {
         let h = horizon.max(1) as f64;
         let busiest_engine = self.qp_engine.iter().map(|e| e.busy()).max().unwrap_or(0);
         format!(
-            "wire {:.0}% ({} msgs) | dma {:.0}%x{} | busiest-qp-engine {:.0}% | mmio {}",
+            "wire {:.0}% ({} msgs) | dma {:.0}%x{} | busiest-qp-engine {:.0}% | pcie w/r {}/{}",
             100.0 * self.wire.busy() as f64 / h,
             self.wire.served(),
             100.0 * self.dma.busy() as f64 / (h * self.dma.channels() as f64),
             self.dma.channels(),
             100.0 * busiest_engine as f64 / h,
-            self.counters.mmio_writes,
+            self.counters.total_writes(),
+            self.counters.total_reads(),
         )
     }
 }
@@ -370,6 +461,52 @@ mod tests {
         let u0 = nic2.cpu_ring(0, a2, true, 0);
         let u1 = nic2.cpu_ring(0, b2, true, 1);
         assert_eq!(u0, u1);
+    }
+
+    #[test]
+    fn qp_fast_path_is_bit_identical() {
+        // Drive the same single-sharer post sequence (BlueFlame singles
+        // interleaved with DoorBell postlists) through a general NIC and
+        // a fast-flagged one: every accept time, completion time and
+        // counter must match bit-for-bit (exactness invariant #2).
+        let (f, a, _) = small_fabric();
+        let cost = CostModel::calibrated();
+        let mut general = Nic::new(&f, cost, &[a]);
+        let mut fast = Nic::new(&f, cost, &[a]);
+        fast.set_qp_fast(a, true);
+        let (mut now_g, mut now_f) = (0, 0);
+        for k in 0..64u32 {
+            let (n, bf, inline) = match k % 4 {
+                0 => (1, true, true),
+                1 => (8, false, true),
+                2 => (32, false, false),
+                _ => (1, false, false),
+            };
+            let t_g = general.cpu_ring(now_g, a, bf, 0);
+            let t_f = fast.cpu_ring(now_f, a, bf, 0);
+            assert_eq!(t_g, t_f, "ring {k}");
+            let c_g = batch(&mut general, t_g, a, n, inline, bf, 7, &[n - 1]);
+            let c_f = batch(&mut fast, t_f, a, n, inline, bf, 7, &[n - 1]);
+            assert_eq!(c_g, c_f, "completions {k}");
+            // The CPU blocks on each ring: next post no earlier than the
+            // accept, occasionally as late as the completion.
+            now_g = if k % 3 == 0 { c_g[0] } else { t_g };
+            now_f = if k % 3 == 0 { c_f[0] } else { t_f };
+        }
+        assert_eq!(general.counters, fast.counters);
+        assert_eq!(general.wire_busy(), fast.wire_busy());
+        assert_eq!(general.wire_served(), fast.wire_served());
+        assert_eq!(general.wire_avail(), fast.wire_avail());
+    }
+
+    #[test]
+    fn wire_served_counts_messages_not_postlists() {
+        // The affine wire batch (invariant #1) keeps per-WQE accounting:
+        // one 32-WQE postlist is 32 wire slots served.
+        let (f, a, _) = small_fabric();
+        let mut nic = Nic::new(&f, CostModel::calibrated(), &[a]);
+        batch(&mut nic, 0, a, 32, true, false, 0, &[31]);
+        assert_eq!(nic.wire_served(), 32);
     }
 
     #[test]

@@ -19,6 +19,15 @@ impl PcieCounters {
         self.dma_reads
     }
 
+    /// All PCIe write transactions, both directions: CPU-initiated MMIO
+    /// writes (DoorBells + BlueFlame) plus NIC-initiated DMA writes
+    /// (CQEs). The differential suite compares the whole struct, so any
+    /// fast path that dropped or double-counted a transaction fails
+    /// exact-equality there; `Nic::stats` reports this total.
+    pub fn total_writes(&self) -> u64 {
+        self.mmio_writes + self.dma_writes
+    }
+
     /// Reads per second over a virtual horizon.
     pub fn read_rate(&self, horizon: crate::sim::Time) -> f64 {
         if horizon == 0 {
@@ -39,5 +48,12 @@ mod tests {
         // 1000 reads over 1 us = 1e9 reads/s.
         let rate = c.read_rate(1_000_000);
         assert!((rate - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn write_totals_cover_both_directions() {
+        let c = PcieCounters { mmio_writes: 7, dma_reads: 3, dma_writes: 5 };
+        assert_eq!(c.total_writes(), 12);
+        assert_eq!(c.total_reads(), 3);
     }
 }

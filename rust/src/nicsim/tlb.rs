@@ -38,11 +38,14 @@ impl Tlb {
     }
 
     /// Translate `n` same-buffer payload addresses arriving together (one
-    /// Postlist batch): occupies the buffer's rail for `n` service slots.
+    /// Postlist batch): occupies the buffer's rail for `n` service slots,
+    /// fused into one affine update (`Server::request_batch`, exactness
+    /// invariant #1 in [`super::nic`]) so the rail's served count stays
+    /// per-translation.
     #[inline]
     pub fn translate_batch(&mut self, now: Time, cacheline: u64, n: u32) -> Time {
         let rail = self.rail_of(cacheline);
-        self.rails[rail].request(now, n as Time * self.translate).1
+        self.rails[rail].request_batch(now, self.translate, n as u64).1
     }
 
     /// How many distinct rails a set of cachelines maps to (test hook).

@@ -23,6 +23,66 @@
 
 use super::Time;
 
+/// How a coalesced continuation interacts with the *other* threads of the
+/// run — the "next interaction" classification used by the coalescing
+/// guard [`may_coalesce`].
+///
+/// The horizon alone is too conservative for symmetric lock-step threads:
+/// identical independent threads tie at equal timestamps on every step,
+/// so `t < horizon` fails every time and each step costs one dispatch.
+/// Two things must BOTH hold before a step may run inline past the
+/// horizon:
+///
+/// 1. **State commutation** — the step touches only state owned by the
+///    running thread (its single-sharer CQ ring, its credits, its own CQ
+///    lock), so executing it before another thread's pending step changes
+///    neither outcome.
+/// 2. **Enqueue-order neutrality** — the thread never again hands the
+///    scheduler a resume key that could tie with another thread's.
+///    Resume keys are FIFO tie-broken by *enqueue order* (`seq`), and
+///    coalescing moves this thread's enqueues earlier relative to other
+///    threads' dispatches; if a later key of ours tied a later key of
+///    theirs at an equal timestamp, the flipped `seq` order would flip
+///    the call order on shared FIFO servers. State commutation alone
+///    cannot repair that, so a thread with *any* future shared step must
+///    stay on the strict-horizon rule.
+///
+/// Both hold exactly for a thread *draining* its final window: its
+/// remaining program is polls of its private CQ followed by `Done`
+/// (which enqueues nothing), so the whole tail runs inline in one event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interaction {
+    /// Touches only thread-private state *and* the thread will never
+    /// enqueue a contending resume again (terminal drain of a
+    /// single-sharer CQ): coalescible unconditionally.
+    Private,
+    /// Requests shared FIFO resources (the wire, the DMA engines, a TLB
+    /// rail, a shared lock) — or precedes a step that will: FIFO order
+    /// is *call* order and tie-breaks are enqueue order, so the step
+    /// must begin strictly before the horizon — exactly when the
+    /// scheduler would have re-dispatched this thread next anyway.
+    Shared,
+}
+
+/// The coalescing guard: may a continuation beginning at `t` run inline
+/// within the current scheduler event, given the earliest resume time
+/// `horizon` of any other thread?
+///
+/// Tie behavior is the load-bearing detail: at `t == horizon` the
+/// sleeping thread wins the dispatch (its heap key carries the older
+/// sequence number), so a `Shared` continuation must NOT coalesce at a
+/// tie — the general path would have interleaved the other thread first.
+/// A `Private` (terminal-drain) continuation commutes with that
+/// interleaving — in state *and* in future enqueue order — and may.
+/// `sched::tests::tie_at_horizon_*` pin both directions.
+#[inline]
+pub fn may_coalesce(t: Time, horizon: Time, interaction: Interaction) -> bool {
+    match interaction {
+        Interaction::Private => true,
+        Interaction::Shared => t < horizon,
+    }
+}
+
 /// What a thread wants after a step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Step {
@@ -236,6 +296,42 @@ mod tests {
         });
         assert_eq!(got_order, ref_order);
         assert_eq!(done.len(), nthreads as usize);
+    }
+
+    #[test]
+    fn tie_at_horizon_blocks_shared_continuations() {
+        // A Shared continuation landing exactly ON the horizon must fall
+        // back to the scheduler: the sleeping thread's older seq wins the
+        // dispatch at a tie, so running inline would reorder its shared
+        // resource requests.
+        assert!(!may_coalesce(100, 100, Interaction::Shared));
+        assert!(may_coalesce(99, 100, Interaction::Shared));
+        assert!(!may_coalesce(101, 100, Interaction::Shared));
+    }
+
+    #[test]
+    fn tie_at_horizon_admits_private_continuations() {
+        // A Private continuation commutes with the tied thread's step:
+        // coalescible at, before, and past the horizon.
+        assert!(may_coalesce(100, 100, Interaction::Private));
+        assert!(may_coalesce(99, 100, Interaction::Private));
+        assert!(may_coalesce(101, 100, Interaction::Private));
+        // Lone-thread horizon (Time::MAX) admits everything.
+        assert!(may_coalesce(u64::MAX - 1, u64::MAX, Interaction::Shared));
+        assert!(may_coalesce(u64::MAX, u64::MAX, Interaction::Private));
+    }
+
+    #[test]
+    fn scheduler_tie_break_matches_private_coalescing_claim() {
+        // Two threads tied at t=0: thread 0 (older seq) dispatches first.
+        // This is the dispatch order the Shared guard protects and the
+        // Private classification is allowed to commute across.
+        let mut order = Vec::new();
+        Scheduler::new(2).run(|tid, now, _| {
+            order.push((now, tid));
+            Step::Done(now + 1)
+        });
+        assert_eq!(order, vec![(0, 0), (0, 1)]);
     }
 
     #[test]

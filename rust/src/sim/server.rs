@@ -41,6 +41,76 @@ impl Server {
         (start, end)
     }
 
+    /// Batched request: exactly equivalent to `n` back-to-back
+    /// [`Server::request`]`(now, occupancy)` calls, fused into one
+    /// closed-form update (the per-request recurrence is affine in the
+    /// request index, so the whole batch collapses to straight-line
+    /// arithmetic). Returns `(start, end)` of the batch as a whole:
+    /// `start` is when the first request begins service and `end` when
+    /// the last one finishes.
+    ///
+    /// Derivation: with `s = avail.max(now)`, request `i` (0-based)
+    /// starts at `s + i*occupancy` (every request after the first meets a
+    /// busy server), so `end = s + n*occupancy`, `busy += n*occupancy`,
+    /// `served += n`, and the queueing delay telescopes to
+    /// `n*(s - now) + occupancy * n*(n-1)/2`.
+    ///
+    /// `n == 0` performs no requests: state is untouched and
+    /// `(start, start)` is returned.
+    #[inline]
+    pub fn request_batch(&mut self, now: Time, occupancy: Time, n: u64) -> (Time, Time) {
+        let start = self.avail.max(now);
+        if n == 0 {
+            return (start, start);
+        }
+        let end = start + n * occupancy;
+        self.avail = end;
+        self.busy += n * occupancy;
+        self.served += n;
+        self.queued += n * (start - now) + occupancy * (n * (n - 1) / 2);
+        (start, end)
+    }
+
+    /// [`Server::request`] for a caller that can *prove* the server is
+    /// idle at `now` (`avail <= now`): the queue max is skipped and zero
+    /// queueing delay is recorded — identical accounting to `request`,
+    /// which would compute `start == now`. Returns the completion time.
+    /// The proof obligation is checked in debug builds.
+    #[inline]
+    pub fn request_idle(&mut self, now: Time, occupancy: Time) -> Time {
+        debug_assert!(
+            self.avail <= now,
+            "request_idle on a busy server (avail {} > now {now})",
+            self.avail
+        );
+        let end = now + occupancy;
+        self.avail = end;
+        self.busy += occupancy;
+        self.served += 1;
+        end
+    }
+
+    /// [`Server::request_batch`] under the same provable-idleness
+    /// precondition as [`Server::request_idle`]: `start == now` exactly,
+    /// so the batch collapses to pure straight-line arithmetic.
+    #[inline]
+    pub fn request_batch_idle(&mut self, now: Time, occupancy: Time, n: u64) -> (Time, Time) {
+        debug_assert!(
+            self.avail <= now,
+            "request_batch_idle on a busy server (avail {} > now {now})",
+            self.avail
+        );
+        if n == 0 {
+            return (now, now);
+        }
+        let end = now + n * occupancy;
+        self.avail = end;
+        self.busy += n * occupancy;
+        self.served += n;
+        self.queued += occupancy * (n * (n - 1) / 2);
+        (now, end)
+    }
+
     /// Request with a post-service latency that does *not* occupy the
     /// server (e.g. a PCIe read: the link slot is held for the TLP transfer
     /// time but the round-trip latency overlaps with other requests).
@@ -185,5 +255,99 @@ mod tests {
         s.request(0, 100);
         s.request(0, 100); // waits 100
         assert!((s.mean_queue_delay() - 50.0).abs() < 1e-9);
+    }
+
+    /// Compare full observable state of two servers.
+    fn assert_same_state(a: &Server, b: &Server, what: &str) {
+        assert_eq!(a.avail(), b.avail(), "{what}: avail");
+        assert_eq!(a.busy(), b.busy(), "{what}: busy");
+        assert_eq!(a.served(), b.served(), "{what}: served");
+        assert!(
+            (a.mean_queue_delay() - b.mean_queue_delay()).abs() < 1e-9,
+            "{what}: queue delay {} vs {}",
+            a.mean_queue_delay(),
+            b.mean_queue_delay()
+        );
+    }
+
+    #[test]
+    fn request_batch_zero_is_a_noop() {
+        let mut s = Server::new();
+        s.request(0, 100);
+        let snapshot = s.clone();
+        let (start, end) = s.request_batch(40, 17, 0);
+        assert_eq!((start, end), (100, 100)); // avail.max(now), nothing served
+        assert_same_state(&s, &snapshot, "n=0");
+    }
+
+    #[test]
+    fn request_batch_one_equals_request() {
+        for (warm, now, occ) in [(0, 0, 50), (300, 120, 7), (10, 500, 1)] {
+            let mut a = Server::new();
+            let mut b = Server::new();
+            if warm > 0 {
+                a.request(0, warm);
+                b.request(0, warm);
+            }
+            let r1 = a.request(now, occ);
+            let r2 = b.request_batch(now, occ, 1);
+            assert_eq!(r1, r2, "warm={warm} now={now}");
+            assert_same_state(&a, &b, "n=1");
+        }
+    }
+
+    #[test]
+    fn request_batch_matches_sequential_saturated_and_idle() {
+        // Saturated (avail > now) and idle-gap (avail < now) boundaries,
+        // plus the exact-boundary avail == now case.
+        for (warm, now) in [(1000u64, 0u64), (0, 1000), (500, 500)] {
+            for n in [2u64, 3, 8, 32] {
+                let occ = 13;
+                let mut seq = Server::new();
+                let mut batched = Server::new();
+                if warm > 0 {
+                    seq.request(0, warm);
+                    batched.request(0, warm);
+                }
+                let mut last = (0, 0);
+                let mut first_start = None;
+                for _ in 0..n {
+                    last = seq.request(now, occ);
+                    first_start.get_or_insert(last.0);
+                }
+                let (start, end) = batched.request_batch(now, occ, n);
+                assert_eq!(start, first_start.unwrap(), "warm={warm} n={n}: start");
+                assert_eq!(end, last.1, "warm={warm} n={n}: end");
+                assert_same_state(&seq, &batched, "sequential-vs-batch");
+            }
+        }
+    }
+
+    #[test]
+    fn idle_variants_match_general_on_idle_server() {
+        let mut a = Server::new();
+        let mut b = Server::new();
+        a.request(0, 40);
+        b.request(0, 40);
+        // Server idle at 100 (avail 40): general and idle paths agree.
+        assert_eq!(a.request(100, 25).1, b.request_idle(100, 25));
+        assert_same_state(&a, &b, "request_idle");
+        let r_gen = a.request_batch(200, 5, 6);
+        let r_idle = b.request_batch_idle(200, 5, 6);
+        assert_eq!(r_gen, r_idle);
+        assert_same_state(&a, &b, "request_batch_idle");
+        // n == 0 idle batch is a no-op too.
+        let snap = b.clone();
+        assert_eq!(b.request_batch_idle(500, 9, 0), (500, 500));
+        assert_same_state(&b, &snap, "idle n=0");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "request_idle on a busy server")]
+    fn request_idle_rejects_busy_server_in_debug() {
+        let mut s = Server::new();
+        s.request(0, 100);
+        s.request_idle(50, 10); // avail 100 > now 50: proof violated
     }
 }

@@ -26,6 +26,57 @@ fn run_category(cat: Category, n: u32, features: Features) -> f64 {
     Runner::new(&f, &set.threads, cfg).run().mmsgs_per_sec
 }
 
+// ------------------------------------------- Golden snapshots (engine net)
+
+/// Byte-identity pin on the `--quick` table output of fig2/fig9/fig11:
+/// the DES engine is bit-deterministic, so ANY engine change that
+/// perturbs results — a fast path that is not exact, a cost-model edit,
+/// a scheduler reorder — fails this test loudly instead of silently
+/// shifting the reproduction's numbers.
+///
+/// Fixtures live in `tests/fixtures/<fig>_quick.golden.txt`. A missing
+/// fixture (or `SCEP_BLESS=1`) is written from the current engine and
+/// the test passes with a note: the build container that grows this
+/// repo has no Rust toolchain, so first-generation happens on CI, which
+/// uploads `tests/fixtures/` as an artifact for check-in. On mismatch
+/// the fresh bytes are written next to the fixture as `*.new` (the CI
+/// artifact then carries the diff) and the test fails.
+#[test]
+fn golden_fig_tables_are_byte_stable() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    for name in ["fig2", "fig9", "fig11"] {
+        // (Run-to-run determinism itself is pinned by `deterministic` in
+        // bench::msgrate and the worker-pool invariants; one render per
+        // figure keeps this test affordable in debug CI.)
+        let bytes = scalable_ep::figures::render_bytes(name, true).expect("known figure");
+        let path = dir.join(format!("{name}_quick.golden.txt"));
+        if std::env::var("SCEP_BLESS").is_ok() || !path.exists() {
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(&path, &bytes).unwrap();
+            eprintln!("[golden] blessed {} ({} bytes) — commit it", path.display(), bytes.len());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        if want != bytes {
+            let new_path = path.with_extension("txt.new");
+            std::fs::write(&new_path, &bytes).unwrap();
+            let first_diff = want
+                .lines()
+                .zip(bytes.lines())
+                .position(|(a, b)| a != b)
+                .unwrap_or_else(|| want.lines().count().min(bytes.lines().count()));
+            panic!(
+                "{name}: --quick table bytes diverged from {} (first differing line {}); \
+                 fresh bytes written to {} — if the change is intentional, re-bless with \
+                 SCEP_BLESS=1 and commit",
+                path.display(),
+                first_diff + 1,
+                new_path.display()
+            );
+        }
+    }
+}
+
 // ------------------------------------------------------------- Fig 2(b)
 
 #[test]

@@ -1,12 +1,76 @@
 //! Property-based tests over the resource model and simulator invariants
 //! (in-repo `testing::check` harness; no external proptest offline).
 
-use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
+use scalable_ep::bench::{Features, MsgRateConfig, MsgRateResult, Runner, SharedResource, SharingSpec};
 use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
 use scalable_ep::mlx5::Mlx5Env;
 use scalable_ep::sim::{Server, SimLock};
 use scalable_ep::testing::check;
 use scalable_ep::verbs::{Fabric, QpCaps, TdInitAttr};
+
+/// Seed for the randomized differential fuzzers: `SCEP_FUZZ_SEED=<u64>`
+/// overrides the fixed default. CI runs the suite twice — once fixed,
+/// once randomized with the seed echoed — so every failure log carries
+/// its reproduction recipe.
+fn fuzz_seed(default: u64) -> u64 {
+    match std::env::var("SCEP_FUZZ_SEED") {
+        Ok(s) => {
+            let seed = s
+                .trim()
+                .parse::<u64>()
+                .unwrap_or_else(|e| panic!("SCEP_FUZZ_SEED={s:?} is not a u64: {e}"));
+            eprintln!("[properties] SCEP_FUZZ_SEED={seed} (reproduce with this env var)");
+            seed
+        }
+        Err(_) => default,
+    }
+}
+
+/// Assert every virtual-time observable of a fast-path run equals the
+/// stepped general path's, bit for bit; scheduler diagnostics must show
+/// identical trajectories (same step count) and no extra dispatches.
+fn assert_bit_exact(fast: &MsgRateResult, general: &MsgRateResult, what: &str) -> Result<(), String> {
+    if fast.duration != general.duration {
+        return Err(format!("{what}: duration {} vs {}", fast.duration, general.duration));
+    }
+    if fast.thread_done != general.thread_done {
+        return Err(format!("{what}: per-thread done-times diverged"));
+    }
+    if fast.messages != general.messages {
+        return Err(format!("{what}: messages {} vs {}", fast.messages, general.messages));
+    }
+    if fast.mmsgs_per_sec != general.mmsgs_per_sec {
+        return Err(format!("{what}: rate {} vs {}", fast.mmsgs_per_sec, general.mmsgs_per_sec));
+    }
+    if fast.pcie != general.pcie {
+        return Err(format!("{what}: PCIe {:?} vs {:?}", fast.pcie, general.pcie));
+    }
+    if fast.pcie_read_rate != general.pcie_read_rate {
+        return Err(format!("{what}: PCIe read rate diverged"));
+    }
+    if fast.p50_latency_ns != general.p50_latency_ns
+        || fast.p99_latency_ns != general.p99_latency_ns
+    {
+        return Err(format!("{what}: latency percentiles diverged"));
+    }
+    if fast.sched_steps != general.sched_steps {
+        return Err(format!(
+            "{what}: trajectories differ: {} vs {} steps",
+            fast.sched_steps, general.sched_steps
+        ));
+    }
+    if general.sched_events != general.sched_steps {
+        return Err(format!("{what}: general path coalesced ({} events, {} steps)",
+            general.sched_events, general.sched_steps));
+    }
+    if fast.sched_events > general.sched_events {
+        return Err(format!(
+            "{what}: fast path dispatched MORE events ({} vs {})",
+            fast.sched_events, general.sched_events
+        ));
+    }
+    Ok(())
+}
 
 #[test]
 fn prop_uuar_accounting_conserves() {
@@ -197,31 +261,133 @@ fn prop_fast_path_matches_general_path() {
         let fast = Runner::new(&fabric, &eps, cfg).run();
         let general =
             Runner::new(&fabric, &eps, MsgRateConfig { force_general_path: true, ..cfg }).run();
-        if fast.duration != general.duration {
+        assert_bit_exact(
+            &fast,
+            &general,
+            &format!("{res:?} {ways}-way x{nthreads}, {features:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_fast_path_matches_general_path_fuzzed() {
+    // Satellite fuzzer over the PR's three new fast paths: randomized
+    // sharing topologies *and* QP depths *and* postlist sizes, thread
+    // counts past the paper's 16-thread ceiling, and (via the symmetric
+    // 1-way topologies) lock-step threads that tie at equal timestamps
+    // every step. `SCEP_FUZZ_SEED` reseeds the sweep; the seed is echoed
+    // for reproduction.
+    let resources = [
+        SharedResource::Buf,
+        SharedResource::Ctx,
+        SharedResource::CtxTwoXQps,
+        SharedResource::CtxSharing2,
+        SharedResource::Pd,
+        SharedResource::Mr,
+        SharedResource::Cq,
+        SharedResource::Qp,
+    ];
+    check("fast-vs-general-fuzzed", fuzz_seed(0xC0A1E5CE), 28, |rng, _| {
+        let res = *rng.choose(&resources);
+        let nthreads = [1u32, 2, 4, 8, 16, 24, 32][rng.below(7) as usize];
+        let ways_opts: Vec<u32> =
+            [1u32, 2, 4, 8, 16].iter().copied().filter(|w| nthreads % w == 0).collect();
+        let ways = *rng.choose(&ways_opts);
+        let features = Features {
+            postlist: [1u32, 2, 4, 8, 32][rng.below(5) as usize],
+            unsignaled: [1u32, 4, 16, 64][rng.below(4) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let qp_depth = [16u32, 32, 64, 128, 256][rng.below(5) as usize];
+        let spec = SharingSpec::new(res, ways, nthreads);
+        let (fabric, eps) = spec.build().map_err(|e| e.to_string())?;
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(512),
+            qp_depth,
+            features,
+            ..Default::default()
+        };
+        let fast = Runner::new(&fabric, &eps, cfg).run();
+        let general =
+            Runner::new(&fabric, &eps, MsgRateConfig { force_general_path: true, ..cfg }).run();
+        assert_bit_exact(
+            &fast,
+            &general,
+            &format!("{res:?} {ways}-way x{nthreads} d={qp_depth}, {features:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_fast_path_matches_general_path_categories_fuzzed() {
+    // Same differential check over the six §VI endpoint categories,
+    // including >16-thread builds; level-4 (shared-QP) categories must
+    // additionally show zero coalescing — the fast paths stay off
+    // exactly where the exactness proofs stop holding.
+    check("fast-vs-general-categories", fuzz_seed(0xEDE7), 18, |rng, _| {
+        let cat = *rng.choose(&Category::ALL);
+        let nthreads = [1u32, 4, 8, 16, 24, 32][rng.below(6) as usize];
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let mut f = Fabric::connectx4();
+        let set = EndpointBuilder::new(cat, nthreads).build(&mut f).map_err(|e| e.to_string())?;
+        // Deliberately NOT forcing the shared-QP path for MpiThreads:
+        // the zero-coalescing assertion below must pin the runner's own
+        // sharing *detection* (qp_sharers/cq_sharers), not a config flag
+        // that disables the fast path wholesale.
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(384),
+            qp_depth: [32u32, 128][rng.below(2) as usize],
+            features,
+            ..Default::default()
+        };
+        let fast = Runner::new(&f, &set.threads, cfg).run();
+        let general =
+            Runner::new(&f, &set.threads, MsgRateConfig { force_general_path: true, ..cfg }).run();
+        assert_bit_exact(&fast, &general, &format!("{cat} x{nthreads}, {features:?}"))?;
+        if cat.shares_qp() && nthreads > 1 && fast.sched_events != fast.sched_steps {
             return Err(format!(
-                "duration diverged: fast {} vs general {} ({res:?} {ways}-way x{nthreads}, {features:?})",
-                fast.duration, general.duration
+                "{cat}: shared-QP threads coalesced ({} events, {} steps)",
+                fast.sched_events, fast.sched_steps
             ));
-        }
-        if fast.thread_done != general.thread_done {
-            return Err(format!("per-thread completion times diverged ({res:?} {ways}-way)"));
-        }
-        if fast.mmsgs_per_sec != general.mmsgs_per_sec {
-            return Err(format!(
-                "rate diverged: {} vs {}",
-                fast.mmsgs_per_sec, general.mmsgs_per_sec
-            ));
-        }
-        if fast.pcie != general.pcie {
-            return Err(format!("PCIe counters diverged: {:?} vs {:?}", fast.pcie, general.pcie));
-        }
-        if fast.p50_latency_ns != general.p50_latency_ns
-            || fast.p99_latency_ns != general.p99_latency_ns
-        {
-            return Err("latency percentiles diverged".into());
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce() {
+    // The per-CQ interaction bound's flagship case: identical independent
+    // threads march in lock-step, tying at equal timestamps on every
+    // step. Each thread's terminal drain (final window posted, only
+    // private polls + Done remaining) must still coalesce — dispatched
+    // events strictly below the general path's — while every
+    // virtual-time observable stays bit-identical to the stepped path,
+    // including past the paper's 16-thread ceiling.
+    for nthreads in [8u32, 16, 32] {
+        for features in [Features::all(), Features::conservative()] {
+            let spec = SharingSpec::new(SharedResource::Ctx, 1, nthreads);
+            let (fabric, eps) = spec.build().unwrap();
+            let cfg = MsgRateConfig { msgs_per_thread: 1024, features, ..Default::default() };
+            let fast = Runner::new(&fabric, &eps, cfg).run();
+            let general =
+                Runner::new(&fabric, &eps, MsgRateConfig { force_general_path: true, ..cfg })
+                    .run();
+            assert_bit_exact(&fast, &general, &format!("lockstep x{nthreads}"))
+                .unwrap_or_else(|e| panic!("{e}"));
+            assert!(
+                fast.sched_events < general.sched_events,
+                "x{nthreads} {features:?}: symmetric ties defeated coalescing ({} vs {})",
+                fast.sched_events,
+                general.sched_events
+            );
+        }
+    }
 }
 
 #[test]
