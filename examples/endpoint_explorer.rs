@@ -7,8 +7,8 @@
 //! cargo run --release --example endpoint_explorer
 //! ```
 
-use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
-use scalable_ep::endpoints::ResourceUsage;
+use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource};
+use scalable_ep::endpoints::{EndpointPolicy, ResourceUsage};
 use scalable_ep::report::{f2, Table};
 
 fn main() {
@@ -28,8 +28,8 @@ fn main() {
     );
     for res in axes {
         for ways in [1u32, 2, 4, 8, 16] {
-            let spec = SharingSpec::new(res, ways, 16);
-            let (fabric, eps) = spec.build().expect("build");
+            let policy = EndpointPolicy::sharing(res, ways);
+            let (fabric, eps) = policy.build_fresh(16).expect("build");
             let run = |features| {
                 let cfg =
                     MsgRateConfig { msgs_per_thread: 8 * 1024, features, ..Default::default() };

@@ -7,7 +7,7 @@
 //! ```
 
 use scalable_ep::bench::{Features, MsgRateConfig, Runner};
-use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::report::{f2, pct, Table};
 use scalable_ep::verbs::Fabric;
 
@@ -18,15 +18,16 @@ fn main() {
     );
     let mut base: Option<(f64, f64)> = None;
     for cat in Category::ALL {
-        // 1. Build the category's verbs-object topology.
+        // 1. Build the category preset's verbs-object topology.
+        let policy = EndpointPolicy::preset(cat);
         let mut fabric = Fabric::connectx4();
-        let set = EndpointBuilder::new(cat, 16).build(&mut fabric).expect("build endpoints");
+        let set = policy.build(&mut fabric, 16).expect("build endpoints");
 
         // 2. Run the §IV message-rate loop in virtual time.
         let cfg = MsgRateConfig {
             msgs_per_thread: 16 * 1024,
             features: Features::conservative(),
-            force_shared_qp_path: cat == Category::MpiThreads,
+            force_shared_qp_path: policy.shares_qp(),
             ..Default::default()
         };
         let rate = Runner::new(&fabric, &set.threads, cfg).run().mmsgs_per_sec;

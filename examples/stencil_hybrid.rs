@@ -17,7 +17,15 @@ use scalable_ep::runtime::ArtifactRuntime;
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut t = Table::new(
         "5-pt stencil halo exchange (Mmsg/s), 2 nodes x 16 hw threads",
-        &["P.T", "MPI everywhere", "2xDynamic", "Dynamic", "Shared Dynamic", "Static", "MPI+threads"],
+        &[
+            "P.T",
+            "MPI everywhere",
+            "2xDynamic",
+            "Dynamic",
+            "Shared Dynamic",
+            "Static",
+            "MPI+threads",
+        ],
     );
     for spec in JobSpec::paper_sweep() {
         let mut row = vec![spec.label()];

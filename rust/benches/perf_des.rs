@@ -24,7 +24,8 @@
 
 use std::time::Instant;
 
-use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource, SharingSpec};
+use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource};
+use scalable_ep::endpoints::EndpointPolicy;
 
 struct Row {
     label: &'static str,
@@ -49,7 +50,7 @@ fn measure(
     features: Features,
     msgs: u64,
 ) -> Row {
-    let (fabric, eps) = SharingSpec::new(res, ways, nthreads).build().unwrap();
+    let (fabric, eps) = EndpointPolicy::sharing(res, ways).build_fresh(nthreads).unwrap();
     let cfg = MsgRateConfig { msgs_per_thread: msgs, features, ..Default::default() };
     let t0 = Instant::now();
     let r = Runner::new(&fabric, &eps, cfg).run();
@@ -57,7 +58,8 @@ fn measure(
     let wallclock_s = dt.as_secs_f64();
     let rate = r.messages as f64 / wallclock_s;
     println!(
-        "{label:>28}: {:>7.1} M simulated msgs/s wallclock ({} msgs in {:.2?}, {} of {} steps dispatched)",
+        "{label:>28}: {:>7.1} M simulated msgs/s wallclock \
+         ({} msgs in {:.2?}, {} of {} steps dispatched)",
         rate / 1e6,
         r.messages,
         dt,
@@ -81,11 +83,25 @@ fn main() {
     let suite0 = Instant::now();
     let rows = vec![
         measure("independent, All", SharedResource::Ctx, 1, 16, Features::all(), msgs),
-        measure("independent, conservative", SharedResource::Ctx, 1, 16, Features::conservative(), msgs / 4),
+        measure(
+            "independent, conservative",
+            SharedResource::Ctx,
+            1,
+            16,
+            Features::conservative(),
+            msgs / 4,
+        ),
         measure("independent x32, All", SharedResource::Ctx, 1, 32, Features::all(), msgs / 2),
         measure("single thread, All", SharedResource::Ctx, 1, 1, Features::all(), 4 * msgs),
         measure("16-way shared QP, All", SharedResource::Qp, 16, 16, Features::all(), msgs / 4),
-        measure("16-way shared CQ, w/o unsig", SharedResource::Cq, 16, 16, Features::all().without_unsignaled(), msgs / 8),
+        measure(
+            "16-way shared CQ, w/o unsig",
+            SharedResource::Cq,
+            16,
+            16,
+            Features::all().without_unsignaled(),
+            msgs / 8,
+        ),
     ];
     let suite_s = suite0.elapsed().as_secs_f64();
 

@@ -17,26 +17,29 @@
 
 use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
 use crate::coordinator::{Job, JobSpec, Universe};
-use crate::endpoints::{Category, EndpointBuilder, EndpointSet, ResourceUsage};
+use crate::endpoints::{EndpointPolicy, EndpointSet, ResourceUsage};
 use crate::nicsim::CostModel;
 use crate::runtime::{ArtifactRuntime, DGEMM_TILE};
 use crate::verbs::error::Result;
 use crate::verbs::Fabric;
 
-/// The global-array benchmark for one endpoint category.
+/// The global-array benchmark for one endpoint policy.
 pub struct GlobalArray {
-    pub category: Category,
+    pub policy: EndpointPolicy,
     pub nthreads: u32,
     pub fabric: Fabric,
     pub set: EndpointSet,
 }
 
 impl GlobalArray {
-    /// Build the client-side endpoint topology: category layout plus the
-    /// paper's 3-BUF/3-MR-per-QP registration pattern.
-    pub fn new(category: Category, nthreads: u32) -> Result<Self> {
+    /// Build the client-side endpoint topology: the policy's layout plus
+    /// the paper's 3-BUF/3-MR-per-QP registration pattern. Accepts a
+    /// [`Category`](crate::endpoints::Category) preset name or any
+    /// [`EndpointPolicy`].
+    pub fn new(policy: impl Into<EndpointPolicy>, nthreads: u32) -> Result<Self> {
+        let policy = policy.into();
         let mut fabric = Fabric::connectx4();
-        let set = EndpointBuilder::new(category, nthreads).build(&mut fabric)?;
+        let set = policy.build(&mut fabric, nthreads)?;
         // Two extra tile buffers + MRs per thread (A, B, C tiles). The
         // builder registered one; add the other two on the thread's PD.
         for (i, te) in set.threads.iter().enumerate() {
@@ -48,7 +51,7 @@ impl GlobalArray {
                 fabric.reg_mr(pd, addr, tile_bytes)?;
             }
         }
-        Ok(Self { category, nthreads, fabric, set })
+        Ok(Self { policy, nthreads, fabric, set })
     }
 
     /// Timed communication phase: `msgs_per_thread` RDMA writes with the
@@ -59,7 +62,7 @@ impl GlobalArray {
             msg_size,
             features: Features::conservative(),
             cost: CostModel::calibrated(),
-            force_shared_qp_path: self.category == Category::MpiThreads,
+            force_shared_qp_path: self.policy.shares_qp(),
             ..Default::default()
         };
         Runner::new(&self.fabric, &self.set.threads, cfg).run()
@@ -83,7 +86,7 @@ impl GlobalArray {
         let tiles = n / DGEMM_TILE;
 
         // Server = rank 0 (node 0), client threads = rank 1 (node 1).
-        let job = Job::two_node(JobSpec::new(1, self.nthreads), self.category);
+        let job = Job::two_node(JobSpec::new(1, self.nthreads), self.policy);
         let mut u = Universe::launch(job, 3 * n * n * 4 + 4096)?;
 
         // Server holds A, B, C in its window.
@@ -148,6 +151,7 @@ impl GlobalArray {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::endpoints::Category;
 
     #[test]
     fn three_mrs_per_qp_and_shared_pd() {

@@ -5,9 +5,15 @@
 //! its up/down neighbors over two QPs mapped to one CQ (Fig 13). The
 //! hybrid sweep varies `P.T` with `P*T = 16`.
 //!
-//! Endpoint topology per category (per rank of T threads):
+//! The per-rank endpoint topology is driven by the policy's axes rather
+//! than a closed category list: `ctx` decides per-thread vs per-rank
+//! contexts, `qp` decides exclusive pairs vs a rank-wide shared pair
+//! (with 2x-even provisioning giving each spare pair its own CQ — "the
+//! number of QPs and CQs in 2xDynamic is twice that of MPI everywhere"),
+//! and `uar` picks the TD attribute. The six paper presets reproduce the
+//! historical per-category shapes:
 //!
-//! | Category       | per thread                                | CTXs |
+//! | Preset         | per thread                                | CTXs |
 //! |----------------|-------------------------------------------|------|
 //! | MpiEverywhere  | own CTX, 2 QPs -> 1 CQ                    | T    |
 //! | TwoXDynamic    | 4 indep. TD-QPs, 2 CQs, evens used        | 1    |
@@ -18,12 +24,13 @@
 
 use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
 use crate::coordinator::JobSpec;
-use crate::endpoints::{Category, ResourceUsage, ThreadEndpoint};
-use crate::mlx5::Mlx5Env;
+use crate::endpoints::{
+    BufLayout, EndpointPolicy, MrMap, QpProvision, ResourceUsage, ThreadEndpoint, UarMap, Ways,
+};
 use crate::nicsim::CostModel;
 use crate::runtime::{ArtifactRuntime, STENCIL_TILE};
 use crate::verbs::error::Result;
-use crate::verbs::{Fabric, QpCaps, TdInitAttr};
+use crate::verbs::{BufId, CtxId, Fabric, MrId, PdId, QpCaps, TdInitAttr};
 
 /// Default halo-row payload: an 8-column f32 subtile row. Small enough
 /// that the exchange is initiation-bound, as in the paper (its message
@@ -33,7 +40,7 @@ pub const DEFAULT_HALO_BYTES: u32 = 32;
 /// One node's worth of the stencil job: P ranks x T threads on one NIC.
 pub struct StencilBench {
     pub spec: JobSpec,
-    pub category: Category,
+    pub policy: EndpointPolicy,
     pub fabric: Fabric,
     /// Per hardware thread (rank-major): its two endpoints (up/down QP).
     pub threads: Vec<Vec<ThreadEndpoint>>,
@@ -42,91 +49,113 @@ pub struct StencilBench {
 }
 
 impl StencilBench {
-    pub fn new(spec: JobSpec, category: Category, halo_bytes: u32) -> Result<Self> {
+    pub fn new(spec: JobSpec, policy: impl Into<EndpointPolicy>, halo_bytes: u32) -> Result<Self> {
+        let policy = policy.into();
+        // The stencil shape honors the ctx / qp-provision / uar axes (and
+        // owns its own CQ depths and halo buffers). Reject axis values it
+        // would otherwise silently ignore — the run would be labeled with
+        // a policy string describing a topology that was never built.
+        assert_eq!(policy.pd, Ways::All, "the stencil shares one PD per ctx scope");
+        assert_eq!(policy.mr, MrMap::PerThread, "the stencil registers one MR per halo buffer");
+        assert_eq!(policy.buf, BufLayout::Aligned, "stencil halo buffers are cache-aligned");
+        assert_eq!(
+            policy.qp_caps,
+            QpCaps::default(),
+            "the stencil creates its QPs at the default capabilities"
+        );
+        match policy.qp {
+            QpProvision::Shared(w) => {
+                assert_eq!(
+                    w,
+                    Ways::All,
+                    "the stencil's level-4 shape shares one rank-wide QP pair"
+                );
+                assert_eq!(policy.cq, Ways::All, "the rank-wide pair completes into one CQ");
+            }
+            _ => assert!(
+                policy.cq.is_dedicated(),
+                "exclusive stencil pairs complete into per-thread CQs"
+            ),
+        }
         let mut fabric = Fabric::connectx4();
         let mut threads = Vec::new();
         let t = spec.threads_per_rank;
         let caps = QpCaps::default();
         let buf_base = 0x100_0000u64;
         let mut bufno = 0u64;
+        let mut buf_mr = |fabric: &mut Fabric, pd: PdId| -> Result<(BufId, MrId)> {
+            let addr = buf_base + bufno * 64 * ((halo_bytes as u64).div_ceil(64) + 1);
+            bufno += 1;
+            let buf = fabric.declare_buf(addr, halo_bytes as u64);
+            let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
+            Ok((buf, mr))
+        };
         for _rank in 0..spec.ranks_per_node {
-            match category {
-                Category::MpiEverywhere => {
-                    for _ in 0..t {
-                        let ctx = fabric.open_ctx(Mlx5Env::default())?;
-                        let pd = fabric.alloc_pd(ctx)?;
-                        let cq = fabric.create_cq(ctx, 64)?;
-                        let mut eps = Vec::new();
-                        for _ in 0..2 {
-                            let qp = fabric.create_qp(pd, cq, caps, None)?;
-                            let addr = buf_base + bufno * 64 * ((halo_bytes as u64 + 63) / 64 + 1);
-                            bufno += 1;
-                            let buf = fabric.declare_buf(addr, halo_bytes as u64);
-                            let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
-                            eps.push(ThreadEndpoint { qp, cq, buf, mr });
-                        }
-                        threads.push(eps);
+            if policy.shares_qp() {
+                // Level 4: one rank-wide up/down pair into one shared CQ.
+                let ctx = fabric.open_ctx(policy.env)?;
+                let pd = fabric.alloc_pd(ctx)?;
+                let cq = fabric.create_cq(ctx, (4 * t).max(64))?;
+                let up = fabric.create_qp(pd, cq, caps, None)?;
+                let down = fabric.create_qp(pd, cq, caps, None)?;
+                for _ in 0..t {
+                    let mut eps = Vec::new();
+                    for qp in [up, down] {
+                        let (buf, mr) = buf_mr(&mut fabric, pd)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
                     }
+                    threads.push(eps);
                 }
-                Category::TwoXDynamic
-                | Category::Dynamic
-                | Category::SharedDynamic
-                | Category::Static => {
-                    let ctx = fabric.open_ctx(Mlx5Env::default())?;
-                    let pd = fabric.alloc_pd(ctx)?;
-                    let (use_td, attr, stride) = match category {
-                        Category::TwoXDynamic => (true, TdInitAttr::independent(), 2u32),
-                        Category::Dynamic => (true, TdInitAttr::independent(), 1),
-                        Category::SharedDynamic => (true, TdInitAttr::paired(), 1),
-                        _ => (false, TdInitAttr::independent(), 1),
-                    };
-                    for _ in 0..t {
-                        // Create 2*stride QPs; the used pair is every
-                        // `stride`-th, mapped to one CQ; 2xDynamic's spare
-                        // pair gets its own CQ ("the number of QPs and CQs
-                        // in 2xDynamic is twice that of MPI everywhere").
-                        let used_cq = fabric.create_cq(ctx, 64)?;
-                        let spare_cq =
-                            if stride == 2 { Some(fabric.create_cq(ctx, 64)?) } else { None };
-                        let mut eps = Vec::new();
-                        for k in 0..(2 * stride) {
-                            let td = if use_td { Some(fabric.alloc_td(ctx, attr)?) } else { None };
-                            let used = k % stride == 0;
-                            let cq = if used { used_cq } else { spare_cq.unwrap() };
-                            let qp = fabric.create_qp(pd, cq, caps, td)?;
-                            if used {
-                                let addr =
-                                    buf_base + bufno * 64 * ((halo_bytes as u64 + 63) / 64 + 1);
-                                bufno += 1;
-                                let buf = fabric.declare_buf(addr, halo_bytes as u64);
-                                let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
-                                eps.push(ThreadEndpoint { qp, cq, buf, mr });
+            } else {
+                // Thread-exclusive pairs. `ctx` decides the context
+                // granularity; `qp`/`uar` decide provisioning and TDs.
+                let per_thread_ctx = policy.ctx.is_dedicated();
+                let stride: u32 = if policy.qp == QpProvision::TwoXEven { 2 } else { 1 };
+                let mut rank_scope: Option<(CtxId, PdId)> = None;
+                for _ in 0..t {
+                    let (ctx, pd) = if per_thread_ctx {
+                        let ctx = fabric.open_ctx(policy.env)?;
+                        let pd = fabric.alloc_pd(ctx)?;
+                        (ctx, pd)
+                    } else {
+                        match rank_scope {
+                            Some(scope) => scope,
+                            None => {
+                                let ctx = fabric.open_ctx(policy.env)?;
+                                let pd = fabric.alloc_pd(ctx)?;
+                                rank_scope = Some((ctx, pd));
+                                (ctx, pd)
                             }
                         }
-                        threads.push(eps);
-                    }
-                }
-                Category::MpiThreads => {
-                    let ctx = fabric.open_ctx(Mlx5Env::default())?;
-                    let pd = fabric.alloc_pd(ctx)?;
-                    let cq = fabric.create_cq(ctx, (4 * t).max(64))?;
-                    let up = fabric.create_qp(pd, cq, caps, None)?;
-                    let down = fabric.create_qp(pd, cq, caps, None)?;
-                    for _ in 0..t {
-                        let mut eps = Vec::new();
-                        for qp in [up, down] {
-                            let addr = buf_base + bufno * 64 * ((halo_bytes as u64 + 63) / 64 + 1);
-                            bufno += 1;
-                            let buf = fabric.declare_buf(addr, halo_bytes as u64);
-                            let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
+                    };
+                    // Create 2*stride QPs; the used pair is every
+                    // `stride`-th, mapped to one CQ; a 2x spare pair gets
+                    // its own CQ.
+                    let used_cq = fabric.create_cq(ctx, 64)?;
+                    let spare_cq =
+                        if stride == 2 { Some(fabric.create_cq(ctx, 64)?) } else { None };
+                    let mut eps = Vec::new();
+                    for k in 0..(2 * stride) {
+                        let td = match policy.uar {
+                            UarMap::Independent => {
+                                Some(fabric.alloc_td(ctx, TdInitAttr::independent())?)
+                            }
+                            UarMap::Paired => Some(fabric.alloc_td(ctx, TdInitAttr::paired())?),
+                            UarMap::Static => None,
+                        };
+                        let used = k % stride == 0;
+                        let cq = if used { used_cq } else { spare_cq.unwrap() };
+                        let qp = fabric.create_qp(pd, cq, caps, td)?;
+                        if used {
+                            let (buf, mr) = buf_mr(&mut fabric, pd)?;
                             eps.push(ThreadEndpoint { qp, cq, buf, mr });
                         }
-                        threads.push(eps);
                     }
+                    threads.push(eps);
                 }
             }
         }
-        Ok(Self { spec, category, fabric, threads, halo_bytes })
+        Ok(Self { spec, policy, fabric, threads, halo_bytes })
     }
 
     /// Timed halo-exchange phase: each hardware thread sends
@@ -140,7 +169,7 @@ impl StencilBench {
             msg_size: self.halo_bytes,
             features: Features::conservative(),
             cost: CostModel::calibrated(),
-            force_shared_qp_path: self.category == Category::MpiThreads,
+            force_shared_qp_path: self.policy.shares_qp(),
             ..Default::default()
         };
         let mut runner = Runner::new_multi(&self.fabric, &self.threads, cfg);
@@ -223,6 +252,7 @@ impl StencilBench {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::endpoints::Category;
 
     #[test]
     fn qp_cq_ratio_is_two_except_mpi_threads() {
@@ -254,8 +284,10 @@ mod tests {
 
     #[test]
     fn hybrid_reduces_ctxs() {
-        let s16 = StencilBench::new(JobSpec::new(16, 1), Category::Dynamic, DEFAULT_HALO_BYTES).unwrap();
-        let s1 = StencilBench::new(JobSpec::new(1, 16), Category::Dynamic, DEFAULT_HALO_BYTES).unwrap();
+        let s16 =
+            StencilBench::new(JobSpec::new(16, 1), Category::Dynamic, DEFAULT_HALO_BYTES).unwrap();
+        let s1 =
+            StencilBench::new(JobSpec::new(1, 16), Category::Dynamic, DEFAULT_HALO_BYTES).unwrap();
         assert!(s1.resources().uars_allocated < s16.resources().uars_allocated);
     }
 
@@ -272,7 +304,8 @@ mod tests {
     fn static_1_16_uses_third_level_sharing() {
         // §VII: "in 1.16, of the 32 QPs per CTX, 28 use the third level"
         // (4 land alone on low-latency uUARs, 28 share the 11 medium).
-        let s = StencilBench::new(JobSpec::new(1, 16), Category::Static, DEFAULT_HALO_BYTES).unwrap();
+        let s =
+            StencilBench::new(JobSpec::new(1, 16), Category::Static, DEFAULT_HALO_BYTES).unwrap();
         let mut shared_qps = 0;
         for eps in &s.threads {
             for e in eps {
@@ -282,5 +315,19 @@ mod tests {
             }
         }
         assert_eq!(shared_qps, 28);
+    }
+
+    #[test]
+    fn policy_grid_point_builds_stencil_shape() {
+        // An off-preset policy (scalable: shared CTX, paired TDs, trimmed
+        // static uUARs) drives the same two-QP-per-thread shape.
+        let s =
+            StencilBench::new(JobSpec::new(2, 8), EndpointPolicy::scalable(), DEFAULT_HALO_BYTES)
+                .unwrap();
+        let u = s.resources();
+        assert_eq!(u.qps, 2 * u.cqs);
+        assert_eq!(u.ctxs, 2);
+        let r = s.time_exchange(64);
+        assert_eq!(r.messages, 16 * 128);
     }
 }

@@ -5,11 +5,14 @@
 //! *Postlist* `p`, requesting one signaled completion every *Unsignaled*
 //! `q` WQEs, then poll its CQ for `c = d/q` completions. Feature toggles
 //! reproduce the paper's "All w/o f" methodology.
+//!
+//! Topologies come from [`crate::endpoints::EndpointPolicy`]; the §V
+//! sweep presets are `EndpointPolicy::sharing(resource, ways)` with
+//! [`SharedResource`] naming the swept axis.
 
 pub mod features;
 pub mod msgrate;
-pub mod sharing;
 
+pub use crate::endpoints::policy::SharedResource;
 pub use features::{FeatureSet, Features};
 pub use msgrate::{MsgRateConfig, MsgRateResult, Runner};
-pub use sharing::{SharedResource, SharingSpec};

@@ -73,9 +73,18 @@
 //!    Pinned by `sim::sched`'s tie tests and
 //!    `prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce`.
 //!
-//! `prop_fast_path_matches_general_path` and its fuzzed variant
+//! `prop_fast_path_matches_general_path` and its fuzzed variants
 //! (tests/properties.rs) pin end-to-end bit-exactness across randomized
 //! sharing topologies, QP depths, postlist sizes and >16-thread configs.
+//!
+//! Eligibility is computed from the *built topology* (`qp_sharers`,
+//! `cq_sharers`, uUAR locks, UAR-page exclusivity) — never from an
+//! endpoint-configuration label. Any
+//! [`EndpointPolicy`](crate::endpoints::EndpointPolicy) grid point
+//! therefore gets exactly the fast paths its actual sharing admits; the
+//! policy-level predicates (`EndpointPolicy::shares_qp` etc.) are the
+//! coarse program-shape view of the same facts, and the randomized
+//! grid-point fuzzer pins that the two never disagree on exactness.
 
 use std::collections::HashMap;
 
@@ -752,11 +761,11 @@ impl Runner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::endpoints::{Category, EndpointBuilder};
+    use crate::endpoints::{Category, EndpointPolicy};
 
     fn run_category(cat: Category, n: u32, features: Features) -> MsgRateResult {
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
         let cfg = MsgRateConfig { features, msgs_per_thread: 4096, ..Default::default() };
         Runner::new(&f, &set.threads, cfg).run()
     }
@@ -814,7 +823,7 @@ mod tests {
         ] {
             for features in [Features::all(), Features::conservative()] {
                 let mut f = Fabric::connectx4();
-                let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+                let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
                 let cfg = MsgRateConfig { features, msgs_per_thread: 1024, ..Default::default() };
                 let fast = Runner::new(&f, &set.threads, cfg).run();
                 let general = Runner::new(
@@ -851,7 +860,7 @@ mod tests {
         // must stay bit-identical to the stepped path, which dispatches
         // one event per step.
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(Category::MpiEverywhere, 16).build(&mut f).unwrap();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 16).unwrap();
         let cfg = MsgRateConfig { msgs_per_thread: 4096, ..Default::default() };
         let fast = Runner::new(&f, &set.threads, cfg).run();
         let general = Runner::new(
@@ -925,11 +934,15 @@ mod tests {
     #[test]
     fn forced_shared_path_costs_something() {
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(Category::MpiThreads, 1).build(&mut f).unwrap();
+        let set = EndpointPolicy::preset(Category::MpiThreads).build(&mut f, 1).unwrap();
         let base = Runner::new(
             &f,
             &set.threads,
-            MsgRateConfig { msgs_per_thread: 4096, features: Features::conservative(), ..Default::default() },
+            MsgRateConfig {
+                msgs_per_thread: 4096,
+                features: Features::conservative(),
+                ..Default::default()
+            },
         )
         .run();
         let forced = Runner::new(

@@ -1,7 +1,7 @@
 //! The communicator: nodes, ranks, endpoints, and timed phases.
 
 use crate::bench::{MsgRateConfig, MsgRateResult, Runner};
-use crate::endpoints::{Category, EndpointBuilder, EndpointSet, ResourceUsage, ThreadEndpoint};
+use crate::endpoints::{EndpointSet, ResourceUsage, ThreadEndpoint};
 use crate::verbs::error::Result;
 use crate::verbs::{Fabric, Opcode, QueueState, Wqe};
 
@@ -22,7 +22,7 @@ pub struct NodeState {
 pub struct RankComm {
     pub rank: u32,
     pub node: u32,
-    /// Endpoint set built per the job's category (one QP per thread).
+    /// Endpoint set built per the job's policy (one QP per thread).
     pub set: EndpointSet,
 }
 
@@ -36,9 +36,9 @@ pub struct Universe {
 }
 
 impl Universe {
-    /// Materialize a job: build per-rank endpoint sets by category and
-    /// connect consecutive ranks' QPs ring-wise (the apps re-connect as
-    /// they need; connections model RC pairing).
+    /// Materialize a job: build per-rank endpoint sets from the job's
+    /// policy and connect consecutive ranks' QPs ring-wise (the apps
+    /// re-connect as they need; connections model RC pairing).
     pub fn launch(job: Job, rank_mem_bytes: usize) -> Result<Self> {
         let mut nodes = Vec::with_capacity(job.nodes as usize);
         let mut ranks = Vec::new();
@@ -48,11 +48,11 @@ impl Universe {
             let mut node_ranks = Vec::new();
             for r in 0..job.spec.ranks_per_node {
                 let rank = n * job.spec.ranks_per_node + r;
-                let mut builder = EndpointBuilder::new(job.category, job.spec.threads_per_rank);
+                let mut policy = job.policy;
                 // RMA staging region per thread: large enough that reads
                 // land inside the registered MR (writes <= 60 B inline).
-                builder.msg_size = 4096;
-                let set = builder.build(&mut fabric)?;
+                policy.msg_size = 4096;
+                let set = policy.build(&mut fabric, job.spec.threads_per_rank)?;
                 ranks.push(RankComm { rank, node: n, set });
                 memories.push(Memory::new(rank_mem_bytes));
                 node_ranks.push(rank);
@@ -190,9 +190,9 @@ impl Universe {
         ResourceUsage::of_fabric(&self.nodes[node as usize].fabric)
     }
 
-    /// Whether the job's category takes the shared-QP code path.
+    /// Whether the job's policy takes the shared-QP code path.
     pub fn shared_qp_code_path(&self) -> bool {
-        self.job.category == Category::MpiThreads
+        self.job.policy.shares_qp()
     }
 }
 
@@ -200,6 +200,7 @@ impl Universe {
 mod tests {
     use super::*;
     use crate::coordinator::job::JobSpec;
+    use crate::endpoints::Category;
 
     #[test]
     fn launch_builds_ranks_and_fabrics() {

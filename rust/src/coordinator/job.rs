@@ -1,6 +1,6 @@
 //! Job specification: the paper's `P.T` notation (§VII, Fig 14).
 
-use crate::endpoints::Category;
+use crate::endpoints::EndpointPolicy;
 
 /// `P.T`: P ranks per node, T threads per rank. The paper sweeps
 /// 16.1, 8.2, 4.4, 2.8, 1.16 so that `P*T = 16` hardware threads per
@@ -43,18 +43,20 @@ impl JobSpec {
     }
 }
 
-/// A full job: topology split + endpoint category + node count.
+/// A full job: topology split + endpoint policy + node count.
 #[derive(Debug, Clone, Copy)]
 pub struct Job {
     pub nodes: u32,
     pub spec: JobSpec,
-    pub category: Category,
+    pub policy: EndpointPolicy,
 }
 
 impl Job {
-    /// The paper's two-node testbed.
-    pub fn two_node(spec: JobSpec, category: Category) -> Self {
-        Self { nodes: 2, spec, category }
+    /// The paper's two-node testbed. Accepts a
+    /// [`Category`](crate::endpoints::Category) preset name or any
+    /// [`EndpointPolicy`].
+    pub fn two_node(spec: JobSpec, policy: impl Into<EndpointPolicy>) -> Self {
+        Self { nodes: 2, spec, policy: policy.into() }
     }
 
     pub fn total_ranks(&self) -> u32 {

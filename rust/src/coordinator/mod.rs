@@ -4,7 +4,10 @@
 //! A [`Job`] describes the paper's `P.T` hybrid split (P ranks per node,
 //! T threads per rank); [`Universe::launch`] materializes it: one
 //! [`Fabric`](crate::verbs::Fabric) per node, per-rank endpoint sets built
-//! by category, RC QP connections between peers, and a byte-addressable
+//! from the job's endpoint policy (any
+//! [`EndpointPolicy`](crate::endpoints::EndpointPolicy) point, with the
+//! paper categories as presets), RC QP connections between peers, and a
+//! byte-addressable
 //! memory per rank for RMA windows. Communication phases are timed on the
 //! virtual-clock NIC model; payloads move functionally through
 //! [`rma::Window`] so applications (e.g. the global-array DGEMM) compute

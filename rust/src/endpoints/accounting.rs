@@ -8,7 +8,7 @@
 
 use crate::verbs::Fabric;
 
-use super::builder::EndpointSet;
+use super::policy::EndpointSet;
 
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ResourceUsage {
@@ -53,6 +53,9 @@ impl ResourceUsage {
 
     /// Account only the objects belonging to one endpoint set (used when
     /// several processes share a fabric, e.g. the stencil's hybrid cases).
+    /// For any policy built alone on a fresh fabric this agrees exactly
+    /// with [`ResourceUsage::of_fabric`] (pinned by
+    /// `of_set_matches_of_fabric_for_presets` below).
     pub fn of_set(f: &Fabric, set: &EndpointSet) -> Self {
         let mut u = ResourceUsage::default();
         for &ctx in &set.ctxs {
@@ -77,6 +80,7 @@ impl ResourceUsage {
             u.memory_bytes += f.mem.cq_bytes(f.cqs[cq.index()].depth);
         }
         u.memory_bytes += set.pds.len() as u64 * f.mem.pd_bytes;
+        u.memory_bytes += set.mrs.len() as u64 * f.mem.mr_bytes;
         u
     }
 
@@ -122,12 +126,33 @@ impl std::fmt::Display for ResourceUsage {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::endpoints::{Category, EndpointBuilder};
+    use crate::endpoints::{Category, EndpointPolicy};
 
     fn usage(cat: Category, n: u32) -> ResourceUsage {
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
         ResourceUsage::of_set(&f, &set)
+    }
+
+    #[test]
+    fn of_set_matches_of_fabric_for_presets() {
+        // The set-scoped and fabric-wide accountings must agree whenever
+        // the set is the only thing built on the fabric — every preset,
+        // the §VII scalable policy, and 1/8/16 threads.
+        let mut policies: Vec<EndpointPolicy> =
+            Category::ALL.into_iter().map(EndpointPolicy::preset).collect();
+        policies.push(EndpointPolicy::scalable());
+        for p in policies {
+            for n in [1u32, 8, 16] {
+                let mut f = Fabric::connectx4();
+                let set = p.build(&mut f, n).unwrap();
+                assert_eq!(
+                    ResourceUsage::of_set(&f, &set),
+                    ResourceUsage::of_fabric(&f),
+                    "{p} x{n}"
+                );
+            }
+        }
     }
 
     #[test]

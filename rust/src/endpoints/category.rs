@@ -1,7 +1,15 @@
-//! The six endpoint categories of §VI.
+//! The six endpoint-category *names* of §VI.
+//!
+//! `Category` used to be a closed enum the builders matched on; it is now
+//! only the naming scheme for the six paper presets —
+//! [`EndpointPolicy::preset`](super::EndpointPolicy::preset) maps each
+//! name to its declarative policy, and the old enum queries
+//! (`shares_qp`, `sharing_level`) live on
+//! [`EndpointPolicy`](super::EndpointPolicy), derived from the axes
+//! rather than hardcoded per label.
 
-/// A scalable-endpoint category (paper §VI). Ordered from most independent
-/// (fastest, most resource-hungry) to most shared.
+/// A scalable-endpoint category name (paper §VI). Ordered from most
+/// independent (fastest, most resource-hungry) to most shared.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Category {
     /// One CTX per thread, each with its own QP and CQ — emulates multiple
@@ -61,31 +69,6 @@ impl Category {
             _ => return None,
         })
     }
-
-    /// Whether threads share a QP (and its CQ) in this category — the
-    /// Fig 4(b) level-4 configuration. Threads of such a category are
-    /// excluded from every DES engine fast path (coalescing, NIC
-    /// straight-line stages) and must run one-event-per-step; the
-    /// differential suite uses this to assert the fast paths stay off
-    /// exactly where the exactness proofs stop holding. Note the
-    /// converse is weaker: categories that share only UAR pages or
-    /// uUARs (SharedDynamic, Static) keep private QPs/CQs but may still
-    /// be kept off parts of the fast path by uUAR locks or page
-    /// sharing.
-    pub fn shares_qp(self) -> bool {
-        self == Category::MpiThreads
-    }
-
-    /// Thread-to-uUAR mapping level in Fig 4(b) (1 = maximally
-    /// independent … 4 = shared QP). `Static` is a mix of 2 and 3; we
-    /// report its dominant level for <= 16 threads.
-    pub fn sharing_level(self) -> u8 {
-        match self {
-            Category::MpiEverywhere | Category::TwoXDynamic | Category::Dynamic => 1,
-            Category::SharedDynamic | Category::Static => 2,
-            Category::MpiThreads => 4,
-        }
-    }
 }
 
 impl std::fmt::Display for Category {
@@ -110,12 +93,5 @@ mod tests {
     #[test]
     fn ordering_matches_independence() {
         assert!(Category::MpiEverywhere < Category::MpiThreads);
-    }
-
-    #[test]
-    fn only_mpi_threads_shares_qps() {
-        for c in Category::ALL {
-            assert_eq!(c.shares_qp(), c == Category::MpiThreads, "{c}");
-        }
     }
 }

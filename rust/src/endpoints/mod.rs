@@ -1,28 +1,37 @@
-//! Scalable communication endpoints — the paper's §VI contribution.
+//! Scalable communication endpoints — the paper's §VI contribution,
+//! generalized into a composable policy space.
 //!
-//! Six categories of endpoint configurations span the design space between
-//! *MPI everywhere* (one CTX per thread, maximum performance, 93.75 %
-//! hardware wastage) and *MPI+threads* (one QP for all threads, minimum
-//! resources, up to 7x worse throughput):
+//! Endpoint configurations span a *continuous* tradeoff between *MPI
+//! everywhere* (one CTX per thread, maximum performance, 93.75 % hardware
+//! wastage) and *MPI+threads* (one QP for all threads, minimum resources,
+//! up to 7x worse throughput). [`EndpointPolicy`] expresses any point in
+//! that space declaratively; the paper's six §VI categories are the named
+//! presets below, and the eight §V sweeps are
+//! [`EndpointPolicy::sharing`] presets:
 //!
-//! | Category        | Fig 4(b) level | CTXs | TDs              | QPs/thread |
-//! |-----------------|----------------|------|------------------|------------|
-//! | MpiEverywhere   | 1              | N    | none             | 1          |
-//! | TwoXDynamic     | 1              | 1    | 2N independent   | 1 (even)   |
-//! | Dynamic         | 1              | 1    | N independent    | 1          |
-//! | SharedDynamic   | 2              | 1    | N paired         | 1          |
-//! | Static          | 2+3            | 1    | none             | 1          |
-//! | MpiThreads      | 4              | 1    | none             | shared 1   |
+//! | Preset ([`Category`]) | Fig 4(b) level | ctx axis | qp axis | uar axis |
+//! |-----------------------|----------------|----------|---------|----------|
+//! | MpiEverywhere         | 1              | Of(1)    | 1/thread| static   |
+//! | TwoXDynamic           | 1              | All      | 2x even | indep    |
+//! | Dynamic               | 1              | All      | 1/thread| indep    |
+//! | SharedDynamic         | 2              | All      | 1/thread| paired   |
+//! | Static                | 2+3            | All      | 1/thread| static   |
+//! | MpiThreads            | 4              | All      | shared  | static   |
 //!
-//! [`EndpointBuilder`] constructs the exact verbs-object topology of each
-//! category on a [`Fabric`](crate::verbs::Fabric); [`ResourceUsage`]
-//! reports the QP/CQ/UAR/uUAR/memory accounting the paper's right-hand
-//! figure panels show.
+//! [`EndpointPolicy::scalable`] adds the §VII scalable-endpoint
+//! configuration (trimmed static uUARs + paired TDs), and
+//! [`EndpointPolicy::build`] constructs the exact verbs-object topology
+//! of any policy on a [`Fabric`](crate::verbs::Fabric);
+//! [`ResourceUsage`] reports the QP/CQ/UAR/uUAR/memory accounting the
+//! paper's right-hand figure panels show.
 
 pub mod accounting;
-pub mod builder;
 pub mod category;
+pub mod policy;
 
 pub use accounting::ResourceUsage;
-pub use builder::{EndpointBuilder, EndpointSet, ThreadEndpoint};
 pub use category::Category;
+pub use policy::{
+    BufLayout, CqDepth, EndpointPolicy, EndpointSet, MrMap, QpProvision, SharedResource,
+    ThreadEndpoint, UarMap, Ways,
+};

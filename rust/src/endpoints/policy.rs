@@ -1,0 +1,1170 @@
+//! The composable endpoint-policy API.
+//!
+//! The paper's six §VI categories and eight §V sweep topologies are not
+//! distinct mechanisms — they are points in one continuous sharing space
+//! (arXiv 2005.00263 and the MPIX Stream proposal argue the same: the
+//! right abstraction is a *policy* the runtime maps to resources, not a
+//! fixed menu). [`EndpointPolicy`] makes that space first-class: each
+//! axis below is declarative, and one unified [`EndpointPolicy::build`]
+//! replaces the old `EndpointBuilder` six-way match and `SharingSpec`'s
+//! per-resource topology builders.
+//!
+//! | axis        | meaning                                              |
+//! |-------------|------------------------------------------------------|
+//! | `ctx`       | threads sharing one device context                   |
+//! | `qp`        | QPs per thread: 1, 2x-with-even-selection, or shared |
+//! | `uar`       | TD/uUAR mapping: independent / paired / static       |
+//! | `cq`        | threads sharing one completion queue                 |
+//! | `cq_depth`  | CQ depth rule (scaled by sharers, or fixed)          |
+//! | `buf`       | payload-buffer layout (§V-A)                         |
+//! | `pd`        | threads sharing one protection domain (§V-C)         |
+//! | `mr`        | MR registration granularity (§V-D)                   |
+//! | `env`       | static uUAR provisioning of each CTX (Appendix B)    |
+//!
+//! The named presets — [`EndpointPolicy::preset`] for the six paper
+//! categories, [`EndpointPolicy::sharing`] for the eight §V sweeps —
+//! produce topologies byte-identical to the historical builders (pinned
+//! by `tests/policy_equivalence.rs` against frozen copies of the old
+//! construction code), and [`EndpointPolicy::scalable`] adds the §VII
+//! scalable-endpoint configuration: a shared CTX opened with trimmed
+//! static uUARs (`MLX5_TOTAL_UUARS=2`) plus paired TDs, which matches
+//! Dynamic's message rate under the §IV defaults at ~2.7x fewer uUARs.
+//!
+//! Derived predicates ([`EndpointPolicy::shares_qp`],
+//! [`EndpointPolicy::sharing_level`], [`EndpointPolicy::cq_exclusive`])
+//! replace the old `Category` enum queries: code that used to ask "is
+//! this the MPI+threads label?" now asks the policy what it actually
+//! shares, which extends correctly to arbitrary grid points. The DES
+//! engine itself goes one step further and derives fast-path eligibility
+//! from the *built* topology (see `bench::msgrate::Runner`), so any
+//! policy — preset or not — gets exactness-safe coalescing.
+//!
+//! Policies round-trip through a CLI grammar
+//! (`ctx=shared,qp=2x,uar=indep,cq=1,...`): see [`EndpointPolicy::parse`]
+//! and the `Display` impl.
+
+use crate::mlx5::Mlx5Env;
+use crate::verbs::error::Result;
+use crate::verbs::types::{BufId, CqId, CtxId, MrId, PdId, QpCaps, QpId, TdId, TdInitAttr};
+use crate::verbs::Fabric;
+
+use super::category::Category;
+
+/// Sharing degree of one axis: how many threads share one instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Ways {
+    /// Every thread in the axis' scope shares a single instance.
+    All,
+    /// `k` threads share one instance (`Of(1)` = dedicated per thread).
+    Of(u32),
+}
+
+impl Ways {
+    /// Concrete sharing degree against a scope of `scope` threads.
+    pub fn resolve(self, scope: u32) -> u32 {
+        match self {
+            Ways::All => scope,
+            Ways::Of(k) => k,
+        }
+    }
+
+    /// One instance per thread?
+    pub fn is_dedicated(self) -> bool {
+        self == Ways::Of(1)
+    }
+
+    fn token(self) -> String {
+        match self {
+            Ways::All => "shared".to_string(),
+            Ways::Of(k) => k.to_string(),
+        }
+    }
+
+    fn parse_token(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "shared" | "all" => Ok(Ways::All),
+            "dedicated" | "per-thread" | "indep" => Ok(Ways::Of(1)),
+            _ => s
+                .parse::<u32>()
+                .map(Ways::Of)
+                .map_err(|_| format!("bad sharing ways '{s}' (expect a count or 'shared')")),
+        }
+    }
+}
+
+/// How QPs are provisioned for threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QpProvision {
+    /// One thread-exclusive QP per thread.
+    PerThread,
+    /// Two QPs per thread, threads drive only the even ones — the §V-B
+    /// fix for the contiguous-UAR BlueFlame anomaly (2xDynamic).
+    TwoXEven,
+    /// Threads share QPs at the given degree (Fig 4b level 4). Shared
+    /// QPs cannot be TD-assigned (no single-thread guarantee), so this
+    /// requires [`UarMap::Static`].
+    Shared(Ways),
+}
+
+/// Thread-to-uUAR mapping of thread-exclusive QPs (Fig 4b levels 1-3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UarMap {
+    /// Maximally independent TDs (`sharing=1`): one UAR page per QP, the
+    /// page's second uUAR wasted (level 1).
+    Independent,
+    /// Paired TDs (`sharing=2`, mlx5's hardcoded default): even/odd TD
+    /// pairs share a UAR page, one uUAR each (level 2).
+    Paired,
+    /// No TDs: QPs land on the CTX's statically allocated uUARs by the
+    /// Appendix B policy (levels 2-3, lock kept where shared).
+    Static,
+}
+
+/// CQ depth rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CqDepth {
+    /// `max(base, 2 * sharers)`: a CQ serving `s` threads holds at least
+    /// two CQE slots per sharer (what every historical builder did).
+    Scaled(u32),
+    /// Exactly this depth regardless of sharing.
+    Fixed(u32),
+}
+
+/// Payload-buffer layout (§V-A, Fig 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufLayout {
+    /// One private buffer per thread on its own 64 B cacheline.
+    Aligned,
+    /// Private buffers packed back-to-back at message-size stride
+    /// (Fig 6's unaligned case: 16 x 2 B buffers on one cacheline).
+    Packed,
+    /// Groups of threads point their WQEs at one group-leader cacheline;
+    /// each thread still declares its own buffer object (the §V-A
+    /// sweep's x-way BUF sharing).
+    Group(Ways),
+    /// A single buffer object shared by every thread.
+    SharedOne,
+}
+
+/// MR registration granularity (§V-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MrMap {
+    /// One MR per thread covering exactly its payload buffer.
+    PerThread,
+    /// One MR per group of threads, spanning the group's cachelines.
+    SpanGroup(u32),
+}
+
+/// Which verbs (or non-IB) resource a §V sweep shares. Retained as the
+/// *names* of the eight sweep presets ([`EndpointPolicy::sharing`]); the
+/// per-resource builders they used to select are gone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SharedResource {
+    /// §V-A: the payload buffer.
+    Buf,
+    /// §V-B: the device context, with maximally independent TDs.
+    Ctx,
+    /// §V-B variant: CTX sharing with 2x TDs, using only the even ones.
+    CtxTwoXQps,
+    /// §V-B variant: CTX sharing with `sharing=2` TDs (mlx5's hardcoded
+    /// level-2 assignment).
+    CtxSharing2,
+    /// §V-C: the protection domain (within one shared CTX).
+    Pd,
+    /// §V-D: the memory region (independent cache-aligned BUFs inside).
+    Mr,
+    /// §V-E: the completion queue (within one shared CTX).
+    Cq,
+    /// §V-F: the queue pair itself.
+    Qp,
+}
+
+impl SharedResource {
+    /// All eight, in the paper's §V presentation order.
+    pub const ALL: [SharedResource; 8] = [
+        SharedResource::Buf,
+        SharedResource::Ctx,
+        SharedResource::CtxTwoXQps,
+        SharedResource::CtxSharing2,
+        SharedResource::Pd,
+        SharedResource::Mr,
+        SharedResource::Cq,
+        SharedResource::Qp,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SharedResource::Buf => "BUF",
+            SharedResource::Ctx => "CTX",
+            SharedResource::CtxTwoXQps => "CTX (2xQPs)",
+            SharedResource::CtxSharing2 => "CTX (Sharing 2)",
+            SharedResource::Pd => "PD",
+            SharedResource::Mr => "MR",
+            SharedResource::Cq => "CQ",
+            SharedResource::Qp => "QP",
+        }
+    }
+}
+
+/// The endpoint handed to one thread: the QP it posts on and the CQ it
+/// polls. Several threads may receive the same QP/CQ (sharing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThreadEndpoint {
+    pub qp: QpId,
+    pub cq: CqId,
+    pub buf: BufId,
+    pub mr: MrId,
+}
+
+/// The full set of endpoints built for an N-thread process, plus every
+/// object created along the way (for accounting).
+#[derive(Debug, Clone)]
+pub struct EndpointSet {
+    /// The policy this set was built from.
+    pub policy: EndpointPolicy,
+    pub threads: Vec<ThreadEndpoint>,
+    pub ctxs: Vec<CtxId>,
+    pub pds: Vec<PdId>,
+    pub qps: Vec<QpId>,
+    pub cqs: Vec<CqId>,
+    pub mrs: Vec<MrId>,
+}
+
+/// A declarative endpoint configuration: one point in the continuous
+/// sharing space (module docs). Build it on a fabric with
+/// [`EndpointPolicy::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EndpointPolicy {
+    /// Threads sharing one device context.
+    pub ctx: Ways,
+    /// QP provisioning per thread.
+    pub qp: QpProvision,
+    /// TD/uUAR mapping of thread-exclusive QPs.
+    pub uar: UarMap,
+    /// Threads sharing one CQ. With [`QpProvision::Shared`] this must
+    /// equal the QP sharing degree (the shared QP's sharers poll its CQ).
+    pub cq: Ways,
+    /// CQ depth rule.
+    pub cq_depth: CqDepth,
+    /// Payload-buffer layout.
+    pub buf: BufLayout,
+    /// Threads sharing one PD within a CTX group.
+    pub pd: Ways,
+    /// MR registration granularity.
+    pub mr: MrMap,
+    /// Static uUAR provisioning of each CTX (Appendix B env knobs).
+    pub env: Mlx5Env,
+    /// QP creation capabilities.
+    pub qp_caps: QpCaps,
+    /// Payload size per message in bytes (2 B in §IV).
+    pub msg_size: u32,
+    /// Base address for payload buffers. `None` keeps each build's range
+    /// disjoint from previous builds on the same fabric.
+    pub buf_base: Option<u64>,
+}
+
+impl Default for EndpointPolicy {
+    /// The Dynamic configuration: one shared CTX, one maximally
+    /// independent TD-assigned QP and one CQ per thread.
+    fn default() -> Self {
+        Self {
+            ctx: Ways::All,
+            qp: QpProvision::PerThread,
+            uar: UarMap::Independent,
+            cq: Ways::Of(1),
+            cq_depth: CqDepth::Scaled(2),
+            buf: BufLayout::Aligned,
+            pd: Ways::All,
+            mr: MrMap::PerThread,
+            env: Mlx5Env::default(),
+            qp_caps: QpCaps::default(),
+            msg_size: 2,
+            buf_base: None,
+        }
+    }
+}
+
+impl From<Category> for EndpointPolicy {
+    fn from(cat: Category) -> Self {
+        EndpointPolicy::preset(cat)
+    }
+}
+
+impl EndpointPolicy {
+    /// The named preset for one of the six §VI paper categories.
+    /// Byte-identical to the historical `EndpointBuilder` topologies
+    /// (pinned by `tests/policy_equivalence.rs`).
+    pub fn preset(cat: Category) -> Self {
+        let p = Self::default();
+        match cat {
+            Category::MpiEverywhere => Self { ctx: Ways::Of(1), uar: UarMap::Static, ..p },
+            Category::TwoXDynamic => Self { qp: QpProvision::TwoXEven, ..p },
+            Category::Dynamic => p,
+            Category::SharedDynamic => Self { uar: UarMap::Paired, ..p },
+            Category::Static => Self { uar: UarMap::Static, ..p },
+            Category::MpiThreads => Self {
+                qp: QpProvision::Shared(Ways::All),
+                uar: UarMap::Static,
+                cq: Ways::All,
+                ..p
+            },
+        }
+    }
+
+    /// The named preset for one §V sweep: share `resource` at degree
+    /// `ways` while keeping everything else at the naïve-endpoint
+    /// baseline (one independent TD-assigned QP per thread).
+    /// Byte-identical to the historical `SharingSpec` topologies.
+    pub fn sharing(resource: SharedResource, ways: u32) -> Self {
+        assert!(ways >= 1, "sharing ways must be at least 1");
+        let p = Self {
+            cq_depth: CqDepth::Scaled(64),
+            buf_base: Some(0x40_0000),
+            ..Self::default()
+        };
+        match resource {
+            SharedResource::Buf => Self {
+                ctx: Ways::Of(1),
+                buf: BufLayout::Group(Ways::Of(ways)),
+                ..p
+            },
+            SharedResource::Ctx => Self { ctx: Ways::Of(ways), ..p },
+            SharedResource::CtxTwoXQps => Self {
+                ctx: Ways::Of(ways),
+                qp: QpProvision::TwoXEven,
+                ..p
+            },
+            SharedResource::CtxSharing2 => Self {
+                ctx: Ways::Of(ways),
+                uar: UarMap::Paired,
+                ..p
+            },
+            SharedResource::Pd => Self { pd: Ways::Of(ways), ..p },
+            SharedResource::Mr => Self { mr: MrMap::SpanGroup(ways), ..p },
+            SharedResource::Cq => Self { cq: Ways::Of(ways), ..p },
+            SharedResource::Qp => Self {
+                qp: QpProvision::Shared(Ways::Of(ways)),
+                uar: UarMap::Static,
+                cq: Ways::Of(ways),
+                ..p
+            },
+        }
+    }
+
+    /// The §VII scalable-endpoint preset: Dynamic's thread-exclusive
+    /// QPs/CQs inside one shared CTX, but with paired TDs and the CTX
+    /// opened at trimmed static provisioning (`MLX5_TOTAL_UUARS=2`,
+    /// `MLX5_NUM_LOW_LAT_UUARS=1`). Under the §IV defaults (Postlist 32:
+    /// DoorBell path, so UAR-page pairing costs only negligible register
+    /// -port sharing) it matches Dynamic's message rate while allocating
+    /// 18 uUARs to Dynamic's 48 at 16 threads (~2.7x fewer; ≤ half).
+    /// Latency-oriented conservative semantics should still prefer
+    /// 2xDynamic, which keeps BlueFlame pages private.
+    pub fn scalable() -> Self {
+        Self {
+            uar: UarMap::Paired,
+            env: Mlx5Env { total_uuars: 2, num_low_lat_uuars: 1, shut_up_bf: false },
+            ..Self::default()
+        }
+    }
+
+    // ------------------------------------------------------- predicates
+
+    /// Whether threads share QPs — the Fig 4(b) level-4 configuration,
+    /// i.e. the `MPI_THREAD_MULTIPLE` code path (depth atomics, extra
+    /// branches, shared CQ polling). Threads of such a policy are
+    /// excluded from every DES engine fast path (coalescing, NIC
+    /// straight-line stages) and run one-event-per-step; the runner
+    /// re-derives this from the built topology, so the predicate and the
+    /// engine agree by construction.
+    pub fn shares_qp(&self) -> bool {
+        matches!(self.qp, QpProvision::Shared(_))
+    }
+
+    /// Every thread posts to QPs no other thread touches.
+    pub fn qp_exclusive(&self) -> bool {
+        !self.shares_qp()
+    }
+
+    /// Every thread polls a CQ no other thread touches.
+    pub fn cq_exclusive(&self) -> bool {
+        self.qp_exclusive() && self.cq.is_dedicated()
+    }
+
+    /// Dominant thread-to-uUAR mapping level in Fig 4(b) for `nthreads`
+    /// threads (1 = maximally independent … 4 = shared QP). Static
+    /// assignment is a mix of levels 2 and 3; its dominant level for
+    /// <= 16 threads is 2 once the CTX is shared.
+    pub fn sharing_level(&self, nthreads: u32) -> u8 {
+        if self.shares_qp() {
+            return 4;
+        }
+        match self.uar {
+            UarMap::Independent => 1,
+            UarMap::Paired => 2,
+            UarMap::Static => {
+                if self.ctx.resolve(nthreads) <= 1 {
+                    1
+                } else {
+                    2
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ build
+
+    /// CQ depth for a CQ serving `sharers` threads.
+    fn cq_depth_for(&self, sharers: u32) -> u32 {
+        match self.cq_depth {
+            CqDepth::Scaled(base) => base.max(2 * sharers),
+            CqDepth::Fixed(v) => v,
+        }
+    }
+
+    /// Payload address of global thread `i` (of `n`).
+    fn buf_addr(&self, base: u64, i: u32, n: u32) -> u64 {
+        match self.buf {
+            BufLayout::Aligned => base + i as u64 * 64,
+            BufLayout::Packed => base + i as u64 * self.msg_size as u64,
+            BufLayout::Group(w) => {
+                let g = w.resolve(n);
+                base + ((i / g) * g) as u64 * 64
+            }
+            BufLayout::SharedOne => base,
+        }
+    }
+
+    fn alloc_td(&self, fabric: &mut Fabric, ctx: CtxId) -> Result<Option<TdId>> {
+        Ok(match self.uar {
+            UarMap::Independent => Some(fabric.alloc_td(ctx, TdInitAttr::independent())?),
+            UarMap::Paired => Some(fabric.alloc_td(ctx, TdInitAttr::paired())?),
+            UarMap::Static => None,
+        })
+    }
+
+    /// Declare thread `i`'s payload buffer and resolve its MR. `local`
+    /// is the thread's index within its CTX group.
+    #[allow(clippy::too_many_arguments)]
+    fn thread_buf_mr(
+        &self,
+        fabric: &mut Fabric,
+        set: &mut EndpointSet,
+        shared_buf: &mut Option<BufId>,
+        span_mrs: &[MrId],
+        pd: PdId,
+        base: u64,
+        i: u32,
+        local: u32,
+        n: u32,
+    ) -> Result<(BufId, MrId)> {
+        let msg = self.msg_size as u64;
+        let buf = match self.buf {
+            // Capture the id `declare_buf` returns instead of recomputing
+            // it from the container length — the historical builder's
+            // `BufId(bufs.len() - 1)` broke as soon as anything else
+            // declared a buffer in between.
+            BufLayout::SharedOne => match *shared_buf {
+                Some(b) => b,
+                None => {
+                    let b = fabric.declare_buf(base, msg);
+                    *shared_buf = Some(b);
+                    b
+                }
+            },
+            _ => fabric.declare_buf(self.buf_addr(base, i, n), msg),
+        };
+        let mr = match self.mr {
+            MrMap::PerThread => {
+                let addr = fabric.buf(buf).addr;
+                let mr = fabric.reg_mr(pd, addr, msg)?;
+                set.mrs.push(mr);
+                mr
+            }
+            MrMap::SpanGroup(m) => span_mrs[(local / m) as usize],
+        };
+        Ok((buf, mr))
+    }
+
+    /// Check axis consistency for an `nthreads`-thread build; returns the
+    /// resolved (ctx, pd) group sizes. Panics on a malformed policy —
+    /// these are programmer errors, like the historical builders'
+    /// asserts.
+    fn validate(&self, n: u32) -> (u32, u32) {
+        assert!(n >= 1, "at least one thread");
+        let cw = self.ctx.resolve(n);
+        assert!(cw >= 1 && n % cw == 0, "CTX ways {cw} must divide the thread count {n}");
+        let pw = self.pd.resolve(cw);
+        assert!(pw >= 1 && cw % pw == 0, "PD ways {pw} must divide the CTX group {cw}");
+        let cqw = self.cq.resolve(cw);
+        assert!(cqw >= 1 && cw % cqw == 0, "CQ ways {cqw} must divide the CTX group {cw}");
+        match self.qp {
+            QpProvision::Shared(w) => {
+                let qw = w.resolve(cw);
+                assert!(qw >= 1 && cw % qw == 0, "QP ways {qw} must divide the CTX group {cw}");
+                assert_eq!(
+                    cqw, qw,
+                    "a shared QP completes into a CQ shared by exactly its {qw} sharers"
+                );
+                assert_eq!(
+                    self.uar,
+                    UarMap::Static,
+                    "shared QPs cannot be TD-assigned (no single-thread guarantee)"
+                );
+                // Verbs: a WQE's MR must live in its QP's PD, so every
+                // sharer of a QP must sit in the QP's PD group.
+                assert!(
+                    pw % qw == 0,
+                    "QP ways {qw} must divide the PD ways {pw}: threads sharing a QP share its PD"
+                );
+            }
+            QpProvision::TwoXEven => {
+                assert_eq!(cqw, 1, "2x-even QP provisioning pairs each used QP with its own CQ");
+            }
+            QpProvision::PerThread => {}
+        }
+        if let BufLayout::Group(w) = self.buf {
+            let bw = w.resolve(n);
+            assert!(bw >= 1 && n % bw == 0, "BUF group ways {bw} must divide the thread count {n}");
+        }
+        if let MrMap::SpanGroup(m) = self.mr {
+            assert!(m >= 1 && cw % m == 0, "MR span ways {m} must divide the CTX group {cw}");
+            // Verbs: the span MR is registered on its first thread's PD
+            // and used by the whole group, so the group must not cross a
+            // PD boundary.
+            assert!(
+                pw % m == 0,
+                "MR span ways {m} must divide the PD ways {pw}: a span MR lives in one PD"
+            );
+            // A span MR covers m consecutive 64 B cachelines from its
+            // first thread's address; only the aligned per-thread layout
+            // (the §V-D shape) guarantees every member's buffer falls
+            // inside it.
+            assert_eq!(
+                self.buf,
+                BufLayout::Aligned,
+                "MR span groups need cache-aligned per-thread buffers"
+            );
+        }
+        (cw, pw)
+    }
+
+    /// Build the policy's verbs-object topology for `nthreads` threads on
+    /// `fabric`. One algorithm covers the whole sharing space; the
+    /// presets reproduce the historical builders' exact object/address
+    /// sequences (see `tests/policy_equivalence.rs`).
+    pub fn build(&self, fabric: &mut Fabric, nthreads: u32) -> Result<EndpointSet> {
+        let n = nthreads;
+        let (cw, pw) = self.validate(n);
+        let mut set = EndpointSet {
+            policy: *self,
+            threads: Vec::with_capacity(n as usize),
+            ctxs: Vec::new(),
+            pds: Vec::new(),
+            qps: Vec::new(),
+            cqs: Vec::new(),
+            mrs: Vec::new(),
+        };
+        // Base address keeps each build's range disjoint.
+        let base = self
+            .buf_base
+            .unwrap_or_else(|| 0x10_0000 * (fabric.bufs.len() as u64 + 1));
+        let mut shared_buf: Option<BufId> = None;
+
+        for cg in 0..n / cw {
+            let t0 = cg * cw;
+            let ctx = fabric.open_ctx(self.env)?;
+            set.ctxs.push(ctx);
+            let mut pds = Vec::with_capacity((cw / pw) as usize);
+            for _ in 0..cw / pw {
+                let pd = fabric.alloc_pd(ctx)?;
+                pds.push(pd);
+                set.pds.push(pd);
+            }
+            // Group-spanning MRs are registered up front (§V-D shape).
+            let mut span_mrs: Vec<MrId> = Vec::new();
+            if let MrMap::SpanGroup(m) = self.mr {
+                for g in 0..cw / m {
+                    let first = g * m;
+                    let addr = self.buf_addr(base, t0 + first, n);
+                    let mr = fabric.reg_mr(pds[(first / pw) as usize], addr, m as u64 * 64)?;
+                    span_mrs.push(mr);
+                    set.mrs.push(mr);
+                }
+            }
+            match self.qp {
+                QpProvision::Shared(w) => {
+                    let qw = w.resolve(cw);
+                    for g in 0..cw / qw {
+                        let pd = pds[((g * qw) / pw) as usize];
+                        let cq = fabric.create_cq(ctx, self.cq_depth_for(qw))?;
+                        let qp = fabric.create_qp(pd, cq, self.qp_caps, None)?;
+                        set.cqs.push(cq);
+                        set.qps.push(qp);
+                        for k in 0..qw {
+                            let local = g * qw + k;
+                            let tpd = pds[(local / pw) as usize];
+                            let (buf, mr) = self.thread_buf_mr(
+                                fabric,
+                                &mut set,
+                                &mut shared_buf,
+                                &span_mrs,
+                                tpd,
+                                base,
+                                t0 + local,
+                                local,
+                                n,
+                            )?;
+                            set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                        }
+                    }
+                }
+                QpProvision::PerThread | QpProvision::TwoXEven => {
+                    let stride: u32 = if self.qp == QpProvision::TwoXEven { 2 } else { 1 };
+                    let cqw = self.cq.resolve(cw);
+                    if cqw > 1 {
+                        // §V-E shape: one CQ per group, exclusive QPs
+                        // completing into it.
+                        for g in 0..cw / cqw {
+                            let cq = fabric.create_cq(ctx, self.cq_depth_for(cqw))?;
+                            set.cqs.push(cq);
+                            for k in 0..cqw {
+                                let local = g * cqw + k;
+                                let pd = pds[(local / pw) as usize];
+                                let td = self.alloc_td(fabric, ctx)?;
+                                let qp = fabric.create_qp(pd, cq, self.qp_caps, td)?;
+                                set.qps.push(qp);
+                                let (buf, mr) = self.thread_buf_mr(
+                                    fabric,
+                                    &mut set,
+                                    &mut shared_buf,
+                                    &span_mrs,
+                                    pd,
+                                    base,
+                                    t0 + local,
+                                    local,
+                                    n,
+                                )?;
+                                set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                            }
+                        }
+                    } else {
+                        // Per-thread CQs: provision all (TD, CQ, QP)
+                        // tuples of this CTX group, then bind threads to
+                        // every `stride`-th one.
+                        let mut made: Vec<(QpId, CqId)> =
+                            Vec::with_capacity((cw * stride) as usize);
+                        for j in 0..cw * stride {
+                            let pd = pds[((j / stride) / pw) as usize];
+                            let td = self.alloc_td(fabric, ctx)?;
+                            let cq = fabric.create_cq(ctx, self.cq_depth_for(1))?;
+                            let qp = fabric.create_qp(pd, cq, self.qp_caps, td)?;
+                            set.cqs.push(cq);
+                            set.qps.push(qp);
+                            made.push((qp, cq));
+                        }
+                        for k in 0..cw {
+                            let pd = pds[(k / pw) as usize];
+                            let (qp, cq) = made[(k * stride) as usize];
+                            let (buf, mr) = self.thread_buf_mr(
+                                fabric,
+                                &mut set,
+                                &mut shared_buf,
+                                &span_mrs,
+                                pd,
+                                base,
+                                t0 + k,
+                                k,
+                                n,
+                            )?;
+                            set.threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(set)
+    }
+
+    /// Build on a fresh ConnectX-4 fabric, returning the fabric plus one
+    /// endpoint per thread — the sweep-style entry point.
+    pub fn build_fresh(&self, nthreads: u32) -> Result<(Fabric, Vec<ThreadEndpoint>)> {
+        let mut fabric = Fabric::connectx4();
+        let set = self.build(&mut fabric, nthreads)?;
+        Ok((fabric, set.threads))
+    }
+
+    // ---------------------------------------------------- parse/format
+
+    /// Parse the CLI policy grammar: comma-separated `key=value` tokens
+    /// over [`EndpointPolicy::default`]. Round-trips with the `Display`
+    /// impl.
+    ///
+    /// ```text
+    /// ctx=shared|dedicated|<k>     threads per CTX
+    /// qp=1|2x|shared|shared:<k>    QP provisioning
+    /// uar=indep|paired|static      TD/uUAR mapping
+    /// cq=per-thread|shared|<k>     threads per CQ
+    /// depth=scaled:<b>|fixed:<v>   CQ depth rule
+    /// buf=aligned|packed|group:<w>|one
+    /// pd=shared|<k>                threads per PD
+    /// mr=per-thread|span:<k>       MR granularity
+    /// uuars=<total>:<lowlat>       MLX5_TOTAL_UUARS / NUM_LOW_LAT
+    /// bf=on|off                    MLX5_SHUT_UP_BF
+    /// msg=<bytes>  qpd=<depth>  base=0x<hex>
+    /// ```
+    ///
+    /// The bare word `scalable` names the §VII preset
+    /// ([`EndpointPolicy::scalable`]); a category label (e.g.
+    /// `2xdynamic`) names its preset.
+    pub fn parse(s: &str) -> std::result::Result<Self, String> {
+        match s.trim() {
+            "scalable" => return Ok(Self::scalable()),
+            w if !w.contains('=') => {
+                if let Some(cat) = Category::parse(w) {
+                    return Ok(Self::preset(cat));
+                }
+            }
+            _ => {}
+        }
+        let mut p = Self::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got '{tok}'"))?;
+            let sub = |v: &str| -> std::result::Result<u32, String> {
+                v.parse::<u32>().map_err(|_| format!("bad count '{v}' in '{tok}'"))
+            };
+            match key {
+                "ctx" => p.ctx = Ways::parse_token(val)?,
+                "qp" => {
+                    p.qp = match val {
+                        "1" | "per-thread" => QpProvision::PerThread,
+                        "2x" => QpProvision::TwoXEven,
+                        "shared" => QpProvision::Shared(Ways::All),
+                        _ => match val.strip_prefix("shared:") {
+                            Some(k) => QpProvision::Shared(Ways::parse_token(k)?),
+                            None => return Err(format!("bad qp '{val}'")),
+                        },
+                    }
+                }
+                "uar" => {
+                    p.uar = match val {
+                        "indep" | "independent" => UarMap::Independent,
+                        "paired" | "sharing2" => UarMap::Paired,
+                        "static" => UarMap::Static,
+                        _ => return Err(format!("bad uar '{val}'")),
+                    }
+                }
+                "cq" => p.cq = Ways::parse_token(val)?,
+                "depth" => {
+                    p.cq_depth = if let Some(b) = val.strip_prefix("scaled:") {
+                        CqDepth::Scaled(sub(b)?)
+                    } else if let Some(v) = val.strip_prefix("fixed:") {
+                        CqDepth::Fixed(sub(v)?)
+                    } else {
+                        CqDepth::Scaled(sub(val)?)
+                    }
+                }
+                "buf" => {
+                    p.buf = match val {
+                        "aligned" => BufLayout::Aligned,
+                        "packed" => BufLayout::Packed,
+                        "one" => BufLayout::SharedOne,
+                        _ => match val.strip_prefix("group:") {
+                            Some(w) => BufLayout::Group(Ways::parse_token(w)?),
+                            None => return Err(format!("bad buf '{val}'")),
+                        },
+                    }
+                }
+                "pd" => p.pd = Ways::parse_token(val)?,
+                "mr" => {
+                    p.mr = match val {
+                        "per-thread" => MrMap::PerThread,
+                        _ => match val.strip_prefix("span:") {
+                            Some(m) => MrMap::SpanGroup(sub(m)?),
+                            None => return Err(format!("bad mr '{val}'")),
+                        },
+                    }
+                }
+                "uuars" => {
+                    let (t, l) = val
+                        .split_once(':')
+                        .ok_or_else(|| format!("uuars wants <total>:<lowlat>, got '{val}'"))?;
+                    p.env.total_uuars = sub(t)?;
+                    p.env.num_low_lat_uuars = sub(l)?;
+                }
+                "bf" => {
+                    p.env.shut_up_bf = match val {
+                        "on" => false,
+                        "off" => true,
+                        _ => return Err(format!("bad bf '{val}' (on|off)")),
+                    }
+                }
+                "msg" => p.msg_size = sub(val)?,
+                "qpd" => p.qp_caps.depth = sub(val)?,
+                "base" => {
+                    let hex = val
+                        .strip_prefix("0x")
+                        .ok_or_else(|| format!("base wants 0x<hex>, got '{val}'"))?;
+                    p.buf_base = Some(
+                        u64::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad base '{val}'"))?,
+                    );
+                }
+                _ => return Err(format!("unknown policy key '{key}'")),
+            }
+        }
+        Ok(p)
+    }
+}
+
+impl std::str::FromStr for EndpointPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for EndpointPolicy {
+    /// Canonical grammar rendering; `parse` of this string reproduces the
+    /// policy exactly (round-trip pinned by tests).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ctx={}", self.ctx.token())?;
+        match self.qp {
+            QpProvision::PerThread => write!(f, ",qp=1")?,
+            QpProvision::TwoXEven => write!(f, ",qp=2x")?,
+            QpProvision::Shared(Ways::All) => write!(f, ",qp=shared")?,
+            QpProvision::Shared(w) => write!(f, ",qp=shared:{}", w.token())?,
+        }
+        let uar = match self.uar {
+            UarMap::Independent => "indep",
+            UarMap::Paired => "paired",
+            UarMap::Static => "static",
+        };
+        write!(f, ",uar={uar},cq={}", self.cq.token())?;
+        match self.cq_depth {
+            CqDepth::Scaled(b) => write!(f, ",depth=scaled:{b}")?,
+            CqDepth::Fixed(v) => write!(f, ",depth=fixed:{v}")?,
+        }
+        match self.buf {
+            BufLayout::Aligned => write!(f, ",buf=aligned")?,
+            BufLayout::Packed => write!(f, ",buf=packed")?,
+            BufLayout::Group(w) => write!(f, ",buf=group:{}", w.token())?,
+            BufLayout::SharedOne => write!(f, ",buf=one")?,
+        }
+        write!(f, ",pd={}", self.pd.token())?;
+        match self.mr {
+            MrMap::PerThread => write!(f, ",mr=per-thread")?,
+            MrMap::SpanGroup(m) => write!(f, ",mr=span:{m}")?,
+        }
+        let dflt = Mlx5Env::default();
+        if self.env.total_uuars != dflt.total_uuars
+            || self.env.num_low_lat_uuars != dflt.num_low_lat_uuars
+        {
+            write!(f, ",uuars={}:{}", self.env.total_uuars, self.env.num_low_lat_uuars)?;
+        }
+        if self.env.shut_up_bf {
+            write!(f, ",bf=off")?;
+        }
+        if self.msg_size != 2 {
+            write!(f, ",msg={}", self.msg_size)?;
+        }
+        if self.qp_caps.depth != QpCaps::default().depth {
+            write!(f, ",qpd={}", self.qp_caps.depth)?;
+        }
+        if let Some(b) = self.buf_base {
+            write!(f, ",base={b:#x}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::ResourceUsage;
+
+    fn build(cat: Category, n: u32) -> (Fabric, EndpointSet) {
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
+        (f, set)
+    }
+
+    // ------------------------------------------------- category presets
+
+    #[test]
+    fn mpi_everywhere_is_one_ctx_per_thread() {
+        let (_, set) = build(Category::MpiEverywhere, 16);
+        assert_eq!(set.ctxs.len(), 16);
+        assert_eq!(set.qps.len(), 16);
+        assert_eq!(set.cqs.len(), 16);
+        // All endpoints distinct.
+        let mut qps: Vec<_> = set.threads.iter().map(|t| t.qp).collect();
+        qps.dedup();
+        assert_eq!(qps.len(), 16);
+    }
+
+    #[test]
+    fn two_x_dynamic_uses_even_qps() {
+        let (f, set) = build(Category::TwoXDynamic, 16);
+        assert_eq!(set.ctxs.len(), 1);
+        assert_eq!(set.qps.len(), 32);
+        for (i, t) in set.threads.iter().enumerate() {
+            assert_eq!(t.qp, set.qps[2 * i]);
+        }
+        // Each used QP sits alone on its own UAR page.
+        let mut pages: Vec<u32> =
+            set.threads.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 16);
+    }
+
+    #[test]
+    fn shared_dynamic_pairs_threads_on_pages() {
+        let (f, set) = build(Category::SharedDynamic, 16);
+        let mut pages: Vec<u32> =
+            set.threads.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 8); // two threads per dynamic UAR page
+    }
+
+    #[test]
+    fn mpi_threads_shares_one_qp() {
+        let (_, set) = build(Category::MpiThreads, 16);
+        assert_eq!(set.qps.len(), 1);
+        assert!(set.threads.iter().all(|t| t.qp == set.qps[0]));
+    }
+
+    #[test]
+    fn static_uses_no_dynamic_pages() {
+        let (f, set) = build(Category::Static, 16);
+        assert_eq!(f.ctx(set.ctxs[0]).unwrap().dynamic_uar_pages(), 0);
+    }
+
+    #[test]
+    fn unaligned_bufs_pack_one_cacheline() {
+        let mut f = Fabric::connectx4();
+        let mut p = EndpointPolicy::preset(Category::Dynamic);
+        p.buf = BufLayout::Packed;
+        let set = p.build(&mut f, 16).unwrap();
+        let lines: std::collections::HashSet<u64> =
+            set.threads.iter().map(|t| f.buf(t.buf).cacheline()).collect();
+        assert_eq!(lines.len(), 1, "16 x 2B unaligned buffers fit one 64B line");
+    }
+
+    // ---------------------------------------------------- sweep presets
+
+    #[test]
+    fn buf_sharing_shares_cachelines() {
+        let (f, eps) = EndpointPolicy::sharing(SharedResource::Buf, 4).build_fresh(16).unwrap();
+        let lines: std::collections::HashSet<u64> =
+            eps.iter().map(|t| f.buf(t.buf).cacheline()).collect();
+        assert_eq!(lines.len(), 4);
+        // BUF sharing does not change any communication-resource count
+        // (§V-A): 16 QPs, 16 CQs regardless of x.
+        let u = ResourceUsage::of_fabric(&f);
+        assert_eq!((u.qps, u.cqs), (16, 16));
+    }
+
+    #[test]
+    fn ctx_sharing_reduces_uars() {
+        let u = |ways| {
+            let (f, _) =
+                EndpointPolicy::sharing(SharedResource::Ctx, ways).build_fresh(16).unwrap();
+            ResourceUsage::of_fabric(&f)
+        };
+        // 1-way: 16 CTXs x (8 static + 1 dynamic) = 144 UARs (Fig 3: the
+        // naive approach's UAR usage grows 9x vs threads).
+        assert_eq!(u(1).uars_allocated, 144);
+        // 16-way: 1 CTX x (8 + 16) = 24 UARs (Fig 7 right panel).
+        assert_eq!(u(16).uars_allocated, 24);
+        assert_eq!(u(16).ctxs, 1);
+    }
+
+    #[test]
+    fn ctx_2xqps_uses_even_tds() {
+        let (f, eps) =
+            EndpointPolicy::sharing(SharedResource::CtxTwoXQps, 16).build_fresh(16).unwrap();
+        // 32 TDs allocated, threads on every other page -> 16 distinct
+        // pages with a gap between consecutive ones.
+        let mut pages: Vec<u32> = eps.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 16);
+        for w in pages.windows(2) {
+            assert!(w[1] - w[0] >= 2, "even TDs leave a page gap");
+        }
+    }
+
+    #[test]
+    fn sharing2_pairs_on_pages() {
+        let (f, eps) =
+            EndpointPolicy::sharing(SharedResource::CtxSharing2, 16).build_fresh(16).unwrap();
+        let mut pages: Vec<u32> = eps.iter().map(|t| f.qp(t.qp).unwrap().uuar.page).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        assert_eq!(pages.len(), 8);
+    }
+
+    #[test]
+    fn pd_mr_sharing_leaves_hw_untouched() {
+        for res in [SharedResource::Pd, SharedResource::Mr] {
+            let base = {
+                let (f, _) = EndpointPolicy::sharing(res, 1).build_fresh(16).unwrap();
+                ResourceUsage::of_fabric(&f)
+            };
+            let shared = {
+                let (f, _) = EndpointPolicy::sharing(res, 16).build_fresh(16).unwrap();
+                ResourceUsage::of_fabric(&f)
+            };
+            assert_eq!(base.uars_allocated, shared.uars_allocated, "{res:?}");
+            assert_eq!(base.uuars_allocated, shared.uuars_allocated, "{res:?}");
+            assert_eq!(base.qps, shared.qps, "{res:?}");
+            assert_eq!(base.cqs, shared.cqs, "{res:?}");
+        }
+    }
+
+    #[test]
+    fn cq_sharing_reduces_cqs_only() {
+        let u = |ways| {
+            let (f, _) = EndpointPolicy::sharing(SharedResource::Cq, ways).build_fresh(16).unwrap();
+            ResourceUsage::of_fabric(&f)
+        };
+        assert_eq!(u(1).cqs, 16);
+        assert_eq!(u(16).cqs, 1);
+        assert_eq!(u(1).qps, u(16).qps);
+        assert_eq!(u(1).uars_allocated, u(16).uars_allocated);
+    }
+
+    #[test]
+    fn qp_sharing_reduces_qps_and_cqs() {
+        let u = |ways| {
+            let (f, _) = EndpointPolicy::sharing(SharedResource::Qp, ways).build_fresh(16).unwrap();
+            ResourceUsage::of_fabric(&f)
+        };
+        assert_eq!((u(1).qps, u(1).cqs), (16, 16));
+        assert_eq!((u(16).qps, u(16).cqs), (1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn invalid_ways_rejected() {
+        let _ = EndpointPolicy::sharing(SharedResource::Qp, 3).build_fresh(16);
+    }
+
+    // ----------------------------------------------- predicates/grammar
+
+    #[test]
+    fn preset_predicates_match_category_semantics() {
+        for cat in Category::ALL {
+            let p = EndpointPolicy::preset(cat);
+            assert_eq!(p.shares_qp(), cat == Category::MpiThreads, "{cat}");
+            assert_eq!(p.cq_exclusive(), cat != Category::MpiThreads, "{cat}");
+        }
+        // Fig 4(b) levels the old enum hardcoded, now derived.
+        let lvl = |c| EndpointPolicy::preset(c).sharing_level(16);
+        assert_eq!(lvl(Category::MpiEverywhere), 1);
+        assert_eq!(lvl(Category::TwoXDynamic), 1);
+        assert_eq!(lvl(Category::Dynamic), 1);
+        assert_eq!(lvl(Category::SharedDynamic), 2);
+        assert_eq!(lvl(Category::Static), 2);
+        assert_eq!(lvl(Category::MpiThreads), 4);
+    }
+
+    #[test]
+    fn grammar_round_trips_presets_and_sweeps() {
+        let mut policies: Vec<EndpointPolicy> = Category::ALL
+            .into_iter()
+            .map(EndpointPolicy::preset)
+            .collect();
+        for res in SharedResource::ALL {
+            policies.push(EndpointPolicy::sharing(res, 4));
+        }
+        policies.push(EndpointPolicy::scalable());
+        let mut odd = EndpointPolicy::preset(Category::Dynamic);
+        odd.buf = BufLayout::SharedOne;
+        odd.msg_size = 4096;
+        odd.qp_caps.depth = 256;
+        odd.cq_depth = CqDepth::Fixed(7);
+        odd.buf_base = Some(0x40_0000);
+        policies.push(odd);
+        for p in policies {
+            let s = p.to_string();
+            let back = EndpointPolicy::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(back, p, "round trip of '{s}'");
+        }
+    }
+
+    #[test]
+    fn grammar_accepts_issue_style_aliases() {
+        let p = EndpointPolicy::parse("ctx=shared,qp=2x,uar=indep,cq=per-thread").unwrap();
+        assert_eq!(p, EndpointPolicy::preset(Category::TwoXDynamic));
+        // Bare preset names are part of the grammar.
+        assert_eq!(EndpointPolicy::parse("scalable"), Ok(EndpointPolicy::scalable()));
+        assert_eq!(
+            EndpointPolicy::parse("2xdynamic"),
+            Ok(EndpointPolicy::preset(Category::TwoXDynamic))
+        );
+        assert!(EndpointPolicy::parse("ctx=bogus").is_err());
+        assert!(EndpointPolicy::parse("nonsense").is_err());
+        assert!(EndpointPolicy::parse("qp=three").is_err());
+    }
+
+    #[test]
+    fn shared_one_buf_aliases_single_declaration() {
+        // Satellite regression: the shared buffer id must be the captured
+        // return of `declare_buf`, not recomputed from the container
+        // length — build on a fabric that already holds buffers.
+        let mut f = Fabric::connectx4();
+        f.declare_buf(0x900_0000, 64);
+        f.declare_buf(0x900_1000, 64);
+        let mut p = EndpointPolicy::preset(Category::Dynamic);
+        p.buf = BufLayout::SharedOne;
+        let set = p.build(&mut f, 8).unwrap();
+        let b0 = set.threads[0].buf;
+        assert!(set.threads.iter().all(|t| t.buf == b0), "all threads share one BUF");
+        // Exactly one new buffer was declared, after the two pre-existing.
+        assert_eq!(f.bufs.len(), 3);
+        assert_eq!(b0.index(), 2);
+        // Every thread's MR covers the shared address.
+        for t in &set.threads {
+            assert_eq!(f.buf(t.buf).addr, f.buf(b0).addr);
+        }
+    }
+
+    #[test]
+    fn scalable_preset_trims_static_uuars() {
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::scalable().build(&mut f, 16).unwrap();
+        let u = ResourceUsage::of_set(&f, &set);
+        // 1 trimmed static page + 8 paired-TD dynamic pages = 18 uUARs,
+        // vs Dynamic's 48 (the §VII "fraction of the resources" claim).
+        assert_eq!(u.uuars_allocated, 18);
+        assert_eq!(u.uars_allocated, 9);
+        assert_eq!((u.qps, u.cqs, u.ctxs), (16, 16, 1));
+    }
+
+    #[test]
+    fn grid_point_off_the_presets_builds() {
+        // The ROADMAP item this API unlocks: arbitrary grid points, e.g.
+        // 4-way CTX groups, paired TDs, 2-way shared CQs, packed buffers.
+        let p = EndpointPolicy {
+            ctx: Ways::Of(4),
+            uar: UarMap::Paired,
+            cq: Ways::Of(2),
+            buf: BufLayout::Packed,
+            ..EndpointPolicy::default()
+        };
+        let mut f = Fabric::connectx4();
+        let set = p.build(&mut f, 16).unwrap();
+        assert_eq!(set.ctxs.len(), 4);
+        assert_eq!(set.qps.len(), 16);
+        assert_eq!(set.cqs.len(), 8);
+        assert_eq!(p.sharing_level(16), 2);
+        assert!(p.qp_exclusive() && !p.cq_exclusive());
+    }
+}

@@ -6,17 +6,20 @@
 //! interactive; the shapes are insensitive to it (deterministic model,
 //! no sampling noise).
 //!
-//! Every figure cell — one `run_spec`/`usage_of` evaluation — builds its
-//! own fabric and runner, so cells are fully independent; they are fanned
-//! out over [`crate::par::par_map`]'s scoped worker pool and reassembled
-//! in order, making the suite wallclock scale with cores while the table
-//! bytes stay identical to a sequential run.
+//! Every figure cell — one `run_policy`/`usage_of` evaluation — builds
+//! its own fabric and runner from an [`EndpointPolicy`], so cells are
+//! fully independent; they are fanned out over [`crate::par::par_map`]'s
+//! scoped worker pool and reassembled in order, making the suite
+//! wallclock scale with cores while the table bytes stay identical to a
+//! sequential run. Beyond the paper's exact figures, [`grid`] sweeps
+//! message-size x sharing-level with per-cell resource accounting — the
+//! coverage the composable policy API unlocks.
 
 use crate::apps::stencil::DEFAULT_HALO_BYTES;
 use crate::apps::{GlobalArray, StencilBench};
-use crate::bench::{FeatureSet, Features, MsgRateConfig, MsgRateResult, Runner, SharedResource, SharingSpec};
+use crate::bench::{FeatureSet, Features, MsgRateConfig, MsgRateResult, Runner, SharedResource};
 use crate::coordinator::JobSpec;
-use crate::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use crate::endpoints::{BufLayout, Category, EndpointPolicy, ResourceUsage};
 use crate::mlx5::MemModel;
 use crate::par::par_map;
 use crate::report::{f2, pct, Table};
@@ -33,21 +36,26 @@ fn msgs(quick: bool) -> u64 {
     }
 }
 
-fn run_spec(spec: &SharingSpec, features: Features, quick: bool) -> MsgRateResult {
-    let (fabric, eps) = spec.build().expect("topology build");
+fn run_policy(
+    policy: &EndpointPolicy,
+    nthreads: u32,
+    features: Features,
+    quick: bool,
+) -> MsgRateResult {
+    let (fabric, eps) = policy.build_fresh(nthreads).expect("topology build");
     let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), features, ..Default::default() };
     Runner::new(&fabric, &eps, cfg).run()
 }
 
-fn usage_of(spec: &SharingSpec) -> ResourceUsage {
-    let (fabric, _) = spec.build().expect("topology build");
+fn usage_of(policy: &EndpointPolicy, nthreads: u32) -> ResourceUsage {
+    let (fabric, _) = policy.build_fresh(nthreads).expect("topology build");
     ResourceUsage::of_fabric(&fabric)
 }
 
-/// Fan a `(spec, features)` grid out over the worker pool, returning the
-/// rates in cell order.
-fn par_rates(cells: Vec<(SharingSpec, Features)>, quick: bool) -> Vec<f64> {
-    par_map(cells, move |(spec, f)| run_spec(&spec, f, quick).mmsgs_per_sec)
+/// Fan a `(policy, threads, features)` grid out over the worker pool,
+/// returning the rates in cell order.
+fn par_rates(cells: Vec<(EndpointPolicy, u32, Features)>, quick: bool) -> Vec<f64> {
+    par_map(cells, move |(policy, n, f)| run_policy(&policy, n, f, quick).mmsgs_per_sec)
 }
 
 fn usage_row(label: &str, u: &ResourceUsage) -> Vec<String> {
@@ -67,7 +75,10 @@ const USAGE_HEADER: [&str; 7] = ["config", "QPs", "CQs", "UARs", "uUARs", "uUARs
 /// Table I: bytes per mlx5 verbs resource.
 pub fn table1() -> Vec<Table> {
     let m = MemModel::table1();
-    let mut t = Table::new("Table I: bytes per mlx5 verbs resource", &["CTX", "PD", "MR", "QP", "CQ", "total"]);
+    let mut t = Table::new(
+        "Table I: bytes per mlx5 verbs resource",
+        &["CTX", "PD", "MR", "QP", "CQ", "total"],
+    );
     let total = m.ctx_bytes + m.pd_bytes + m.mr_bytes + m.qp_bytes(128) + m.cq_bytes(2);
     t.row(vec![
         format!("{}K", m.ctx_bytes / 1024),
@@ -93,11 +104,13 @@ pub fn fig02(quick: bool) -> Vec<Table> {
     );
     let cells: Vec<(u32, Category)> = SWEEP
         .iter()
-        .flat_map(|&n| [Category::MpiEverywhere, Category::MpiThreads].into_iter().map(move |c| (n, c)))
+        .flat_map(|&n| {
+            [Category::MpiEverywhere, Category::MpiThreads].into_iter().map(move |c| (n, c))
+        })
         .collect();
     let results = par_map(cells, |(n, cat)| {
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+        let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
         let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), ..Default::default() };
         let r = Runner::new(&f, &set.threads, cfg).run();
         let u = ResourceUsage::of_set(&f, &set);
@@ -119,12 +132,12 @@ pub fn fig03(quick: bool) -> Vec<Table> {
         "Fig 3(left): naive endpoints, rate (Mmsg/s) across features",
         &["threads", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    let cells: Vec<(SharingSpec, Features)> = SWEEP
+    let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
         .iter()
         .flat_map(|&n| {
             FeatureSet::ALL_SETS
                 .iter()
-                .map(move |fs| (SharingSpec::new(SharedResource::Ctx, 1, n), fs.features()))
+                .map(move |fs| (EndpointPolicy::sharing(SharedResource::Ctx, 1), n, fs.features()))
         })
         .collect();
     let rates = par_rates(cells, quick);
@@ -136,7 +149,8 @@ pub fn fig03(quick: bool) -> Vec<Table> {
         perf.row(row);
     }
     let mut usage = Table::new("Fig 3(right): naive endpoints, resource usage", &USAGE_HEADER);
-    let usages = par_map(SWEEP.to_vec(), |n| usage_of(&SharingSpec::new(SharedResource::Ctx, 1, n)));
+    let usages =
+        par_map(SWEEP.to_vec(), |n| usage_of(&EndpointPolicy::sharing(SharedResource::Ctx, 1), n));
     for (&n, u) in SWEEP.iter().zip(&usages) {
         usage.row(usage_row(&format!("{n} threads"), u));
     }
@@ -149,12 +163,14 @@ pub fn fig05(quick: bool) -> Vec<Table> {
         "Fig 5(left): BUF sharing, rate (Mmsg/s)",
         &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    let cells: Vec<(SharingSpec, Features)> = SWEEP
+    let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
         .iter()
         .flat_map(|&ways| {
             FeatureSet::ALL_SETS
                 .iter()
-                .map(move |fs| (SharingSpec::new(SharedResource::Buf, ways, 16), fs.features()))
+                .map(move |fs| {
+                    (EndpointPolicy::sharing(SharedResource::Buf, ways), 16, fs.features())
+                })
         })
         .collect();
     let rates = par_rates(cells, quick);
@@ -166,7 +182,9 @@ pub fn fig05(quick: bool) -> Vec<Table> {
         perf.row(row);
     }
     let mut usage = Table::new("Fig 5(right): BUF sharing, resource usage", &USAGE_HEADER);
-    let usages = par_map(SWEEP.to_vec(), |ways| usage_of(&SharingSpec::new(SharedResource::Buf, ways, 16)));
+    let usages = par_map(SWEEP.to_vec(), |ways| {
+        usage_of(&EndpointPolicy::sharing(SharedResource::Buf, ways), 16)
+    });
     for (&ways, u) in SWEEP.iter().zip(&usages) {
         usage.row(usage_row(&format!("{ways}-way"), u));
     }
@@ -181,9 +199,11 @@ pub fn fig06(quick: bool) -> Vec<Table> {
         &["buffers", "rate_Mmsg/s", "pcie_reads", "pcie_reads_M/s"],
     );
     let results = par_map(vec![true, false], |aligned| {
-        let mut spec = SharingSpec::new(SharedResource::Buf, 1, 16);
-        spec.cache_aligned = aligned;
-        run_spec(&spec, Features::all().without_inlining(), quick)
+        let mut policy = EndpointPolicy::sharing(SharedResource::Buf, 1);
+        if !aligned {
+            policy.buf = BufLayout::Packed;
+        }
+        run_policy(&policy, 16, Features::all().without_inlining(), quick)
     });
     for (aligned, r) in [true, false].into_iter().zip(&results) {
         t.row(vec![
@@ -203,14 +223,14 @@ pub fn fig07(quick: bool) -> Vec<Table> {
         &["x-way", "All", "All w/o Postlist", "w/o Postlist 2xQPs", "w/o Postlist Sharing 2"],
     );
     let wo_pl = Features::all().without_postlist();
-    let cells: Vec<(SharingSpec, Features)> = SWEEP
+    let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
         .iter()
         .flat_map(|&ways| {
             [
-                (SharingSpec::new(SharedResource::Ctx, ways, 16), Features::all()),
-                (SharingSpec::new(SharedResource::Ctx, ways, 16), wo_pl),
-                (SharingSpec::new(SharedResource::CtxTwoXQps, ways, 16), wo_pl),
-                (SharingSpec::new(SharedResource::CtxSharing2, ways, 16), wo_pl),
+                (EndpointPolicy::sharing(SharedResource::Ctx, ways), 16, Features::all()),
+                (EndpointPolicy::sharing(SharedResource::Ctx, ways), 16, wo_pl),
+                (EndpointPolicy::sharing(SharedResource::CtxTwoXQps, ways), 16, wo_pl),
+                (EndpointPolicy::sharing(SharedResource::CtxSharing2, ways), 16, wo_pl),
             ]
         })
         .collect();
@@ -225,13 +245,19 @@ pub fn fig07(quick: bool) -> Vec<Table> {
         ]);
     }
     let mut usage = Table::new("Fig 7(right): CTX sharing, resource usage", &USAGE_HEADER);
-    let mut usage_specs: Vec<(String, SharingSpec)> = SWEEP
+    let mut usage_specs: Vec<(String, EndpointPolicy)> = SWEEP
         .iter()
-        .map(|&ways| (format!("{ways}-way"), SharingSpec::new(SharedResource::Ctx, ways, 16)))
+        .map(|&ways| (format!("{ways}-way"), EndpointPolicy::sharing(SharedResource::Ctx, ways)))
         .collect();
-    usage_specs.push(("16-way 2xQPs".to_string(), SharingSpec::new(SharedResource::CtxTwoXQps, 16, 16)));
-    usage_specs.push(("16-way Sharing2".to_string(), SharingSpec::new(SharedResource::CtxSharing2, 16, 16)));
-    let usages = par_map(usage_specs, |(label, spec)| (label, usage_of(&spec)));
+    usage_specs.push((
+        "16-way 2xQPs".to_string(),
+        EndpointPolicy::sharing(SharedResource::CtxTwoXQps, 16),
+    ));
+    usage_specs.push((
+        "16-way Sharing2".to_string(),
+        EndpointPolicy::sharing(SharedResource::CtxSharing2, 16),
+    ));
+    let usages = par_map(usage_specs, |(label, policy)| (label, usage_of(&policy, 16)));
     for (label, u) in &usages {
         usage.row(usage_row(label, u));
     }
@@ -246,12 +272,12 @@ pub fn fig08(quick: bool) -> Vec<Table> {
             &format!("Fig 8: {name} sharing, rate (Mmsg/s)"),
             &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
         );
-        let cells: Vec<(SharingSpec, Features)> = SWEEP
+        let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
             .iter()
             .flat_map(|&ways| {
                 FeatureSet::ALL_SETS
                     .iter()
-                    .map(move |fs| (SharingSpec::new(res, ways, 16), fs.features()))
+                    .map(move |fs| (EndpointPolicy::sharing(res, ways), 16, fs.features()))
             })
             .collect();
         let rates = par_rates(cells, quick);
@@ -262,8 +288,10 @@ pub fn fig08(quick: bool) -> Vec<Table> {
             }
             perf.row(row);
         }
-        let mut usage = Table::new(&format!("Fig 8: {name} sharing, resource usage"), &USAGE_HEADER);
-        let usages = par_map(vec![1u32, 16], move |ways| usage_of(&SharingSpec::new(res, ways, 16)));
+        let mut usage =
+            Table::new(&format!("Fig 8: {name} sharing, resource usage"), &USAGE_HEADER);
+        let usages =
+            par_map(vec![1u32, 16], move |ways| usage_of(&EndpointPolicy::sharing(res, ways), 16));
         for (&ways, u) in [1u32, 16].iter().zip(&usages) {
             usage.row(usage_row(&format!("{ways}-way"), u));
         }
@@ -279,12 +307,14 @@ pub fn fig09(quick: bool) -> Vec<Table> {
         "Fig 9(left): CQ sharing, rate (Mmsg/s)",
         &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    let cells: Vec<(SharingSpec, Features)> = SWEEP
+    let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
         .iter()
         .flat_map(|&ways| {
             FeatureSet::ALL_SETS
                 .iter()
-                .map(move |fs| (SharingSpec::new(SharedResource::Cq, ways, 16), fs.features()))
+                .map(move |fs| {
+                    (EndpointPolicy::sharing(SharedResource::Cq, ways), 16, fs.features())
+                })
         })
         .collect();
     let rates = par_rates(cells, quick);
@@ -296,7 +326,9 @@ pub fn fig09(quick: bool) -> Vec<Table> {
         perf.row(row);
     }
     let mut usage = Table::new("Fig 9(right): CQ sharing, resource usage", &USAGE_HEADER);
-    let usages = par_map(SWEEP.to_vec(), |ways| usage_of(&SharingSpec::new(SharedResource::Cq, ways, 16)));
+    let usages = par_map(SWEEP.to_vec(), |ways| {
+        usage_of(&EndpointPolicy::sharing(SharedResource::Cq, ways), 16)
+    });
     for (&ways, u) in SWEEP.iter().zip(&usages) {
         usage.row(usage_row(&format!("{ways}-way"), u));
     }
@@ -309,12 +341,13 @@ pub fn fig10(quick: bool) -> Vec<Table> {
     let mut out = Vec::new();
     for (p, title) in [(32u32, "Fig 10(a): Postlist 32"), (1, "Fig 10(b): Postlist 1")] {
         let mut t = Table::new(title, &["x-way", "q=1", "q=4", "q=16", "q=64"]);
-        let cells: Vec<(SharingSpec, Features)> = SWEEP
+        let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
             .iter()
             .flat_map(|&ways| {
                 QS.iter().map(move |&q| {
-                    let features = Features { postlist: p, unsignaled: q, inlining: true, blueflame: true };
-                    (SharingSpec::new(SharedResource::Cq, ways, 16), features)
+                    let features =
+                        Features { postlist: p, unsignaled: q, inlining: true, blueflame: true };
+                    (EndpointPolicy::sharing(SharedResource::Cq, ways), 16, features)
                 })
             })
             .collect();
@@ -337,12 +370,14 @@ pub fn fig11(quick: bool) -> Vec<Table> {
         "Fig 11(left): QP sharing, rate (Mmsg/s)",
         &["x-way", "All", "w/o BlueFlame", "w/o Inlining", "w/o Postlist", "w/o Unsignaled"],
     );
-    let cells: Vec<(SharingSpec, Features)> = SWEEP
+    let cells: Vec<(EndpointPolicy, u32, Features)> = SWEEP
         .iter()
         .flat_map(|&ways| {
             FeatureSet::ALL_SETS
                 .iter()
-                .map(move |fs| (SharingSpec::new(SharedResource::Qp, ways, 16), fs.features()))
+                .map(move |fs| {
+                    (EndpointPolicy::sharing(SharedResource::Qp, ways), 16, fs.features())
+                })
         })
         .collect();
     let rates = par_rates(cells, quick);
@@ -354,7 +389,9 @@ pub fn fig11(quick: bool) -> Vec<Table> {
         perf.row(row);
     }
     let mut usage = Table::new("Fig 11(right): QP sharing, resource usage", &USAGE_HEADER);
-    let usages = par_map(SWEEP.to_vec(), |ways| usage_of(&SharingSpec::new(SharedResource::Qp, ways, 16)));
+    let usages = par_map(SWEEP.to_vec(), |ways| {
+        usage_of(&EndpointPolicy::sharing(SharedResource::Qp, ways), 16)
+    });
     for (&ways, u) in SWEEP.iter().zip(&usages) {
         usage.row(usage_row(&format!("{ways}-way"), u));
     }
@@ -395,7 +432,15 @@ pub fn fig12(quick: bool) -> Vec<Table> {
 pub fn fig14(quick: bool) -> Vec<Table> {
     let mut perf = Table::new(
         "Fig 14(a): 5-pt stencil halo-exchange rate (Mmsg/s)",
-        &["P.T", "MPI everywhere", "2xDynamic", "Dynamic", "Shared Dynamic", "Static", "MPI+threads"],
+        &[
+            "P.T",
+            "MPI everywhere",
+            "2xDynamic",
+            "Dynamic",
+            "Shared Dynamic",
+            "Static",
+            "MPI+threads",
+        ],
     );
     let iterations = msgs(quick) / 16;
     let sweep = JobSpec::paper_sweep();
@@ -428,6 +473,55 @@ pub fn fig14(quick: bool) -> Vec<Table> {
     vec![perf, usage]
 }
 
+/// Policy grid: message-size x sharing-level sweep at 16 threads, with
+/// per-cell resource accounting — the scenario coverage the composable
+/// policy API unlocks beyond the paper's exact figures (ROADMAP item).
+/// Sharing levels run Fig 4(b) top to bottom, plus the §VII scalable
+/// preset; sizes straddle the 60 B inline cutoff.
+pub fn grid(quick: bool) -> Vec<Table> {
+    const SIZES: [u32; 5] = [2, 16, 60, 256, 1024];
+    const NTHREADS: u32 = 16;
+    let policies: Vec<(&str, EndpointPolicy)> = vec![
+        ("Dynamic", EndpointPolicy::preset(Category::Dynamic)),
+        ("SharedDynamic", EndpointPolicy::preset(Category::SharedDynamic)),
+        ("Static", EndpointPolicy::preset(Category::Static)),
+        ("Scalable", EndpointPolicy::scalable()),
+        ("MPI+threads", EndpointPolicy::preset(Category::MpiThreads)),
+    ];
+    let mut t = Table::new(
+        "Policy grid: message-size x sharing-level, 16 threads (All features)",
+        &["msg_B", "policy", "level", "rate_Mmsg/s", "uUARs", "uUARs_used", "mem_MiB"],
+    );
+    let cells: Vec<(u32, &str, EndpointPolicy)> = SIZES
+        .iter()
+        .flat_map(|&size| policies.iter().map(move |&(label, p)| (size, label, p)))
+        .collect();
+    let results = par_map(cells, move |(size, label, mut policy)| {
+        policy.msg_size = size;
+        let (fabric, eps) = policy.build_fresh(NTHREADS).expect("topology build");
+        let cfg = MsgRateConfig {
+            msgs_per_thread: msgs(quick) / 4,
+            msg_size: size,
+            ..Default::default()
+        };
+        let r = Runner::new(&fabric, &eps, cfg).run();
+        let u = ResourceUsage::of_fabric(&fabric);
+        (size, label, policy.sharing_level(NTHREADS), r.mmsgs_per_sec, u)
+    });
+    for (size, label, level, rate, u) in &results {
+        t.row(vec![
+            size.to_string(),
+            label.to_string(),
+            level.to_string(),
+            f2(*rate),
+            u.uuars_allocated.to_string(),
+            u.uuars_used.to_string(),
+            f2(u.memory_mib()),
+        ]);
+    }
+    vec![t]
+}
+
 /// Ablation A: the mlx5 QP-lock removal (rdma-core PR #327, §V-B). With
 /// the stock provider the lock on a TD-assigned QP is kept, costing every
 /// TD category its edge over MPI everywhere.
@@ -442,7 +536,7 @@ pub fn ablation_qp_lock(quick: bool) -> Vec<Table> {
     let rates = par_map(cells, |(cat, optimized)| {
         let mut fabric = Fabric::connectx4();
         fabric.qp_lock_optimization = optimized;
-        let set = EndpointBuilder::new(cat, 16).build(&mut fabric).unwrap();
+        let set = EndpointPolicy::preset(cat).build(&mut fabric, 16).unwrap();
         let cfg = MsgRateConfig {
             msgs_per_thread: msgs(quick) / 4,
             features: Features::conservative(),
@@ -464,10 +558,11 @@ pub fn ablation_quirk(quick: bool) -> Vec<Table> {
         "Ablation: flush-group anomaly model (CTX sharing w/o Postlist, Mmsg/s)",
         &["x-way", "quirk on", "quirk off"],
     );
-    let cells: Vec<(u32, bool)> = [8u32, 16].iter().flat_map(|&w| [(w, true), (w, false)]).collect();
+    let cells: Vec<(u32, bool)> =
+        [8u32, 16].iter().flat_map(|&w| [(w, true), (w, false)]).collect();
     let rates = par_map(cells, |(ways, on)| {
-        let spec = SharingSpec::new(SharedResource::Ctx, ways, 16);
-        let (fabric, eps) = spec.build().unwrap();
+        let policy = EndpointPolicy::sharing(SharedResource::Ctx, ways);
+        let (fabric, eps) = policy.build_fresh(16).unwrap();
         let mut cost = crate::nicsim::CostModel::calibrated();
         if !on {
             cost.flushgroup_extra = 0;
@@ -495,8 +590,8 @@ pub fn ablation_msg_size(quick: bool) -> Vec<Table> {
     );
     const SIZES: [u32; 7] = [2, 16, 60, 61, 256, 1024, 4096];
     let rates = par_map(SIZES.to_vec(), |size| {
-        let spec = SharingSpec::new(SharedResource::Ctx, 1, 16);
-        let (fabric, eps) = spec.build().unwrap();
+        let policy = EndpointPolicy::sharing(SharedResource::Ctx, 1);
+        let (fabric, eps) = policy.build_fresh(16).unwrap();
         let cfg = MsgRateConfig {
             msgs_per_thread: msgs(quick) / 4,
             msg_size: size,
@@ -525,6 +620,7 @@ pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
         "fig11" | "11" => fig11(quick),
         "fig12" | "12" => fig12(quick),
         "fig14" | "14" => fig14(quick),
+        "grid" | "policy-grid" => grid(quick),
         "ablation-qp-lock" => ablation_qp_lock(quick),
         "ablation-quirk" => ablation_quirk(quick),
         "ablation-msg-size" => ablation_msg_size(quick),
@@ -550,8 +646,9 @@ pub fn render_bytes(name: &str, quick: bool) -> Option<String> {
     })
 }
 
-/// Every figure id, in paper order, plus the design-choice ablations.
-pub const ALL_FIGURES: [&str; 15] = [
+/// Every figure id, in paper order, plus the policy grid and the
+/// design-choice ablations.
+pub const ALL_FIGURES: [&str; 16] = [
     "table1",
     "fig2",
     "fig3",
@@ -564,6 +661,7 @@ pub const ALL_FIGURES: [&str; 15] = [
     "fig11",
     "fig12",
     "fig14",
+    "grid",
     "ablation-qp-lock",
     "ablation-quirk",
     "ablation-msg-size",

@@ -23,9 +23,10 @@
 //! * [`nicsim`] — the NIC/PCIe/TLB/wire cost model.
 //! * [`bench`] — the perftest-style multithreaded RDMA-write message-rate
 //!   benchmark of §IV, as a virtual-time state machine.
-//! * [`endpoints`] — the six scalable-endpoint categories of §VI.
+//! * [`endpoints`] — the composable [`EndpointPolicy`] sharing space,
+//!   with the six §VI categories and eight §V sweeps as named presets.
 //! * [`coordinator`] — a mini MPI+threads runtime (ranks, threads, RMA
-//!   windows) with endpoint categories as a first-class feature.
+//!   windows) with endpoint policies as a first-class feature.
 //! * [`runtime`] — executes the AOT-compiled Pallas/JAX artifacts (DGEMM
 //!   tile, 5-pt stencil) from Rust; the PJRT client is gated out offline
 //!   in favor of a built-in native evaluator (see `runtime` docs).
@@ -48,4 +49,4 @@ pub mod sim;
 pub mod testing;
 pub mod verbs;
 
-pub use endpoints::Category;
+pub use endpoints::{Category, EndpointPolicy};

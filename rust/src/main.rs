@@ -4,17 +4,23 @@
 //! scep bench --figure fig12 [--quick]     regenerate a paper figure
 //! scep bench --all [--quick]              regenerate every figure
 //! scep resources --category 2xdynamic --threads 16
-//! scep run global-array [--n 256] [--category 2xdynamic]
-//! scep run stencil [--spec 4.4] [--category dynamic]
+//! scep resources --policy ctx=shared,qp=2x,uar=indep,cq=1 --threads 16
+//! scep run global-array [--n 256] [--category 2xdynamic | --policy <spec>]
+//! scep run stencil [--spec 4.4] [--category dynamic | --policy <spec>]
 //! scep calibrate                          print model calibration points
 //! ```
+//!
+//! `--policy` takes the declarative endpoint grammar (see
+//! `EndpointPolicy::parse`); `--category` and the named preset
+//! `--policy scalable` are shorthands for points on it. Policies
+//! round-trip: `scep resources` prints the canonical string back.
 
 use std::process::ExitCode;
 
 use scalable_ep::apps::{GlobalArray, StencilBench};
 use scalable_ep::bench::{Features, MsgRateConfig, Runner};
 use scalable_ep::coordinator::JobSpec;
-use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::runtime::ArtifactRuntime;
 use scalable_ep::verbs::Fabric;
 use scalable_ep::{figures, report};
@@ -22,10 +28,14 @@ use scalable_ep::{figures, report};
 fn usage() -> ExitCode {
     eprintln!(
         "usage:\n  scep bench (--figure <id> | --all) [--quick]\n  \
-         scep resources --category <cat> --threads <n>\n  \
-         scep run global-array [--n <elems>] [--category <cat>]\n  \
-         scep run stencil [--spec P.T] [--category <cat>] [--iters <n>]\n  \
-         scep calibrate\nfigures: {}",
+         scep resources (--category <cat> | --policy <spec>) --threads <n>\n  \
+         scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
+         scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
+         scep calibrate\n\
+         policy grammar: ctx=shared|<k>,qp=1|2x|shared[:k],uar=indep|paired|static,\
+         cq=<k>|shared,depth=scaled:<b>|fixed:<v>,buf=aligned|packed|group:<w>|one,\
+         pd=<k>|shared,mr=per-thread|span:<k>[,uuars=T:L][,msg=N] — or 'scalable'\n\
+         figures: {}",
         figures::ALL_FIGURES.join(", ")
     );
     ExitCode::from(2)
@@ -33,6 +43,24 @@ fn usage() -> ExitCode {
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Resolve `--policy` / `--category` into a policy plus a display label.
+/// `--policy` wins when both are given; it takes the full grammar plus
+/// the bare preset names (`scalable`, category labels). Returns `None`
+/// (after printing the error) on a bad spec.
+fn policy_from_args(args: &[String], default: Category) -> Option<(EndpointPolicy, String)> {
+    if let Some(spec) = flag_value(args, "--policy") {
+        return match EndpointPolicy::parse(&spec) {
+            Ok(p) => Some((p, spec)),
+            Err(e) => {
+                eprintln!("bad --policy '{spec}': {e}");
+                None
+            }
+        };
+    }
+    let cat = flag_value(args, "--category").and_then(|c| Category::parse(&c)).unwrap_or(default);
+    Some((EndpointPolicy::preset(cat), cat.to_string()))
 }
 
 fn main() -> ExitCode {
@@ -64,30 +92,32 @@ fn main() -> ExitCode {
             }
         }
         "resources" => {
-            let cat = flag_value(&args, "--category")
-                .and_then(|c| Category::parse(&c))
-                .unwrap_or(Category::TwoXDynamic);
+            let Some((policy, label)) = policy_from_args(&args, Category::TwoXDynamic) else {
+                return usage();
+            };
             let threads: u32 =
                 flag_value(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(16);
             let mut f = Fabric::connectx4();
-            let set = EndpointBuilder::new(cat, threads).build(&mut f).expect("build");
+            let set = policy.build(&mut f, threads).expect("build");
             let u = ResourceUsage::of_set(&f, &set);
-            println!("{} x {} threads:\n  {}", cat, threads, u);
+            println!("{} x {} threads:\n  policy: {}\n  {}", label, threads, policy, u);
+            println!("  sharing level: {}", policy.sharing_level(threads));
             println!("  uUAR waste: {}", report::pct(u.uuar_waste_fraction()));
             ExitCode::SUCCESS
         }
         "run" => {
-            let cat = flag_value(&args, "--category")
-                .and_then(|c| Category::parse(&c))
-                .unwrap_or(Category::TwoXDynamic);
+            let Some((policy, label)) = policy_from_args(&args, Category::TwoXDynamic) else {
+                return usage();
+            };
             match args.get(1).map(String::as_str) {
                 Some("global-array") => {
-                    let n: usize = flag_value(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(256);
-                    let ga = GlobalArray::new(cat, 16).expect("build");
+                    let n: usize =
+                        flag_value(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(256);
+                    let ga = GlobalArray::new(policy, 16).expect("build");
                     let r = ga.time_comm(16 * 1024, 2);
                     println!(
                         "global-array [{}]: comm {:.2} Mmsg/s over {} msgs; {}",
-                        cat, r.mmsgs_per_sec, r.messages, ga.resources()
+                        label, r.mmsgs_per_sec, r.messages, ga.resources()
                     );
                     let mut rt = ArtifactRuntime::new(ArtifactRuntime::default_dir())
                         .expect("PJRT client");
@@ -108,7 +138,7 @@ fn main() -> ExitCode {
                         flag_value(&args, "--iters").and_then(|v| v.parse().ok()).unwrap_or(2048);
                     let s = StencilBench::new(
                         spec,
-                        cat,
+                        policy,
                         scalable_ep::apps::stencil::DEFAULT_HALO_BYTES,
                     )
                     .expect("build");
@@ -116,7 +146,7 @@ fn main() -> ExitCode {
                     println!(
                         "stencil {} [{}]: halo exchange {:.2} Mmsg/s; {}",
                         spec.label(),
-                        cat,
+                        label,
                         r.mmsgs_per_sec,
                         s.resources()
                     );
@@ -133,8 +163,9 @@ fn main() -> ExitCode {
                 ("16 threads, conservative", 16, Features::conservative()),
             ] {
                 let mut f = Fabric::connectx4();
-                let set = EndpointBuilder::new(Category::MpiEverywhere, n).build(&mut f).unwrap();
-                let cfg = MsgRateConfig { msgs_per_thread: 32 * 1024, features, ..Default::default() };
+                let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, n).unwrap();
+                let cfg =
+                    MsgRateConfig { msgs_per_thread: 32 * 1024, features, ..Default::default() };
                 let r = Runner::new(&f, &set.threads, cfg).run();
                 println!("{label:>26}: {:.2} Mmsg/s", r.mmsgs_per_sec);
             }

@@ -284,8 +284,8 @@ impl Nic {
         for &i in signal_idx {
             debug_assert!(i < n);
             self.counters.dma_writes += 1;
-            completions
-                .push(w_start + (i as u64 + 1) * per_msg_wire + c.wire_latency + c.cqe_write_latency);
+            let done = w_start + (i as u64 + 1) * per_msg_wire;
+            completions.push(done + c.wire_latency + c.cqe_write_latency);
         }
     }
 
@@ -330,7 +330,7 @@ impl Nic {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::endpoints::{Category, EndpointBuilder};
+    use crate::endpoints::{Category, EndpointPolicy};
     use crate::verbs::QpCaps;
 
     fn small_fabric() -> (Fabric, QpId, QpId) {
@@ -425,7 +425,8 @@ mod tests {
     fn quirk_resolved_per_category() {
         // Dynamic (16 contiguous active dynamic pages) triggers; 2xDynamic
         // (even pages of 32) does not; MPI everywhere (static pages) does
-        // not.
+        // not. The quirk is resolved from the *built* page topology —
+        // label-free, so it extends to arbitrary EndpointPolicy points.
         let cost = CostModel::calibrated();
         for (cat, expect) in [
             (Category::Dynamic, true),
@@ -434,7 +435,7 @@ mod tests {
             (Category::SharedDynamic, false),
         ] {
             let mut f = Fabric::connectx4();
-            let set = EndpointBuilder::new(cat, 16).build(&mut f).unwrap();
+            let set = EndpointPolicy::preset(cat).build(&mut f, 16).unwrap();
             let active: Vec<QpId> = set.threads.iter().map(|t| t.qp).collect();
             let nic = Nic::new(&f, cost, &active);
             assert_eq!(nic.quirk_applies(active[0]), expect, "{cat}");
@@ -444,7 +445,7 @@ mod tests {
     #[test]
     fn uar_port_serializes_blueflame_on_shared_page() {
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(Category::SharedDynamic, 2).build(&mut f).unwrap();
+        let set = EndpointPolicy::preset(Category::SharedDynamic).build(&mut f, 2).unwrap();
         let (a, b) = (set.threads[0].qp, set.threads[1].qp);
         let cost = CostModel::calibrated();
         let mut nic = Nic::new(&f, cost, &[a, b]);
@@ -455,7 +456,7 @@ mod tests {
 
         // Independent pages (Dynamic) do not serialize.
         let mut f2 = Fabric::connectx4();
-        let set2 = EndpointBuilder::new(Category::Dynamic, 2).build(&mut f2).unwrap();
+        let set2 = EndpointPolicy::preset(Category::Dynamic).build(&mut f2, 2).unwrap();
         let (a2, b2) = (set2.threads[0].qp, set2.threads[1].qp);
         let mut nic2 = Nic::new(&f2, cost, &[a2, b2]);
         let u0 = nic2.cpu_ring(0, a2, true, 0);

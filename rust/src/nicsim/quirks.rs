@@ -44,7 +44,11 @@ pub fn flushgroup_penalty_applies(cost: &CostModel, active_dynamic_pages: &[u32]
 }
 
 /// Extend a doorbell-path occupancy by the anomaly penalty.
-pub fn apply_penalty(cost: &CostModel, occupancy: crate::sim::Time, applies: bool) -> crate::sim::Time {
+pub fn apply_penalty(
+    cost: &CostModel,
+    occupancy: crate::sim::Time,
+    applies: bool,
+) -> crate::sim::Time {
     if applies {
         occupancy + cost.flushgroup_extra
     } else {

@@ -19,7 +19,12 @@
 //! strictly before the horizon may run that continuation inline (the
 //! scheduler would have re-dispatched it next anyway) — this is the hook
 //! the message-rate engine's fast path uses to coalesce a whole
-//! post-window + poll iteration into O(1) scheduler events.
+//! post-window + poll iteration into O(1) scheduler events. Which
+//! threads may use the hook is decided from the built topology (QP/CQ
+//! sharer counts, uUAR locks), never from an endpoint-configuration
+//! label — the policy-level view of the same facts is
+//! [`EndpointPolicy`](crate::endpoints::EndpointPolicy)'s
+//! `shares_qp`/`cq_exclusive` predicates.
 
 use super::Time;
 

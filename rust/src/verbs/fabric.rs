@@ -163,7 +163,8 @@ impl Fabric {
         let id = TdId(self.tds.len() as u32);
         let uuar = match attr.sharing {
             SHARING_INDEPENDENT => {
-                let page = self.alloc_dynamic_page(ctx, [UuarClass::Dedicated(id), UuarClass::Unused])?;
+                let page =
+                    self.alloc_dynamic_page(ctx, [UuarClass::Dedicated(id), UuarClass::Unused])?;
                 UuarRef { page, slot: 0 }
             }
             SHARING_PAIRED => {
@@ -289,7 +290,9 @@ impl Fabric {
         let q = self.qp(qp)?.clone();
         self.qps[qp.index()].live = false;
         let remove = |v: &mut Vec<QpId>| v.retain(|x| *x != qp);
-        remove(&mut self.ctxs[q.ctx.index()].uars[q.uuar.page as usize].uuars[q.uuar.slot as usize].qps);
+        let uuar =
+            &mut self.ctxs[q.ctx.index()].uars[q.uuar.page as usize].uuars[q.uuar.slot as usize];
+        remove(&mut uuar.qps);
         remove(&mut self.pds[q.pd.index()].qps);
         remove(&mut self.cqs[q.cq.index()].qps);
         if let Some(td) = q.td {

@@ -84,7 +84,10 @@ impl QueueState {
                     .pds[q.pd.index()]
                     .mrs
                     .iter()
-                    .any(|m| fabric.mrs[m.index()].live && fabric.mrs[m.index()].contains(w.laddr, w.len as u64));
+                    .any(|m| {
+                        fabric.mrs[m.index()].live
+                            && fabric.mrs[m.index()].contains(w.laddr, w.len as u64)
+                    });
                 if !covered {
                     return Err(VerbsError::Busy(
                         qp.to_string(),
@@ -153,7 +156,15 @@ mod tests {
     }
 
     fn wqe(wr_id: u64, signaled: bool, inline: bool) -> Wqe {
-        Wqe { wr_id, opcode: Opcode::RdmaWrite, laddr: 0x1000, raddr: 0x9000, len: 2, signaled, inline }
+        Wqe {
+            wr_id,
+            opcode: Opcode::RdmaWrite,
+            laddr: 0x1000,
+            raddr: 0x9000,
+            len: 2,
+            signaled,
+            inline,
+        }
     }
 
     #[test]

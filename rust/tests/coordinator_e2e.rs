@@ -77,7 +77,8 @@ fn stencil_jacobi_end_to_end() {
 #[test]
 fn stencil_comm_and_compute_compose() {
     // The full loop a user would run: timed exchange + functional sweep.
-    let s = StencilBench::new(JobSpec::new(4, 4), Category::TwoXDynamic, DEFAULT_HALO_BYTES).unwrap();
+    let s =
+        StencilBench::new(JobSpec::new(4, 4), Category::TwoXDynamic, DEFAULT_HALO_BYTES).unwrap();
     let r = s.time_exchange(256);
     assert!(r.mmsgs_per_sec > 0.0);
     assert_eq!(r.messages, 16 * 512);

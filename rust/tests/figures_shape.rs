@@ -2,26 +2,24 @@
 //! what factor, where crossovers fall. These are the reproduction
 //! acceptance tests (EXPERIMENTS.md cites them).
 
-use scalable_ep::bench::{
-    Features, MsgRateConfig, Runner, SharedResource, SharingSpec,
-};
+use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource};
 use scalable_ep::coordinator::JobSpec;
 use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
 use scalable_ep::apps::{GlobalArray, StencilBench};
-use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::endpoints::{BufLayout, Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::verbs::Fabric;
 
 const MSGS: u64 = 16 * 1024;
 
 fn run_sharing(res: SharedResource, ways: u32, features: Features) -> f64 {
-    let (fabric, eps) = SharingSpec::new(res, ways, 16).build().unwrap();
+    let (fabric, eps) = EndpointPolicy::sharing(res, ways).build_fresh(16).unwrap();
     let cfg = MsgRateConfig { msgs_per_thread: MSGS, features, ..Default::default() };
     Runner::new(&fabric, &eps, cfg).run().mmsgs_per_sec
 }
 
 fn run_category(cat: Category, n: u32, features: Features) -> f64 {
     let mut f = Fabric::connectx4();
-    let set = EndpointBuilder::new(cat, n).build(&mut f).unwrap();
+    let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
     let cfg = MsgRateConfig { msgs_per_thread: MSGS, features, ..Default::default() };
     Runner::new(&f, &set.threads, cfg).run().mmsgs_per_sec
 }
@@ -77,6 +75,18 @@ fn golden_fig_tables_are_byte_stable() {
     }
 }
 
+/// The policy grid (message-size x sharing-level) must cover its full
+/// 5 x 5 cell matrix — 25 CSV rows plus the header — and include the
+/// §VII scalable preset with fewer uUARs than any level-1 point.
+#[test]
+fn policy_grid_covers_size_by_level_matrix() {
+    let bytes = scalable_ep::figures::render_bytes("grid", true).expect("known figure");
+    let csv_lines = bytes.lines().filter(|l| l.starts_with("csv,")).count();
+    assert_eq!(csv_lines, 1 + 5 * 5, "header + 25 cells");
+    assert!(bytes.contains("Scalable"), "scalable preset missing from the grid");
+    assert!(bytes.contains("1024"), "largest message size missing");
+}
+
 // ------------------------------------------------------------- Fig 2(b)
 
 #[test]
@@ -91,7 +101,7 @@ fn fig02_extremes_gap_is_several_fold_at_16_threads() {
 #[test]
 fn fig02_waste_is_93_75_percent_for_mpi_everywhere() {
     let mut f = Fabric::connectx4();
-    let set = EndpointBuilder::new(Category::MpiEverywhere, 16).build(&mut f).unwrap();
+    let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 16).unwrap();
     let u = ResourceUsage::of_set(&f, &set);
     assert!((u.uuar_waste_fraction() - 0.9375).abs() < 1e-9);
 }
@@ -100,16 +110,15 @@ fn fig02_waste_is_93_75_percent_for_mpi_everywhere() {
 
 #[test]
 fn fig03_all_features_scale_linearly() {
-    let spec1 = SharingSpec::new(SharedResource::Ctx, 1, 1);
-    let spec16 = SharingSpec::new(SharedResource::Ctx, 1, 16);
+    let naive = EndpointPolicy::sharing(SharedResource::Ctx, 1);
     let r1 = {
-        let (f, eps) = spec1.build().unwrap();
+        let (f, eps) = naive.build_fresh(1).unwrap();
         Runner::new(&f, &eps, MsgRateConfig { msgs_per_thread: MSGS, ..Default::default() })
             .run()
             .mmsgs_per_sec
     };
     let r16 = {
-        let (f, eps) = spec16.build().unwrap();
+        let (f, eps) = naive.build_fresh(16).unwrap();
         Runner::new(&f, &eps, MsgRateConfig { msgs_per_thread: MSGS, ..Default::default() })
             .run()
             .mmsgs_per_sec
@@ -149,9 +158,11 @@ fn fig05_buf_sharing_hurts_only_without_inlining() {
 #[test]
 fn fig06_unaligned_buffers_hurt_and_equal_pcie_reads() {
     let mk = |aligned: bool| {
-        let mut spec = SharingSpec::new(SharedResource::Buf, 1, 16);
-        spec.cache_aligned = aligned;
-        let (fabric, eps) = spec.build().unwrap();
+        let mut policy = EndpointPolicy::sharing(SharedResource::Buf, 1);
+        if !aligned {
+            policy.buf = BufLayout::Packed;
+        }
+        let (fabric, eps) = policy.build_fresh(16).unwrap();
         let cfg = MsgRateConfig {
             msgs_per_thread: MSGS,
             features: Features::all().without_inlining(),

@@ -1,0 +1,378 @@
+//! Preset-equivalence suite: `EndpointPolicy::preset(c)` and
+//! `EndpointPolicy::sharing(r, x)` must reproduce the historical
+//! `EndpointBuilder` / `SharingSpec` topologies *byte-for-byte* — same
+//! object arenas (ids, order, addresses), same UAR page maps, same
+//! accounting. The `legacy` module below is a frozen, verbatim port of
+//! the pre-policy construction code; comparing full `Debug` renderings of
+//! the fabrics pins every field of every arena, which is what keeps the
+//! golden fig2/fig9/fig11 fixtures (tests/figures_shape.rs) unchanged
+//! across the API redesign.
+//!
+//! Also home of the §VII scalable-endpoint acceptance test: the
+//! `EndpointPolicy::scalable` preset must match Dynamic's message rate
+//! under the §IV defaults while allocating at most half its uUARs.
+
+use scalable_ep::bench::{MsgRateConfig, Runner, SharedResource};
+use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage, ThreadEndpoint};
+use scalable_ep::testing::assert_rel_close;
+use scalable_ep::verbs::Fabric;
+
+/// Frozen pre-policy builders (the deleted `EndpointBuilder::build` and
+/// `SharingSpec::build` bodies, verbatim up to free-function syntax). Do
+/// NOT "fix" or modernize this code: it is the reference the policy
+/// presets are pinned against.
+mod legacy {
+    use scalable_ep::bench::SharedResource;
+    use scalable_ep::endpoints::{Category, ThreadEndpoint};
+    use scalable_ep::mlx5::Mlx5Env;
+    use scalable_ep::verbs::error::Result;
+    use scalable_ep::verbs::{BufId, Fabric, QpCaps, TdInitAttr};
+
+    /// The old `EndpointBuilder::build` at its defaults (cq_depth 2,
+    /// cache-aligned 2 B buffers, no shared BUF).
+    pub fn build_category(
+        category: Category,
+        nthreads: u32,
+        fabric: &mut Fabric,
+    ) -> Result<Vec<ThreadEndpoint>> {
+        use Category::*;
+        let n = nthreads;
+        let qp_caps = QpCaps::default();
+        let cq_depth = 2u32;
+        let msg_size = 2u32;
+        let mut threads: Vec<ThreadEndpoint> = Vec::with_capacity(n as usize);
+
+        let base = 0x10_0000 * (fabric.bufs.len() as u64 + 1);
+        let buf_for = |fabric: &mut Fabric, i: u32| -> BufId {
+            fabric.declare_buf(base + i as u64 * 64, msg_size as u64)
+        };
+
+        match category {
+            MpiEverywhere => {
+                for i in 0..n {
+                    let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                    let pd = fabric.alloc_pd(ctx)?;
+                    let cq = fabric.create_cq(ctx, cq_depth)?;
+                    let qp = fabric.create_qp(pd, cq, qp_caps, None)?;
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, msg_size as u64)?;
+                    threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            TwoXDynamic | Dynamic | SharedDynamic => {
+                let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                let pd = fabric.alloc_pd(ctx)?;
+                let attr = if category == SharedDynamic {
+                    TdInitAttr::paired()
+                } else {
+                    TdInitAttr::independent()
+                };
+                let qps_to_make = if category == TwoXDynamic { 2 * n } else { n };
+                let mut all_qps = Vec::new();
+                for _ in 0..qps_to_make {
+                    let td = fabric.alloc_td(ctx, attr)?;
+                    let cq = fabric.create_cq(ctx, cq_depth)?;
+                    let qp = fabric.create_qp(pd, cq, qp_caps, Some(td))?;
+                    all_qps.push((qp, cq));
+                }
+                for i in 0..n {
+                    let k = if category == TwoXDynamic { 2 * i } else { i } as usize;
+                    let (qp, cq) = all_qps[k];
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, msg_size as u64)?;
+                    threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            Static => {
+                let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                let pd = fabric.alloc_pd(ctx)?;
+                for i in 0..n {
+                    let cq = fabric.create_cq(ctx, cq_depth)?;
+                    let qp = fabric.create_qp(pd, cq, qp_caps, None)?;
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, msg_size as u64)?;
+                    threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            MpiThreads => {
+                let ctx = fabric.open_ctx(Mlx5Env::default())?;
+                let pd = fabric.alloc_pd(ctx)?;
+                let cq = fabric.create_cq(ctx, cq_depth.max(n * 2))?;
+                let qp = fabric.create_qp(pd, cq, qp_caps, None)?;
+                for i in 0..n {
+                    let buf = buf_for(fabric, i);
+                    let mr = fabric.reg_mr(pd, fabric.buf(buf).addr, msg_size as u64)?;
+                    threads.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+        }
+        Ok(threads)
+    }
+
+    /// The old `SharingSpec::build` at its defaults (cq_depth 64,
+    /// cache-aligned 2 B buffers).
+    pub fn build_sharing(
+        resource: SharedResource,
+        ways: u32,
+        nthreads: u32,
+    ) -> Result<(Fabric, Vec<ThreadEndpoint>)> {
+        assert!(ways >= 1 && nthreads % ways == 0, "x must divide the thread count");
+        let mut f = Fabric::connectx4();
+        let n = nthreads;
+        let x = ways;
+        let groups = n / x;
+        let qp_caps = QpCaps::default();
+        let cq_depth = 64u32;
+        let msg_size = 2u32;
+        let mut eps: Vec<ThreadEndpoint> = Vec::with_capacity(n as usize);
+
+        let buf_base = 0x40_0000u64;
+        let buf_addr = |i: u32| buf_base + i as u64 * 64;
+
+        match resource {
+            SharedResource::Buf => {
+                for i in 0..n {
+                    let ctx = f.open_ctx(Mlx5Env::default())?;
+                    let pd = f.alloc_pd(ctx)?;
+                    let cq = f.create_cq(ctx, cq_depth)?;
+                    let td = f.alloc_td(ctx, TdInitAttr::independent())?;
+                    let qp = f.create_qp(pd, cq, qp_caps, Some(td))?;
+                    let shared_addr = buf_addr((i / x) * x);
+                    let buf = f.declare_buf(shared_addr, msg_size as u64);
+                    let mr = f.reg_mr(pd, shared_addr, msg_size as u64)?;
+                    eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            SharedResource::Ctx | SharedResource::CtxTwoXQps | SharedResource::CtxSharing2 => {
+                for g in 0..groups {
+                    let ctx = f.open_ctx(Mlx5Env::default())?;
+                    let pd = f.alloc_pd(ctx)?;
+                    let (attr, stride) = match resource {
+                        SharedResource::CtxTwoXQps => (TdInitAttr::independent(), 2),
+                        SharedResource::CtxSharing2 => (TdInitAttr::paired(), 1),
+                        _ => (TdInitAttr::independent(), 1),
+                    };
+                    let mut group_eps = Vec::new();
+                    for _ in 0..(x * stride) {
+                        let td = f.alloc_td(ctx, attr)?;
+                        let cq = f.create_cq(ctx, cq_depth)?;
+                        let qp = f.create_qp(pd, cq, qp_caps, Some(td))?;
+                        group_eps.push((qp, cq));
+                    }
+                    for k in 0..x {
+                        let i = g * x + k;
+                        let (qp, cq) = group_eps[(k * stride) as usize];
+                        let addr = buf_addr(i);
+                        let buf = f.declare_buf(addr, msg_size as u64);
+                        let mr = f.reg_mr(pd, addr, msg_size as u64)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+            }
+            SharedResource::Pd | SharedResource::Mr => {
+                let ctx = f.open_ctx(Mlx5Env::default())?;
+                let shared_pd = resource == SharedResource::Pd;
+                let pds: Vec<_> = if shared_pd {
+                    (0..groups).map(|_| f.alloc_pd(ctx)).collect::<Result<_>>()?
+                } else {
+                    vec![f.alloc_pd(ctx)?]
+                };
+                let one_pd = pds[0];
+                let mut group_mr = Vec::new();
+                if resource == SharedResource::Mr {
+                    for g in 0..groups {
+                        let base = buf_addr(g * x);
+                        group_mr.push(f.reg_mr(one_pd, base, x as u64 * 64)?);
+                    }
+                }
+                for i in 0..n {
+                    let g = i / x;
+                    let pd = if shared_pd { pds[g as usize] } else { one_pd };
+                    let td = f.alloc_td(ctx, TdInitAttr::independent())?;
+                    let cq = f.create_cq(ctx, cq_depth)?;
+                    let qp = f.create_qp(pd, cq, qp_caps, Some(td))?;
+                    let addr = buf_addr(i);
+                    let buf = f.declare_buf(addr, msg_size as u64);
+                    let mr = if shared_pd {
+                        f.reg_mr(pd, addr, msg_size as u64)?
+                    } else {
+                        group_mr[g as usize]
+                    };
+                    eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+            }
+            SharedResource::Cq => {
+                let ctx = f.open_ctx(Mlx5Env::default())?;
+                let pd = f.alloc_pd(ctx)?;
+                for g in 0..groups {
+                    let cq = f.create_cq(ctx, cq_depth.max(2 * x))?;
+                    for k in 0..x {
+                        let i = g * x + k;
+                        let td = f.alloc_td(ctx, TdInitAttr::independent())?;
+                        let qp = f.create_qp(pd, cq, qp_caps, Some(td))?;
+                        let addr = buf_addr(i);
+                        let buf = f.declare_buf(addr, msg_size as u64);
+                        let mr = f.reg_mr(pd, addr, msg_size as u64)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+            }
+            SharedResource::Qp => {
+                let ctx = f.open_ctx(Mlx5Env::default())?;
+                let pd = f.alloc_pd(ctx)?;
+                for g in 0..groups {
+                    let cq = f.create_cq(ctx, cq_depth.max(2 * x))?;
+                    let qp = f.create_qp(pd, cq, qp_caps, None)?;
+                    for k in 0..x {
+                        let i = g * x + k;
+                        let addr = buf_addr(i);
+                        let buf = f.declare_buf(addr, msg_size as u64);
+                        let mr = f.reg_mr(pd, addr, msg_size as u64)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+            }
+        }
+        Ok((f, eps))
+    }
+}
+
+/// Byte-level topology comparison: full `Debug` of the fabric arenas
+/// (every id, address, uUAR map, lock flag, depth) plus the per-thread
+/// endpoint bindings.
+fn assert_same_topology(
+    what: &str,
+    got_fabric: &Fabric,
+    got_eps: &[ThreadEndpoint],
+    want_fabric: &Fabric,
+    want_eps: &[ThreadEndpoint],
+) {
+    assert_eq!(got_eps, want_eps, "{what}: thread endpoint bindings diverged");
+    let (gs, ws) = (format!("{got_fabric:?}"), format!("{want_fabric:?}"));
+    if gs != ws {
+        // Locate the first diverging fragment for a readable failure.
+        let at = gs.bytes().zip(ws.bytes()).position(|(a, b)| a != b).unwrap_or(0);
+        let lo = at.saturating_sub(120);
+        panic!(
+            "{what}: fabric arenas diverged near byte {at}:\n policy: ...{}...\n legacy: ...{}...",
+            &gs[lo..(at + 120).min(gs.len())],
+            &ws[lo..(at + 120).min(ws.len())],
+        );
+    }
+    assert_eq!(
+        ResourceUsage::of_fabric(got_fabric),
+        ResourceUsage::of_fabric(want_fabric),
+        "{what}: accounting diverged"
+    );
+}
+
+#[test]
+fn category_presets_reproduce_legacy_builder_byte_for_byte() {
+    for cat in Category::ALL {
+        for n in [1u32, 2, 8, 16] {
+            let mut legacy_fabric = Fabric::connectx4();
+            let legacy_eps = legacy::build_category(cat, n, &mut legacy_fabric).unwrap();
+            let mut policy_fabric = Fabric::connectx4();
+            let set = EndpointPolicy::preset(cat).build(&mut policy_fabric, n).unwrap();
+            assert_same_topology(
+                &format!("{cat} x{n}"),
+                &policy_fabric,
+                &set.threads,
+                &legacy_fabric,
+                &legacy_eps,
+            );
+        }
+    }
+}
+
+#[test]
+fn category_presets_reproduce_legacy_builder_on_dirty_fabric() {
+    // The auto buffer base depends on pre-existing buffers; both paths
+    // must agree on a fabric that already carries state.
+    for cat in [Category::Dynamic, Category::MpiThreads] {
+        let mut legacy_fabric = Fabric::connectx4();
+        legacy_fabric.declare_buf(0x8000, 64);
+        let first = legacy::build_category(Category::Static, 4, &mut legacy_fabric).unwrap();
+        let legacy_eps = legacy::build_category(cat, 8, &mut legacy_fabric).unwrap();
+        let mut policy_fabric = Fabric::connectx4();
+        policy_fabric.declare_buf(0x8000, 64);
+        let pfirst = EndpointPolicy::preset(Category::Static).build(&mut policy_fabric, 4).unwrap();
+        let set = EndpointPolicy::preset(cat).build(&mut policy_fabric, 8).unwrap();
+        assert_eq!(pfirst.threads, first, "{cat}: first build diverged");
+        assert_same_topology(
+            &format!("{cat} after prior build"),
+            &policy_fabric,
+            &set.threads,
+            &legacy_fabric,
+            &legacy_eps,
+        );
+    }
+}
+
+#[test]
+fn sharing_presets_reproduce_legacy_sweeps_byte_for_byte() {
+    for res in SharedResource::ALL {
+        for ways in [1u32, 2, 4, 8, 16] {
+            let (legacy_fabric, legacy_eps) = legacy::build_sharing(res, ways, 16).unwrap();
+            let (policy_fabric, policy_eps) =
+                EndpointPolicy::sharing(res, ways).build_fresh(16).unwrap();
+            assert_same_topology(
+                &format!("{res:?} {ways}-way x16"),
+                &policy_fabric,
+                &policy_eps,
+                &legacy_fabric,
+                &legacy_eps,
+            );
+        }
+    }
+}
+
+#[test]
+fn sharing_presets_reproduce_legacy_sweeps_at_other_thread_counts() {
+    for res in SharedResource::ALL {
+        for (ways, n) in [(1u32, 4u32), (2, 8), (4, 8), (8, 32)] {
+            let (legacy_fabric, legacy_eps) = legacy::build_sharing(res, ways, n).unwrap();
+            let (policy_fabric, policy_eps) =
+                EndpointPolicy::sharing(res, ways).build_fresh(n).unwrap();
+            assert_same_topology(
+                &format!("{res:?} {ways}-way x{n}"),
+                &policy_fabric,
+                &policy_eps,
+                &legacy_fabric,
+                &legacy_eps,
+            );
+        }
+    }
+}
+
+#[test]
+fn scalable_endpoint_matches_dynamic_rate_at_half_the_uuars() {
+    // Acceptance: under the §IV defaults (Postlist 32, Unsignaled 64) the
+    // §VII scalable preset must match Dynamic's 16-thread message rate
+    // within the model while allocating at most half its uUARs.
+    let mut fd = Fabric::connectx4();
+    let dynamic = EndpointPolicy::preset(Category::Dynamic).build(&mut fd, 16).unwrap();
+    let mut fs = Fabric::connectx4();
+    let scalable = EndpointPolicy::scalable().build(&mut fs, 16).unwrap();
+    let cfg = MsgRateConfig { msgs_per_thread: 16 * 1024, ..Default::default() };
+    let rd = Runner::new(&fd, &dynamic.threads, cfg).run();
+    let rs = Runner::new(&fs, &scalable.threads, cfg).run();
+    assert_rel_close(
+        rs.mmsgs_per_sec,
+        rd.mmsgs_per_sec,
+        0.02,
+        "scalable vs Dynamic 16-thread rate",
+    );
+    let ud = ResourceUsage::of_set(&fd, &dynamic);
+    let us = ResourceUsage::of_set(&fs, &scalable);
+    assert_eq!(ud.uuars_allocated, 48, "Dynamic baseline");
+    assert_eq!(us.uuars_allocated, 18, "1 trimmed static page + 8 paired dynamic pages");
+    assert!(
+        2 * us.uuars_allocated <= ud.uuars_allocated,
+        "scalable must use at most half of Dynamic's uUARs ({} vs {})",
+        us.uuars_allocated,
+        ud.uuars_allocated
+    );
+    // Memory shrinks with the trimmed CTX provisioning too.
+    assert!(us.memory_bytes <= ud.memory_bytes);
+}

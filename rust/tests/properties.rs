@@ -1,10 +1,12 @@
 //! Property-based tests over the resource model and simulator invariants
 //! (in-repo `testing::check` harness; no external proptest offline).
 
-use scalable_ep::bench::{Features, MsgRateConfig, MsgRateResult, Runner, SharedResource, SharingSpec};
-use scalable_ep::endpoints::{Category, EndpointBuilder, ResourceUsage};
+use scalable_ep::bench::{Features, MsgRateConfig, MsgRateResult, Runner, SharedResource};
+use scalable_ep::endpoints::{
+    BufLayout, Category, CqDepth, EndpointPolicy, MrMap, QpProvision, ResourceUsage, UarMap, Ways,
+};
 use scalable_ep::mlx5::Mlx5Env;
-use scalable_ep::sim::{Server, SimLock};
+use scalable_ep::sim::{Server, SimLock, XorShift};
 use scalable_ep::testing::check;
 use scalable_ep::verbs::{Fabric, QpCaps, TdInitAttr};
 
@@ -29,7 +31,11 @@ fn fuzz_seed(default: u64) -> u64 {
 /// Assert every virtual-time observable of a fast-path run equals the
 /// stepped general path's, bit for bit; scheduler diagnostics must show
 /// identical trajectories (same step count) and no extra dispatches.
-fn assert_bit_exact(fast: &MsgRateResult, general: &MsgRateResult, what: &str) -> Result<(), String> {
+fn assert_bit_exact(
+    fast: &MsgRateResult,
+    general: &MsgRateResult,
+    what: &str,
+) -> Result<(), String> {
     if fast.duration != general.duration {
         return Err(format!("{what}: duration {} vs {}", fast.duration, general.duration));
     }
@@ -205,8 +211,8 @@ fn prop_msgrate_determinism_and_completeness() {
             inlining: rng.below(2) == 0,
             blueflame: rng.below(2) == 0,
         };
-        let spec = SharingSpec::new(res, ways, 16);
-        let (fabric, eps) = spec.build().map_err(|e| e.to_string())?;
+        let policy = EndpointPolicy::sharing(res, ways);
+        let (fabric, eps) = policy.build_fresh(16).map_err(|e| e.to_string())?;
         let cfg = MsgRateConfig { msgs_per_thread: 512, features, ..Default::default() };
         let a = Runner::new(&fabric, &eps, cfg).run();
         let b = Runner::new(&fabric, &eps, cfg).run();
@@ -251,8 +257,8 @@ fn prop_fast_path_matches_general_path() {
             inlining: rng.below(2) == 0,
             blueflame: rng.below(2) == 0,
         };
-        let spec = SharingSpec::new(res, ways, nthreads);
-        let (fabric, eps) = spec.build().map_err(|e| e.to_string())?;
+        let policy = EndpointPolicy::sharing(res, ways);
+        let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
         let cfg = MsgRateConfig {
             msgs_per_thread: 256 + rng.below(1024),
             features,
@@ -300,8 +306,8 @@ fn prop_fast_path_matches_general_path_fuzzed() {
             blueflame: rng.below(2) == 0,
         };
         let qp_depth = [16u32, 32, 64, 128, 256][rng.below(5) as usize];
-        let spec = SharingSpec::new(res, ways, nthreads);
-        let (fabric, eps) = spec.build().map_err(|e| e.to_string())?;
+        let policy = EndpointPolicy::sharing(res, ways);
+        let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
         let cfg = MsgRateConfig {
             msgs_per_thread: 128 + rng.below(512),
             qp_depth,
@@ -327,6 +333,7 @@ fn prop_fast_path_matches_general_path_categories_fuzzed() {
     // exactly where the exactness proofs stop holding.
     check("fast-vs-general-categories", fuzz_seed(0xEDE7), 18, |rng, _| {
         let cat = *rng.choose(&Category::ALL);
+        let policy = EndpointPolicy::preset(cat);
         let nthreads = [1u32, 4, 8, 16, 24, 32][rng.below(6) as usize];
         let features = Features {
             postlist: [1u32, 4, 32][rng.below(3) as usize],
@@ -335,7 +342,7 @@ fn prop_fast_path_matches_general_path_categories_fuzzed() {
             blueflame: rng.below(2) == 0,
         };
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(cat, nthreads).build(&mut f).map_err(|e| e.to_string())?;
+        let set = policy.build(&mut f, nthreads).map_err(|e| e.to_string())?;
         // Deliberately NOT forcing the shared-QP path for MpiThreads:
         // the zero-coalescing assertion below must pin the runner's own
         // sharing *detection* (qp_sharers/cq_sharers), not a config flag
@@ -350,9 +357,119 @@ fn prop_fast_path_matches_general_path_categories_fuzzed() {
         let general =
             Runner::new(&f, &set.threads, MsgRateConfig { force_general_path: true, ..cfg }).run();
         assert_bit_exact(&fast, &general, &format!("{cat} x{nthreads}, {features:?}"))?;
-        if cat.shares_qp() && nthreads > 1 && fast.sched_events != fast.sched_steps {
+        if policy.shares_qp() && nthreads > 1 && fast.sched_events != fast.sched_steps {
             return Err(format!(
                 "{cat}: shared-QP threads coalesced ({} events, {} steps)",
+                fast.sched_events, fast.sched_steps
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Sample a random valid [`EndpointPolicy`] grid point for `nthreads`
+/// threads: arbitrary CTX/PD/CQ grouping, all three QP provisioning
+/// modes, all three uUAR mappings, every buffer layout, span MRs, and
+/// both CQ depth rules — far beyond the six presets and eight sweeps.
+fn random_policy(rng: &mut XorShift, nthreads: u32) -> EndpointPolicy {
+    let divisors: Vec<u32> = (1..=nthreads).filter(|d| nthreads % d == 0).collect();
+    let ctx_ways = *rng.choose(&divisors);
+    let group_divs: Vec<u32> = (1..=ctx_ways).filter(|d| ctx_ways % d == 0).collect();
+    let (qp, uar, cq) = match rng.below(4) {
+        0 => {
+            let w = *rng.choose(&group_divs);
+            (QpProvision::Shared(Ways::Of(w)), UarMap::Static, Ways::Of(w))
+        }
+        1 => {
+            let uar = if rng.below(2) == 0 { UarMap::Independent } else { UarMap::Paired };
+            (QpProvision::TwoXEven, uar, Ways::Of(1))
+        }
+        _ => {
+            let uar = match rng.below(3) {
+                0 => UarMap::Independent,
+                1 => UarMap::Paired,
+                _ => UarMap::Static,
+            };
+            (QpProvision::PerThread, uar, Ways::Of(*rng.choose(&group_divs)))
+        }
+    };
+    let buf = match rng.below(4) {
+        0 => BufLayout::Aligned,
+        1 => BufLayout::Packed,
+        2 => BufLayout::Group(Ways::Of(*rng.choose(&divisors))),
+        _ => BufLayout::SharedOne,
+    };
+    // Verbs constraint (policy validate): a shared QP's sharers must sit
+    // in the QP's PD group, so PD ways must be a multiple of QP ways.
+    let pd_ways = match qp {
+        QpProvision::Shared(Ways::Of(w)) => {
+            let ok: Vec<u32> = group_divs.iter().copied().filter(|d| d % w == 0).collect();
+            *rng.choose(&ok)
+        }
+        _ => *rng.choose(&group_divs),
+    };
+    // Likewise a span MR must stay within one PD group and needs the
+    // aligned per-thread buffer layout to cover every member.
+    let mr = if matches!(buf, BufLayout::Aligned) && rng.below(4) == 0 {
+        let spans: Vec<u32> = (1..=pd_ways).filter(|d| pd_ways % d == 0).collect();
+        MrMap::SpanGroup(*rng.choose(&spans))
+    } else {
+        MrMap::PerThread
+    };
+    let cq_depth = if rng.below(2) == 0 {
+        CqDepth::Scaled([2u32, 64][rng.below(2) as usize])
+    } else {
+        CqDepth::Fixed(1 + rng.below(64) as u32)
+    };
+    EndpointPolicy {
+        ctx: Ways::Of(ctx_ways),
+        qp,
+        uar,
+        cq,
+        cq_depth,
+        buf,
+        pd: Ways::Of(pd_ways),
+        mr,
+        ..EndpointPolicy::default()
+    }
+}
+
+#[test]
+fn prop_fast_path_matches_general_path_policy_grid_fuzzed() {
+    // Satellite fuzzer for the composable-policy API: random grid points
+    // (not just the six presets / eight sweeps) must stay bit-identical
+    // between the coalescing fast path and the stepped general path, and
+    // multi-sharer shared-QP points must additionally show zero
+    // coalescing — eligibility is derived from the built topology, so
+    // this pins that the derivation never over-admits off-preset
+    // configurations. `SCEP_FUZZ_SEED` reseeds; the seed is echoed.
+    check("fast-vs-general-policy-grid", fuzz_seed(0x6D1D), 24, |rng, _| {
+        let nthreads = [1u32, 2, 4, 8, 12, 16, 24][rng.below(7) as usize];
+        let policy = random_policy(rng, nthreads);
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(384),
+            qp_depth: [32u32, 128][rng.below(2) as usize],
+            features,
+            ..Default::default()
+        };
+        let fast = Runner::new(&fabric, &eps, cfg).run();
+        let general =
+            Runner::new(&fabric, &eps, MsgRateConfig { force_general_path: true, ..cfg }).run();
+        assert_bit_exact(&fast, &general, &format!("policy '{policy}' x{nthreads}, {features:?}"))?;
+        let multi_sharer_qp = match policy.qp {
+            QpProvision::Shared(w) => w.resolve(policy.ctx.resolve(nthreads)) > 1,
+            _ => false,
+        };
+        if multi_sharer_qp && fast.sched_events != fast.sched_steps {
+            return Err(format!(
+                "'{policy}': shared-QP threads coalesced ({} events, {} steps)",
                 fast.sched_events, fast.sched_steps
             ));
         }
@@ -371,8 +488,8 @@ fn prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce() {
     // including past the paper's 16-thread ceiling.
     for nthreads in [8u32, 16, 32] {
         for features in [Features::all(), Features::conservative()] {
-            let spec = SharingSpec::new(SharedResource::Ctx, 1, nthreads);
-            let (fabric, eps) = spec.build().unwrap();
+            let (fabric, eps) =
+                EndpointPolicy::sharing(SharedResource::Ctx, 1).build_fresh(nthreads).unwrap();
             let cfg = MsgRateConfig { msgs_per_thread: 1024, features, ..Default::default() };
             let fast = Runner::new(&fabric, &eps, cfg).run();
             let general =
@@ -405,7 +522,7 @@ fn prop_fast_path_matches_general_path_multi_endpoint() {
             msgs_per_thread: 512,
             msg_size: DEFAULT_HALO_BYTES,
             features: Features::conservative(),
-            force_shared_qp_path: cat == Category::MpiThreads,
+            force_shared_qp_path: s.policy.shares_qp(),
             ..Default::default()
         };
         let fast = Runner::new_multi(&s.fabric, &s.threads, cfg).run();
@@ -427,7 +544,7 @@ fn prop_more_sharing_never_increases_uuars() {
     for res in [SharedResource::Ctx, SharedResource::Cq, SharedResource::Qp] {
         let mut prev = u32::MAX;
         for ways in [1u32, 2, 4, 8, 16] {
-            let (f, _) = SharingSpec::new(res, ways, 16).build().unwrap();
+            let (f, _) = EndpointPolicy::sharing(res, ways).build_fresh(16).unwrap();
             let u = ResourceUsage::of_fabric(&f);
             assert!(
                 u.uuars_allocated <= prev,
@@ -447,12 +564,13 @@ fn prop_category_rate_vs_resources_pareto() {
     // performance/resource tradeoff, not noise).
     let mut points = Vec::new();
     for cat in Category::ALL {
+        let policy = EndpointPolicy::preset(cat);
         let mut f = Fabric::connectx4();
-        let set = EndpointBuilder::new(cat, 16).build(&mut f).unwrap();
+        let set = policy.build(&mut f, 16).unwrap();
         let cfg = MsgRateConfig {
             msgs_per_thread: 4096,
             features: Features::conservative(),
-            force_shared_qp_path: cat == Category::MpiThreads,
+            force_shared_qp_path: policy.shares_qp(),
             ..Default::default()
         };
         let r = Runner::new(&f, &set.threads, cfg).run();
