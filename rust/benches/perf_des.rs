@@ -21,6 +21,15 @@
 //! `coalesced_steps`. Single-sharer scenarios must show
 //! `sched_events < sched_steps`; shared-QP/CQ scenarios run
 //! one-event-per-step and show zero coalescing.
+//!
+//! Since the canonical (enqueue-order-invariant) scheduler tie-break,
+//! mid-run poll windows coalesce too, not just the terminal drain. Each
+//! scenario therefore also replays under
+//! `restrict_coalesce_to_terminal_drain` (the PR-2 rule) and records
+//! `sched_events_terminal_only` plus the difference `coalesced_mid_run`
+//! — the dispatches the canonical tie-break newly eliminates. The
+//! virtual-time rate must be identical between the two replays (the
+//! knob is dispatch accounting only).
 
 use std::time::Instant;
 
@@ -40,6 +49,10 @@ struct Row {
     /// coalesced (dispatch-free) steps — the EXPERIMENTS.md §Perf
     /// before/after column.
     sched_steps: u64,
+    /// Dispatches under the PR-2 terminal-drain-only coalescing rule
+    /// (untimed replay): `sched_events_terminal_only - sched_events` is
+    /// the mid-run gain the canonical tie-break unlocked.
+    sched_events_terminal_only: u64,
 }
 
 fn measure(
@@ -57,14 +70,29 @@ fn measure(
     let dt = t0.elapsed();
     let wallclock_s = dt.as_secs_f64();
     let rate = r.messages as f64 / wallclock_s;
+    // Untimed replay under the PR-2 terminal-drain-only rule: same
+    // virtual-time result, more dispatches — the gap is the mid-run
+    // coalescing the canonical tie-break unlocked.
+    let terminal = Runner::new(
+        &fabric,
+        &eps,
+        MsgRateConfig { restrict_coalesce_to_terminal_drain: true, ..cfg },
+    )
+    .run();
+    assert_eq!(
+        terminal.duration, r.duration,
+        "{label}: terminal-drain replay drifted in virtual time"
+    );
+    assert!(terminal.sched_events >= r.sched_events, "{label}: baseline dispatched fewer");
     println!(
         "{label:>28}: {:>7.1} M simulated msgs/s wallclock \
-         ({} msgs in {:.2?}, {} of {} steps dispatched)",
+         ({} msgs in {:.2?}, {} of {} steps dispatched, {} under terminal-drain-only)",
         rate / 1e6,
         r.messages,
         dt,
         r.sched_events,
         r.sched_steps,
+        terminal.sched_events,
     );
     Row {
         label,
@@ -74,6 +102,7 @@ fn measure(
         virtual_mmsgs_per_sec: r.mmsgs_per_sec,
         sched_events: r.sched_events,
         sched_steps: r.sched_steps,
+        sched_events_terminal_only: terminal.sched_events,
     }
 }
 
@@ -116,7 +145,8 @@ fn main() {
         json.push_str(&format!(
             "    {{\"label\": \"{}\", \"messages\": {}, \"wallclock_s\": {:.6}, \
              \"sim_msgs_per_wallclock_s\": {:.1}, \"virtual_mmsgs_per_sec\": {:.4}, \
-             \"sched_events\": {}, \"sched_steps\": {}, \"coalesced_steps\": {}}}{sep}\n",
+             \"sched_events\": {}, \"sched_steps\": {}, \"coalesced_steps\": {}, \
+             \"sched_events_terminal_only\": {}, \"coalesced_mid_run\": {}}}{sep}\n",
             r.label,
             r.messages,
             r.wallclock_s,
@@ -125,6 +155,8 @@ fn main() {
             r.sched_events,
             r.sched_steps,
             r.sched_steps - r.sched_events,
+            r.sched_events_terminal_only,
+            r.sched_events_terminal_only - r.sched_events,
         ));
     }
     json.push_str("  ]\n}\n");

@@ -32,15 +32,16 @@
 //! post call and every poll is one heap event. For a thread whose QP and
 //! CQ each have exactly one sharer — and with no uUAR lock or rank-wide
 //! progress state in play — consecutive steps can be coalesced into a
-//! single scheduler event whenever the continuation begins strictly
-//! before the *horizon* (the earliest resume time of any other thread,
-//! provided by [`Scheduler::run`]). The scheduler would have re-dispatched
-//! this thread next in exactly that case, with exactly this state, so the
-//! coalesced execution is *bit-identical* to the stepped one — including
-//! FIFO tie-breaks, which depend only on the relative order in which
-//! resume events reach the scheduler (unchanged: all skipped events would
-//! have been consecutive). A single-threaded run coalesces into O(1)
-//! scheduler events total. Threads that share anything keep the original
+//! single scheduler event whenever the continuation's canonical key
+//! precedes the *horizon key* (the smallest canonical key of any other
+//! thread, provided by [`Scheduler::run`]). The scheduler would have
+//! re-dispatched this thread next in exactly that case, with exactly
+//! this state, so the coalesced execution is *bit-identical* to the
+//! stepped one — including equal-time ties, which the canonical key
+//! `(time, tid, step)` resolves identically whether the thread's resumes
+//! pass through the heap or run inline (the key carries no enqueue
+//! history). A single-threaded run coalesces into O(1) scheduler events
+//! total. Threads that share anything keep the original
 //! one-event-per-step path, untouched.
 //!
 //! Three invariants make the fast path exact, each pinned by a test:
@@ -53,25 +54,33 @@
 //!    straight-line stage arithmetic ([`Nic::set_qp_fast`], resolved
 //!    here in `install_nic_fast` with the page-exclusivity proof).
 //!    Pinned by `nicsim::nic`'s `qp_fast_path_is_bit_identical`.
-//! 3. **Per-CQ interaction horizon** — once a thread has posted its last
-//!    window, its remaining program drains its single-sharer CQ: polls
-//!    that touch only thread-private state (its arrival ring, its
-//!    credits, its own CQ lock) and then `Done`, which enqueues nothing.
-//!    That tail commutes with any other thread's step — in state *and*
-//!    in scheduler enqueue order — so it coalesces even at or past the
-//!    horizon ([`crate::sim::sched::may_coalesce`]). This is what lets
-//!    symmetric lock-step threads — which tie at equal timestamps and
-//!    would otherwise fall off the fast path on every terminal step —
-//!    batch their whole drain into the final post's event. Mid-run
-//!    polls do NOT qualify even though their state is private: the
-//!    thread will post again, resume keys are FIFO tie-broken by
-//!    enqueue order, and coalescing past the horizon would move our
-//!    next post's enqueue ahead of steps the general path dispatches
-//!    first — flipping the call order on shared servers if those later
-//!    keys tie (see [`crate::sim::sched::Interaction`]). *Post* steps
-//!    and everything preceding one keep the strict-horizon guard.
-//!    Pinned by `sim::sched`'s tie tests and
-//!    `prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce`.
+//! 3. **Per-CQ interaction horizon over canonical keys** — a fast-path
+//!    thread's polls touch only thread-private state (its arrival ring,
+//!    its credits, its own CQ lock), and `Done` enqueues nothing; both
+//!    commute with any other thread's pending step and coalesce even at
+//!    or past the horizon ([`crate::sim::sched::may_coalesce`]). Since
+//!    PR 4's enqueue-order-invariant scheduler key
+//!    ([`crate::sim::sched::Key`]), this covers *mid-run* polls, not
+//!    just the terminal drain: the thread's next post re-enters the
+//!    scheduler at the canonical heap position `(time, tid)`, a pure
+//!    function of its program (the key's dispatch-counting `step` field
+//!    differs between stepped and coalesced runs but is never consulted
+//!    across threads) — running its private polls ahead cannot move
+//!    that post past another thread at a later equal-time tie. (Under the frozen legacy enqueue-order tie-break it could,
+//!    which is why PR 2 had to stop at the terminal drain; the
+//!    `restrict_coalesce_to_terminal_drain` switch preserves that
+//!    baseline for differential measurement.) *Post* steps touch the
+//!    shared NIC pipeline — wire, DMA engines, TLB rails, possibly a
+//!    shared UAR register port — whose FIFO order is call order, so a
+//!    post coalesces only while it holds the smallest canonical key
+//!    (strictly before the horizon, or tying it with the winning thread
+//!    id). This is what lets symmetric lock-step threads — which tie at
+//!    equal timestamps on every step — fold each window's polls into
+//!    its last post's event instead of paying one dispatch per poll.
+//!    Pinned by `sim::sched`'s tie tests,
+//!    `prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce`,
+//!    `prop_midrun_coalescing_beats_terminal_drain_baseline` and the
+//!    legacy-vs-canonical differential suite (tests/properties.rs).
 //!
 //! `prop_fast_path_matches_general_path` and its fuzzed variants
 //! (tests/properties.rs) pin end-to-end bit-exactness across randomized
@@ -92,7 +101,8 @@ use crate::endpoints::ThreadEndpoint;
 use crate::nicsim::{CostModel, Nic};
 use crate::sim::atomic::SimAtomic;
 use crate::sim::ring::ArrivalRing;
-use crate::sim::sched::{may_coalesce, Interaction, Scheduler, Step};
+use crate::sim::sched::{may_coalesce, Interaction, Key, Scheduler, Step};
+use crate::sim::sched_legacy::LegacyScheduler;
 use crate::sim::{to_secs, SimLock, Time};
 use crate::verbs::{CqId, Fabric, QpId};
 
@@ -119,6 +129,19 @@ pub struct MsgRateConfig {
     /// (diagnostics + the fast-vs-general equivalence property test).
     /// Results must be identical either way.
     pub force_general_path: bool,
+    /// Reinstate the PR-2 coalescing rule verbatim (the one that was
+    /// sound under the legacy enqueue-order tie-break): only the
+    /// terminal drain is `Private`, and `Shared` continuations need the
+    /// strict time guard `t < horizon.time` — no canonical tie-wins.
+    /// Diagnostics + the mid-run-coalescing tests' baseline; results
+    /// must be identical either way, only `sched_events` grows.
+    pub restrict_coalesce_to_terminal_drain: bool,
+    /// Drive the run with the **frozen** seed scheduler
+    /// ([`LegacyScheduler`]: FIFO enqueue-order tie-break) on the
+    /// general one-event-per-step path. Differential suite only: the
+    /// canonical tie-break must reproduce every virtual-time aggregate
+    /// (rates, durations, accounting) bit-for-bit against this.
+    pub use_legacy_scheduler: bool,
 }
 
 impl Default for MsgRateConfig {
@@ -131,6 +154,8 @@ impl Default for MsgRateConfig {
             cost: CostModel::calibrated(),
             force_shared_qp_path: false,
             force_general_path: false,
+            restrict_coalesce_to_terminal_drain: false,
+            use_legacy_scheduler: false,
         }
     }
 }
@@ -441,9 +466,13 @@ impl Runner {
 
     /// Whether any run-wide switch forces every thread onto the general
     /// one-event-per-step path (and every QP onto the general NIC path).
+    /// The frozen legacy scheduler always runs general: its enqueue-order
+    /// tie-break is exactly the semantics that made past-horizon
+    /// coalescing unsound, so it is pinned on the stepped path.
     fn forces_general(&self) -> bool {
         self.cfg.force_general_path
             || self.cfg.force_shared_qp_path
+            || self.cfg.use_legacy_scheduler
             || self.thread_rank.is_some()
     }
 
@@ -509,7 +538,19 @@ impl Runner {
         self.fast_ok = self.compute_fast_ok();
         self.install_nic_fast();
         let n = self.threads.len() as u32;
-        let done = Scheduler::new(n).run(|tid, now, horizon| self.step(tid, now, horizon));
+        let done = if self.cfg.use_legacy_scheduler {
+            // Frozen seed semantics: enqueue-order tie-break, one event
+            // per step (forces_general() above switched every fast path
+            // off). The differential suite pins the canonical scheduler's
+            // aggregates against this bit-for-bit.
+            LegacyScheduler::new(n).run(|tid, now, _horizon| {
+                self.sched_events += 1;
+                self.sched_steps += 1;
+                self.step_once(tid as usize, now)
+            })
+        } else {
+            Scheduler::new(n).run(|tid, now, horizon| self.step(tid, now, horizon))
+        };
         let duration = *done.iter().max().unwrap_or(&0);
         let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
         let secs = to_secs(duration.max(1));
@@ -529,34 +570,55 @@ impl Runner {
 
     /// One scheduler event. Contended threads run exactly one bounded
     /// phase; fast-path threads coalesce consecutive phases under the
-    /// per-phase interaction bound (module docs, invariant #3): any step
-    /// below the horizon coalesces (the scheduler would have
-    /// re-dispatched us next anyway), and a thread *draining* its final
-    /// window — all WQEs posted, only private polls of its single-sharer
-    /// CQ and `Done` remain — coalesces even at or past the horizon,
-    /// including the equal-timestamp ties symmetric lock-step threads
-    /// produce on every step. Mid-run polls must NOT cross the horizon:
-    /// the thread will post again, and moving that post's enqueue ahead
-    /// of other threads' dispatches could flip a later equal-time FIFO
-    /// tie-break on shared servers (see [`Interaction`]).
-    fn step(&mut self, tid: u32, now: Time, horizon: Time) -> Step {
+    /// per-phase interaction bound (module docs, invariant #3):
+    ///
+    /// * a continuation in the **Poll** phase touches only thread-private
+    ///   state (single-sharer CQ ring, own credits, own CQ lock) and is
+    ///   `Private`: it coalesces even at or past the horizon — mid-run
+    ///   *and* terminal, because the enqueue-order-invariant scheduler
+    ///   key guarantees our eventual next post re-enters the heap at the
+    ///   same `(time, tid)` position either way;
+    /// * a continuation in the **Post** phase requests the shared NIC
+    ///   pipeline (wire, DMA, TLB, possibly a shared UAR port) and is
+    ///   `Shared`: it coalesces only while this thread holds the
+    ///   smallest canonical key — exactly when the scheduler would have
+    ///   re-dispatched it next — so every `Server` still sees requests
+    ///   in canonical dispatch order.
+    ///
+    /// `restrict_coalesce_to_terminal_drain` reinstates the PR-2 rule
+    /// verbatim — `Private` only for the terminal drain, and `Shared`
+    /// gated on the strict time horizon `t < horizon.time` (no canonical
+    /// tie-wins) — so the dispatch-count gain of the canonical tie-break
+    /// stays measurable against the exact baseline it replaced.
+    fn step(&mut self, tid: u32, now: Time, horizon: Key) -> Step {
         let ti = tid as usize;
         self.sched_events += 1;
         if !self.fast_ok[ti] {
             self.sched_steps += 1;
             return self.step_once(ti, now);
         }
+        let pr2_baseline = self.cfg.restrict_coalesce_to_terminal_drain;
         let mut now = now;
         loop {
             self.sched_steps += 1;
             match self.step_once(ti, now) {
                 Step::Resume(t) => {
                     let th = &self.threads[ti];
-                    let draining =
-                        matches!(th.phase, Phase::Poll) && th.posted >= th.msgs_total;
-                    let interaction =
-                        if draining { Interaction::Private } else { Interaction::Shared };
-                    if may_coalesce(t, horizon, interaction) {
+                    let private = match th.phase {
+                        Phase::Poll => !pr2_baseline || th.posted >= th.msgs_total,
+                        Phase::Post { .. } => false,
+                    };
+                    let coalesce = if private {
+                        true
+                    } else if pr2_baseline {
+                        // PR-2 Shared guard verbatim: strictly below the
+                        // horizon *time*, never at a tie. Both guards are
+                        // exact; this one just dispatches more.
+                        t < horizon.time
+                    } else {
+                        may_coalesce(t, tid, horizon, Interaction::Shared)
+                    };
+                    if coalesce {
                         now = t;
                     } else {
                         return Step::Resume(t);
@@ -890,6 +952,66 @@ mod tests {
         // Shared-QP threads stay on the one-event-per-step path.
         let r = run_category(Category::MpiThreads, 8, Features::all());
         assert_eq!(r.sched_events, r.sched_steps);
+    }
+
+    #[test]
+    fn midrun_coalescing_beats_terminal_drain_baseline() {
+        // PR-4 headline: with the canonical key, every window's polls
+        // fold into its last post's event, not just the terminal drain's.
+        // Same trajectory, strictly fewer dispatches than the PR-2 rule.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 16).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 4096, ..Default::default() };
+        let full = Runner::new(&f, &set.threads, cfg).run();
+        let terminal = Runner::new(
+            &f,
+            &set.threads,
+            MsgRateConfig { restrict_coalesce_to_terminal_drain: true, ..cfg },
+        )
+        .run();
+        assert_eq!(full.duration, terminal.duration);
+        assert_eq!(full.thread_done, terminal.thread_done);
+        assert_eq!(full.pcie, terminal.pcie);
+        assert_eq!(full.sched_steps, terminal.sched_steps);
+        assert!(
+            full.sched_events < terminal.sched_events,
+            "mid-run windows did not coalesce: {} vs terminal-only {}",
+            full.sched_events,
+            terminal.sched_events
+        );
+        assert!(terminal.sched_events <= terminal.sched_steps);
+    }
+
+    #[test]
+    fn legacy_scheduler_matches_canonical_aggregates_smoke() {
+        // The frozen enqueue-order scheduler and the canonical tie-break
+        // must agree on every virtual-time observable for the flagship
+        // symmetric shapes (the full randomized differential lives in
+        // tests/properties.rs). Lock-step peers stay in tid order under
+        // both tie-breaks, so even per-thread done-times pin here.
+        for (cat, n) in [(Category::MpiEverywhere, 16), (Category::Dynamic, 8)] {
+            for features in [Features::all(), Features::conservative()] {
+                let mut f = Fabric::connectx4();
+                let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
+                let cfg = MsgRateConfig { features, msgs_per_thread: 2048, ..Default::default() };
+                let canonical = Runner::new(&f, &set.threads, cfg).run();
+                let legacy = Runner::new(
+                    &f,
+                    &set.threads,
+                    MsgRateConfig { use_legacy_scheduler: true, ..cfg },
+                )
+                .run();
+                assert_eq!(canonical.duration, legacy.duration, "{cat} x{n}");
+                assert_eq!(canonical.thread_done, legacy.thread_done, "{cat} x{n}");
+                assert_eq!(canonical.pcie, legacy.pcie, "{cat} x{n}");
+                assert_eq!(canonical.mmsgs_per_sec, legacy.mmsgs_per_sec, "{cat} x{n}");
+                // Identical trajectories; the legacy path dispatches one
+                // event per step, the canonical fast path fewer.
+                assert_eq!(canonical.sched_steps, legacy.sched_steps, "{cat} x{n}");
+                assert_eq!(legacy.sched_events, legacy.sched_steps, "{cat} x{n}");
+                assert!(canonical.sched_events <= legacy.sched_events, "{cat} x{n}");
+            }
+        }
     }
 
     #[test]

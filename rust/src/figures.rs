@@ -473,14 +473,25 @@ pub fn fig14(quick: bool) -> Vec<Table> {
     vec![perf, usage]
 }
 
-/// Policy grid: message-size x sharing-level sweep at 16 threads, with
-/// per-cell resource accounting — the scenario coverage the composable
-/// policy API unlocks beyond the paper's exact figures (ROADMAP item).
-/// Sharing levels run Fig 4(b) top to bottom, plus the §VII scalable
-/// preset; sizes straddle the 60 B inline cutoff.
+/// Thread counts the default policy grid sweeps: the paper's 16-thread
+/// ceiling plus a 32-thread tier (ROADMAP item — the policy API supports
+/// any divisor-consistent grid point, so the grid should not stop where
+/// the paper's testbed did). Both tiers run under `--quick` too.
+pub const GRID_THREADS: [u32; 2] = [16, 32];
+
+/// Policy grid: message-size x sharing-level sweep over
+/// [`GRID_THREADS`], with per-cell resource accounting — the scenario
+/// coverage the composable policy API unlocks beyond the paper's exact
+/// figures. Sharing levels run Fig 4(b) top to bottom, plus the §VII
+/// scalable preset; sizes straddle the 60 B inline cutoff.
 pub fn grid(quick: bool) -> Vec<Table> {
+    grid_threads(&GRID_THREADS, quick)
+}
+
+/// [`grid`] at explicit thread counts (every policy in the grid is
+/// divisor-consistent at any even thread count).
+pub fn grid_threads(thread_counts: &[u32], quick: bool) -> Vec<Table> {
     const SIZES: [u32; 5] = [2, 16, 60, 256, 1024];
-    const NTHREADS: u32 = 16;
     let policies: Vec<(&str, EndpointPolicy)> = vec![
         ("Dynamic", EndpointPolicy::preset(Category::Dynamic)),
         ("SharedDynamic", EndpointPolicy::preset(Category::SharedDynamic)),
@@ -489,16 +500,20 @@ pub fn grid(quick: bool) -> Vec<Table> {
         ("MPI+threads", EndpointPolicy::preset(Category::MpiThreads)),
     ];
     let mut t = Table::new(
-        "Policy grid: message-size x sharing-level, 16 threads (All features)",
-        &["msg_B", "policy", "level", "rate_Mmsg/s", "uUARs", "uUARs_used", "mem_MiB"],
+        "Policy grid: message-size x sharing-level x threads (All features)",
+        &["msg_B", "policy", "threads", "level", "rate_Mmsg/s", "uUARs", "uUARs_used", "mem_MiB"],
     );
-    let cells: Vec<(u32, &str, EndpointPolicy)> = SIZES
+    let cells: Vec<(u32, &str, u32, EndpointPolicy)> = SIZES
         .iter()
-        .flat_map(|&size| policies.iter().map(move |&(label, p)| (size, label, p)))
+        .flat_map(|&size| {
+            policies.iter().flat_map(move |&(label, p)| {
+                thread_counts.iter().map(move |&n| (size, label, n, p))
+            })
+        })
         .collect();
-    let results = par_map(cells, move |(size, label, mut policy)| {
+    let results = par_map(cells, move |(size, label, nthreads, mut policy)| {
         policy.msg_size = size;
-        let (fabric, eps) = policy.build_fresh(NTHREADS).expect("topology build");
+        let (fabric, eps) = policy.build_fresh(nthreads).expect("topology build");
         let cfg = MsgRateConfig {
             msgs_per_thread: msgs(quick) / 4,
             msg_size: size,
@@ -506,12 +521,13 @@ pub fn grid(quick: bool) -> Vec<Table> {
         };
         let r = Runner::new(&fabric, &eps, cfg).run();
         let u = ResourceUsage::of_fabric(&fabric);
-        (size, label, policy.sharing_level(NTHREADS), r.mmsgs_per_sec, u)
+        (size, label, nthreads, policy.sharing_level(nthreads), r.mmsgs_per_sec, u)
     });
-    for (size, label, level, rate, u) in &results {
+    for (size, label, nthreads, level, rate, u) in &results {
         t.row(vec![
             size.to_string(),
             label.to_string(),
+            nthreads.to_string(),
             level.to_string(),
             f2(*rate),
             u.uuars_allocated.to_string(),

@@ -31,13 +31,14 @@
 //!
 //! 3. **Per-CQ interaction horizon.** Not in this module but relied on
 //!    by it: the benchmark engine may coalesce a continuation past the
-//!    scheduler horizon only for a thread draining its final window —
-//!    private CQ polls then `Done`, which neither touches a shared
-//!    server nor enqueues another contending resume
+//!    scheduler horizon only when it touches thread-private state — CQ
+//!    polls of a single-sharer CQ (mid-run or terminal, now that the
+//!    scheduler key is enqueue-order invariant) and `Done`
 //!    ([`crate::sim::sched::may_coalesce`]). Everything the NIC owns
-//!    here (wire, DMA, TLB) is shared, so post steps stay strictly
-//!    horizon-ordered and the request order every `Server` sees is the
-//!    general path's. Pinned by `sim::sched` tie tests and
+//!    here (wire, DMA, TLB) is shared, so post steps coalesce only
+//!    while they hold the smallest canonical key and the request order
+//!    every `Server` sees is the canonical dispatch order — the general
+//!    path's. Pinned by `sim::sched` tie tests and
 //!    `prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce`.
 
 use std::collections::HashMap;

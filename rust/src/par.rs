@@ -6,9 +6,18 @@
 //! cores. std-only (no rayon offline): a `std::thread::scope` pool pulls
 //! job indices from an atomic counter, and results keep job order so table
 //! output is byte-identical to a sequential run.
+//!
+//! A panic inside a cell is caught on the worker, carried back to the
+//! caller's thread and re-raised with its **original payload** — an
+//! `expect` message inside a figure builder reads the same whether the
+//! suite ran sequentially or on eight workers. (Letting the panic cross
+//! the scope join instead would surface as std's generic "a scoped
+//! thread panicked", and the poisoned result mutex would then turn the
+//! collection pass into an opaque double panic.)
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
 
 /// Worker count: the `SCEP_WORKERS` env var when set (≥ 1), else the
 /// machine's available parallelism. `SCEP_WORKERS=1` forces sequential
@@ -27,39 +36,83 @@ pub fn workers() -> usize {
 /// Apply `f` to every item on a scoped worker pool; the result vector
 /// keeps item order. Falls back to sequential execution for empty/tiny
 /// batches or a single worker. A panic inside `f` propagates to the
-/// caller (the scope re-raises it), so `expect`s inside figure builders
-/// behave as they did sequentially.
+/// caller with its original payload (first panicking job wins; the pool
+/// stops handing out further jobs), so `expect`s inside figure builders
+/// read as they do sequentially.
 pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    let nworkers = workers().min(items.len());
+    par_map_with(nworkers, items, f)
+}
+
+/// [`par_map`] with an explicit worker count (tests pin multi-worker
+/// behavior without touching the process-global `SCEP_WORKERS`).
+pub fn par_map_with<T, R, F>(nworkers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = items.len();
-    let nworkers = workers().min(n);
-    if nworkers <= 1 {
+    if nworkers <= 1 || n <= 1 {
         return items.into_iter().map(f).collect();
     }
     let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    // First panic payload observed by any worker, resumed on the caller
+    // after the scope joins. A `Mutex` guard can only be poisoned by a
+    // panic inside its critical section (a `take`/store, not `f`), and
+    // poisoning is no reason to lose either the payload or the data:
+    // recover the inner value with `PoisonError::into_inner` throughout.
+    let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     let fref = &f;
     std::thread::scope(|s| {
         for _ in 0..nworkers {
             s.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+                if i >= n || stop.load(Ordering::Relaxed) {
                     break;
                 }
-                let item = slots[i].lock().unwrap().take().expect("each job taken once");
-                let r = fref(item);
-                *results[i].lock().unwrap() = Some(r);
+                let item = slots[i]
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .take()
+                    .expect("each job taken once");
+                // `AssertUnwindSafe`: on panic the job's slot and result
+                // are simply abandoned — no caller-visible state is left
+                // half-updated, and the run ends by re-raising anyway.
+                match catch_unwind(AssertUnwindSafe(|| fref(item))) {
+                    Ok(r) => {
+                        *results[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+                    }
+                    Err(payload) => {
+                        stop.store(true, Ordering::Relaxed);
+                        let mut first = panicked.lock().unwrap_or_else(PoisonError::into_inner);
+                        if first.is_none() {
+                            *first = Some(payload);
+                        }
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some(payload) = panicked.into_inner().unwrap_or_else(PoisonError::into_inner) {
+        resume_unwind(payload);
+    }
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker stored a result"))
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(PoisonError::into_inner)
+                .expect("worker stored a result")
+        })
         .collect()
 }
 
@@ -107,5 +160,60 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "cell 7 exploded: topology build")]
+    fn panic_message_survives_the_pool() {
+        // The satellite regression: a panicking figure cell must surface
+        // its real message through the multi-worker path, not std's
+        // generic "a scoped thread panicked" nor an opaque
+        // poisoned-mutex double panic. Forced to 4 workers so the pool
+        // path runs even on single-core CI.
+        par_map_with(4, (0..32u32).collect(), |x| {
+            if x == 7 {
+                panic!("cell {x} exploded: topology build");
+            }
+            x
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "every job fails")]
+    fn all_jobs_panicking_still_reports_a_payload() {
+        // Whichever worker records its payload first wins; the others'
+        // payloads are dropped, never deadlocked on or double-panicked.
+        par_map_with(3, vec![1u32, 2, 3], |_| -> u32 { panic!("every job fails") });
+    }
+
+    #[test]
+    fn results_before_a_panic_are_simply_discarded() {
+        // A panic aborts the batch: no half-filled result vector escapes.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            par_map_with(2, (0..16u32).collect(), |x| {
+                if x == 15 {
+                    panic!("late failure");
+                }
+                x * 2
+            })
+        }));
+        let payload = caught.expect_err("batch must panic");
+        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+            s.to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            panic!("unexpected panic payload type");
+        };
+        assert_eq!(msg, "late failure");
+    }
+
+    #[test]
+    fn explicit_worker_count_matches_sequential_output() {
+        let items: Vec<u64> = (0..100).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x * x).collect();
+        for w in [1usize, 2, 3, 8] {
+            assert_eq!(par_map_with(w, items.clone(), |x| x * x), seq, "{w} workers");
+        }
     }
 }

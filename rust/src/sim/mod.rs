@@ -20,6 +20,7 @@ pub mod lock;
 pub mod ring;
 pub mod rng;
 pub mod sched;
+pub mod sched_legacy;
 pub mod server;
 pub mod stats;
 
@@ -27,6 +28,7 @@ pub use lock::SimLock;
 pub use ring::ArrivalRing;
 pub use rng::XorShift;
 pub use sched::Scheduler;
+pub use sched_legacy::LegacyScheduler;
 pub use server::{ParallelServer, Server};
 
 /// Virtual time in picoseconds.

@@ -10,13 +10,44 @@
 //! Unlike the classic `BinaryHeap<Reverse<(Time, seq, tid)>>` event queue,
 //! each thread here owns exactly one slot: a resume is a key *increase* on
 //! the root followed by one sift-down (no pop+push pair, no allocation, no
-//! decrease-key). Ties are broken by a monotone sequence number exactly as
-//! the heap-of-tuples version broke them, so the dispatch order is
-//! bit-identical to the original scheduler.
+//! decrease-key).
 //!
-//! The step callback also receives the *horizon*: the earliest resume time
-//! of any other thread. A step that can prove its continuation begins
-//! strictly before the horizon may run that continuation inline (the
+//! # The canonical, enqueue-order-invariant tie-break
+//!
+//! Equal-time ties are broken by the **canonical key**
+//! [`Key`]` = (resume_time, thread_id, per-thread dispatch index)` —
+//! whose tie-deciding `(time, tid)` prefix is a pure function of the
+//! thread's program, independent of *when* the resume reached the
+//! scheduler. The seed scheduler (frozen as
+//! [`LegacyScheduler`](super::sched_legacy::LegacyScheduler) for the
+//! differential suite) instead tie-broke FIFO by a global enqueue
+//! sequence number, so a thread's position at a tie depended on its
+//! entire dispatch history. That history-dependence is what made
+//! past-horizon coalescing unsound for any thread that would post again:
+//! running ahead moved its next enqueue earlier and could flip a later
+//! equal-time tie (see `EXPERIMENTS.md` §PR-2). With the canonical key,
+//! a thread's future `(time, tid)` heap position against every other
+//! thread is the same whether its private steps ran stepped or
+//! coalesced (the dispatch-counting `step` field differs, but no
+//! cross-thread comparison ever reaches it) — coalescing can never
+//! perturb a tie-break.
+//!
+//! Equal-time ties *commute* in the benchmark engine: two steps tied at
+//! one timestamp either touch disjoint simulation state (any poll of a
+//! single-sharer CQ against anything, steps of different sharing groups
+//! off the NIC) — in which case their order is unobservable — or they are
+//! steps of threads in symmetric states (lock-step peers), in which case
+//! swapping them relabels which thread takes which FIFO slot without
+//! changing any aggregate virtual-time observable (rates, durations,
+//! resource accounting, PCIe counters). The old-vs-new differential suite
+//! (`tests/properties.rs`, `prop_legacy_vs_canonical_*`) pins exactly
+//! this: bit-identical rates/accounting between the frozen enqueue-order
+//! scheduler and the canonical one, across random policies, thread
+//! counts and postlist sizes, and over the golden fig2/9/11 cells.
+//!
+//! The step callback also receives the *horizon key*: the smallest
+//! canonical key of any other thread. A step whose continuation key
+//! precedes the horizon key may run that continuation inline (the
 //! scheduler would have re-dispatched it next anyway) — this is the hook
 //! the message-rate engine's fast path uses to coalesce a whole
 //! post-window + poll iteration into O(1) scheduler events. Which
@@ -28,63 +59,103 @@
 
 use super::Time;
 
+/// Canonical resume key: `(resume_time, thread_id, per-thread dispatch
+/// index)`, ordered lexicographically (the derived `Ord` follows field
+/// order). Two threads never share a `tid`, so cross-thread comparisons
+/// — dispatch order and the coalescing guard — are decided by
+/// `(time, tid)` alone; `step` only sequences one thread's dispatches
+/// at one timestamp (`Resume(now)` self-loops) for trace tests. Note
+/// `step` counts *dispatched* resumes, so a coalesced run (several
+/// program phases folded into one event) carries smaller step values
+/// than the stepped run — which is harmless precisely because no
+/// cross-thread comparison ever reaches the field. Nothing in the key
+/// depends on when the resume was handed to the scheduler — that is
+/// the enqueue-order invariance the coalescing fast path relies on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Key {
+    /// Earliest virtual time the step may begin.
+    pub time: Time,
+    /// Owning thread.
+    pub tid: u32,
+    /// How many dispatches of this thread precede this one.
+    pub step: u64,
+}
+
+impl Key {
+    /// Greater than every real key (the horizon of a lone thread).
+    pub const MAX: Key = Key { time: Time::MAX, tid: u32::MAX, step: u64::MAX };
+}
+
 /// How a coalesced continuation interacts with the *other* threads of the
 /// run — the "next interaction" classification used by the coalescing
 /// guard [`may_coalesce`].
 ///
 /// The horizon alone is too conservative for symmetric lock-step threads:
 /// identical independent threads tie at equal timestamps on every step,
-/// so `t < horizon` fails every time and each step costs one dispatch.
-/// Two things must BOTH hold before a step may run inline past the
-/// horizon:
+/// so a strict `t < horizon` fails every time and each step costs one
+/// dispatch. What actually decides whether a step may run inline past
+/// (or at) the horizon is whether any *other* thread could observe the
+/// difference:
 ///
-/// 1. **State commutation** — the step touches only state owned by the
-///    running thread (its single-sharer CQ ring, its credits, its own CQ
-///    lock), so executing it before another thread's pending step changes
-///    neither outcome.
-/// 2. **Enqueue-order neutrality** — the thread never again hands the
-///    scheduler a resume key that could tie with another thread's.
-///    Resume keys are FIFO tie-broken by *enqueue order* (`seq`), and
-///    coalescing moves this thread's enqueues earlier relative to other
-///    threads' dispatches; if a later key of ours tied a later key of
-///    theirs at an equal timestamp, the flipped `seq` order would flip
-///    the call order on shared FIFO servers. State commutation alone
-///    cannot repair that, so a thread with *any* future shared step must
-///    stay on the strict-horizon rule.
+/// * **State commutation.** A step that touches only state owned by the
+///   running thread (its single-sharer CQ ring, its credits, its own CQ
+///   lock) commutes with every pending step of every other thread:
+///   executing it earlier in the global call sequence changes neither its
+///   own outcome nor anyone else's.
+/// * **Enqueue-order neutrality.** Under the canonical key this is
+///   automatic: the thread's future heap position against any other
+///   thread is its `(time, tid)` — a pure function of its program — so
+///   running ahead cannot move it past another thread at a later
+///   equal-time tie.
+///   (Under the frozen legacy scheduler's enqueue-order tie-break it was
+///   NOT automatic, which is why only the terminal drain could coalesce
+///   there; see `EXPERIMENTS.md` §PR-4.)
 ///
-/// Both hold exactly for a thread *draining* its final window: its
-/// remaining program is polls of its private CQ followed by `Done`
-/// (which enqueues nothing), so the whole tail runs inline in one event.
+/// A step that requests shared FIFO resources must still begin at a
+/// canonical key below every other pending key, because FIFO order is
+/// *call* order. Counterexample: threads 0 and 1, both with posts tied
+/// at `t = 100` on the shared wire (per-message slot `w`). The canonical
+/// order serves thread 0 first: its message occupies `[100, 100+w)` and
+/// thread 1's `[100+w, 100+2w)`. If thread 1 coalesced its post inline
+/// while thread 0's tied key was still pending, the wire would serve
+/// thread 1 first and the two completion times would swap — a different
+/// trajectory, not a relabeling, because the threads' subsequent
+/// programs differ in general.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Interaction {
-    /// Touches only thread-private state *and* the thread will never
-    /// enqueue a contending resume again (terminal drain of a
-    /// single-sharer CQ): coalescible unconditionally.
+    /// Touches only thread-private state (a poll of a single-sharer CQ,
+    /// or `Done`, which enqueues nothing): coalescible unconditionally —
+    /// with a canonical key, mid-run private steps qualify, not just the
+    /// terminal drain.
     Private,
     /// Requests shared FIFO resources (the wire, the DMA engines, a TLB
-    /// rail, a shared lock) — or precedes a step that will: FIFO order
-    /// is *call* order and tie-breaks are enqueue order, so the step
-    /// must begin strictly before the horizon — exactly when the
-    /// scheduler would have re-dispatched this thread next anyway.
+    /// rail, a shared UAR register port or lock): FIFO order is *call*
+    /// order, so the step must hold the smallest canonical key — begin
+    /// strictly before the horizon, or tie it with the winning thread
+    /// id — exactly when the scheduler would have re-dispatched this
+    /// thread next anyway.
     Shared,
 }
 
-/// The coalescing guard: may a continuation beginning at `t` run inline
-/// within the current scheduler event, given the earliest resume time
-/// `horizon` of any other thread?
+/// The coalescing guard: may a continuation of thread `tid` beginning at
+/// `t` run inline within the current scheduler event, given the smallest
+/// canonical key `horizon` of any other thread?
 ///
-/// Tie behavior is the load-bearing detail: at `t == horizon` the
-/// sleeping thread wins the dispatch (its heap key carries the older
-/// sequence number), so a `Shared` continuation must NOT coalesce at a
-/// tie — the general path would have interleaved the other thread first.
-/// A `Private` (terminal-drain) continuation commutes with that
-/// interleaving — in state *and* in future enqueue order — and may.
-/// `sched::tests::tie_at_horizon_*` pin both directions.
+/// Tie behavior is the load-bearing detail: at `t == horizon.time` the
+/// canonical key decides by thread id, so a `Shared` continuation of the
+/// smaller-tid thread coalesces (the scheduler would dispatch it first
+/// anyway) while the larger-tid thread must yield — the general path
+/// would have interleaved the other thread's step first. A `Private`
+/// continuation commutes with that interleaving and may run inline
+/// either way. `sched::tests::tie_at_horizon_*` pin all directions.
+///
+/// (`horizon.step` is never consulted: the horizon belongs to another
+/// thread, so `(time, tid)` always decides.)
 #[inline]
-pub fn may_coalesce(t: Time, horizon: Time, interaction: Interaction) -> bool {
+pub fn may_coalesce(t: Time, tid: u32, horizon: Key, interaction: Interaction) -> bool {
     match interaction {
         Interaction::Private => true,
-        Interaction::Shared => t < horizon,
+        Interaction::Shared => (t, tid) < (horizon.time, horizon.tid),
     }
 }
 
@@ -98,16 +169,16 @@ pub enum Step {
 }
 
 /// Run `threads` to completion. `step(tid, now, horizon)` advances thread
-/// `tid` one step (or, below `horizon`, several coalesced steps) from
-/// `now`. Returns the virtual completion time of each thread.
+/// `tid` one step (or, under the [`may_coalesce`] guard, several
+/// coalesced steps) from `now`. Returns the virtual completion time of
+/// each thread.
 pub struct Scheduler {
-    /// `(resume_time, seq)` per thread; `seq` is the FIFO tie-breaker.
-    key: Vec<(Time, u64)>,
+    /// Canonical key per thread (see [`Key`]).
+    key: Vec<Key>,
     /// Min-heap of thread ids ordered by `key`.
     heap: Vec<u32>,
     /// Live prefix length of `heap` (finished threads are swapped out).
     len: usize,
-    seq: u64,
     done: Vec<Option<Time>>,
 }
 
@@ -115,10 +186,9 @@ impl Scheduler {
     pub fn new(nthreads: u32) -> Self {
         let n = nthreads as usize;
         Self {
-            key: (0..nthreads as u64).map(|i| (0, i)).collect(),
+            key: (0..nthreads).map(|tid| Key { time: 0, tid, step: 0 }).collect(),
             heap: (0..nthreads).collect(),
             len: n,
-            seq: nthreads as u64,
             done: vec![None; n],
         }
     }
@@ -148,16 +218,16 @@ impl Scheduler {
         }
     }
 
-    /// Earliest resume time of any thread other than the root (the
+    /// Smallest canonical key of any thread other than the root (the
     /// second-smallest key lives in one of the root's children).
     #[inline]
-    fn horizon(&self) -> Time {
-        let mut h = Time::MAX;
+    fn horizon(&self) -> Key {
+        let mut h = Key::MAX;
         if self.len > 1 {
-            h = self.key[self.heap[1] as usize].0;
+            h = self.key[self.heap[1] as usize];
         }
         if self.len > 2 {
-            h = h.min(self.key[self.heap[2] as usize].0);
+            h = h.min(self.key[self.heap[2] as usize]);
         }
         h
     }
@@ -166,17 +236,17 @@ impl Scheduler {
     /// `step(tid, now, horizon)` and returns the thread's next action.
     pub fn run<F>(mut self, mut step: F) -> Vec<Time>
     where
-        F: FnMut(u32, Time, Time) -> Step,
+        F: FnMut(u32, Time, Key) -> Step,
     {
         while self.len > 0 {
             let tid = self.heap[0];
-            let now = self.key[tid as usize].0;
+            let now = self.key[tid as usize].time;
             let horizon = self.horizon();
             match step(tid, now, horizon) {
                 Step::Resume(t) => {
                     debug_assert!(t >= now, "time must not go backwards");
-                    self.key[tid as usize] = (t, self.seq);
-                    self.seq += 1;
+                    let k = &mut self.key[tid as usize];
+                    *k = Key { time: t, tid, step: k.step + 1 };
                     self.sift_down(0);
                 }
                 Step::Done(t) => {
@@ -206,6 +276,7 @@ impl Scheduler {
 
 #[cfg(test)]
 mod tests {
+    use super::super::sched_legacy::LegacyScheduler;
     use super::*;
 
     #[test]
@@ -234,30 +305,32 @@ mod tests {
     fn horizon_is_next_other_thread() {
         let mut seen = Vec::new();
         Scheduler::new(2).run(|tid, now, horizon| {
-            seen.push((tid, horizon));
+            seen.push((tid, horizon.time));
             match tid {
                 0 if now < 20_000 => Step::Resume(now + 5_000),
                 0 => Step::Done(now),
                 _ => Step::Done(now + 100),
             }
         });
-        // Both threads start queued at 0: thread 0 dispatches first (FIFO
-        // tie-break) and sees thread 1's key as its horizon.
+        // Both threads start queued at 0: thread 0 dispatches first (the
+        // canonical key tie-breaks by tid) and sees thread 1's key as its
+        // horizon.
         assert_eq!(seen[0], (0, 0));
         // Thread 0 resumed to 5000, so thread 1 (still at 0) runs next and
         // sees 5000 as its horizon; it then finishes.
         assert_eq!(seen[1], (1, 5_000));
-        // Thread 0 runs alone from then on: horizon is Time::MAX.
+        // Thread 0 runs alone from then on: horizon is Key::MAX.
         assert!(seen[2..].iter().all(|&(tid, h)| tid == 0 && h == Time::MAX));
         // Thread 0 steps at 0, 5000, 10000, 15000, 20000; thread 1 once.
         assert_eq!(seen.len(), 6);
     }
 
     #[test]
-    fn indexed_heap_matches_reference_binaryheap_order() {
-        // The satellite ordering test: dispatch order must be bit-identical
-        // to the seed's `BinaryHeap<Reverse<(Time, seq, tid)>>` scheduler,
-        // including FIFO tie-breaks (durations below collide on purpose).
+    fn indexed_heap_matches_canonical_reference_binaryheap_order() {
+        // Dispatch order must equal the reference
+        // `BinaryHeap<Reverse<(time, tid, step)>>` event queue's — the
+        // canonical total order — including equal-time ties (durations
+        // below collide on purpose).
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
 
@@ -268,21 +341,19 @@ mod tests {
             (x % 5) * 16 // 0, 16, 32, 48, 64 — plenty of exact ties
         };
 
-        // Reference implementation (the seed scheduler).
+        // Reference implementation of the canonical order.
         let mut heap = BinaryHeap::new();
         for tid in 0..nthreads {
-            heap.push(Reverse((0u64, tid as u64, tid)));
+            heap.push(Reverse((0u64, tid, 0u64)));
         }
-        let mut seq = nthreads as u64;
         let mut count = vec![0u32; nthreads as usize];
         let mut ref_order = Vec::new();
-        while let Some(Reverse((now, _, tid))) = heap.pop() {
+        while let Some(Reverse((now, tid, step))) = heap.pop() {
             ref_order.push((now, tid));
             let k = count[tid as usize];
             count[tid as usize] += 1;
             if k + 1 < steps_per_thread {
-                heap.push(Reverse((now + dur(tid, k), seq, tid)));
-                seq += 1;
+                heap.push(Reverse((now + dur(tid, k), tid, step + 1)));
             }
         }
 
@@ -303,34 +374,79 @@ mod tests {
         assert_eq!(done.len(), nthreads as usize);
     }
 
+    /// The canonical-vs-legacy divergence, pinned by hand: thread 1 is
+    /// dispatched (and re-enqueued) before thread 0 mid-run, then both
+    /// tie at t=100. The legacy scheduler dispatches thread 1 first (its
+    /// enqueue is older); the canonical scheduler dispatches thread 0
+    /// (smaller tid) — the tie-break no longer depends on dispatch
+    /// history. This is exactly the order difference the differential
+    /// suite proves unobservable in virtual-time results.
     #[test]
-    fn tie_at_horizon_blocks_shared_continuations() {
-        // A Shared continuation landing exactly ON the horizon must fall
-        // back to the scheduler: the sleeping thread's older seq wins the
-        // dispatch at a tie, so running inline would reorder its shared
-        // resource requests.
-        assert!(!may_coalesce(100, 100, Interaction::Shared));
-        assert!(may_coalesce(99, 100, Interaction::Shared));
-        assert!(!may_coalesce(101, 100, Interaction::Shared));
+    fn equal_time_tie_is_enqueue_order_invariant() {
+        // Program: thread 0 steps at 0 -> 60 -> 100; thread 1 at
+        // 0 -> 40 -> 100. Between t=40 and t=60 thread 1's resume to 100
+        // is enqueued before thread 0's.
+        let program = |tid: u32, now: Time| -> Step {
+            match (tid, now) {
+                (0, 0) => Step::Resume(60),
+                (0, 60) => Step::Resume(100),
+                (1, 0) => Step::Resume(40),
+                (1, 40) => Step::Resume(100),
+                (_, 100) => Step::Done(100),
+                _ => unreachable!("unexpected dispatch ({tid}, {now})"),
+            }
+        };
+        let mut legacy_order = Vec::new();
+        LegacyScheduler::new(2).run(|tid, now, _| {
+            legacy_order.push((now, tid));
+            program(tid, now)
+        });
+        let mut canonical_order = Vec::new();
+        Scheduler::new(2).run(|tid, now, _| {
+            canonical_order.push((now, tid));
+            program(tid, now)
+        });
+        let prefix = [(0, 0), (0, 1), (40, 1), (60, 0)];
+        assert_eq!(&legacy_order[..4], &prefix);
+        assert_eq!(&canonical_order[..4], &prefix);
+        // The tie at 100: enqueue order (thread 1 first) vs canonical
+        // (thread 0 first).
+        assert_eq!(&legacy_order[4..], &[(100, 1), (100, 0)]);
+        assert_eq!(&canonical_order[4..], &[(100, 0), (100, 1)]);
+    }
+
+    #[test]
+    fn tie_at_horizon_resolved_by_canonical_key_for_shared() {
+        // A Shared continuation landing exactly ON the horizon coalesces
+        // iff it wins the canonical tie: the smaller tid would be
+        // dispatched first by the scheduler anyway; the larger tid must
+        // fall back so the other thread's shared requests stay ahead.
+        let other = Key { time: 100, tid: 3, step: 9 };
+        assert!(may_coalesce(100, 1, other, Interaction::Shared));
+        assert!(!may_coalesce(100, 5, other, Interaction::Shared));
+        // Strictly before / after the horizon: tid is irrelevant.
+        assert!(may_coalesce(99, 7, other, Interaction::Shared));
+        assert!(!may_coalesce(101, 1, other, Interaction::Shared));
     }
 
     #[test]
     fn tie_at_horizon_admits_private_continuations() {
         // A Private continuation commutes with the tied thread's step:
-        // coalescible at, before, and past the horizon.
-        assert!(may_coalesce(100, 100, Interaction::Private));
-        assert!(may_coalesce(99, 100, Interaction::Private));
-        assert!(may_coalesce(101, 100, Interaction::Private));
-        // Lone-thread horizon (Time::MAX) admits everything.
-        assert!(may_coalesce(u64::MAX - 1, u64::MAX, Interaction::Shared));
-        assert!(may_coalesce(u64::MAX, u64::MAX, Interaction::Private));
+        // coalescible at, before, and past the horizon, for any tid.
+        let other = Key { time: 100, tid: 0, step: 0 };
+        assert!(may_coalesce(100, 5, other, Interaction::Private));
+        assert!(may_coalesce(99, 5, other, Interaction::Private));
+        assert!(may_coalesce(101, 5, other, Interaction::Private));
+        // Lone-thread horizon (Key::MAX) admits everything.
+        assert!(may_coalesce(u64::MAX - 1, 0, Key::MAX, Interaction::Shared));
+        assert!(may_coalesce(u64::MAX, 0, Key::MAX, Interaction::Private));
     }
 
     #[test]
-    fn scheduler_tie_break_matches_private_coalescing_claim() {
-        // Two threads tied at t=0: thread 0 (older seq) dispatches first.
-        // This is the dispatch order the Shared guard protects and the
-        // Private classification is allowed to commute across.
+    fn scheduler_tie_break_matches_coalescing_claim() {
+        // Two threads tied at t=0: thread 0 (smaller tid) dispatches
+        // first. This is the dispatch order the Shared guard reproduces
+        // and the Private classification is allowed to commute across.
         let mut order = Vec::new();
         Scheduler::new(2).run(|tid, now, _| {
             order.push((now, tid));
@@ -340,15 +456,38 @@ mod tests {
     }
 
     #[test]
+    fn self_resume_at_same_time_increments_step() {
+        // Resume(now) self-loops are ordered by the step index; the
+        // thread keeps the root at an equal-time tie with itself and the
+        // other thread's later key stays behind.
+        let mut order = Vec::new();
+        let mut polls = 0;
+        Scheduler::new(2).run(|tid, now, _| {
+            order.push((now, tid));
+            match tid {
+                0 if polls < 3 => {
+                    polls += 1;
+                    Step::Resume(now) // same time, next step index
+                }
+                0 => Step::Done(now),
+                _ => Step::Done(now + 50),
+            }
+        });
+        // Thread 0 holds the root across its equal-time self-resumes
+        // (it loses no (time, tid) comparison); thread 1 runs after
+        // thread 0's chain completes.
+        assert_eq!(order, vec![(0, 0), (0, 0), (0, 0), (0, 0), (0, 1)]);
+    }
+
+    #[test]
     #[should_panic(expected = "thread 0 never reported Step::Done")]
     fn unfinished_thread_panics_with_thread_id() {
         // A scheduler whose heap drained without thread 0 completing must
         // name the hung thread in its panic message.
         let sched = Scheduler {
-            key: vec![(0, 0)],
+            key: vec![Key { time: 0, tid: 0, step: 0 }],
             heap: vec![0],
             len: 0,
-            seq: 1,
             done: vec![None],
         };
         let _ = sched.run(|_, _, _| Step::Done(0));

@@ -1,0 +1,185 @@
+//! **Frozen** copy of the seed scheduler's enqueue-order FIFO tie-break.
+//!
+//! Do not modify. [`LegacyScheduler`] preserves the exact dispatch
+//! semantics the repo shipped from PR 1 through PR 3: per-thread resume
+//! keys `(time, seq)` where `seq` is a global monotone *enqueue* counter,
+//! so equal-time ties are broken by the order in which resumes reached
+//! the scheduler. PR 4 replaced that with the canonical, enqueue-order-
+//! invariant key (see [`sched::Key`](super::sched::Key)); this copy
+//! exists so the differential suite (`tests/properties.rs`,
+//! `prop_legacy_vs_canonical_*`) can keep proving that every equal-time
+//! tie commutes — i.e. that virtual-time results (rates, resource
+//! accounting, the golden fig2/9/11 tables) are bit-identical between
+//! the two tie-breaks while only the dispatch *order* became canonical.
+//!
+//! The legacy horizon is a bare [`Time`] (the old strict `t < horizon`
+//! coalescing guard never looked past it); benchmark runs driven through
+//! this scheduler use the general one-event-per-step path, which is the
+//! semantics the enqueue-order tie-break was pinned under.
+
+use super::Time;
+
+pub use super::sched::Step;
+
+/// The seed scheduler: indexed min-heap over `(resume_time, enqueue_seq)`
+/// keys. See the module docs — frozen for the differential suite.
+pub struct LegacyScheduler {
+    /// `(resume_time, seq)` per thread; `seq` is the FIFO tie-breaker.
+    key: Vec<(Time, u64)>,
+    /// Min-heap of thread ids ordered by `key`.
+    heap: Vec<u32>,
+    /// Live prefix length of `heap` (finished threads are swapped out).
+    len: usize,
+    seq: u64,
+    done: Vec<Option<Time>>,
+}
+
+impl LegacyScheduler {
+    pub fn new(nthreads: u32) -> Self {
+        let n = nthreads as usize;
+        Self {
+            key: (0..nthreads as u64).map(|i| (0, i)).collect(),
+            heap: (0..nthreads).collect(),
+            len: n,
+            seq: nthreads as u64,
+            done: vec![None; n],
+        }
+    }
+
+    #[inline]
+    fn less(&self, a: u32, b: u32) -> bool {
+        self.key[a as usize] < self.key[b as usize]
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            if l >= self.len {
+                break;
+            }
+            let r = l + 1;
+            let mut m = l;
+            if r < self.len && self.less(self.heap[r], self.heap[l]) {
+                m = r;
+            }
+            if self.less(self.heap[m], self.heap[i]) {
+                self.heap.swap(i, m);
+                i = m;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Earliest resume time of any thread other than the root (the
+    /// second-smallest key lives in one of the root's children).
+    #[inline]
+    fn horizon(&self) -> Time {
+        let mut h = Time::MAX;
+        if self.len > 1 {
+            h = self.key[self.heap[1] as usize].0;
+        }
+        if self.len > 2 {
+            h = h.min(self.key[self.heap[2] as usize].0);
+        }
+        h
+    }
+
+    /// Drive all threads to completion; `step` is invoked as
+    /// `step(tid, now, horizon)` and returns the thread's next action.
+    pub fn run<F>(mut self, mut step: F) -> Vec<Time>
+    where
+        F: FnMut(u32, Time, Time) -> Step,
+    {
+        while self.len > 0 {
+            let tid = self.heap[0];
+            let now = self.key[tid as usize].0;
+            let horizon = self.horizon();
+            match step(tid, now, horizon) {
+                Step::Resume(t) => {
+                    debug_assert!(t >= now, "time must not go backwards");
+                    self.key[tid as usize] = (t, self.seq);
+                    self.seq += 1;
+                    self.sift_down(0);
+                }
+                Step::Done(t) => {
+                    self.done[tid as usize] = Some(t);
+                    self.len -= 1;
+                    self.heap.swap(0, self.len);
+                    if self.len > 1 {
+                        self.sift_down(0);
+                    }
+                }
+            }
+        }
+        self.done
+            .into_iter()
+            .enumerate()
+            .map(|(tid, d)| {
+                d.unwrap_or_else(|| {
+                    panic!(
+                        "scheduler drained but thread {tid} never reported Step::Done — \
+                         its program hung or it was never enqueued"
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_heap_matches_seed_reference_binaryheap_order() {
+        // The frozen copy must stay bit-identical to the seed's
+        // `BinaryHeap<Reverse<(Time, seq, tid)>>` scheduler, including
+        // FIFO enqueue-order tie-breaks (durations below collide on
+        // purpose). This is the PR-1 ordering test, retargeted at the
+        // frozen copy when PR 4 made the live scheduler canonical.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let nthreads = 7u32;
+        let steps_per_thread = 60u32;
+        let dur = |tid: u32, k: u32| -> Time {
+            let x = (tid as u64).wrapping_mul(1_000_003).wrapping_add(k as u64 * 7919);
+            (x % 5) * 16 // 0, 16, 32, 48, 64 — plenty of exact ties
+        };
+
+        // Reference implementation (the seed scheduler).
+        let mut heap = BinaryHeap::new();
+        for tid in 0..nthreads {
+            heap.push(Reverse((0u64, tid as u64, tid)));
+        }
+        let mut seq = nthreads as u64;
+        let mut count = vec![0u32; nthreads as usize];
+        let mut ref_order = Vec::new();
+        while let Some(Reverse((now, _, tid))) = heap.pop() {
+            ref_order.push((now, tid));
+            let k = count[tid as usize];
+            count[tid as usize] += 1;
+            if k + 1 < steps_per_thread {
+                heap.push(Reverse((now + dur(tid, k), seq, tid)));
+                seq += 1;
+            }
+        }
+
+        // Frozen indexed heap under test.
+        let mut got_order = Vec::new();
+        let mut count2 = vec![0u32; nthreads as usize];
+        let done = LegacyScheduler::new(nthreads).run(|tid, now, _| {
+            got_order.push((now, tid));
+            let k = count2[tid as usize];
+            count2[tid as usize] += 1;
+            if k + 1 < steps_per_thread {
+                Step::Resume(now + dur(tid, k))
+            } else {
+                Step::Done(now)
+            }
+        });
+        assert_eq!(got_order, ref_order);
+        assert_eq!(done.len(), nthreads as usize);
+    }
+}

@@ -34,24 +34,48 @@ fn run_category(cat: Category, n: u32, features: Features) -> f64 {
 ///
 /// Fixtures live in `tests/fixtures/<fig>_quick.golden.txt`. A missing
 /// fixture (or `SCEP_BLESS=1`) is written from the current engine and
-/// the test passes with a note: the build container that grows this
-/// repo has no Rust toolchain, so first-generation happens on CI, which
-/// uploads `tests/fixtures/` as an artifact for check-in. On mismatch
-/// the fresh bytes are written next to the fixture as `*.new` (the CI
-/// artifact then carries the diff) and the test fails.
+/// the test passes with a loud note (a `::warning::` annotation on CI,
+/// never silently): the build container that grows this repo has no
+/// Rust toolchain, so first-generation happens on CI, which uploads
+/// `tests/fixtures/` as an artifact for check-in. On mismatch the fresh
+/// bytes are written next to the fixture as `*.new` (the CI artifact
+/// then carries the diff) and the test fails.
+///
+/// `SCEP_REQUIRE_GOLDEN=1` arms the pinning: a missing fixture then
+/// *fails* instead of self-blessing. CI's golden-diff leg sets it as
+/// soon as any fixture is committed, so a partial check-in or a deleted
+/// fixture can never silently re-bless itself.
 #[test]
 fn golden_fig_tables_are_byte_stable() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let require = std::env::var("SCEP_REQUIRE_GOLDEN").is_ok();
     for name in ["fig2", "fig9", "fig11"] {
         // (Run-to-run determinism itself is pinned by `deterministic` in
         // bench::msgrate and the worker-pool invariants; one render per
         // figure keeps this test affordable in debug CI.)
         let bytes = scalable_ep::figures::render_bytes(name, true).expect("known figure");
         let path = dir.join(format!("{name}_quick.golden.txt"));
-        if std::env::var("SCEP_BLESS").is_ok() || !path.exists() {
+        let bless = std::env::var("SCEP_BLESS").is_ok();
+        if !path.exists() && require && !bless {
+            panic!(
+                "{name}: SCEP_REQUIRE_GOLDEN is set but {} is not committed — \
+                 download the golden-fixtures CI artifact (or run with SCEP_BLESS=1) \
+                 and commit the fixture",
+                path.display()
+            );
+        }
+        if bless || !path.exists() {
             std::fs::create_dir_all(&dir).unwrap();
             std::fs::write(&path, &bytes).unwrap();
-            eprintln!("[golden] blessed {} ({} bytes) — commit it", path.display(), bytes.len());
+            // The `::warning::` form surfaces as a GitHub Actions
+            // annotation, so a self-bless is visible on the run summary,
+            // not buried in the log.
+            eprintln!(
+                "::warning::[golden] blessed {} ({} bytes) — commit it so the \
+                 byte-pinning arms",
+                path.display(),
+                bytes.len()
+            );
             continue;
         }
         let want = std::fs::read_to_string(&path).unwrap();
@@ -75,16 +99,27 @@ fn golden_fig_tables_are_byte_stable() {
     }
 }
 
-/// The policy grid (message-size x sharing-level) must cover its full
-/// 5 x 5 cell matrix — 25 CSV rows plus the header — and include the
-/// §VII scalable preset with fewer uUARs than any level-1 point.
+/// The policy grid (message-size x sharing-level x threads) must cover
+/// its full 5 x 5 x 2 cell matrix — 50 CSV rows plus the header —
+/// include the §VII scalable preset, and exercise the 32-thread tier
+/// past the paper's 16-thread ceiling (ROADMAP item) under `--quick`.
 #[test]
-fn policy_grid_covers_size_by_level_matrix() {
+fn policy_grid_covers_size_by_level_by_threads_matrix() {
     let bytes = scalable_ep::figures::render_bytes("grid", true).expect("known figure");
-    let csv_lines = bytes.lines().filter(|l| l.starts_with("csv,")).count();
-    assert_eq!(csv_lines, 1 + 5 * 5, "header + 25 cells");
+    let csv: Vec<&str> = bytes.lines().filter(|l| l.starts_with("csv,")).collect();
+    assert_eq!(csv.len(), 1 + 5 * 5 * 2, "header + 50 cells");
     assert!(bytes.contains("Scalable"), "scalable preset missing from the grid");
     assert!(bytes.contains("1024"), "largest message size missing");
+    // Every policy appears at both thread tiers (threads is token 4 of
+    // a data line: csv,<slug>,msg_B,policy,threads,...).
+    for tier in scalable_ep::figures::GRID_THREADS {
+        let want = tier.to_string();
+        let rows = csv[1..]
+            .iter()
+            .filter(|l| l.split(',').nth(4) == Some(want.as_str()))
+            .count();
+        assert_eq!(rows, 5 * 5, "{tier}-thread tier incomplete");
+    }
 }
 
 // ------------------------------------------------------------- Fig 2(b)

@@ -1,7 +1,9 @@
 //! Property-based tests over the resource model and simulator invariants
 //! (in-repo `testing::check` harness; no external proptest offline).
 
-use scalable_ep::bench::{Features, MsgRateConfig, MsgRateResult, Runner, SharedResource};
+use scalable_ep::bench::{
+    FeatureSet, Features, MsgRateConfig, MsgRateResult, Runner, SharedResource,
+};
 use scalable_ep::endpoints::{
     BufLayout, Category, CqDepth, EndpointPolicy, MrMap, QpProvision, ResourceUsage, UarMap, Ways,
 };
@@ -76,6 +78,68 @@ fn assert_bit_exact(
         ));
     }
     Ok(())
+}
+
+/// Aggregate comparator for the **legacy-vs-canonical scheduler**
+/// differential (PR 4): every virtual-time observable the figures and
+/// reports consume must be bit-identical between the frozen
+/// enqueue-order tie-break and the canonical `(time, tid, step)` key.
+/// Equal-time ties commute: tied steps either touch disjoint simulation
+/// state (order unobservable) or belong to threads in symmetric states,
+/// where swapping them relabels which thread takes which FIFO slot —
+/// so per-thread done-times are compared as a sorted multiset while
+/// every aggregate (duration, rates, PCIe, latency stream) pins
+/// exactly.
+fn assert_same_virtual_world(
+    a: &MsgRateResult,
+    b: &MsgRateResult,
+    what: &str,
+) -> Result<(), String> {
+    if a.duration != b.duration {
+        return Err(format!("{what}: duration {} vs {}", a.duration, b.duration));
+    }
+    if a.messages != b.messages {
+        return Err(format!("{what}: messages {} vs {}", a.messages, b.messages));
+    }
+    if a.mmsgs_per_sec != b.mmsgs_per_sec {
+        return Err(format!("{what}: rate {} vs {}", a.mmsgs_per_sec, b.mmsgs_per_sec));
+    }
+    if a.pcie != b.pcie {
+        return Err(format!("{what}: PCIe {:?} vs {:?}", a.pcie, b.pcie));
+    }
+    if a.pcie_read_rate != b.pcie_read_rate {
+        return Err(format!("{what}: PCIe read rate diverged"));
+    }
+    if a.p50_latency_ns != b.p50_latency_ns || a.p99_latency_ns != b.p99_latency_ns {
+        return Err(format!("{what}: latency percentiles diverged"));
+    }
+    if a.sched_steps != b.sched_steps {
+        return Err(format!(
+            "{what}: trajectories differ: {} vs {} steps",
+            a.sched_steps, b.sched_steps
+        ));
+    }
+    let mut da = a.thread_done.clone();
+    let mut db = b.thread_done.clone();
+    da.sort_unstable();
+    db.sort_unstable();
+    if da != db {
+        return Err(format!("{what}: per-thread done-time multisets diverged"));
+    }
+    Ok(())
+}
+
+/// Run one config under the canonical scheduler (fast path on) and the
+/// frozen legacy enqueue-order scheduler, returning both.
+fn canonical_and_legacy(
+    fabric: &Fabric,
+    eps: &[scalable_ep::endpoints::ThreadEndpoint],
+    cfg: MsgRateConfig,
+) -> (MsgRateResult, MsgRateResult) {
+    let canonical = Runner::new(fabric, eps, cfg).run();
+    let legacy =
+        Runner::new(fabric, eps, MsgRateConfig { use_legacy_scheduler: true, ..cfg }).run();
+    (canonical, legacy)
 }
 
 #[test]
@@ -505,6 +569,134 @@ fn prop_symmetric_lockstep_threads_stay_bit_exact_and_coalesce() {
             );
         }
     }
+}
+
+#[test]
+fn prop_midrun_coalescing_beats_terminal_drain_baseline() {
+    // PR-4 acceptance: with the enqueue-order-invariant key, symmetric
+    // lock-step threads coalesce *mid-run* poll windows, not just the
+    // terminal drain. Against the PR-2 rule (terminal drain only,
+    // preserved behind `restrict_coalesce_to_terminal_drain`) the
+    // dispatched-event count must strictly drop — i.e. coalesced_steps
+    // strictly grows — at 16 and past the paper's ceiling at 32
+    // threads, while every observable (same scheduler, both guards
+    // exact) stays bit-identical including per-thread done-times.
+    for nthreads in [16u32, 32] {
+        for features in [Features::all(), Features::conservative()] {
+            let (fabric, eps) =
+                EndpointPolicy::sharing(SharedResource::Ctx, 1).build_fresh(nthreads).unwrap();
+            let cfg = MsgRateConfig { msgs_per_thread: 1024, features, ..Default::default() };
+            let full = Runner::new(&fabric, &eps, cfg).run();
+            let terminal = Runner::new(
+                &fabric,
+                &eps,
+                MsgRateConfig { restrict_coalesce_to_terminal_drain: true, ..cfg },
+            )
+            .run();
+            assert_eq!(full.duration, terminal.duration, "x{nthreads} {features:?}");
+            assert_eq!(full.thread_done, terminal.thread_done, "x{nthreads} {features:?}");
+            assert_eq!(full.pcie, terminal.pcie, "x{nthreads} {features:?}");
+            assert_eq!(full.sched_steps, terminal.sched_steps, "x{nthreads} {features:?}");
+            let coalesced_full = full.sched_steps - full.sched_events;
+            let coalesced_terminal = terminal.sched_steps - terminal.sched_events;
+            assert!(
+                coalesced_full > coalesced_terminal,
+                "x{nthreads} {features:?}: mid-run windows did not coalesce \
+                 ({coalesced_full} vs terminal-only {coalesced_terminal})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_legacy_vs_canonical_on_golden_figure_cells() {
+    // The PR-4 tentpole's acceptance pin: over every cell of the golden
+    // fig2/fig9/fig11 tables (the byte-pinned `--quick` set, at a
+    // trimmed message count), the canonical tie-break must reproduce
+    // the frozen enqueue-order scheduler's virtual-time results
+    // bit-for-bit — the golden tables are rates and topology-derived
+    // accounting, so table bytes cannot move either.
+    let msgs = 2048;
+    // Fig 2(b): the two state-of-the-art extremes across the thread
+    // sweep.
+    for n in [1u32, 2, 4, 8, 16] {
+        for cat in [Category::MpiEverywhere, Category::MpiThreads] {
+            let mut f = Fabric::connectx4();
+            let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
+            let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+            let (canonical, legacy) = canonical_and_legacy(&f, &set.threads, cfg);
+            assert_same_virtual_world(&canonical, &legacy, &format!("fig2 {cat} x{n}"))
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+    // Fig 9 (CQ sharing) and Fig 11 (QP sharing): 16 threads, the full
+    // x-way sweep under every feature set of the table columns.
+    for (fig, res) in [("fig9", SharedResource::Cq), ("fig11", SharedResource::Qp)] {
+        for ways in [1u32, 2, 4, 8, 16] {
+            for fs in FeatureSet::ALL_SETS.iter() {
+                let (fabric, eps) =
+                    EndpointPolicy::sharing(res, ways).build_fresh(16).unwrap();
+                let cfg = MsgRateConfig {
+                    msgs_per_thread: msgs,
+                    features: fs.features(),
+                    ..Default::default()
+                };
+                let (canonical, legacy) = canonical_and_legacy(&fabric, &eps, cfg);
+                assert_same_virtual_world(
+                    &canonical,
+                    &legacy,
+                    &format!("{fig} {ways}-way {:?}", fs.features()),
+                )
+                .unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_legacy_vs_canonical_scheduler_fuzzed() {
+    // Satellite fuzzer for the canonical tie-break: across random policy
+    // grid points x thread counts x features x QP depths x postlist
+    // sizes, the frozen enqueue-order scheduler and the canonical
+    // scheduler (fast path on) must agree on every virtual-time
+    // aggregate bit-for-bit — equal-time ties commute; only the
+    // dispatch order is allowed to differ. `SCEP_FUZZ_SEED` reseeds the
+    // sweep; the seed is echoed for reproduction.
+    check("legacy-vs-canonical", fuzz_seed(0x71EB_4EA4), 24, |rng, _| {
+        let nthreads = [1u32, 2, 4, 8, 12, 16, 24, 32][rng.below(8) as usize];
+        let policy = random_policy(rng, nthreads);
+        let features = Features {
+            postlist: [1u32, 2, 4, 32][rng.below(4) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(512),
+            qp_depth: [32u32, 128][rng.below(2) as usize],
+            features,
+            ..Default::default()
+        };
+        let (canonical, legacy) = canonical_and_legacy(&fabric, &eps, cfg);
+        assert_same_virtual_world(
+            &canonical,
+            &legacy,
+            &format!("policy '{policy}' x{nthreads}, {features:?}"),
+        )?;
+        // The legacy path is pinned one-event-per-step; the canonical
+        // fast path may only ever dispatch fewer events.
+        if legacy.sched_events != legacy.sched_steps {
+            return Err(format!("legacy path coalesced ({legacy:?})"));
+        }
+        if canonical.sched_events > legacy.sched_events {
+            return Err(format!(
+                "canonical dispatched MORE events ({} vs {})",
+                canonical.sched_events, legacy.sched_events
+            ));
+        }
+        Ok(())
+    });
 }
 
 #[test]
