@@ -30,11 +30,18 @@
 //! — the dispatches the canonical tie-break newly eliminates. The
 //! virtual-time rate must be identical between the two replays (the
 //! knob is dispatch accounting only).
+//!
+//! The JSON additionally carries a `pool` array — the VCI pool sweep
+//! (16 streams over dedicated / 16 / 8 / 5-endpoint pools per map
+//! strategy) with `pool_size`, `strategy`, `rate`, `uuars` and
+//! `migrations` columns, tracking the rate-vs-resources tradeoff the
+//! stream-to-endpoint layer reproduces (EXPERIMENTS.md §VCI).
 
 use std::time::Instant;
 
 use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource};
 use scalable_ep::endpoints::EndpointPolicy;
+use scalable_ep::vci::{run_pooled, MapStrategy};
 
 struct Row {
     label: &'static str,
@@ -106,6 +113,45 @@ fn measure(
     }
 }
 
+/// One VCI pool-sweep row (EXPERIMENTS.md §VCI): 16 streams over a
+/// bounded pool, virtual-time rate + resource/migration accounting.
+struct PoolRow {
+    threads: u32,
+    pool_size: u32,
+    strategy: String,
+    rate: f64,
+    uuars: u32,
+    migrations: u64,
+}
+
+fn measure_pool(nthreads: u32, pool_size: u32, strategy: MapStrategy, msgs: u64) -> PoolRow {
+    // Dedicated rows run the per-thread Dynamic baseline; pooled rows
+    // run the §VII scalable preset — the figure's comparison axes.
+    let policy = if strategy == MapStrategy::Dedicated {
+        EndpointPolicy::default()
+    } else {
+        EndpointPolicy::scalable()
+    };
+    let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+    let r = run_pooled(&policy, nthreads, pool_size, strategy, cfg).expect("pool build");
+    println!(
+        "{:>28}: {:>7.2} Mmsg/s virtual ({} uUARs, {} migrations, loads {:?})",
+        format!("pool {pool_size}/{nthreads} {strategy}"),
+        r.result.mmsgs_per_sec,
+        r.usage.uuars_allocated,
+        r.migrations,
+        r.loads,
+    );
+    PoolRow {
+        threads: nthreads,
+        pool_size,
+        strategy: strategy.to_string(),
+        rate: r.result.mmsgs_per_sec,
+        uuars: r.usage.uuars_allocated,
+        migrations: r.migrations,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let msgs: u64 = if quick { 32 * 1024 } else { 256 * 1024 };
@@ -132,6 +178,20 @@ fn main() {
             msgs / 8,
         ),
     ];
+
+    // VCI pool sweep (EXPERIMENTS.md §VCI): the dedicated baseline plus
+    // the scalable preset over shrinking pools — including the paper's
+    // headline threads/3 point — under every placement strategy.
+    let pool_msgs = msgs / 8;
+    let mut pool_rows =
+        vec![measure_pool(16, 16, MapStrategy::Dedicated, pool_msgs)];
+    for pool_size in [16u32, 8, 5] {
+        for strategy in
+            [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()]
+        {
+            pool_rows.push(measure_pool(16, pool_size, strategy, pool_msgs));
+        }
+    }
     let suite_s = suite0.elapsed().as_secs_f64();
 
     // Hand-rolled JSON (no serde in the offline build environment).
@@ -157,6 +217,16 @@ fn main() {
             r.sched_steps - r.sched_events,
             r.sched_events_terminal_only,
             r.sched_events_terminal_only - r.sched_events,
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"pool\": [\n");
+    for (i, p) in pool_rows.iter().enumerate() {
+        let sep = if i + 1 < pool_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"threads\": {}, \"pool_size\": {}, \"strategy\": \"{}\", \
+             \"rate\": {:.4}, \"uuars\": {}, \"migrations\": {}}}{sep}\n",
+            p.threads, p.pool_size, p.strategy, p.rate, p.uuars, p.migrations,
         ));
     }
     json.push_str("  ]\n}\n");

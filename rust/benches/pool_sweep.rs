@@ -1,0 +1,9 @@
+//! VCI pool sweep: pool-size x map-strategy over 16/32 streams.
+//!
+//! ```sh
+//! cargo bench --bench pool_sweep [-- --quick]
+//! ```
+
+fn main() {
+    scalable_ep::figures::bench_main("pool_sweep", &["pool"]);
+}

@@ -192,6 +192,15 @@ pub struct MsgRateResult {
     /// between fast and general runs — trajectories are bit-equal — so
     /// this doubles as "what the general path would have dispatched".
     pub sched_steps: u64,
+    /// Per-CQ high-water occupancy of the arrival ring (most CQEs ever
+    /// queued at once), indexed by `CqId::index()`. The DES-observed
+    /// contention signal the VCI layer's `Adaptive` mapping
+    /// ([`crate::vci::MapStrategy`]) migrates streams on: a pool slot
+    /// whose streams queue behind each other accumulates outstanding
+    /// CQEs. Identical between fast and general runs (trajectories are
+    /// bit-equal); *not* a cross-scheduler observable (the legacy
+    /// tie-break may drain rings in a different interleaving).
+    pub cq_high_water: Vec<u32>,
 }
 
 /// Per-thread effective parameters after QP-window clamping. Everything
@@ -554,6 +563,8 @@ impl Runner {
         let duration = *done.iter().max().unwrap_or(&0);
         let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
         let secs = to_secs(duration.max(1));
+        let cq_high_water: Vec<u32> =
+            self.cq_arrivals.iter().map(|r| r.high_water() as u32).collect();
         MsgRateResult {
             messages,
             duration,
@@ -565,6 +576,7 @@ impl Runner {
             p99_latency_ns: self.latencies.percentile(99.0),
             sched_events: self.sched_events,
             sched_steps: self.sched_steps,
+            cq_high_water,
         }
     }
 
@@ -1051,6 +1063,29 @@ mod tests {
         let r = Runner::new_multi(&f, &eps, cfg).run();
         assert_eq!(r.messages, 2048);
         assert!(r.mmsgs_per_sec > 1.0);
+    }
+
+    #[test]
+    fn pooled_threads_share_endpoints_and_report_cq_occupancy() {
+        // The VCI pool axis (crate::vci): several per-thread streams
+        // driving one pool endpoint. Eligibility is derived from the
+        // built topology, so the shared slots run one-event-per-step.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::scalable().build(&mut f, 2).unwrap();
+        let threads: Vec<ThreadEndpoint> = (0..6usize).map(|t| set.threads[t % 2]).collect();
+        let cfg = MsgRateConfig { msgs_per_thread: 512, ..Default::default() };
+        let r = Runner::new(&f, &threads, cfg).run();
+        assert_eq!(r.messages, 6 * 512);
+        assert_eq!(r.sched_events, r.sched_steps);
+        // Each slot's CQ queued several streams' completions at once —
+        // the occupancy signal the Adaptive mapping consumes.
+        for te in &set.threads {
+            assert!(
+                r.cq_high_water[te.cq.index()] >= 2,
+                "cq occupancy {:?}",
+                r.cq_high_water
+            );
+        }
     }
 
     #[test]

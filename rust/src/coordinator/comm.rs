@@ -1,8 +1,9 @@
-//! The communicator: nodes, ranks, endpoints, and timed phases.
+//! The communicator: nodes, ranks, endpoint pools, and timed phases.
 
 use crate::bench::{MsgRateConfig, MsgRateResult, Runner};
-use crate::endpoints::{EndpointSet, ResourceUsage, ThreadEndpoint};
-use crate::verbs::error::Result;
+use crate::endpoints::{ResourceUsage, ThreadEndpoint};
+use crate::vci::{EndpointPool, MapStrategy, Stream, VciMapper};
+use crate::verbs::error::{Result, VerbsError};
 use crate::verbs::{Fabric, Opcode, QueueState, Wqe};
 
 use super::job::Job;
@@ -17,13 +18,22 @@ pub struct NodeState {
     pub queues: QueueState,
 }
 
-/// A rank's communication state.
+/// A rank's communication state: its bounded endpoint pool and the
+/// stream routing over it. With the default job (no pool bound,
+/// `Dedicated` mapping) thread `t` owns pool slot `t` — exactly the
+/// historical one-QP-per-thread shape.
 #[derive(Debug, Clone)]
 pub struct RankComm {
     pub rank: u32,
     pub node: u32,
-    /// Endpoint set built per the job's policy (one QP per thread).
-    pub set: EndpointSet,
+    /// Endpoint pool built per the job's policy (`Job::pool_size()`
+    /// endpoints).
+    pub pool: EndpointPool,
+    /// Stream-to-slot mapping of this rank's threads.
+    pub mapper: VciMapper,
+    /// Per-thread endpoints as routed through the pool; all RMA and
+    /// timed phases go through these.
+    pub threads: Vec<ThreadEndpoint>,
 }
 
 /// The launched job: every rank wired up, one fabric per node.
@@ -36,10 +46,19 @@ pub struct Universe {
 }
 
 impl Universe {
-    /// Materialize a job: build per-rank endpoint sets from the job's
-    /// policy and connect consecutive ranks' QPs ring-wise (the apps
+    /// Materialize a job: build each rank's bounded endpoint pool from
+    /// the job's policy, route the rank's thread streams through it,
+    /// and connect consecutive ranks' QPs ring-wise (the apps
     /// re-connect as they need; connections model RC pairing).
     pub fn launch(job: Job, rank_mem_bytes: usize) -> Result<Self> {
+        if job.map == MapStrategy::Dedicated && job.pool_size() < job.spec.threads_per_rank {
+            return Err(VerbsError::Config(format!(
+                "dedicated stream mapping needs pool_size >= threads_per_rank \
+                 ({} < {})",
+                job.pool_size(),
+                job.spec.threads_per_rank
+            )));
+        }
         let mut nodes = Vec::with_capacity(job.nodes as usize);
         let mut ranks = Vec::new();
         let mut memories = Vec::new();
@@ -49,11 +68,15 @@ impl Universe {
             for r in 0..job.spec.ranks_per_node {
                 let rank = n * job.spec.ranks_per_node + r;
                 let mut policy = job.policy;
-                // RMA staging region per thread: large enough that reads
+                // RMA staging region per slot: large enough that reads
                 // land inside the registered MR (writes <= 60 B inline).
                 policy.msg_size = 4096;
-                let set = policy.build(&mut fabric, job.spec.threads_per_rank)?;
-                ranks.push(RankComm { rank, node: n, set });
+                let pool = EndpointPool::build(&policy, job.pool_size(), &mut fabric)?;
+                let mut mapper = VciMapper::new(job.map, job.pool_size());
+                let threads: Vec<ThreadEndpoint> = (0..job.spec.threads_per_rank)
+                    .map(|t| pool.endpoint(mapper.assign(Stream::new(rank, t, 0))))
+                    .collect();
+                ranks.push(RankComm { rank, node: n, pool, mapper, threads });
                 memories.push(Memory::new(rank_mem_bytes));
                 node_ranks.push(rank);
             }
@@ -89,7 +112,7 @@ impl Universe {
     ) -> Result<usize> {
         let rc = &self.ranks[src as usize];
         let node = rc.node as usize;
-        let ep = rc.set.threads[thread];
+        let ep = rc.threads[thread];
         let laddr = self.nodes[node].fabric.buf(ep.buf).addr + local_off as u64;
         let wqe = Wqe {
             wr_id: (src as u64) << 32 | thread as u64,
@@ -173,12 +196,14 @@ impl Universe {
         Runner::new_multi(&self.nodes[node as usize].fabric, threads, cfg).run()
     }
 
-    /// All thread endpoints of every rank on a node (one QP per thread),
-    /// in rank-major order — the common phase shape.
+    /// All thread endpoints of every rank on a node, in rank-major
+    /// order — the common phase shape. Endpoints are the pool-routed
+    /// ones: with a bounded pool several threads of a rank share a
+    /// slot.
     pub fn node_thread_endpoints(&self, node: u32) -> Vec<Vec<ThreadEndpoint>> {
         let mut out = Vec::new();
         for &r in &self.nodes[node as usize].ranks {
-            for t in &self.ranks[r as usize].set.threads {
+            for t in &self.ranks[r as usize].threads {
                 out.push(vec![*t]);
             }
         }
@@ -190,9 +215,18 @@ impl Universe {
         ResourceUsage::of_fabric(&self.nodes[node as usize].fabric)
     }
 
-    /// Whether the job's policy takes the shared-QP code path.
+    /// Total stream migrations across every rank's mapper.
+    pub fn pool_migrations(&self) -> u64 {
+        self.ranks.iter().map(|r| r.mapper.migrations()).sum()
+    }
+
+    /// Whether the job takes the shared-QP code path — because the
+    /// policy shares QPs, or because the stream mapping actually placed
+    /// several streams on one pool endpoint (derived from the mapper
+    /// loads, so a hash collision on a full-size pool counts too).
     pub fn shared_qp_code_path(&self) -> bool {
         self.job.policy.shares_qp()
+            || self.ranks.iter().any(|r| r.mapper.loads().iter().any(|&l| l > 1))
     }
 }
 
@@ -238,6 +272,74 @@ mod tests {
     }
 
     #[test]
+    fn pooled_launch_routes_threads_through_bounded_pool() {
+        use crate::vci::MapStrategy;
+        // 4 threads per rank over a 2-endpoint pool: half the QPs, RMA
+        // still functional on every thread (streams share slots).
+        let job = Job::two_node(JobSpec::new(2, 4), Category::Dynamic)
+            .pooled(2, MapStrategy::RoundRobin);
+        let mut u = Universe::launch(job, 1 << 16).unwrap();
+        assert!(u.shared_qp_code_path());
+        let usage = u.node_resources(0);
+        assert_eq!(usage.qps, 2 * 2, "2 ranks x 2-slot pools");
+        let eps = u.node_thread_endpoints(0);
+        assert_eq!(eps.len(), 8, "all 8 hardware threads keep endpoints");
+        // Threads 0 and 2 of rank 0 share slot 0 (round-robin over 2).
+        assert_eq!(u.ranks[0].threads[0].qp, u.ranks[0].threads[2].qp);
+        assert_ne!(u.ranks[0].threads[0].qp, u.ranks[0].threads[1].qp);
+        // RMA through a shared slot moves real bytes.
+        u.memories[0].write(0, &[9u8; 8]);
+        let w = u.window(1, 0, 64);
+        for thread in 0..4 {
+            let n = u.rma(0, thread, Opcode::RdmaWrite, 0, w, 8 * thread, 8).unwrap();
+            assert_eq!(n, 1, "thread {thread}");
+        }
+        assert_eq!(u.get(w, 0, 8), vec![9u8; 8]);
+        assert_eq!(u.pool_migrations(), 0);
+    }
+
+    #[test]
+    fn dedicated_mapping_over_undersized_pool_is_rejected() {
+        use crate::vci::MapStrategy;
+        let job = Job::two_node(JobSpec::new(1, 4), Category::Dynamic)
+            .pooled(2, MapStrategy::Dedicated);
+        // (no `unwrap_err`: `Universe` has no `Debug` impl)
+        let err = match Universe::launch(job, 4096) {
+            Err(e) => e,
+            Ok(_) => panic!("undersized dedicated pool must be rejected"),
+        };
+        assert!(
+            err.to_string().contains("pool_size >= threads_per_rank"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn default_launch_keeps_dedicated_per_thread_endpoints() {
+        let job = Job::two_node(JobSpec::new(2, 4), Category::Dynamic);
+        let u = Universe::launch(job, 4096).unwrap();
+        assert!(!u.shared_qp_code_path());
+        // One QP per thread, all distinct within each node's arena —
+        // the historical shape, now expressed as a full-size pool.
+        for n in 0..u.nodes.len() as u32 {
+            let mut qps: Vec<_> = u
+                .ranks
+                .iter()
+                .filter(|r| r.node == n)
+                .flat_map(|r| r.threads.iter().map(|t| t.qp))
+                .collect();
+            let total = qps.len();
+            qps.sort_unstable();
+            qps.dedup();
+            assert_eq!(qps.len(), total, "node {n}");
+        }
+        for rc in &u.ranks {
+            assert_eq!(rc.pool.size(), 4);
+            assert_eq!(rc.mapper.loads(), &[1, 1, 1, 1]);
+        }
+    }
+
+    #[test]
     fn rma_write_and_read_through_verbs_queues() {
         use crate::verbs::Opcode;
         let job = Job::two_node(JobSpec::new(1, 4), Category::Dynamic);
@@ -262,7 +364,7 @@ mod tests {
         // error path by resetting a QP first.
         let job = Job::two_node(JobSpec::new(1, 1), Category::Static);
         let mut u = Universe::launch(job, 4096).unwrap();
-        let qp = u.ranks[0].set.threads[0].qp;
+        let qp = u.ranks[0].threads[0].qp;
         u.nodes[0].fabric.modify_qp(qp, crate::verbs::QpState::Reset).unwrap();
         let w = u.window(1, 0, 64);
         assert!(u.rma(0, 0, Opcode::RdmaWrite, 0, w, 0, 8).is_err());

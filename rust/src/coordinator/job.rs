@@ -1,6 +1,7 @@
 //! Job specification: the paper's `P.T` notation (§VII, Fig 14).
 
 use crate::endpoints::EndpointPolicy;
+use crate::vci::MapStrategy;
 
 /// `P.T`: P ranks per node, T threads per rank. The paper sweeps
 /// 16.1, 8.2, 4.4, 2.8, 1.16 so that `P*T = 16` hardware threads per
@@ -43,20 +44,47 @@ impl JobSpec {
     }
 }
 
-/// A full job: topology split + endpoint policy + node count.
+/// A full job: topology split + endpoint policy + node count, plus the
+/// per-rank VCI pool bound (how many endpoints each rank instantiates
+/// and how its threads' streams map onto them).
 #[derive(Debug, Clone, Copy)]
 pub struct Job {
     pub nodes: u32,
     pub spec: JobSpec,
     pub policy: EndpointPolicy,
+    /// Endpoints per rank; `None` = one per thread (the historical
+    /// dedicated shape).
+    pub pool: Option<u32>,
+    /// Stream-to-endpoint placement within each rank's pool.
+    pub map: MapStrategy,
 }
 
 impl Job {
     /// The paper's two-node testbed. Accepts a
     /// [`Category`](crate::endpoints::Category) preset name or any
-    /// [`EndpointPolicy`].
+    /// [`EndpointPolicy`]; the pool defaults to dedicated per-thread
+    /// endpoints (bit-identical to the pre-VCI launch path).
     pub fn two_node(spec: JobSpec, policy: impl Into<EndpointPolicy>) -> Self {
-        Self { nodes: 2, spec, policy: policy.into() }
+        Self {
+            nodes: 2,
+            spec,
+            policy: policy.into(),
+            pool: None,
+            map: MapStrategy::Dedicated,
+        }
+    }
+
+    /// Bound each rank's endpoint pool to `pool` endpoints mapped by
+    /// `map` (builder-style, composes with [`Job::two_node`]).
+    pub fn pooled(mut self, pool: u32, map: MapStrategy) -> Self {
+        self.pool = Some(pool);
+        self.map = map;
+        self
+    }
+
+    /// Endpoints each rank instantiates.
+    pub fn pool_size(&self) -> u32 {
+        self.pool.unwrap_or(self.spec.threads_per_rank)
     }
 
     pub fn total_ranks(&self) -> u32 {
@@ -80,5 +108,15 @@ mod tests {
         for s in JobSpec::paper_sweep() {
             assert_eq!(s.hw_threads(), 16);
         }
+    }
+
+    #[test]
+    fn pool_defaults_to_dedicated_per_thread() {
+        let job = Job::two_node(JobSpec::new(2, 8), EndpointPolicy::default());
+        assert_eq!(job.pool_size(), 8);
+        assert_eq!(job.map, MapStrategy::Dedicated);
+        let pooled = job.pooled(3, MapStrategy::RoundRobin);
+        assert_eq!(pooled.pool_size(), 3);
+        assert_eq!(pooled.map, MapStrategy::RoundRobin);
     }
 }

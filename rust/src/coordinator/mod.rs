@@ -3,12 +3,14 @@
 //!
 //! A [`Job`] describes the paper's `P.T` hybrid split (P ranks per node,
 //! T threads per rank); [`Universe::launch`] materializes it: one
-//! [`Fabric`](crate::verbs::Fabric) per node, per-rank endpoint sets built
-//! from the job's endpoint policy (any
+//! [`Fabric`](crate::verbs::Fabric) per node, a bounded
+//! [`EndpointPool`](crate::vci::EndpointPool) per rank built from the
+//! job's endpoint policy (any
 //! [`EndpointPolicy`](crate::endpoints::EndpointPolicy) point, with the
-//! paper categories as presets), RC QP connections between peers, and a
-//! byte-addressable
-//! memory per rank for RMA windows. Communication phases are timed on the
+//! paper categories as presets), the rank's thread streams routed onto
+//! the pool by the job's [`MapStrategy`](crate::vci::MapStrategy)
+//! (dedicated 1:1 by default), RC QP connections between peers, and a
+//! byte-addressable memory per rank for RMA windows. Communication phases are timed on the
 //! virtual-clock NIC model; payloads move functionally through
 //! [`rma::Window`] so applications (e.g. the global-array DGEMM) compute
 //! on real data.

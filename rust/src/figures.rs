@@ -13,7 +13,10 @@
 //! wallclock scale with cores while the table bytes stay identical to a
 //! sequential run. Beyond the paper's exact figures, [`grid`] sweeps
 //! message-size x sharing-level with per-cell resource accounting — the
-//! coverage the composable policy API unlocks.
+//! coverage the composable policy API unlocks — and [`pool`] sweeps the
+//! VCI layer's pool-size x map-strategy space (`crate::vci`),
+//! reproducing the rate-vs-resources tradeoff through stream-to-endpoint
+//! mapping.
 
 use crate::apps::stencil::DEFAULT_HALO_BYTES;
 use crate::apps::{GlobalArray, StencilBench};
@@ -23,6 +26,7 @@ use crate::endpoints::{BufLayout, Category, EndpointPolicy, ResourceUsage};
 use crate::mlx5::MemModel;
 use crate::par::par_map;
 use crate::report::{f2, pct, Table};
+use crate::vci::{run_pooled, MapStrategy};
 use crate::verbs::Fabric;
 
 /// The thread/way sweep shared by most figures.
@@ -538,6 +542,82 @@ pub fn grid_threads(thread_counts: &[u32], quick: bool) -> Vec<Table> {
     vec![t]
 }
 
+/// Pool sizes the VCI pool sweep visits for `n` streams: the dedicated
+/// 1:1 size plus one half, one third (the paper's headline
+/// rate-at-a-fraction point) and one quarter of it.
+fn pool_sizes(n: u32) -> Vec<u32> {
+    let mut sizes = vec![n, n / 2, n / 3, n / 4];
+    sizes.retain(|&p| p >= 1);
+    sizes.dedup();
+    sizes
+}
+
+/// VCI pool sweep: pool-size x map-strategy over [`GRID_THREADS`]
+/// streams, with per-cell resource accounting — the paper's
+/// rate-vs-resources tradeoff reproduced through the stream-to-endpoint
+/// layer (`scep bench --figure pool`). Row 1 of each tier is the
+/// dedicated per-thread baseline (the historical path, bit-identical by
+/// the tests/vci.rs pin); the `Scalable` rows map the same streams onto
+/// bounded pools of §VII scalable endpoints.
+pub fn pool(quick: bool) -> Vec<Table> {
+    pool_threads(&GRID_THREADS, quick)
+}
+
+/// [`pool`] at explicit stream counts.
+pub fn pool_threads(thread_counts: &[u32], quick: bool) -> Vec<Table> {
+    let strategies =
+        [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()];
+    let mut t = Table::new(
+        "Pool: stream-to-endpoint mapping over a bounded scalable-endpoint pool \
+         (All features)",
+        &[
+            "threads",
+            "policy",
+            "pool",
+            "map",
+            "rate_Mmsg/s",
+            "vs_dedicated",
+            "uUARs",
+            "uUARs_used",
+            "mem_MiB",
+            "migrations",
+        ],
+    );
+    let mut cells: Vec<(u32, &'static str, EndpointPolicy, u32, MapStrategy)> = Vec::new();
+    for &n in thread_counts {
+        cells.push((n, "Dynamic", EndpointPolicy::default(), n, MapStrategy::Dedicated));
+        for pool_size in pool_sizes(n) {
+            for &strategy in &strategies {
+                cells.push((n, "Scalable", EndpointPolicy::scalable(), pool_size, strategy));
+            }
+        }
+    }
+    let results = par_map(cells, move |(n, label, policy, pool_size, strategy)| {
+        let cfg = MsgRateConfig { msgs_per_thread: msgs(quick) / 4, ..Default::default() };
+        let r = run_pooled(&policy, n, pool_size, strategy, cfg).expect("pool build");
+        (n, label, pool_size, strategy, r)
+    });
+    let mut dedicated_rate = f64::NAN;
+    for (n, label, pool_size, strategy, r) in &results {
+        if *strategy == MapStrategy::Dedicated {
+            dedicated_rate = r.result.mmsgs_per_sec;
+        }
+        t.row(vec![
+            n.to_string(),
+            label.to_string(),
+            pool_size.to_string(),
+            strategy.to_string(),
+            f2(r.result.mmsgs_per_sec),
+            pct(r.result.mmsgs_per_sec / dedicated_rate),
+            r.usage.uuars_allocated.to_string(),
+            r.usage.uuars_used.to_string(),
+            f2(r.usage.memory_mib()),
+            r.migrations.to_string(),
+        ]);
+    }
+    vec![t]
+}
+
 /// Ablation A: the mlx5 QP-lock removal (rdma-core PR #327, §V-B). With
 /// the stock provider the lock on a TD-assigned QP is kept, costing every
 /// TD category its edge over MPI everywhere.
@@ -637,6 +717,7 @@ pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
         "fig12" | "12" => fig12(quick),
         "fig14" | "14" => fig14(quick),
         "grid" | "policy-grid" => grid(quick),
+        "pool" | "vci" => pool(quick),
         "ablation-qp-lock" => ablation_qp_lock(quick),
         "ablation-quirk" => ablation_quirk(quick),
         "ablation-msg-size" => ablation_msg_size(quick),
@@ -662,9 +743,9 @@ pub fn render_bytes(name: &str, quick: bool) -> Option<String> {
     })
 }
 
-/// Every figure id, in paper order, plus the policy grid and the
-/// design-choice ablations.
-pub const ALL_FIGURES: [&str; 16] = [
+/// Every figure id, in paper order, plus the policy grid, the VCI pool
+/// sweep and the design-choice ablations.
+pub const ALL_FIGURES: [&str; 17] = [
     "table1",
     "fig2",
     "fig3",
@@ -678,6 +759,7 @@ pub const ALL_FIGURES: [&str; 16] = [
     "fig12",
     "fig14",
     "grid",
+    "pool",
     "ablation-qp-lock",
     "ablation-quirk",
     "ablation-msg-size",

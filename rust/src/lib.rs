@@ -25,8 +25,13 @@
 //!   benchmark of §IV, as a virtual-time state machine.
 //! * [`endpoints`] — the composable [`EndpointPolicy`] sharing space,
 //!   with the six §VI categories and eight §V sweeps as named presets.
+//! * [`vci`] — the stream-to-endpoint virtualization layer: logical
+//!   streams mapped onto a bounded [`vci::EndpointPool`] by pluggable
+//!   [`vci::MapStrategy`] placements (dedicated / round-robin / hashed /
+//!   contention-adaptive).
 //! * [`coordinator`] — a mini MPI+threads runtime (ranks, threads, RMA
-//!   windows) with endpoint policies as a first-class feature.
+//!   windows) with endpoint policies as a first-class feature; RMA is
+//!   routed through each rank's endpoint pool.
 //! * [`runtime`] — executes the AOT-compiled Pallas/JAX artifacts (DGEMM
 //!   tile, 5-pt stencil) from Rust; the PJRT client is gated out offline
 //!   in favor of a built-in native evaluator (see `runtime` docs).
@@ -47,6 +52,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod testing;
+pub mod vci;
 pub mod verbs;
 
 pub use endpoints::{Category, EndpointPolicy};

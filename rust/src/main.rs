@@ -5,6 +5,8 @@
 //! scep bench --all [--quick]              regenerate every figure
 //! scep resources --category 2xdynamic --threads 16
 //! scep resources --policy ctx=shared,qp=2x,uar=indep,cq=1 --threads 16
+//! scep resources --policy scalable --threads 16 --pool 5 [--map rr]
+//! scep pool [--threads 16] [--pool 5] [--map rr] [--policy <spec>]
 //! scep run global-array [--n 256] [--category 2xdynamic | --policy <spec>]
 //! scep run stencil [--spec 4.4] [--category dynamic | --policy <spec>]
 //! scep calibrate                          print model calibration points
@@ -12,8 +14,11 @@
 //!
 //! `--policy` takes the declarative endpoint grammar (see
 //! `EndpointPolicy::parse`); `--category` and the named preset
-//! `--policy scalable` are shorthands for points on it. Policies
-//! round-trip: `scep resources` prints the canonical string back.
+//! `--policy scalable` are shorthands for points on it. `--pool <N>`
+//! bounds the endpoint pool and `--map <strategy>` picks the
+//! stream-to-endpoint placement (see `vci::MapStrategy::parse`). Both
+//! grammars round-trip: `scep resources` and `scep pool` print the
+//! canonical strings back.
 
 use std::process::ExitCode;
 
@@ -22,20 +27,26 @@ use scalable_ep::bench::{Features, MsgRateConfig, Runner};
 use scalable_ep::coordinator::JobSpec;
 use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::runtime::ArtifactRuntime;
+use scalable_ep::vci::{run_pooled, EndpointPool, MapStrategy, Stream, VciMapper};
 use scalable_ep::verbs::Fabric;
 use scalable_ep::{figures, report};
 
 fn usage() -> ExitCode {
     eprintln!(
         "usage:\n  scep bench (--figure <id> | --all) [--quick]\n  \
-         scep resources (--category <cat> | --policy <spec>) --threads <n>\n  \
+         scep resources (--category <cat> | --policy <spec>) --threads <n> \
+         [--pool <k> [--map <strategy>]]\n  \
+         scep pool [--threads <n>] [--pool <k>] [--map <strategy>] \
+         [--policy <spec>] [--msgs <m>]\n  \
          scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
          scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
          scep calibrate\n\
          policy grammar: ctx=shared|<k>,qp=1|2x|shared[:k],uar=indep|paired|static,\
          cq=<k>|shared,depth=scaled:<b>|fixed:<v>,buf=aligned|packed|group:<w>|one,\
          pd=<k>|shared,mr=per-thread|span:<k>[,uuars=T:L][,msg=N] — or 'scalable'\n\
+         map strategies: {}\n\
          figures: {}",
+        MapStrategy::VALID,
         figures::ALL_FIGURES.join(", ")
     );
     ExitCode::from(2)
@@ -43,6 +54,37 @@ fn usage() -> ExitCode {
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Resolve `--map` into a strategy (`default` when absent). Returns
+/// `None` (after printing the error, which lists the valid strategies)
+/// on a bad spec.
+fn map_from_args(args: &[String], default: MapStrategy) -> Option<MapStrategy> {
+    match flag_value(args, "--map") {
+        Some(s) => match MapStrategy::parse(&s) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("bad --map '{s}': {e}");
+                None
+            }
+        },
+        None => Some(default),
+    }
+}
+
+/// Resolve `--pool` into a pool size. `Ok(None)` when the flag is
+/// absent; `Err` (after printing) on a malformed count.
+fn pool_from_args(args: &[String]) -> Result<Option<u32>, ()> {
+    match flag_value(args, "--pool") {
+        None => Ok(None),
+        Some(v) => match v.parse::<u32>() {
+            Ok(p) if p >= 1 => Ok(Some(p)),
+            _ => {
+                eprintln!("bad --pool '{v}' (expect an endpoint count >= 1)");
+                Err(())
+            }
+        },
+    }
 }
 
 /// Resolve `--policy` / `--category` into a policy plus a display label.
@@ -86,7 +128,10 @@ fn main() -> ExitCode {
                     ExitCode::SUCCESS
                 }
                 None => {
-                    eprintln!("unknown figure '{fig}'");
+                    eprintln!(
+                        "unknown figure '{fig}'; available figures: {}",
+                        figures::ALL_FIGURES.join(", ")
+                    );
                     usage()
                 }
             }
@@ -97,6 +142,31 @@ fn main() -> ExitCode {
             };
             let threads: u32 =
                 flag_value(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(16);
+            let Ok(pool) = pool_from_args(&args) else { return usage() };
+            if let Some(pool_size) = pool {
+                // Pooled accounting: N endpoints, streams mapped on top.
+                let Some(strategy) = map_from_args(&args, MapStrategy::RoundRobin) else {
+                    return usage();
+                };
+                if strategy == MapStrategy::Dedicated && pool_size < threads {
+                    eprintln!("--map dedicated needs --pool >= --threads");
+                    return usage();
+                }
+                let mut f = Fabric::connectx4();
+                let pool = EndpointPool::build(&policy, pool_size, &mut f).expect("build");
+                let mut mapper = VciMapper::new(strategy, pool_size);
+                for t in 0..threads {
+                    mapper.assign(Stream::of_thread(t));
+                }
+                let u = pool.usage(&f);
+                println!(
+                    "{label} x {threads} streams --pool {pool_size} --map {strategy}:\n  \
+                     policy: {policy}\n  {u}"
+                );
+                println!("  streams per endpoint: {:?}", mapper.loads());
+                println!("  uUAR waste: {}", report::pct(u.uuar_waste_fraction()));
+                return ExitCode::SUCCESS;
+            }
             let mut f = Fabric::connectx4();
             let set = policy.build(&mut f, threads).expect("build");
             let u = ResourceUsage::of_set(&f, &set);
@@ -104,6 +174,45 @@ fn main() -> ExitCode {
             println!("  sharing level: {}", policy.sharing_level(threads));
             println!("  uUAR waste: {}", report::pct(u.uuar_waste_fraction()));
             ExitCode::SUCCESS
+        }
+        "pool" => {
+            // The VCI tentpole end-to-end: N streams over a bounded pool.
+            let (policy, label) = if args.iter().any(|a| a == "--policy" || a == "--category")
+            {
+                match policy_from_args(&args, Category::Dynamic) {
+                    Some(x) => x,
+                    None => return usage(),
+                }
+            } else {
+                (EndpointPolicy::scalable(), "scalable".to_string())
+            };
+            let threads: u32 =
+                flag_value(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(16);
+            let Ok(pool) = pool_from_args(&args) else { return usage() };
+            let pool_size = pool.unwrap_or((threads / 3).max(1));
+            let Some(strategy) = map_from_args(&args, MapStrategy::RoundRobin) else {
+                return usage();
+            };
+            let msgs: u64 =
+                flag_value(&args, "--msgs").and_then(|v| v.parse().ok()).unwrap_or(16 * 1024);
+            let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+            match run_pooled(&policy, threads, pool_size, strategy, cfg) {
+                Ok(r) => {
+                    println!(
+                        "pool [{label}]: {threads} streams --pool {pool_size} --map \
+                         {strategy}: {:.2} Mmsg/s over {} msgs",
+                        r.result.mmsgs_per_sec, r.result.messages
+                    );
+                    println!("  streams per endpoint: {:?}", r.loads);
+                    println!("  migrations: {}", r.migrations);
+                    println!("  {}", r.usage);
+                    ExitCode::SUCCESS
+                }
+                Err(e) => {
+                    eprintln!("pool build failed: {e}");
+                    ExitCode::FAILURE
+                }
+            }
         }
         "run" => {
             let Some((policy, label)) = policy_from_args(&args, Category::TwoXDynamic) else {

@@ -19,6 +19,10 @@ use super::Time;
 #[derive(Debug, Clone, Default)]
 pub struct ArrivalRing {
     q: VecDeque<(Time, u32)>,
+    /// High-water occupancy: the most entries ever queued at once. The
+    /// VCI layer reads this as the per-CQ contention signal its
+    /// `Adaptive` mapping migrates streams on.
+    high: usize,
 }
 
 impl ArrivalRing {
@@ -35,6 +39,15 @@ impl ArrivalRing {
             self.q.back()
         );
         self.q.push_back((at, owner));
+        if self.q.len() > self.high {
+            self.high = self.q.len();
+        }
+    }
+
+    /// Most entries ever queued at once (monotone over the run).
+    #[inline]
+    pub fn high_water(&self) -> usize {
+        self.high
     }
 
     /// Earliest queued arrival, if any.
@@ -69,12 +82,15 @@ mod tests {
         r.push(10, 3);
         r.push(25, 1);
         assert_eq!(r.len(), 3);
+        assert_eq!(r.high_water(), 3);
         assert_eq!(r.peek(), Some(&(10, 0)));
         assert_eq!(r.pop(), Some((10, 0)));
         assert_eq!(r.pop(), Some((10, 3)));
         assert_eq!(r.pop(), Some((25, 1)));
         assert_eq!(r.pop(), None);
         assert!(r.is_empty());
+        // High water is monotone: draining does not reset it.
+        assert_eq!(r.high_water(), 3);
     }
 
     #[test]

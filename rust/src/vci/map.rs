@@ -1,0 +1,349 @@
+//! Stream-to-slot mapping strategies and the mapper that applies them.
+//!
+//! The mapper is deliberately engine-agnostic: it sees stream
+//! identities and (for `Adaptive`) per-slot occupancy observations, and
+//! produces slot indices into an
+//! [`EndpointPool`](super::EndpointPool). Placement is a pure function
+//! of its inputs — no global state, no process-seeded hashing — so
+//! pooled runs stay bit-deterministic and reseedable
+//! (`SCEP_FUZZ_SEED`-driven fuzzers rerun the same mapping).
+
+use super::stream::Stream;
+
+/// Default `Adaptive` occupancy threshold (outstanding CQEs observed on
+/// a slot's completion queue): one outstanding signal per stream is the
+/// steady-state norm, so a high-water mark above 2 flags a slot whose
+/// streams queue behind each other.
+pub const DEFAULT_ADAPTIVE_OCCUPANCY: u32 = 2;
+
+/// How streams are placed onto pool slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MapStrategy {
+    /// 1:1 — stream of thread `t` takes slot `t`. Requires
+    /// `pool_size >= thread count`; reproduces the historical
+    /// per-thread-endpoint path bit-for-bit (pinned in
+    /// tests/properties.rs and tests/vci.rs).
+    Dedicated,
+    /// Registration order, cycling over the slots: loads differ by at
+    /// most one.
+    RoundRobin,
+    /// SplitMix64 over [`Stream::key`] modulo the pool size:
+    /// placement-stateless (a stream's slot never depends on what else
+    /// registered), at the price of load skew.
+    Hashed,
+    /// Hashed placement plus occupancy-driven migration: streams move
+    /// off slots whose DES-observed completion-queue occupancy exceeds
+    /// `occupancy` (see [`VciMapper::rebalance`]).
+    Adaptive {
+        /// High-water CQE occupancy above which a slot sheds streams.
+        occupancy: u32,
+    },
+}
+
+impl MapStrategy {
+    /// The default contention-aware strategy.
+    pub fn adaptive() -> Self {
+        MapStrategy::Adaptive { occupancy: DEFAULT_ADAPTIVE_OCCUPANCY }
+    }
+
+    /// The valid CLI spellings, for error messages.
+    pub const VALID: &str = "dedicated, rr, hash, adaptive[:<occupancy>]";
+
+    /// Parse a CLI name. Round-trips with the `Display` impl.
+    pub fn parse(s: &str) -> std::result::Result<Self, String> {
+        match s.trim() {
+            "dedicated" | "1:1" => Ok(MapStrategy::Dedicated),
+            "rr" | "round-robin" | "roundrobin" => Ok(MapStrategy::RoundRobin),
+            "hash" | "hashed" => Ok(MapStrategy::Hashed),
+            "adaptive" => Ok(MapStrategy::adaptive()),
+            other => match other.strip_prefix("adaptive:") {
+                Some(t) => t
+                    .parse::<u32>()
+                    .map(|occupancy| MapStrategy::Adaptive { occupancy })
+                    .map_err(|_| format!("bad adaptive occupancy '{t}' in '{other}'")),
+                None => Err(format!(
+                    "unknown map strategy '{other}' (valid: {})",
+                    MapStrategy::VALID
+                )),
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for MapStrategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for MapStrategy {
+    /// Canonical CLI spelling; `parse` of this string reproduces the
+    /// strategy exactly.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapStrategy::Dedicated => f.write_str("dedicated"),
+            MapStrategy::RoundRobin => f.write_str("rr"),
+            MapStrategy::Hashed => f.write_str("hash"),
+            MapStrategy::Adaptive { occupancy } => write!(f, "adaptive:{occupancy}"),
+        }
+    }
+}
+
+/// Applies a [`MapStrategy`] over a pool of `pool_size` slots, tracking
+/// the assignment, per-slot loads and migration count.
+#[derive(Debug, Clone)]
+pub struct VciMapper {
+    strategy: MapStrategy,
+    pool_size: u32,
+    /// Registration order: each stream with its current slot.
+    assigned: Vec<(Stream, u32)>,
+    /// Streams per slot.
+    loads: Vec<u32>,
+    next_rr: u32,
+    migrations: u64,
+}
+
+impl VciMapper {
+    pub fn new(strategy: MapStrategy, pool_size: u32) -> Self {
+        assert!(pool_size >= 1, "a pool holds at least one endpoint");
+        Self {
+            strategy,
+            pool_size,
+            assigned: Vec::new(),
+            loads: vec![0; pool_size as usize],
+            next_rr: 0,
+            migrations: 0,
+        }
+    }
+
+    pub fn strategy(&self) -> MapStrategy {
+        self.strategy
+    }
+
+    pub fn pool_size(&self) -> u32 {
+        self.pool_size
+    }
+
+    /// Place `stream` and return its slot.
+    pub fn assign(&mut self, stream: Stream) -> u32 {
+        let slot = match self.strategy {
+            MapStrategy::Dedicated => {
+                assert!(
+                    stream.thread < self.pool_size,
+                    "Dedicated mapping needs pool_size >= thread count \
+                     (thread {} vs pool {})",
+                    stream.thread,
+                    self.pool_size
+                );
+                stream.thread
+            }
+            MapStrategy::RoundRobin => {
+                let s = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.pool_size;
+                s
+            }
+            MapStrategy::Hashed | MapStrategy::Adaptive { .. } => {
+                (stream.key() % self.pool_size as u64) as u32
+            }
+        };
+        self.assigned.push((stream, slot));
+        self.loads[slot as usize] += 1;
+        slot
+    }
+
+    /// Current slot of a registered stream.
+    pub fn slot_of(&self, stream: Stream) -> Option<u32> {
+        self.assigned.iter().find(|&&(s, _)| s == stream).map(|&(_, slot)| slot)
+    }
+
+    /// Slots in stream-registration order (one entry per stream).
+    pub fn slots(&self) -> Vec<u32> {
+        self.assigned.iter().map(|&(_, s)| s).collect()
+    }
+
+    /// Streams per slot.
+    pub fn loads(&self) -> &[u32] {
+        &self.loads
+    }
+
+    /// Total stream migrations performed by [`VciMapper::rebalance`].
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// Contention-aware migration (`Adaptive` only; a no-op returning 0
+    /// for every other strategy): for each slot whose observed
+    /// occupancy exceeds the strategy threshold, move its most recently
+    /// registered streams to the least-loaded slot (ties broken by
+    /// lowest index) until the slot is within one stream of it.
+    /// `occupancy[s]` is the DES-observed completion-queue high-water
+    /// mark of slot `s` (see
+    /// [`MsgRateResult::cq_high_water`](crate::bench::MsgRateResult::cq_high_water)).
+    /// Returns the number of migrations performed; deterministic in its
+    /// inputs.
+    pub fn rebalance(&mut self, occupancy: &[u64]) -> u64 {
+        let MapStrategy::Adaptive { occupancy: threshold } = self.strategy else {
+            return 0;
+        };
+        assert_eq!(
+            occupancy.len(),
+            self.pool_size as usize,
+            "one occupancy observation per pool slot"
+        );
+        let before = self.migrations;
+        for (hot, &occ) in occupancy.iter().enumerate() {
+            if occ <= threshold as u64 {
+                continue;
+            }
+            loop {
+                let cold = (0..self.pool_size as usize)
+                    .min_by_key(|&i| self.loads[i])
+                    .expect("non-empty pool");
+                if self.loads[hot] <= self.loads[cold] + 1 {
+                    break;
+                }
+                let idx = self
+                    .assigned
+                    .iter()
+                    .rposition(|&(_, s)| s == hot as u32)
+                    .expect("a loaded slot has at least one stream");
+                self.assigned[idx].1 = cold as u32;
+                self.loads[hot] -= 1;
+                self.loads[cold] += 1;
+                self.migrations += 1;
+            }
+        }
+        self.migrations - before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        for s in [
+            MapStrategy::Dedicated,
+            MapStrategy::RoundRobin,
+            MapStrategy::Hashed,
+            MapStrategy::adaptive(),
+            MapStrategy::Adaptive { occupancy: 7 },
+        ] {
+            let text = s.to_string();
+            assert_eq!(MapStrategy::parse(&text), Ok(s), "round trip of '{text}'");
+        }
+        // Issue-style aliases.
+        assert_eq!(MapStrategy::parse("round-robin"), Ok(MapStrategy::RoundRobin));
+        assert_eq!(MapStrategy::parse("hashed"), Ok(MapStrategy::Hashed));
+        assert_eq!(
+            MapStrategy::parse("adaptive"),
+            Ok(MapStrategy::Adaptive { occupancy: DEFAULT_ADAPTIVE_OCCUPANCY })
+        );
+    }
+
+    #[test]
+    fn bad_input_lists_valid_strategies() {
+        let err = MapStrategy::parse("bogus").unwrap_err();
+        for name in ["dedicated", "rr", "hash", "adaptive"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+        assert!(MapStrategy::parse("adaptive:x").is_err());
+    }
+
+    #[test]
+    fn dedicated_is_identity() {
+        let mut m = VciMapper::new(MapStrategy::Dedicated, 8);
+        for t in 0..8 {
+            assert_eq!(m.assign(Stream::of_thread(t)), t);
+        }
+        assert_eq!(m.loads(), &[1; 8]);
+        assert_eq!(m.migrations(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool_size >= thread count")]
+    fn dedicated_rejects_undersized_pool() {
+        let mut m = VciMapper::new(MapStrategy::Dedicated, 2);
+        m.assign(Stream::of_thread(2));
+    }
+
+    #[test]
+    fn round_robin_balances_within_one() {
+        let mut m = VciMapper::new(MapStrategy::RoundRobin, 5);
+        for t in 0..16 {
+            m.assign(Stream::of_thread(t));
+        }
+        let (min, max) =
+            (m.loads().iter().min().unwrap(), m.loads().iter().max().unwrap());
+        assert!(max - min <= 1, "loads {:?}", m.loads());
+        assert_eq!(m.loads().iter().sum::<u32>(), 16);
+        assert_eq!(m.slots()[0], 0);
+        assert_eq!(m.slots()[5], 0);
+    }
+
+    #[test]
+    fn hashed_is_placement_stateless() {
+        // A stream's slot depends only on its identity and the pool
+        // size — not on registration order.
+        let slot = |streams: &[u32], want: u32| {
+            let mut m = VciMapper::new(MapStrategy::Hashed, 5);
+            let mut got = None;
+            for &t in streams {
+                let s = m.assign(Stream::of_thread(t));
+                if t == want {
+                    got = Some(s);
+                }
+            }
+            got.unwrap()
+        };
+        assert_eq!(slot(&[0, 1, 2, 3], 3), slot(&[3], 3));
+    }
+
+    #[test]
+    fn rebalance_migrates_hot_slots_to_balance() {
+        let mut m = VciMapper::new(MapStrategy::Adaptive { occupancy: 0 }, 5);
+        for t in 0..16 {
+            m.assign(Stream::of_thread(t));
+        }
+        let skew_before: u32 =
+            m.loads().iter().max().unwrap() - m.loads().iter().min().unwrap();
+        // Occupancy = load (every stream keeps one CQE outstanding);
+        // threshold 0 marks every non-empty slot eligible to shed.
+        let occ: Vec<u64> = m.loads().iter().map(|&l| l as u64).collect();
+        let moved = m.rebalance(&occ);
+        assert_eq!(moved, m.migrations());
+        let (min, max) =
+            (*m.loads().iter().min().unwrap(), *m.loads().iter().max().unwrap());
+        assert!(max - min <= 1, "rebalance left skew: {:?}", m.loads());
+        assert_eq!(m.loads().iter().sum::<u32>(), 16, "streams conserved");
+        if skew_before > 1 {
+            assert!(moved > 0, "skewed mapping must migrate");
+        }
+        // slots() reflects the migrations.
+        let mut counts = vec![0u32; 5];
+        for s in m.slots() {
+            counts[s as usize] += 1;
+        }
+        assert_eq!(counts, m.loads());
+    }
+
+    #[test]
+    fn rebalance_is_a_noop_below_threshold_and_for_static_strategies() {
+        let mut m = VciMapper::new(MapStrategy::Adaptive { occupancy: 100 }, 4);
+        for t in 0..8 {
+            m.assign(Stream::of_thread(t));
+        }
+        let loads = m.loads().to_vec();
+        assert_eq!(m.rebalance(&[5, 5, 5, 5]), 0);
+        assert_eq!(m.loads(), &loads[..]);
+
+        let mut rr = VciMapper::new(MapStrategy::RoundRobin, 4);
+        for t in 0..8 {
+            rr.assign(Stream::of_thread(t));
+        }
+        assert_eq!(rr.rebalance(&[1000, 1000, 1000, 1000]), 0);
+    }
+}

@@ -1,0 +1,68 @@
+//! VCI-style stream-to-endpoint virtualization — the runtime layer
+//! between "one endpoint per thread" and "one endpoint per process".
+//!
+//! The paper's §VII headline is that a *pool* of scalable endpoints
+//! matches dedicated-endpoint message rates at a fraction of the
+//! hardware resources. What the repo lacked was the layer that decides
+//! which endpoint a logical communication stream uses: the VCI (virtual
+//! communication interface) mapping of MPICH, proposed as the MPIX
+//! stream API (arXiv:2208.13707) and argued for in "How I Learned to
+//! Stop Worrying About User-Visible Endpoints and Love MPI"
+//! (arXiv:2005.00263) — endpoints become a runtime resource the library
+//! maps streams onto, not a user-visible object per thread.
+//!
+//! * [`Stream`] — a logical ordered communication context
+//!   (communicator × thread × tag class). Streams are serial by
+//!   contract: the application (or the MPI runtime) guarantees a single
+//!   posting context per stream, which is what lets a stream inherit a
+//!   TD-backed endpoint without re-introducing the QP lock.
+//! * [`EndpointPool`] — a bounded pool of `size` endpoints instantiated
+//!   from any [`EndpointPolicy`](crate::endpoints::EndpointPolicy), so
+//!   the §VII `scalable` preset composes directly:
+//!   `EndpointPool::build(&EndpointPolicy::scalable(), threads / 3, ..)`.
+//! * [`MapStrategy`] / [`VciMapper`] — pluggable stream-to-slot
+//!   placement: `Dedicated` (1:1, pinned bit-identical to the
+//!   historical per-thread path), `RoundRobin`, `Hashed` (SplitMix64
+//!   over the stream key) and `Adaptive`, which migrates streams off
+//!   endpoints whose DES-observed completion-queue occupancy crosses a
+//!   threshold ([`VciMapper::rebalance`]).
+//! * [`run_pooled`] — the §IV message-rate benchmark over a pooled
+//!   topology (probe run → occupancy-driven rebalance → timed run for
+//!   `Adaptive`; a single timed run otherwise).
+//!
+//! # What sharing a pool endpoint costs (model)
+//!
+//! When the mapper places `x > 1` streams on one endpoint, the
+//! benchmark engine sees the *built* topology — `x` threads driving one
+//! QP/CQ — and applies the §V sharing costs it already models:
+//!
+//! * each stream drives a `d/x` window of the send ring: the VCI
+//!   runtime partitions the ring statically among the slot's streams,
+//!   so the TD single-writer contract holds per slice and TD-backed
+//!   pools keep the QP lock off, while Postlist/Unsignaled clamp to the
+//!   window (batching degrades exactly as in Fig 11);
+//! * ring-depth accounting goes through the shared depth atomic (the
+//!   cacheline bounces between streams) and every WQE pays the
+//!   shared-QP branch cost;
+//! * CQ polling serializes on the CQ lock, and cross-stream completions
+//!   are credited through per-stream atomics (§V-E);
+//! * QPs of a policy that grants no single-writer TD (e.g. a shared-QP
+//!   policy) keep their QP lock — lock-freedom is derived from the
+//!   built verbs objects, never assumed from the mapping.
+//!
+//! DES fast-path eligibility stays topology-derived
+//! ([`bench::msgrate`](crate::bench::msgrate) module docs): a pooled
+//! run coalesces exactly where its actual sharing admits — `Dedicated`
+//! over a full-size pool coalesces like today's per-thread path, any
+//! slot with two streams runs one-event-per-step — and the randomized
+//! differential fuzzers extend over pool points (tests/properties.rs).
+
+pub mod map;
+pub mod pool;
+pub mod run;
+pub mod stream;
+
+pub use map::{MapStrategy, VciMapper, DEFAULT_ADAPTIVE_OCCUPANCY};
+pub use pool::EndpointPool;
+pub use run::{pooled_threads, run_pooled, PooledResult};
+pub use stream::Stream;

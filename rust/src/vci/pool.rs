@@ -1,0 +1,102 @@
+//! The bounded endpoint pool: `size` endpoints instantiated from any
+//! [`EndpointPolicy`].
+//!
+//! A pool is exactly what the policy's builder produces for `size`
+//! "threads" — the VCI layer reinterprets those per-thread endpoints as
+//! pool *slots* that streams map onto. Building through the policy
+//! means every preset composes: `Dedicated` over a full-size pool is
+//! byte-identical to the historical per-thread construction, and the
+//! §VII `scalable` preset yields a pool of uUAR-trimmed, paired-TD
+//! endpoints (the paper's "fraction of the resources" configuration).
+
+use crate::endpoints::{EndpointPolicy, EndpointSet, ResourceUsage, ThreadEndpoint};
+use crate::verbs::error::Result;
+use crate::verbs::Fabric;
+
+/// A bounded pool of endpoints built from one policy. Slot `s` is the
+/// builder's thread-`s` endpoint.
+#[derive(Debug, Clone)]
+pub struct EndpointPool {
+    /// The policy every slot was instantiated from.
+    pub policy: EndpointPolicy,
+    /// Every verbs object the build created (slots are `set.threads`).
+    pub set: EndpointSet,
+}
+
+impl EndpointPool {
+    /// Instantiate `size` endpoints from `policy` on `fabric`.
+    pub fn build(policy: &EndpointPolicy, size: u32, fabric: &mut Fabric) -> Result<Self> {
+        let set = policy.build(fabric, size)?;
+        Ok(Self { policy: *policy, set })
+    }
+
+    /// [`EndpointPool::build`] on a fresh ConnectX-4 fabric.
+    pub fn build_fresh(policy: &EndpointPolicy, size: u32) -> Result<(Fabric, Self)> {
+        let mut fabric = Fabric::connectx4();
+        let pool = Self::build(policy, size, &mut fabric)?;
+        Ok((fabric, pool))
+    }
+
+    /// Number of slots.
+    pub fn size(&self) -> u32 {
+        self.set.threads.len() as u32
+    }
+
+    /// The endpoint behind one slot.
+    pub fn endpoint(&self, slot: u32) -> ThreadEndpoint {
+        self.set.threads[slot as usize]
+    }
+
+    /// All slots in order.
+    pub fn endpoints(&self) -> &[ThreadEndpoint] {
+        &self.set.threads
+    }
+
+    /// Hardware/memory accounting of the pool's objects.
+    pub fn usage(&self, fabric: &Fabric) -> ResourceUsage {
+        ResourceUsage::of_set(fabric, &self.set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::Category;
+
+    #[test]
+    fn full_size_pool_matches_per_thread_build() {
+        // Slot i of a full-size pool is exactly the thread-i endpoint of
+        // the historical build — the Dedicated identity's foundation.
+        for cat in Category::ALL {
+            let policy = EndpointPolicy::preset(cat);
+            let (_, pool) = EndpointPool::build_fresh(&policy, 16).unwrap();
+            let (_, eps) = policy.build_fresh(16).unwrap();
+            assert_eq!(pool.endpoints(), &eps[..], "{cat}");
+            assert_eq!(pool.size(), 16, "{cat}");
+        }
+    }
+
+    #[test]
+    fn pool_size_needs_no_relation_to_stream_count() {
+        // The paper's headline point: a pool a third the thread count.
+        for size in [1u32, 3, 5, 7, 11] {
+            let (fabric, pool) =
+                EndpointPool::build_fresh(&EndpointPolicy::scalable(), size).unwrap();
+            assert_eq!(pool.size(), size);
+            let u = pool.usage(&fabric);
+            assert_eq!(u.qps, size);
+            assert_eq!(u.cqs, size);
+        }
+    }
+
+    #[test]
+    fn scalable_pool_uses_a_fraction_of_dedicated_resources() {
+        let (df, dedicated) =
+            EndpointPool::build_fresh(&EndpointPolicy::default(), 16).unwrap();
+        let (sf, scalable) =
+            EndpointPool::build_fresh(&EndpointPolicy::scalable(), 5).unwrap();
+        let (du, su) = (dedicated.usage(&df), scalable.usage(&sf));
+        assert!(su.uuars_allocated * 3 < du.uuars_allocated, "{su:?} vs {du:?}");
+        assert!(su.memory_bytes < du.memory_bytes);
+    }
+}

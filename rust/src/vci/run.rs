@@ -1,0 +1,166 @@
+//! The §IV message-rate benchmark over a pooled topology: build the
+//! pool, map one stream per thread, (for `Adaptive`) probe and
+//! rebalance on observed occupancy, then run the timed phase.
+
+use crate::bench::{MsgRateConfig, MsgRateResult, Runner};
+use crate::endpoints::{EndpointPolicy, ResourceUsage, ThreadEndpoint};
+use crate::verbs::error::{Result, VerbsError};
+
+use super::map::{MapStrategy, VciMapper};
+use super::pool::EndpointPool;
+use super::stream::Stream;
+
+/// A pooled benchmark run's outcome.
+#[derive(Debug, Clone)]
+pub struct PooledResult {
+    /// The timed run (virtual-time observables + engine diagnostics).
+    pub result: MsgRateResult,
+    /// Accounting of the pool's verbs objects — the denominator of the
+    /// rate-vs-resources tradeoff.
+    pub usage: ResourceUsage,
+    /// Final streams per slot.
+    pub loads: Vec<u32>,
+    /// Stream migrations the `Adaptive` rebalance performed (0 for the
+    /// static strategies).
+    pub migrations: u64,
+}
+
+/// Resolve the mapper's current assignment into one endpoint per stream
+/// (the shape [`Runner::new`] takes).
+pub fn pooled_threads(pool: &EndpointPool, mapper: &VciMapper) -> Vec<ThreadEndpoint> {
+    mapper.slots().iter().map(|&s| pool.endpoint(s)).collect()
+}
+
+/// Run the message-rate benchmark with `nstreams` per-thread streams
+/// mapped onto a `pool_size`-endpoint pool built from `policy`.
+///
+/// `Adaptive` first runs a short probe (an eighth of the configured
+/// messages, at least 64) with the hashed initial placement, observes
+/// each slot's completion-queue high-water occupancy
+/// ([`MsgRateResult::cq_high_water`]), migrates streams off slots over
+/// the threshold ([`VciMapper::rebalance`]), and only then runs the
+/// timed phase. Every step is a pure function of the inputs, so pooled
+/// runs are bit-deterministic.
+///
+/// Occupancy is a *per-CQ* signal: slots of a policy that groups
+/// several slots onto one CQ all observe their group's shared
+/// high-water mark, so for such pools a crossing threshold flags the
+/// whole group and the rebalance falls back to plain load-leveling
+/// across it. Per-slot attribution needs per-slot CQs (every preset the
+/// pool figure sweeps has them).
+pub fn run_pooled(
+    policy: &EndpointPolicy,
+    nstreams: u32,
+    pool_size: u32,
+    strategy: MapStrategy,
+    cfg: MsgRateConfig,
+) -> Result<PooledResult> {
+    if strategy == MapStrategy::Dedicated && pool_size < nstreams {
+        return Err(VerbsError::Config(format!(
+            "dedicated stream mapping needs pool_size >= streams ({pool_size} < {nstreams})"
+        )));
+    }
+    let (fabric, pool) = EndpointPool::build_fresh(policy, pool_size)?;
+    let mut mapper = VciMapper::new(strategy, pool_size);
+    for t in 0..nstreams {
+        mapper.assign(Stream::of_thread(t));
+    }
+    if matches!(strategy, MapStrategy::Adaptive { .. }) {
+        let probe_cfg =
+            MsgRateConfig { msgs_per_thread: (cfg.msgs_per_thread / 8).max(64), ..cfg };
+        let probe = Runner::new(&fabric, &pooled_threads(&pool, &mapper), probe_cfg).run();
+        let occupancy: Vec<u64> = pool
+            .endpoints()
+            .iter()
+            .map(|ep| probe.cq_high_water[ep.cq.index()] as u64)
+            .collect();
+        mapper.rebalance(&occupancy);
+    }
+    let threads = pooled_threads(&pool, &mapper);
+    let result = Runner::new(&fabric, &threads, cfg).run();
+    let usage = pool.usage(&fabric);
+    Ok(PooledResult {
+        result,
+        usage,
+        loads: mapper.loads().to_vec(),
+        migrations: mapper.migrations(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoints::Category;
+
+    #[test]
+    fn pooled_run_completes_every_stream() {
+        let cfg = MsgRateConfig { msgs_per_thread: 1024, ..Default::default() };
+        let r = run_pooled(&EndpointPolicy::scalable(), 16, 5, MapStrategy::RoundRobin, cfg)
+            .unwrap();
+        assert_eq!(r.result.messages, 16 * 1024);
+        assert_eq!(r.loads.iter().sum::<u32>(), 16);
+        assert_eq!(r.migrations, 0);
+        assert!(r.result.mmsgs_per_sec > 0.0);
+        // Shared slots keep the engine on the one-event-per-step path.
+        assert_eq!(r.result.sched_events, r.result.sched_steps);
+    }
+
+    #[test]
+    fn dedicated_over_full_pool_reproduces_plain_runner() {
+        let policy = EndpointPolicy::preset(Category::Dynamic);
+        let cfg = MsgRateConfig { msgs_per_thread: 1024, ..Default::default() };
+        let pooled =
+            run_pooled(&policy, 8, 8, MapStrategy::Dedicated, cfg).unwrap();
+        let (fabric, eps) = policy.build_fresh(8).unwrap();
+        let direct = Runner::new(&fabric, &eps, cfg).run();
+        assert_eq!(pooled.result.duration, direct.duration);
+        assert_eq!(pooled.result.thread_done, direct.thread_done);
+        assert_eq!(pooled.result.sched_events, direct.sched_events);
+        assert_eq!(pooled.result.mmsgs_per_sec, direct.mmsgs_per_sec);
+    }
+
+    #[test]
+    fn adaptive_rebalances_to_within_one_stream() {
+        // A tight threshold flags every multi-stream slot during the
+        // probe, so the final loads must be balanced regardless of the
+        // hashed initial skew — and the run must still complete.
+        let cfg = MsgRateConfig { msgs_per_thread: 512, ..Default::default() };
+        let r = run_pooled(
+            &EndpointPolicy::scalable(),
+            16,
+            5,
+            MapStrategy::Adaptive { occupancy: 1 },
+            cfg,
+        )
+        .unwrap();
+        let (min, max) =
+            (*r.loads.iter().min().unwrap(), *r.loads.iter().max().unwrap());
+        assert!(max - min <= 1, "adaptive left skew: {:?}", r.loads);
+        assert_eq!(r.result.messages, 16 * 512);
+    }
+
+    #[test]
+    fn dedicated_over_undersized_pool_is_rejected() {
+        let cfg = MsgRateConfig { msgs_per_thread: 64, ..Default::default() };
+        let r = run_pooled(&EndpointPolicy::default(), 8, 4, MapStrategy::Dedicated, cfg);
+        assert!(
+            r.map(|_| ()).map_err(|e| e.to_string()).unwrap_err().contains("pool_size"),
+            "undersized dedicated pool must surface a Config error"
+        );
+    }
+
+    #[test]
+    fn pooled_runs_are_deterministic() {
+        let cfg = MsgRateConfig { msgs_per_thread: 512, ..Default::default() };
+        for strategy in
+            [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()]
+        {
+            let a = run_pooled(&EndpointPolicy::scalable(), 12, 4, strategy, cfg).unwrap();
+            let b = run_pooled(&EndpointPolicy::scalable(), 12, 4, strategy, cfg).unwrap();
+            assert_eq!(a.result.duration, b.result.duration, "{strategy}");
+            assert_eq!(a.result.thread_done, b.result.thread_done, "{strategy}");
+            assert_eq!(a.loads, b.loads, "{strategy}");
+            assert_eq!(a.migrations, b.migrations, "{strategy}");
+        }
+    }
+}

@@ -22,6 +22,10 @@ pub enum VerbsError {
     SendQueueFull(QpId, u32),
     InlineTooLarge { size: u32, max: u32 },
     Busy(String, String),
+    /// A structurally invalid runtime configuration (e.g. a dedicated
+    /// stream mapping over an undersized endpoint pool) — rejected
+    /// before any verbs object is built.
+    Config(String),
 }
 
 impl fmt::Display for VerbsError {
@@ -56,6 +60,7 @@ impl fmt::Display for VerbsError {
             VerbsError::Busy(what, children) => {
                 write!(f, "{what} still has live children ({children})")
             }
+            VerbsError::Config(what) => write!(f, "invalid configuration: {what}"),
         }
     }
 }

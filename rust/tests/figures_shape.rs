@@ -26,11 +26,12 @@ fn run_category(cat: Category, n: u32, features: Features) -> f64 {
 
 // ------------------------------------------- Golden snapshots (engine net)
 
-/// Byte-identity pin on the `--quick` table output of fig2/fig9/fig11:
-/// the DES engine is bit-deterministic, so ANY engine change that
-/// perturbs results — a fast path that is not exact, a cost-model edit,
-/// a scheduler reorder — fails this test loudly instead of silently
-/// shifting the reproduction's numbers.
+/// Byte-identity pin on the `--quick` table output of fig2/fig9/fig11
+/// plus the VCI pool sweep: the DES engine is bit-deterministic, so ANY
+/// engine change that perturbs results — a fast path that is not exact,
+/// a cost-model edit, a scheduler reorder, a stream-placement change —
+/// fails this test loudly instead of silently shifting the
+/// reproduction's numbers.
 ///
 /// Fixtures live in `tests/fixtures/<fig>_quick.golden.txt`. A missing
 /// fixture (or `SCEP_BLESS=1`) is written from the current engine and
@@ -49,7 +50,7 @@ fn run_category(cat: Category, n: u32, features: Features) -> f64 {
 fn golden_fig_tables_are_byte_stable() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
     let require = std::env::var("SCEP_REQUIRE_GOLDEN").is_ok();
-    for name in ["fig2", "fig9", "fig11"] {
+    for name in ["fig2", "fig9", "fig11", "pool"] {
         // (Run-to-run determinism itself is pinned by `deterministic` in
         // bench::msgrate and the worker-pool invariants; one render per
         // figure keeps this test affordable in debug CI.)
@@ -119,6 +120,37 @@ fn policy_grid_covers_size_by_level_by_threads_matrix() {
             .filter(|l| l.split(',').nth(4) == Some(want.as_str()))
             .count();
         assert_eq!(rows, 5 * 5, "{tier}-thread tier incomplete");
+    }
+}
+
+/// The VCI pool sweep must cover its full matrix at both stream tiers:
+/// per tier, one dedicated baseline row plus {n, n/2, n/3, n/4} pool
+/// sizes x {rr, hash, adaptive} strategies — and the paper's headline
+/// pool = threads/3 point must be present.
+#[test]
+fn pool_figure_covers_size_by_strategy_matrix() {
+    let bytes = scalable_ep::figures::render_bytes("pool", true).expect("known figure");
+    let csv: Vec<&str> = bytes.lines().filter(|l| l.starts_with("csv,")).collect();
+    let per_tier = 1 + 4 * 3;
+    assert_eq!(csv.len(), 1 + 2 * per_tier, "header + 2 tiers x 13 rows");
+    for strategy in ["dedicated", "rr", "hash", "adaptive:2"] {
+        assert!(bytes.contains(strategy), "strategy '{strategy}' missing");
+    }
+    // Data line tokens: csv,<slug>,threads,policy,pool,map,...
+    for tier in scalable_ep::figures::GRID_THREADS {
+        let want = tier.to_string();
+        let rows: Vec<&&str> =
+            csv[1..].iter().filter(|l| l.split(',').nth(2) == Some(want.as_str())).collect();
+        assert_eq!(rows.len(), per_tier, "{tier}-stream tier incomplete");
+        // The headline point: the scalable preset at pool = threads/3.
+        let third = (tier / 3).to_string();
+        assert!(
+            rows.iter().any(|l| {
+                let mut it = l.split(',');
+                it.nth(3) == Some("Scalable") && it.next() == Some(third.as_str())
+            }),
+            "{tier}-stream tier lacks the pool = threads/3 scalable point"
+        );
     }
 }
 

@@ -10,6 +10,7 @@ use scalable_ep::endpoints::{
 use scalable_ep::mlx5::Mlx5Env;
 use scalable_ep::sim::{Server, SimLock, XorShift};
 use scalable_ep::testing::check;
+use scalable_ep::vci::{run_pooled, MapStrategy};
 use scalable_ep::verbs::{Fabric, QpCaps, TdInitAttr};
 
 /// Seed for the randomized differential fuzzers: `SCEP_FUZZ_SEED=<u64>`
@@ -694,6 +695,127 @@ fn prop_legacy_vs_canonical_scheduler_fuzzed() {
                 "canonical dispatched MORE events ({} vs {})",
                 canonical.sched_events, legacy.sched_events
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_dedicated_matches_per_thread_path_fuzzed() {
+    // VCI pool axis, identity leg: `Dedicated` over a full-size pool of
+    // ANY policy grid point must reproduce the historical per-thread
+    // path bit-for-bit — every virtual-time observable plus the engine
+    // diagnostics (the pool layer may not perturb fast-path
+    // eligibility). `SCEP_FUZZ_SEED` reseeds; the seed is echoed.
+    check("pool-dedicated-identity", fuzz_seed(0xD1_CE0), 16, |rng, _| {
+        let nthreads = [1u32, 2, 4, 8, 12, 16, 24][rng.below(7) as usize];
+        let policy = random_policy(rng, nthreads);
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(256),
+            features,
+            ..Default::default()
+        };
+        let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
+        let direct = Runner::new(&fabric, &eps, cfg).run();
+        let pooled = run_pooled(&policy, nthreads, nthreads, MapStrategy::Dedicated, cfg)
+            .map_err(|e| e.to_string())?;
+        let what = format!("policy '{policy}' x{nthreads}, {features:?}");
+        if pooled.result.duration != direct.duration {
+            return Err(format!("{what}: duration diverged"));
+        }
+        if pooled.result.thread_done != direct.thread_done {
+            return Err(format!("{what}: per-thread done-times diverged"));
+        }
+        if pooled.result.mmsgs_per_sec != direct.mmsgs_per_sec {
+            return Err(format!("{what}: rate diverged"));
+        }
+        if pooled.result.pcie != direct.pcie {
+            return Err(format!("{what}: PCIe counters diverged"));
+        }
+        if pooled.result.p50_latency_ns != direct.p50_latency_ns
+            || pooled.result.p99_latency_ns != direct.p99_latency_ns
+        {
+            return Err(format!("{what}: latency percentiles diverged"));
+        }
+        if pooled.result.sched_events != direct.sched_events
+            || pooled.result.sched_steps != direct.sched_steps
+        {
+            return Err(format!(
+                "{what}: engine diagnostics diverged ({}/{} vs {}/{})",
+                pooled.result.sched_events,
+                pooled.result.sched_steps,
+                direct.sched_events,
+                direct.sched_steps
+            ));
+        }
+        if pooled.migrations != 0 {
+            return Err(format!("{what}: dedicated mapping migrated"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_fast_path_matches_general_path_fuzzed() {
+    // VCI pool axis, sharing leg: random policy grid points built as
+    // bounded pools with more streams than slots must stay bit-exact
+    // between the coalescing fast path and the stepped general path
+    // (eligibility is re-derived from the pooled topology), and the
+    // whole pooled run — Hashed/RoundRobin placement included — must be
+    // a pure function of its inputs (rerun => bit-identical), which is
+    // what keeps the sweep reproducible under `SCEP_FUZZ_SEED`
+    // reseeding. `Adaptive` additionally pins that the probe/rebalance
+    // trajectory is engine-path-independent (same loads either way).
+    check("pool-fast-vs-general", fuzz_seed(0x900_1ED), 18, |rng, _| {
+        let pool_size = [1u32, 2, 3, 4, 5, 8][rng.below(6) as usize];
+        let policy = random_policy(rng, pool_size);
+        let nstreams = pool_size + rng.below(17) as u32;
+        let strategy = match rng.below(3) {
+            0 => MapStrategy::RoundRobin,
+            1 => MapStrategy::Hashed,
+            _ => MapStrategy::Adaptive { occupancy: 1 + rng.below(4) as u32 },
+        };
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(256),
+            qp_depth: [32u32, 128][rng.below(2) as usize],
+            features,
+            ..Default::default()
+        };
+        let what =
+            format!("policy '{policy}' pool {pool_size} x{nstreams} streams, {strategy}");
+        let fast = run_pooled(&policy, nstreams, pool_size, strategy, cfg)
+            .map_err(|e| e.to_string())?;
+        let general = run_pooled(
+            &policy,
+            nstreams,
+            pool_size,
+            strategy,
+            MsgRateConfig { force_general_path: true, ..cfg },
+        )
+        .map_err(|e| e.to_string())?;
+        assert_bit_exact(&fast.result, &general.result, &what)?;
+        if fast.loads != general.loads || fast.migrations != general.migrations {
+            return Err(format!("{what}: mapping depends on the engine path"));
+        }
+        let again = run_pooled(&policy, nstreams, pool_size, strategy, cfg)
+            .map_err(|e| e.to_string())?;
+        if again.result.duration != fast.result.duration
+            || again.result.thread_done != fast.result.thread_done
+            || again.loads != fast.loads
+        {
+            return Err(format!("{what}: pooled run is not deterministic"));
         }
         Ok(())
     });
