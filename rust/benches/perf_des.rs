@@ -36,6 +36,18 @@
 //! strategy) with `pool_size`, `strategy`, `rate`, `uuars` and
 //! `migrations` columns, tracking the rate-vs-resources tradeoff the
 //! stream-to-endpoint layer reproduces (EXPERIMENTS.md §VCI).
+//!
+//! Two further arrays track the partitioned engine (EXPERIMENTS.md
+//! §Partitioned DES): `partition` runs each scenario sequentially and
+//! with endpoint islands on a 4-worker pool, asserts bit-identity and
+//! records `islands`, `couplings`, `parallel` (did the speculation
+//! validate) and the wallclock `speedup`; `memo` compares a memoized
+//! `Runner::sweep_msgs` msgs-per-thread sweep against from-scratch
+//! runs, recording scheduler-step and wallclock savings.
+//!
+//! The run ends by printing paste-ready EXPERIMENTS.md §Perf markdown
+//! rows for every table above, so updating the doc after a CI run is a
+//! copy-paste, not a transcription.
 
 use std::time::Instant;
 
@@ -152,6 +164,118 @@ fn measure_pool(nthreads: u32, pool_size: u32, strategy: MapStrategy, msgs: u64)
     }
 }
 
+/// One partitioned-execution row (EXPERIMENTS.md §Partitioned DES): the
+/// same scenario run sequentially and with endpoint islands on a
+/// 4-worker pool; bit-identity asserted, wallclock speedup recorded.
+struct PartRow {
+    label: &'static str,
+    threads: u32,
+    islands: usize,
+    couplings: u64,
+    rail_events: usize,
+    parallel: bool,
+    attempts: u32,
+    workers: usize,
+    seq_wallclock_s: f64,
+    par_wallclock_s: f64,
+    speedup: f64,
+}
+
+fn measure_partition(
+    label: &'static str,
+    res: SharedResource,
+    ways: u32,
+    nthreads: u32,
+    msgs: u64,
+) -> PartRow {
+    const WORKERS: usize = 4;
+    let (fabric, eps) = EndpointPolicy::sharing(res, ways).build_fresh(nthreads).unwrap();
+    let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+    let t0 = Instant::now();
+    let seq = Runner::new(&fabric, &eps, cfg).run();
+    let seq_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let (par, stats) = Runner::new(&fabric, &eps, cfg).run_partitioned_with(WORKERS);
+    let par_s = t1.elapsed().as_secs_f64();
+    // Bit-identity is the partitioned engine's contract: the speculation
+    // validates against a rail replay or the run falls back to the
+    // preserved sequential runner.
+    assert_eq!(par.duration, seq.duration, "{label}: partitioned virtual time drifted");
+    assert_eq!(par.thread_done, seq.thread_done, "{label}: partitioned done-times drifted");
+    assert_eq!(par.pcie, seq.pcie, "{label}: partitioned PCIe counters drifted");
+    assert_eq!(par.cq_high_water, seq.cq_high_water, "{label}: partitioned CQ occupancy drifted");
+    let speedup = seq_s / par_s.max(1e-9);
+    println!(
+        "{label:>28}: {} islands, {} couplings, parallel={}, \
+         seq {:.3}s vs par {:.3}s -> {:.2}x",
+        stats.islands, stats.couplings, stats.parallel, seq_s, par_s, speedup,
+    );
+    PartRow {
+        label,
+        threads: nthreads,
+        islands: stats.islands,
+        couplings: stats.couplings,
+        rail_events: stats.rail_events,
+        parallel: stats.parallel,
+        attempts: stats.attempts,
+        workers: stats.workers,
+        seq_wallclock_s: seq_s,
+        par_wallclock_s: par_s,
+        speedup,
+    }
+}
+
+/// The memoized msgs-per-thread sweep vs from-scratch runs
+/// (EXPERIMENTS.md §Partitioned DES): scheduler-step and wallclock
+/// savings, bit-identity asserted per cell.
+struct MemoRow {
+    prefix_steps: u64,
+    memo_steps: u64,
+    scratch_steps: u64,
+    memo_wallclock_s: f64,
+    scratch_wallclock_s: f64,
+}
+
+fn measure_memo(msgs: u64) -> MemoRow {
+    let (fabric, eps) = EndpointPolicy::sharing(SharedResource::Ctx, 1).build_fresh(16).unwrap();
+    let cfg = MsgRateConfig::default();
+    let targets = [msgs / 4, msgs / 2, msgs];
+    let t0 = Instant::now();
+    let sweep = Runner::sweep_msgs(&fabric, &eps, cfg, &targets);
+    let memo_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for (&target, memoized) in targets.iter().zip(&sweep.results) {
+        let scratch =
+            Runner::new(&fabric, &eps, MsgRateConfig { msgs_per_thread: target, ..cfg }).run();
+        assert_eq!(
+            memoized.duration, scratch.duration,
+            "memo sweep at {target} msgs drifted in virtual time"
+        );
+        assert_eq!(
+            memoized.thread_done, scratch.thread_done,
+            "memo sweep at {target} msgs drifted in done-times"
+        );
+    }
+    let scratch_s = t1.elapsed().as_secs_f64();
+    println!(
+        "{:>28}: prefix {} steps, memo {} vs scratch {} steps, \
+         {:.3}s vs {:.3}s",
+        "memo sweep x16",
+        sweep.prefix_steps,
+        sweep.memo_steps,
+        sweep.scratch_steps,
+        memo_s,
+        scratch_s,
+    );
+    MemoRow {
+        prefix_steps: sweep.prefix_steps,
+        memo_steps: sweep.memo_steps,
+        scratch_steps: sweep.scratch_steps,
+        memo_wallclock_s: memo_s,
+        scratch_wallclock_s: scratch_s,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let msgs: u64 = if quick { 32 * 1024 } else { 256 * 1024 };
@@ -192,6 +316,16 @@ fn main() {
             pool_rows.push(measure_pool(16, pool_size, strategy, pool_msgs));
         }
     }
+
+    // Partitioned-execution scenarios (EXPERIMENTS.md §Partitioned DES):
+    // each has >= 2 endpoint islands, driven on a 4-worker pool against
+    // its own sequential baseline.
+    let part_rows = vec![
+        measure_partition("16 islands, All", SharedResource::Ctx, 1, 16, msgs / 4),
+        measure_partition("2 islands (8-way QP)", SharedResource::Qp, 8, 16, msgs / 8),
+        measure_partition("4 islands (4-way CQ)", SharedResource::Cq, 4, 16, msgs / 8),
+    ];
+    let memo = measure_memo(msgs / 4);
     let suite_s = suite0.elapsed().as_secs_f64();
 
     // Hand-rolled JSON (no serde in the offline build environment).
@@ -229,8 +363,71 @@ fn main() {
             p.threads, p.pool_size, p.strategy, p.rate, p.uuars, p.migrations,
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str("  \"partition\": [\n");
+    for (i, p) in part_rows.iter().enumerate() {
+        let sep = if i + 1 < part_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"threads\": {}, \"islands\": {}, \"couplings\": {}, \
+             \"rail_events\": {}, \"parallel\": {}, \"attempts\": {}, \"workers\": {}, \
+             \"seq_wallclock_s\": {:.6}, \"par_wallclock_s\": {:.6}, \"speedup\": {:.3}}}{sep}\n",
+            p.label,
+            p.threads,
+            p.islands,
+            p.couplings,
+            p.rail_events,
+            p.parallel,
+            p.attempts,
+            p.workers,
+            p.seq_wallclock_s,
+            p.par_wallclock_s,
+            p.speedup,
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"memo\": {{\"prefix_steps\": {}, \"memo_steps\": {}, \"scratch_steps\": {}, \
+         \"memo_wallclock_s\": {:.6}, \"scratch_wallclock_s\": {:.6}}}\n",
+        memo.prefix_steps,
+        memo.memo_steps,
+        memo.scratch_steps,
+        memo.memo_wallclock_s,
+        memo.scratch_wallclock_s,
+    ));
+    json.push_str("}\n");
     let path = std::env::var("SCEP_BENCH_JSON").unwrap_or_else(|_| "BENCH_des.json".to_string());
     std::fs::write(&path, &json).expect("write BENCH_des.json");
+
+    // Paste-ready EXPERIMENTS.md rows: updating the doc after a CI run
+    // is a copy-paste, not a transcription.
+    println!("\nEXPERIMENTS.md §Perf rows (paste-ready):");
+    println!("| Scenario | M sim-msgs/s | sched_events | sched_steps | coalesced_mid_run |");
+    println!("|---|---|---|---|---|");
+    for r in &rows {
+        println!(
+            "| {} | {:.1} | {} | {} | {} |",
+            r.label,
+            r.sim_msgs_per_wallclock_s / 1e6,
+            r.sched_events,
+            r.sched_steps,
+            r.sched_events_terminal_only - r.sched_events,
+        );
+    }
+    println!("\nEXPERIMENTS.md §Partitioned DES rows (paste-ready):");
+    println!("| Scenario | islands | couplings | parallel | speedup |");
+    println!("|---|---|---|---|---|");
+    for p in &part_rows {
+        println!(
+            "| {} | {} | {} | {} | {:.2}x |",
+            p.label, p.islands, p.couplings, p.parallel, p.speedup,
+        );
+    }
+    println!(
+        "| memo sweep x16 | prefix {} | memo {} | scratch {} | {:.2}x |",
+        memo.prefix_steps,
+        memo.memo_steps,
+        memo.scratch_steps,
+        memo.scratch_wallclock_s / memo.memo_wallclock_s.max(1e-9),
+    );
     eprintln!("[perf_des] suite {suite_s:.2}s -> {path}");
 }

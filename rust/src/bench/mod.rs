@@ -15,4 +15,4 @@ pub mod msgrate;
 
 pub use crate::endpoints::policy::SharedResource;
 pub use features::{FeatureSet, Features};
-pub use msgrate::{MsgRateConfig, MsgRateResult, Runner};
+pub use msgrate::{MsgRateConfig, MsgRateResult, PartitionStats, Runner, SweepOutcome};

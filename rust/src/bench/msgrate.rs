@@ -94,11 +94,54 @@
 //! policy-level predicates (`EndpointPolicy::shares_qp` etc.) are the
 //! coarse program-shape view of the same facts, and the randomized
 //! grid-point fuzzer pins that the two never disagree on exactness.
+//!
+//! # Partitioned parallel-in-run execution
+//!
+//! [`Runner::islands`] partitions the threads into connected components
+//! of the sharing graph: shared QP, shared CQ (which also covers the
+//! completion-credit atomics — only same-CQ pollers credit each other),
+//! shared uUAR lock, shared UAR page, same MPI rank. Threads of
+//! different islands interact *only* through the NIC's global rails
+//! (DMA unit, TLB, wire) plus two order-insensitive accumulators (the
+//! additive PCIe counters and the decimated latency sample) — see the
+//! [`crate::nicsim::rails`] module docs for the full inventory.
+//!
+//! [`Runner::run_partitioned`] exploits this, one level up from the
+//! horizon guard above: after a short sequential *warmup* (which lets
+//! the wire's FIFO queueing stagger the islands into a self-preserving
+//! phase offset), it forks one cheap [`Runner::fork`] clone per island,
+//! drives the clones to completion on the [`crate::par`] worker pool —
+//! each against a private copy of the rails, logging every rail request
+//! with the canonical key of its issuing phase — and then *validates*
+//! the speculation: the logs are merged across islands in canonical key
+//! order (exactly the order the sequential scheduler issues rail calls
+//! in, because posts only execute while holding the smallest canonical
+//! key) and replayed against the fork-time rail snapshot
+//! ([`crate::nicsim::replay`]). If every replayed response equals the
+//! value the issuing island consumed, the private rail states were
+//! equivalent to the shared one on every observation the simulation
+//! made, so the partitioned run is **bit-identical** to the sequential
+//! run — it is accepted and merged. On any divergence the clones are
+//! discarded, the warmup is extended (tripled, a few attempts), and as
+//! the last resort the preserved sequential runner simply finishes the
+//! run — still bit-exact, no speedup. Exactness therefore never depends
+//! on the speculation outcome. An accepted partitioned run may dispatch
+//! *fewer* scheduler events than the sequential one — each island
+//! coalesces against its own (coarser) local horizon — but executes the
+//! identical phase trajectory (`sched_steps` equal).
+//!
+//! [`Runner::sweep_msgs`] reuses [`Runner::fork`] for cross-cell
+//! memoization: sweep cells that differ only in `msgs_per_thread` share
+//! their execution prefix, so one base runner is paused mid-run and
+//! each target forks from the snapshot instead of re-executing the
+//! prefix from scratch ([`Runner::retarget_msgs`] proves the fork point
+//! is on every target's common path).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::endpoints::ThreadEndpoint;
-use crate::nicsim::{CostModel, Nic};
+use crate::nicsim::{replay, CostModel, Nic, RailEvent};
 use crate::sim::atomic::SimAtomic;
 use crate::sim::ring::ArrivalRing;
 use crate::sim::sched::{may_coalesce, Interaction, Key, Scheduler, Step};
@@ -186,7 +229,8 @@ pub struct MsgRateResult {
     /// gap to [`MsgRateResult::sched_steps`] is the number of coalesced
     /// steps. Engine diagnostics only: NOT a virtual-time observable
     /// (the differential suite asserts it never *exceeds* the general
-    /// path's, not equality).
+    /// path's, not equality — an accepted partitioned run coalesces
+    /// against the coarser island-local horizon and may dispatch fewer).
     pub sched_events: u64,
     /// Bounded program phases executed (post calls + polls). Identical
     /// between fast and general runs — trajectories are bit-equal — so
@@ -241,11 +285,18 @@ enum Phase {
     Poll,
 }
 
+/// The run-constant half of a thread: its endpoints, completion queue
+/// and clamped effective parameters. Lives in [`Topo`].
 #[derive(Debug, Clone)]
-struct ThreadState {
+struct ThreadSpec {
     eps: Vec<EpState>,
     cq: CqId,
     eff: Effective,
+}
+
+/// The mutable half of a thread: everything its program advances.
+#[derive(Debug, Clone)]
+struct ThreadSim {
     phase: Phase,
     /// WQEs posted so far (this thread's stream).
     posted: u64,
@@ -253,20 +304,91 @@ struct ThreadState {
     credits: u64,
     /// Credits needed to finish the current iteration.
     credit_target: u64,
+    /// Run target. Mutable so a forked snapshot can be retargeted to a
+    /// longer sweep cell ([`Runner::retarget_msgs`]).
     msgs_total: u64,
+    /// Bounded program phases executed so far — the per-thread half of
+    /// the canonical phase tag `(phase start time, tid, steps)` that
+    /// orders rail requests and latency samples across islands.
+    steps: u64,
 }
 
-/// The benchmark world: one fabric + NIC + lock/atomic state.
-pub struct Runner {
+/// Immutable run topology: the config plus everything `new_multi`
+/// resolves once from the fabric. Shared by every [`Runner::fork`] clone
+/// behind an `Arc`, so a mid-run snapshot costs only the mutable state.
+#[derive(Debug, Clone)]
+struct Topo {
     cfg: MsgRateConfig,
+    threads: Vec<ThreadSpec>,
+    qp_sharers: Vec<u32>,
+    cq_sharers: Vec<u32>,
+    /// Whether inlining applies to this run (feature + size cutoff).
+    inline: bool,
+    /// Rank (process) of each thread, when the workload models an MPI
+    /// library: threads of one rank serialize on rank-wide progress state
+    /// (request pool bookkeeping) even with fully independent endpoints —
+    /// the §VII "processes perform better than threads" effect.
+    thread_rank: Option<Vec<u32>>,
+}
+
+/// Diagnostics of one [`Runner::run_partitioned_with`] call. Deliberately
+/// *not* part of [`MsgRateResult`]: partitioning is an engine execution
+/// strategy, never a virtual-time observable.
+#[derive(Debug, Clone)]
+pub struct PartitionStats {
+    /// Connected components of the sharing graph.
+    pub islands: usize,
+    /// Threads per island, ordered by smallest member tid.
+    pub island_sizes: Vec<usize>,
+    /// Rail requests that queued behind another island's work during the
+    /// accepting (or last rejecting) replay — the cross-island coupling
+    /// diagnostic.
+    pub couplings: u64,
+    /// Rail requests logged by the speculative islands in the last
+    /// attempt (0 when no speculation ran).
+    pub rail_events: usize,
+    /// Whether a speculative parallel attempt validated and was merged.
+    /// `false` means the run fell back to (bit-identical) sequential
+    /// execution.
+    pub parallel: bool,
+    /// Speculation attempts made (0 when partitioning was not viable:
+    /// forced-general config, fewer than two islands, or one worker).
+    pub attempts: u32,
+    /// Worker budget the call was given.
+    pub workers: usize,
+}
+
+/// Outcome of a memoized `msgs_per_thread` sweep ([`Runner::sweep_msgs`]).
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// One result per target, in input order — bit-identical to running
+    /// each target from scratch.
+    pub results: Vec<MsgRateResult>,
+    /// Scheduler steps of the shared prefix (executed once; 0 when the
+    /// sweep fell back to from-scratch runs).
+    pub prefix_steps: u64,
+    /// Steps actually executed by the memoized sweep: prefix once plus
+    /// each target's continuation.
+    pub memo_steps: u64,
+    /// Steps the same sweep executes from scratch (the sum of the
+    /// per-target totals).
+    pub scratch_steps: u64,
+}
+
+/// The benchmark world: one immutable topology ([`Topo`], behind an
+/// `Arc`) plus the mutable simulation state (NIC, locks, rings,
+/// scheduler). [`Clone`] snapshots the mutable half and bumps the
+/// topology refcount — the primitive behind mid-run forks, island
+/// speculation and sweep memoization.
+#[derive(Clone)]
+pub struct Runner {
+    topo: Arc<Topo>,
     nic: Nic,
-    threads: Vec<ThreadState>,
+    threads: Vec<ThreadSim>,
     qp_locks: Vec<SimLock>,
     qp_depth_atomic: Vec<SimAtomic>,
-    qp_sharers: Vec<u32>,
     /// CQ state, indexed by `CqId::index()` (dense: fabrics are small).
     cq_locks: Vec<SimLock>,
-    cq_sharers: Vec<u32>,
     /// Per-CQ arrival FIFO (the NIC emits CQEs in nondecreasing time per
     /// CQ, so a monotonic ring replaces the seed's binary heap).
     cq_arrivals: Vec<ArrivalRing>,
@@ -279,18 +401,10 @@ pub struct Runner {
     credit_atomic: Vec<SimAtomic>,
     /// uUAR locks for medium-latency uUARs shared by several *QPs*
     /// (level-3 sharing), interned into a dense vec; each `EpState`
-    /// carries its index (the seed keyed a HashMap by (ctx, page, slot)
-    /// on every post call).
+    /// carries its index.
     uuar_locks: Vec<SimLock>,
-    /// Whether inlining applies to this run (feature + size cutoff).
-    inline: bool,
-    /// Per-thread fast-path eligibility (resolved at `run()`).
+    /// Per-thread fast-path eligibility (resolved at `ensure_started`).
     fast_ok: Vec<bool>,
-    /// Rank (process) of each thread, when the workload models an MPI
-    /// library: threads of one rank serialize on rank-wide progress state
-    /// (request pool bookkeeping) even with fully independent endpoints —
-    /// the §VII "processes perform better than threads" effect.
-    thread_rank: Option<Vec<u32>>,
     /// One progress-state atomic per rank.
     rank_atomic: Vec<SimAtomic>,
     /// Signaled-completion latencies (ns), sampled across all threads
@@ -298,11 +412,25 @@ pub struct Runner {
     /// off the hot path).
     latencies: crate::sim::stats::Sample,
     lat_decim: u32,
+    /// When running as a speculative island: every signaled latency,
+    /// tagged with its phase's canonical key, *undecimated* — the merge
+    /// re-applies the global every-8th decimation in canonical order so
+    /// the percentile sample is bit-identical to the sequential run's.
+    lat_log: Option<Vec<(Key, f64)>>,
+    /// The pull-driven scheduler; `None` until `ensure_started` (or for
+    /// the whole run under the frozen legacy scheduler).
+    sched: Option<Scheduler>,
     /// Scheduler events dispatched / program phases executed (see
     /// [`MsgRateResult::sched_events`]).
     sched_events: u64,
     sched_steps: u64,
 }
+
+/// Initial warmup length of a partitioned run, in QP windows per thread.
+const WARMUP_WINDOWS: u64 = 2;
+/// Speculation attempts before running the rest sequentially; the warmup
+/// target triples between attempts.
+const SPEC_ATTEMPTS: u32 = 3;
 
 impl Runner {
     /// One endpoint per thread (the §IV benchmark shape).
@@ -315,8 +443,7 @@ impl Runner {
     /// endpoints must complete into the same CQ.
     pub fn new_multi(fabric: &Fabric, threads: &[Vec<ThreadEndpoint>], cfg: MsgRateConfig) -> Self {
         let c = cfg.cost;
-        let active: Vec<QpId> =
-            threads.iter().flat_map(|eps| eps.iter().map(|t| t.qp)).collect();
+        let active: Vec<QpId> = threads.iter().flat_map(|eps| eps.iter().map(|t| t.qp)).collect();
         let nic = Nic::new(fabric, c, &active);
 
         // Sharing degrees (threads per QP / per CQ).
@@ -377,7 +504,8 @@ impl Runner {
 
         // Per-thread effective parameters + state.
         let f = cfg.features;
-        let mut tstates = Vec::with_capacity(threads.len());
+        let mut specs = Vec::with_capacity(threads.len());
+        let mut sims = Vec::with_capacity(threads.len());
         for eps in threads {
             let x = eps.iter().map(|t| qp_sharers[t.qp.index()]).max().unwrap().max(1);
             let window = (cfg.qp_depth / x).max(1);
@@ -418,29 +546,33 @@ impl Runner {
                 })
                 .collect();
             let iters = cfg.msgs_per_thread.max(1).div_ceil(window as u64);
-            tstates.push(ThreadState {
-                eps: ep_states,
-                cq: eps[0].cq,
-                eff,
+            specs.push(ThreadSpec { eps: ep_states, cq: eps[0].cq, eff });
+            sims.push(ThreadSim {
                 phase: Phase::Post { batch: 0 },
                 posted: 0,
                 credits: 0,
                 credit_target: 0,
                 msgs_total: iters * window as u64,
+                steps: 0,
             });
         }
 
         Self {
-            cfg,
+            topo: Arc::new(Topo {
+                cfg,
+                threads: specs,
+                qp_sharers,
+                cq_sharers,
+                inline,
+                thread_rank: None,
+            }),
             nic,
-            threads: tstates,
+            threads: sims,
             qp_locks,
             qp_depth_atomic: (0..fabric.qps.len())
                 .map(|_| SimAtomic::new(c.atomic_base, c.atomic_bounce))
                 .collect(),
-            qp_sharers,
             cq_locks,
-            cq_sharers,
             cq_arrivals: vec![ArrivalRing::new(); fabric.cqs.len()],
             sig_buf: Vec::new(),
             comp_buf: Vec::new(),
@@ -449,12 +581,12 @@ impl Runner {
                 .map(|_| SimAtomic::new(c.atomic_base, c.atomic_bounce))
                 .collect(),
             uuar_locks,
-            inline,
             fast_ok: Vec::new(),
-            thread_rank: None,
             rank_atomic: Vec::new(),
             latencies: crate::sim::stats::Sample::new(),
             lat_decim: 0,
+            lat_log: None,
+            sched: None,
             sched_events: 0,
             sched_steps: 0,
         }
@@ -465,12 +597,12 @@ impl Runner {
     /// cacheline). Call before [`Runner::run`].
     pub fn set_rank_groups(&mut self, ranks: &[u32]) {
         assert_eq!(ranks.len(), self.threads.len());
-        let c = self.cfg.cost;
+        let c = self.topo.cfg.cost;
         let nranks = ranks.iter().max().map(|m| m + 1).unwrap_or(0);
         self.rank_atomic = (0..nranks)
             .map(|_| SimAtomic::new(c.progress_atomic_base, c.progress_atomic_bounce))
             .collect();
-        self.thread_rank = Some(ranks.to_vec());
+        Arc::make_mut(&mut self.topo).thread_rank = Some(ranks.to_vec());
     }
 
     /// Whether any run-wide switch forces every thread onto the general
@@ -479,17 +611,17 @@ impl Runner {
     /// tie-break is exactly the semantics that made past-horizon
     /// coalescing unsound, so it is pinned on the stepped path.
     fn forces_general(&self) -> bool {
-        self.cfg.force_general_path
-            || self.cfg.force_shared_qp_path
-            || self.cfg.use_legacy_scheduler
-            || self.thread_rank.is_some()
+        self.topo.cfg.force_general_path
+            || self.topo.cfg.force_shared_qp_path
+            || self.topo.cfg.use_legacy_scheduler
+            || self.topo.thread_rank.is_some()
     }
 
     /// The shared per-endpoint exclusivity predicate behind both fast
     /// paths: exactly one thread posts to this QP, it takes no shared-QP
     /// branches, and no uUAR lock serializes its doorbells.
     fn exclusive_ep(&self, e: &EpState) -> bool {
-        self.qp_sharers[e.qp.index()] == 1 && !e.shared_qp && e.uuar_lock.is_none()
+        self.topo.qp_sharers[e.qp.index()] == 1 && !e.shared_qp && e.uuar_lock.is_none()
     }
 
     /// A thread may take the coalescing fast path only when nothing it
@@ -503,10 +635,11 @@ impl Runner {
         if self.forces_general() {
             return vec![false; self.threads.len()];
         }
-        self.threads
+        self.topo
+            .threads
             .iter()
             .map(|t| {
-                self.cq_sharers[t.cq.index()] == 1
+                self.topo.cq_sharers[t.cq.index()] == 1
                     && t.eps.iter().all(|e| self.exclusive_ep(e))
             })
             .collect()
@@ -524,16 +657,15 @@ impl Runner {
             return; // every QP stays on the general path
         }
         let mut page_users: HashMap<u32, u32> = HashMap::new();
-        for t in &self.threads {
+        for t in &self.topo.threads {
             for e in &t.eps {
                 *page_users.entry(self.nic.page_of(e.qp)).or_insert(0) += 1;
             }
         }
         let mut decisions: Vec<(QpId, bool)> = Vec::new();
-        for t in &self.threads {
+        for t in &self.topo.threads {
             for e in &t.eps {
-                let fast =
-                    self.exclusive_ep(e) && page_users[&self.nic.page_of(e.qp)] == 1;
+                let fast = self.exclusive_ep(e) && page_users[&self.nic.page_of(e.qp)] == 1;
                 decisions.push((e.qp, fast));
             }
         }
@@ -542,25 +674,173 @@ impl Runner {
         }
     }
 
+    /// Resolve fast paths and install the pull-driven scheduler.
+    /// Idempotent; a no-op on an already-started runner (forked clones
+    /// arrive started). Panics under the frozen legacy scheduler, which
+    /// only supports the closed-loop [`Runner::run`].
+    pub fn ensure_started(&mut self) {
+        assert!(
+            !self.topo.cfg.use_legacy_scheduler,
+            "the frozen legacy scheduler has no pull API; use run()"
+        );
+        if self.sched.is_none() {
+            self.fast_ok = self.compute_fast_ok();
+            self.install_nic_fast();
+            self.sched = Some(Scheduler::new(self.threads.len() as u32));
+        }
+    }
+
+    /// Dispatch one scheduler event (which may coalesce many program
+    /// phases — exactly what the closed loop in [`Runner::run`] does per
+    /// iteration). Returns `false` once every thread is done.
+    pub fn step_one(&mut self) -> bool {
+        let mut sched = self.sched.take().expect("step_one before ensure_started");
+        let more = match sched.peek() {
+            Some((tid, now, horizon)) => {
+                sched.advance(self.step(tid, now, horizon));
+                true
+            }
+            None => false,
+        };
+        self.sched = Some(sched);
+        more
+    }
+
+    /// Snapshot the full simulation mid-run. The clone shares the
+    /// immutable topology (`Arc`) and deep-copies only the mutable state;
+    /// continuing either copy yields bit-identical results (pinned by
+    /// the snapshot-fork fuzzers in tests/properties.rs).
+    pub fn fork(&self) -> Runner {
+        assert!(
+            !self.topo.cfg.use_legacy_scheduler,
+            "the frozen legacy scheduler cannot be forked"
+        );
+        self.clone()
+    }
+
+    /// Retarget a forked snapshot to a different `msgs_per_thread`. Only
+    /// valid while the fork point is on every target's common execution
+    /// prefix: no thread has finished, and none has reached its current
+    /// (minimum-target) total — then every `posted >= msgs_total` check
+    /// executed so far resolved `false` under both totals, so the
+    /// retargeted continuation is bit-identical to a from-scratch run at
+    /// the new target.
+    pub fn retarget_msgs(&mut self, msgs_per_thread: u64) {
+        let sched = self.sched.as_ref().expect("retarget_msgs on an unstarted runner");
+        assert_eq!(sched.live(), self.threads.len(), "retarget_msgs after a thread finished");
+        for (t, spec) in self.threads.iter_mut().zip(self.topo.threads.iter()) {
+            let w = spec.eff.window as u64;
+            let total = msgs_per_thread.max(1).div_ceil(w) * w;
+            assert!(
+                t.posted < t.msgs_total && t.posted < total,
+                "retarget_msgs past the common execution prefix"
+            );
+            t.msgs_total = total;
+        }
+    }
+
+    /// Partition the threads into *endpoint islands*: connected
+    /// components of the sharing graph over shared QPs, shared CQs
+    /// (covering the completion-credit atomics), shared uUAR locks,
+    /// shared UAR pages and rank groups. Threads of different islands
+    /// interact only through the NIC's global rails. Ordered by smallest
+    /// member tid; deterministic.
+    pub fn islands(&self) -> Vec<Vec<u32>> {
+        let n = self.threads.len();
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        fn find(parent: &mut [u32], x: u32) -> u32 {
+            let mut r = x;
+            while parent[r as usize] != r {
+                r = parent[r as usize];
+            }
+            let mut c = x;
+            while parent[c as usize] != r {
+                let nx = parent[c as usize];
+                parent[c as usize] = r;
+                c = nx;
+            }
+            r
+        }
+        // Union by smallest root so each component's root is its minimum
+        // tid (deterministic output order for free).
+        let mut owner: HashMap<(u8, u64), u32> = HashMap::new();
+        for (ti, spec) in self.topo.threads.iter().enumerate() {
+            let tid = ti as u32;
+            let mut edges: Vec<(u8, u64)> = vec![(1, spec.cq.index() as u64)];
+            for e in &spec.eps {
+                edges.push((0, e.qp.index() as u64));
+                if let Some(l) = e.uuar_lock {
+                    edges.push((2, l as u64));
+                }
+                edges.push((3, self.nic.page_of(e.qp) as u64));
+            }
+            if let Some(ranks) = &self.topo.thread_rank {
+                edges.push((4, ranks[ti] as u64));
+            }
+            for key in edges {
+                if let Some(&prev) = owner.get(&key) {
+                    let (ra, rb) = (find(&mut parent, prev), find(&mut parent, tid));
+                    if ra != rb {
+                        parent[ra.max(rb) as usize] = ra.min(rb);
+                    }
+                } else {
+                    owner.insert(key, tid);
+                }
+            }
+        }
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for t in 0..n as u32 {
+            let r = find(&mut parent, t);
+            groups[r as usize].push(t);
+        }
+        groups.into_iter().filter(|g| !g.is_empty()).collect()
+    }
+
     /// Run to completion and report.
     pub fn run(mut self) -> MsgRateResult {
-        self.fast_ok = self.compute_fast_ok();
-        self.install_nic_fast();
-        let n = self.threads.len() as u32;
-        let done = if self.cfg.use_legacy_scheduler {
+        if self.topo.cfg.use_legacy_scheduler {
             // Frozen seed semantics: enqueue-order tie-break, one event
-            // per step (forces_general() above switched every fast path
-            // off). The differential suite pins the canonical scheduler's
+            // per step (forces_general() switches every fast path off).
+            // The differential suite pins the canonical scheduler's
             // aggregates against this bit-for-bit.
-            LegacyScheduler::new(n).run(|tid, now, _horizon| {
+            self.fast_ok = self.compute_fast_ok();
+            self.install_nic_fast();
+            let n = self.threads.len() as u32;
+            let done = LegacyScheduler::new(n).run(|tid, now, _horizon| {
                 self.sched_events += 1;
                 self.sched_steps += 1;
                 self.step_once(tid as usize, now)
+            });
+            return self.finalize(done);
+        }
+        self.ensure_started();
+        while self.step_one() {}
+        self.finish()
+    }
+
+    /// Report a pull-driven run once [`Runner::step_one`] has returned
+    /// `false`. Panics if threads are still live.
+    pub fn finish(mut self) -> MsgRateResult {
+        let sched = self.sched.take().expect("finish before ensure_started");
+        assert_eq!(sched.live(), 0, "finish with live threads (drive step_one to completion)");
+        let done: Vec<Time> = sched
+            .into_done()
+            .into_iter()
+            .enumerate()
+            .map(|(tid, d)| {
+                d.unwrap_or_else(|| {
+                    panic!(
+                        "scheduler drained but thread {tid} never reported Step::Done — \
+                         its program hung or it was never enqueued"
+                    )
+                })
             })
-        } else {
-            Scheduler::new(n).run(|tid, now, horizon| self.step(tid, now, horizon))
-        };
-        let duration = *done.iter().max().unwrap_or(&0);
+            .collect();
+        self.finalize(done)
+    }
+
+    fn finalize(mut self, done: Vec<Time>) -> MsgRateResult {
+        let duration = done.iter().copied().max().unwrap_or(0);
         let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
         let secs = to_secs(duration.max(1));
         let cq_high_water: Vec<u32> =
@@ -578,6 +858,223 @@ impl Runner {
             sched_steps: self.sched_steps,
             cq_high_water,
         }
+    }
+
+    /// [`Runner::run_partitioned_with`] with the process-wide worker
+    /// budget ([`crate::par::workers`]).
+    pub fn run_partitioned(self) -> MsgRateResult {
+        let workers = crate::par::workers();
+        self.run_partitioned_with(workers).0
+    }
+
+    /// Run to completion, executing endpoint islands in parallel when the
+    /// speculation validates (module docs). **Always bit-identical to
+    /// [`Runner::run`]**: a rejected or non-viable speculation falls back
+    /// to the preserved sequential runner. The returned
+    /// [`PartitionStats`] say which path was taken.
+    pub fn run_partitioned_with(mut self, nworkers: usize) -> (MsgRateResult, PartitionStats) {
+        let islands = self.islands();
+        let mut stats = PartitionStats {
+            islands: islands.len(),
+            island_sizes: islands.iter().map(|g| g.len()).collect(),
+            couplings: 0,
+            rail_events: 0,
+            parallel: false,
+            attempts: 0,
+            workers: nworkers,
+        };
+        if self.forces_general() || islands.len() < 2 || nworkers < 2 {
+            return (self.run(), stats);
+        }
+        let n = self.threads.len();
+        self.ensure_started();
+        let mut warmup = WARMUP_WINDOWS;
+        for _ in 0..SPEC_ATTEMPTS {
+            // Sequential warmup: drive every thread through `warmup` QP
+            // windows so the wire's FIFO queueing staggers the islands
+            // into a phase offset their (deterministic, equal-period)
+            // dynamics then preserve.
+            while !self
+                .threads
+                .iter()
+                .zip(self.topo.threads.iter())
+                .all(|(t, s)| t.posted >= warmup * s.eff.window as u64)
+            {
+                if !self.step_one() {
+                    return (self.finish(), stats); // drained during warmup
+                }
+            }
+            if self.sched.as_ref().map(|s| s.live()).unwrap_or(0) < n {
+                break; // a thread already finished: too close to the end
+            }
+            stats.attempts += 1;
+
+            // Speculate: one clone per island, private rails, full rail
+            // and latency logging, driven to completion in parallel.
+            let mut rails0 = self.nic.rails_snapshot();
+            let mut clones: Vec<Runner> = Vec::with_capacity(islands.len());
+            for members in &islands {
+                let mut keep = vec![false; n];
+                for &tid in members {
+                    keep[tid as usize] = true;
+                }
+                let mut c = self.fork();
+                c.sched.as_mut().expect("started").retain(&keep);
+                c.nic.set_rail_logging(true);
+                c.lat_log = Some(Vec::new());
+                clones.push(c);
+            }
+            let nw = nworkers.min(islands.len());
+            let mut parts = crate::par::par_map_with(nw, clones, |mut c| {
+                while c.step_one() {}
+                c
+            });
+
+            // Validate: merge the islands' rail requests in canonical
+            // phase-key order — the order the sequential scheduler issues
+            // rail calls in — and replay them against the fork-time rail
+            // snapshot. Any divergent response falsifies the private
+            // rail states and rejects the attempt.
+            let mut events: Vec<(u32, RailEvent)> = Vec::new();
+            for (i, p) in parts.iter_mut().enumerate() {
+                events.extend(p.nic.take_rail_log().into_iter().map(|ev| (i as u32, ev)));
+            }
+            events.sort_by(|a, b| a.1.tag.cmp(&b.1.tag));
+            let outcome = replay(&mut rails0, &events);
+            stats.rail_events = events.len();
+            stats.couplings = outcome.cross_island_couplings;
+            if outcome.ok {
+                stats.parallel = true;
+                return (self.merge_islands(&islands, parts), stats);
+            }
+            // Rejected: discard the clones (self is untouched) and warm
+            // up further before the next attempt.
+            warmup *= 3;
+        }
+        while self.step_one() {}
+        (self.finish(), stats)
+    }
+
+    /// Merge finished island clones back into one result, continuing from
+    /// this (sequential, fork-point) runner's accumulators. Only valid
+    /// after an accepting replay.
+    fn merge_islands(mut self, islands: &[Vec<u32>], mut parts: Vec<Runner>) -> MsgRateResult {
+        let n = self.threads.len();
+        let warm_pcie = self.nic.counters;
+        let warm_events = self.sched_events;
+        let warm_steps = self.sched_steps;
+        let mut done: Vec<Time> = vec![0; n];
+        let mut pcie = warm_pcie;
+        let mut sched_events = warm_events;
+        let mut sched_steps = warm_steps;
+        let mut lat_entries: Vec<(Key, f64)> = Vec::new();
+        let mut cq_high: Vec<u32> =
+            self.cq_arrivals.iter().map(|r| r.high_water() as u32).collect();
+        for (members, part) in islands.iter().zip(parts.iter_mut()) {
+            let part_done = part.sched.take().expect("island started").into_done();
+            for &tid in members {
+                done[tid as usize] = part_done[tid as usize]
+                    .unwrap_or_else(|| panic!("island thread {tid} never reported Step::Done"));
+                let cq = self.topo.threads[tid as usize].cq.index();
+                cq_high[cq] = part.cq_arrivals[cq].high_water() as u32;
+            }
+            // Counters are additive: fork-time value + per-island deltas.
+            pcie.mmio_writes += part.nic.counters.mmio_writes - warm_pcie.mmio_writes;
+            pcie.dma_reads += part.nic.counters.dma_reads - warm_pcie.dma_reads;
+            pcie.dma_writes += part.nic.counters.dma_writes - warm_pcie.dma_writes;
+            sched_events += part.sched_events - warm_events;
+            sched_steps += part.sched_steps - warm_steps;
+            lat_entries.extend(part.lat_log.take().unwrap_or_default());
+        }
+        // Re-apply the global every-8th latency decimation in canonical
+        // phase-key order — bit-identical to the sequential sample, which
+        // decimates signals in exactly this order (posts only execute
+        // while holding the smallest canonical key).
+        lat_entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for &(_, ns) in &lat_entries {
+            self.lat_decim = self.lat_decim.wrapping_add(1);
+            if self.lat_decim % 8 == 0 {
+                self.latencies.add(ns);
+            }
+        }
+        let duration = done.iter().copied().max().unwrap_or(0);
+        let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
+        let secs = to_secs(duration.max(1));
+        MsgRateResult {
+            messages,
+            duration,
+            mmsgs_per_sec: messages as f64 / secs / 1e6,
+            thread_done: done,
+            pcie,
+            pcie_read_rate: pcie.read_rate(duration.max(1)),
+            p50_latency_ns: self.latencies.percentile(50.0),
+            p99_latency_ns: self.latencies.percentile(99.0),
+            sched_events,
+            sched_steps,
+            cq_high_water: cq_high,
+        }
+    }
+
+    /// Memoized sweep over the `msgs_per_thread` axis: run one base
+    /// simulation at the smallest target, pause it on the targets' common
+    /// execution prefix, then fork + [`Runner::retarget_msgs`] each cell
+    /// from the snapshot. Results are bit-identical to from-scratch runs
+    /// (pinned by `prop_memoized_sweep_matches_scratch`); the step
+    /// accounting quantifies the saved prefix work.
+    ///
+    /// Falls back to from-scratch runs (with `prefix_steps == 0`) when no
+    /// safe pause point exists: legacy scheduler, targets smaller than
+    /// two QP windows, or a coalesced event that blew through the pause
+    /// point (a lone thread's whole program is one event).
+    pub fn sweep_msgs(
+        fabric: &Fabric,
+        threads: &[ThreadEndpoint],
+        cfg: MsgRateConfig,
+        targets: &[u64],
+    ) -> SweepOutcome {
+        assert!(!targets.is_empty(), "sweep_msgs needs at least one target");
+        let c_min = *targets.iter().min().unwrap();
+        let mut base =
+            Runner::new(fabric, threads, MsgRateConfig { msgs_per_thread: c_min, ..cfg });
+        let max_window = base.topo.threads.iter().map(|s| s.eff.window as u64).max().unwrap_or(1);
+        // Pause at half the smallest target; the guard below keeps the
+        // worst overshoot (one window past the first thread to arrive)
+        // strictly inside every target's common prefix.
+        let pause = if cfg.use_legacy_scheduler || c_min < 2 * max_window { 0 } else { c_min / 2 };
+        let mut memo_ok = pause > 0 && !base.threads.is_empty();
+        if memo_ok {
+            base.ensure_started();
+            while base.threads.iter().all(|t| t.posted < pause) {
+                if !base.step_one() {
+                    break;
+                }
+            }
+            // The fork point is on the common prefix only while no
+            // executed `posted >= msgs_total` check could have resolved
+            // differently under a larger target: no thread done, none at
+            // its current total.
+            let live = base.sched.as_ref().map(|s| s.live()).unwrap_or(0);
+            memo_ok = live == base.threads.len()
+                && base.threads.iter().all(|t| t.posted < t.msgs_total);
+        }
+        let prefix_steps = if memo_ok { base.sched_steps } else { 0 };
+        let mut results = Vec::with_capacity(targets.len());
+        let mut memo_steps = prefix_steps;
+        let mut scratch_steps = 0u64;
+        for &target in targets {
+            let r = if memo_ok {
+                let mut f = base.fork();
+                f.retarget_msgs(target);
+                while f.step_one() {}
+                f.finish()
+            } else {
+                Runner::new(fabric, threads, MsgRateConfig { msgs_per_thread: target, ..cfg }).run()
+            };
+            scratch_steps += r.sched_steps;
+            memo_steps += r.sched_steps - prefix_steps;
+            results.push(r);
+        }
+        SweepOutcome { results, prefix_steps, memo_steps, scratch_steps }
     }
 
     /// One scheduler event. Contended threads run exactly one bounded
@@ -609,7 +1106,7 @@ impl Runner {
             self.sched_steps += 1;
             return self.step_once(ti, now);
         }
-        let pr2_baseline = self.cfg.restrict_coalesce_to_terminal_drain;
+        let pr2_baseline = self.topo.cfg.restrict_coalesce_to_terminal_drain;
         let mut now = now;
         loop {
             self.sched_steps += 1;
@@ -643,6 +1140,13 @@ impl Runner {
 
     #[inline]
     fn step_once(&mut self, ti: usize, now: Time) -> Step {
+        // Speculative islands stamp every rail request with the canonical
+        // key of its issuing phase — the cross-island merge order.
+        if self.nic.rail_logging() {
+            let tag = Key { time: now, tid: ti as u32, step: self.threads[ti].steps };
+            self.nic.set_rail_tag(tag);
+        }
+        self.threads[ti].steps += 1;
         match self.threads[ti].phase {
             Phase::Post { batch } => self.step_post(ti, now, batch),
             Phase::Poll => self.step_poll(ti, now),
@@ -651,20 +1155,23 @@ impl Runner {
 
     /// One `ibv_post_send` call of `p_eff` WQEs.
     fn step_post(&mut self, ti: usize, now: Time, batch: u32) -> Step {
-        let c = self.cfg.cost;
-        let t = &self.threads[ti];
-        let eff = t.eff;
+        let c = self.topo.cfg.cost;
+        let msg_size = self.topo.cfg.msg_size;
+        let inline = self.topo.inline;
         let tid = ti as u32;
+        let posted = self.threads[ti].posted;
+        let spec = &self.topo.threads[ti];
+        let eff = spec.eff;
         let p = eff.postlist;
         // Round-robin over the thread's endpoints per post call.
-        let ep = if t.eps.len() == 1 {
-            t.eps[0]
+        let ep = if spec.eps.len() == 1 {
+            spec.eps[0]
         } else {
-            t.eps[((t.posted / p as u64) % t.eps.len() as u64) as usize]
+            spec.eps[((posted / p as u64) % spec.eps.len() as u64) as usize]
         };
+        let cq_ix = spec.cq.index();
         let qp = ep.qp;
         let qi = qp.index();
-        let inline = self.inline;
 
         // Level-3 sharing: distinct QPs on one medium-latency uUAR
         // serialize their BlueFlame writes with the uUAR lock. (A shared
@@ -696,7 +1203,7 @@ impl Runner {
             }
         });
         // Rank-wide progress bookkeeping (MPI-library workloads only).
-        let release = match &self.thread_rank {
+        let release = match &self.topo.thread_rank {
             Some(ranks) => self.rank_atomic[ranks[ti] as usize].rmw(release, tid),
             None => release,
         };
@@ -704,7 +1211,7 @@ impl Runner {
         // Signaled positions within this batch: i such that
         // (posted + i + 1) % q == 0, i.e. i ≡ q-1-posted (mod q) —
         // computed arithmetically instead of testing all p positions.
-        let base_idx = self.threads[ti].posted;
+        let base_idx = posted;
         self.sig_buf.clear();
         let q = eff.signal_every;
         let mut i = (q as u64 - 1 - base_idx % q as u64) as u32;
@@ -715,7 +1222,7 @@ impl Runner {
 
         // NIC-side pipeline from the accepted doorbell.
         {
-            let Runner { nic, sig_buf, comp_buf, cfg, .. } = self;
+            let Runner { nic, sig_buf, comp_buf, .. } = self;
             nic.process_batch(
                 release,
                 qp,
@@ -723,17 +1230,27 @@ impl Runner {
                 inline,
                 eff.use_blueflame,
                 ep.cacheline,
-                cfg.msg_size,
+                msg_size,
                 sig_buf,
                 comp_buf,
             );
         }
-        let cq_ix = self.threads[ti].cq.index();
         for k in 0..self.comp_buf.len() {
             let ct = self.comp_buf[k];
-            self.lat_decim = self.lat_decim.wrapping_add(1);
-            if self.lat_decim % 8 == 0 {
-                self.latencies.add(crate::sim::to_ns(ct.saturating_sub(now)));
+            match &mut self.lat_log {
+                Some(log) => {
+                    // Speculative island: log every signaled latency with
+                    // its phase tag; the merge re-applies the global
+                    // decimation in canonical order.
+                    let tag = Key { time: now, tid, step: self.threads[ti].steps - 1 };
+                    log.push((tag, crate::sim::to_ns(ct.saturating_sub(now))));
+                }
+                None => {
+                    self.lat_decim = self.lat_decim.wrapping_add(1);
+                    if self.lat_decim % 8 == 0 {
+                        self.latencies.add(crate::sim::to_ns(ct.saturating_sub(now)));
+                    }
+                }
             }
             self.cq_arrivals[cq_ix].push(ct, tid);
         }
@@ -752,11 +1269,12 @@ impl Runner {
 
     /// One `ibv_poll_cq` call for up to `c = window/q` CQEs.
     fn step_poll(&mut self, ti: usize, now: Time) -> Step {
-        let cost = self.cfg.cost;
+        let cost = self.topo.cfg.cost;
         let tid = ti as u32;
         let t = &self.threads[ti];
-        let eff = t.eff;
-        let cq = t.cq;
+        let spec = &self.topo.threads[ti];
+        let eff = spec.eff;
+        let cq = spec.cq;
 
         // Iteration (or run) already satisfied by another poller?
         if t.credits >= t.credit_target {
@@ -765,7 +1283,7 @@ impl Runner {
 
         // An MPI_THREAD_MULTIPLE library's completion path does atomic
         // counter updates even when a single thread polls (§VII).
-        let shared_cq = self.cq_sharers[cq.index()] > 1 || self.cfg.force_shared_qp_path;
+        let shared_cq = self.topo.cq_sharers[cq.index()] > 1 || self.topo.cfg.force_shared_qp_path;
         let ring = &mut self.cq_arrivals[cq.index()];
         // Nothing visible yet: sleep until the next arrival. (Arrivals are
         // pushed at post time, so an empty ring with unmet credits cannot
@@ -842,6 +1360,18 @@ mod tests {
         let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
         let cfg = MsgRateConfig { features, msgs_per_thread: 4096, ..Default::default() };
         Runner::new(&f, &set.threads, cfg).run()
+    }
+
+    fn assert_same_result(a: &MsgRateResult, b: &MsgRateResult, what: &str) {
+        assert_eq!(a.duration, b.duration, "{what}: duration");
+        assert_eq!(a.thread_done, b.thread_done, "{what}: thread_done");
+        assert_eq!(a.messages, b.messages, "{what}: messages");
+        assert_eq!(a.pcie, b.pcie, "{what}: pcie");
+        assert_eq!(a.mmsgs_per_sec, b.mmsgs_per_sec, "{what}: rate");
+        assert_eq!(a.p50_latency_ns, b.p50_latency_ns, "{what}: p50");
+        assert_eq!(a.p99_latency_ns, b.p99_latency_ns, "{what}: p99");
+        assert_eq!(a.cq_high_water, b.cq_high_water, "{what}: cq_high_water");
+        assert_eq!(a.sched_steps, b.sched_steps, "{what}: sched_steps");
     }
 
     #[test]
@@ -1114,5 +1644,147 @@ mod tests {
         )
         .run();
         assert!(forced.duration > base.duration);
+    }
+
+    #[test]
+    fn pull_api_matches_closed_run_loop() {
+        // ensure_started / step_one / finish is the same loop run() uses;
+        // driving it by hand must reproduce every field.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::Dynamic).build(&mut f, 8).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 1024, ..Default::default() };
+        let closed = Runner::new(&f, &set.threads, cfg).run();
+        let mut manual = Runner::new(&f, &set.threads, cfg);
+        manual.ensure_started();
+        while manual.step_one() {}
+        let manual = manual.finish();
+        assert_same_result(&closed, &manual, "pull vs closed");
+        assert_eq!(closed.sched_events, manual.sched_events);
+    }
+
+    #[test]
+    fn midrun_fork_continues_bit_exact() {
+        // Snapshot at an arbitrary event index; both copies must finish
+        // with identical results (the sweep/partition primitive).
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 4).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 1024, ..Default::default() };
+        let reference = Runner::new(&f, &set.threads, cfg).run();
+        let mut a = Runner::new(&f, &set.threads, cfg);
+        a.ensure_started();
+        for _ in 0..37 {
+            if !a.step_one() {
+                break;
+            }
+        }
+        let mut b = a.fork();
+        while a.step_one() {}
+        while b.step_one() {}
+        let (a, b) = (a.finish(), b.finish());
+        assert_same_result(&reference, &a, "original after fork");
+        assert_same_result(&reference, &b, "forked copy");
+        assert_eq!(a.sched_events, b.sched_events);
+    }
+
+    #[test]
+    fn islands_reflect_sharing_topology() {
+        // Independent endpoints: one island per thread. One shared QP:
+        // one island covering everybody.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 4).unwrap();
+        let r = Runner::new(&f, &set.threads, MsgRateConfig::default());
+        assert_eq!(r.islands(), vec![vec![0], vec![1], vec![2], vec![3]]);
+
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiThreads).build(&mut f, 4).unwrap();
+        let r = Runner::new(&f, &set.threads, MsgRateConfig::default());
+        assert_eq!(r.islands(), vec![vec![0, 1, 2, 3]]);
+    }
+
+    #[test]
+    fn rank_groups_join_islands() {
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 4).unwrap();
+        let mut r = Runner::new(&f, &set.threads, MsgRateConfig::default());
+        r.set_rank_groups(&[0, 0, 1, 1]);
+        assert_eq!(r.islands(), vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn partitioned_matches_sequential_smoke() {
+        // Whatever the speculation decides, the partitioned entry point
+        // must reproduce the sequential run bit-for-bit (accepted merges
+        // by the replay proof, rejections by construction). The full
+        // randomized version lives in tests/properties.rs.
+        for features in [Features::all(), Features::conservative()] {
+            let mut f = Fabric::connectx4();
+            let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 8).unwrap();
+            let cfg = MsgRateConfig { features, msgs_per_thread: 2048, ..Default::default() };
+            let seq = Runner::new(&f, &set.threads, cfg).run();
+            let (par, stats) = Runner::new(&f, &set.threads, cfg).run_partitioned_with(4);
+            assert_same_result(&seq, &par, "partitioned vs sequential");
+            assert!(par.sched_events <= seq.sched_events);
+            assert_eq!(stats.islands, 8);
+            assert_eq!(stats.island_sizes, vec![1; 8]);
+            assert_eq!(stats.workers, 4);
+        }
+    }
+
+    #[test]
+    fn partitioned_falls_back_when_not_viable() {
+        // One island -> nothing to parallelize; forced-general configs
+        // are pinned to the sequential path outright.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiThreads).build(&mut f, 8).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 1024, ..Default::default() };
+        let seq = Runner::new(&f, &set.threads, cfg).run();
+        let (par, stats) = Runner::new(&f, &set.threads, cfg).run_partitioned_with(4);
+        assert_same_result(&seq, &par, "single island");
+        assert_eq!(stats.islands, 1);
+        assert!(!stats.parallel);
+        assert_eq!(stats.attempts, 0);
+
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 4).unwrap();
+        let forced = MsgRateConfig {
+            msgs_per_thread: 1024,
+            force_general_path: true,
+            ..Default::default()
+        };
+        let seq = Runner::new(&f, &set.threads, forced).run();
+        let (par, stats) = Runner::new(&f, &set.threads, forced).run_partitioned_with(4);
+        assert_same_result(&seq, &par, "forced general");
+        assert!(!stats.parallel);
+        assert_eq!(stats.attempts, 0);
+    }
+
+    #[test]
+    fn memoized_sweep_matches_scratch_and_saves_steps() {
+        // 16 symmetric fast-path threads: the pause point lands well
+        // inside every target's common prefix, so the sweep shares the
+        // first half of the smallest cell across all targets.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 16).unwrap();
+        let cfg = MsgRateConfig::default();
+        let targets = [1024u64, 2048, 4096];
+        let out = Runner::sweep_msgs(&f, &set.threads, cfg, &targets);
+        assert_eq!(out.results.len(), targets.len());
+        for (&target, r) in targets.iter().zip(out.results.iter()) {
+            let scratch = Runner::new(
+                &f,
+                &set.threads,
+                MsgRateConfig { msgs_per_thread: target, ..cfg },
+            )
+            .run();
+            assert_same_result(&scratch, r, "sweep cell");
+            assert_eq!(scratch.sched_events, r.sched_events, "sweep cell events");
+        }
+        assert!(out.prefix_steps > 0, "no shared prefix found");
+        assert!(
+            out.memo_steps < out.scratch_steps,
+            "memoization saved nothing: {} vs {}",
+            out.memo_steps,
+            out.scratch_steps
+        );
     }
 }

@@ -618,6 +618,46 @@ pub fn pool_threads(thread_counts: &[u32], quick: bool) -> Vec<Table> {
     vec![t]
 }
 
+/// Message-count convergence sweep, computed memoized: the sweep's
+/// shared prefix runs once and is forked into one continuation per
+/// target (`Runner::sweep_msgs`), instead of re-simulating every target
+/// from scratch. Rates are bit-identical to from-scratch runs by
+/// construction (tests/properties.rs pins this); the second table
+/// reports the steps the fork-based memoization avoided. 16 threads so
+/// per-CQ horizons keep several live events — a lone thread coalesces
+/// to a single scheduler event and leaves nothing worth memoizing.
+pub fn sweep(quick: bool) -> Vec<Table> {
+    let mut rates = Table::new(
+        "Sweep(i): msgs-per-thread convergence, independent endpoints x16 (All features)",
+        &["msgs/thread", "rate_Mmsg/s", "p50_ns", "p99_ns", "sched_steps"],
+    );
+    let base = msgs(quick) / 8;
+    let targets = [base, 2 * base, 4 * base];
+    let (fabric, eps) =
+        EndpointPolicy::preset(Category::MpiEverywhere).build_fresh(16).expect("topology build");
+    let out = Runner::sweep_msgs(&fabric, &eps, MsgRateConfig::default(), &targets);
+    for (&m, r) in targets.iter().zip(&out.results) {
+        rates.row(vec![
+            m.to_string(),
+            f2(r.mmsgs_per_sec),
+            f2(r.p50_latency_ns),
+            f2(r.p99_latency_ns),
+            r.sched_steps.to_string(),
+        ]);
+    }
+    let mut memo = Table::new(
+        "Sweep(ii): memoization accounting (scheduler steps executed)",
+        &["prefix_steps", "memo_steps", "scratch_steps", "saved"],
+    );
+    memo.row(vec![
+        out.prefix_steps.to_string(),
+        out.memo_steps.to_string(),
+        out.scratch_steps.to_string(),
+        pct(1.0 - out.memo_steps as f64 / out.scratch_steps as f64),
+    ]);
+    vec![rates, memo]
+}
+
 /// Ablation A: the mlx5 QP-lock removal (rdma-core PR #327, §V-B). With
 /// the stock provider the lock on a TD-assigned QP is kept, costing every
 /// TD category its edge over MPI everywhere.
@@ -718,6 +758,7 @@ pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
         "fig14" | "14" => fig14(quick),
         "grid" | "policy-grid" => grid(quick),
         "pool" | "vci" => pool(quick),
+        "sweep" | "memo-sweep" => sweep(quick),
         "ablation-qp-lock" => ablation_qp_lock(quick),
         "ablation-quirk" => ablation_quirk(quick),
         "ablation-msg-size" => ablation_msg_size(quick),
@@ -744,8 +785,9 @@ pub fn render_bytes(name: &str, quick: bool) -> Option<String> {
 }
 
 /// Every figure id, in paper order, plus the policy grid, the VCI pool
-/// sweep and the design-choice ablations.
-pub const ALL_FIGURES: [&str; 17] = [
+/// sweep, the memoized convergence sweep and the design-choice
+/// ablations.
+pub const ALL_FIGURES: [&str; 18] = [
     "table1",
     "fig2",
     "fig3",
@@ -760,6 +802,7 @@ pub const ALL_FIGURES: [&str; 17] = [
     "fig14",
     "grid",
     "pool",
+    "sweep",
     "ablation-qp-lock",
     "ablation-quirk",
     "ablation-msg-size",

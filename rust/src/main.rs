@@ -33,11 +33,11 @@ use scalable_ep::{figures, report};
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  scep bench (--figure <id> | --all) [--quick]\n  \
+        "usage:\n  scep bench (--figure <id> | --all) [--quick] [--workers <n>]\n  \
          scep resources (--category <cat> | --policy <spec>) --threads <n> \
          [--pool <k> [--map <strategy>]]\n  \
          scep pool [--threads <n>] [--pool <k>] [--map <strategy>] \
-         [--policy <spec>] [--msgs <m>]\n  \
+         [--policy <spec>] [--msgs <m>] [--workers <n>]\n  \
          scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
          scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
          scep calibrate\n\
@@ -87,6 +87,25 @@ fn pool_from_args(args: &[String]) -> Result<Option<u32>, ()> {
     }
 }
 
+/// Resolve `--workers` into a process-wide DES worker-pool override
+/// (beats the `SCEP_WORKERS` env var; see `par::workers`). `Ok(())`
+/// when the flag is absent; `Err` (after printing) on a malformed count.
+fn workers_from_args(args: &[String]) -> Result<(), ()> {
+    match flag_value(args, "--workers") {
+        None => Ok(()),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => {
+                scalable_ep::par::set_workers_override(n);
+                Ok(())
+            }
+            _ => {
+                eprintln!("bad --workers '{v}' (expect a worker count >= 1)");
+                Err(())
+            }
+        },
+    }
+}
+
 /// Resolve `--policy` / `--category` into a policy plus a display label.
 /// `--policy` wins when both are given; it takes the full grammar plus
 /// the bare preset names (`scalable`, category labels). Returns `None`
@@ -110,6 +129,7 @@ fn main() -> ExitCode {
     let Some(cmd) = args.first() else { return usage() };
     match cmd.as_str() {
         "bench" => {
+            let Ok(()) = workers_from_args(&args) else { return usage() };
             let quick = args.iter().any(|a| a == "--quick");
             if args.iter().any(|a| a == "--all") {
                 for name in figures::ALL_FIGURES {
@@ -177,6 +197,7 @@ fn main() -> ExitCode {
         }
         "pool" => {
             // The VCI tentpole end-to-end: N streams over a bounded pool.
+            let Ok(()) = workers_from_args(&args) else { return usage() };
             let (policy, label) = if args.iter().any(|a| a == "--policy" || a == "--category")
             {
                 match policy_from_args(&args, Category::Dynamic) {

@@ -25,9 +25,11 @@ pub mod config;
 pub mod nic;
 pub mod pcie;
 pub mod quirks;
+pub mod rails;
 pub mod tlb;
 
 pub use config::CostModel;
 pub use nic::Nic;
 pub use pcie::PcieCounters;
+pub use rails::{replay, RailEvent, RailOp, Rails, ReplayOutcome};
 pub use tlb::Tlb;

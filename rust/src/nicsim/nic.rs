@@ -43,12 +43,14 @@
 
 use std::collections::HashMap;
 
+use crate::sim::sched::Key;
 use crate::sim::{ParallelServer, Server, Time};
 use crate::verbs::{Fabric, QpId};
 
 use super::config::CostModel;
 use super::pcie::PcieCounters;
 use super::quirks;
+use super::rails::{RailEvent, RailOp, Rails};
 use super::tlb::Tlb;
 
 /// Dynamic (timed) state of one simulated mlx5 adapter, built from the
@@ -86,6 +88,15 @@ pub struct Nic {
     /// active QP maps to its UAR page. Resolved by the benchmark runner;
     /// defaults to the general path everywhere.
     qp_fast: Vec<bool>,
+    /// When speculating on a partitioned run (`Runner::run_partitioned`),
+    /// every global-rail request (DMA, TLB, wire) is logged here for the
+    /// cross-island merge replay. `None` (the default) keeps the hot
+    /// path log-free.
+    rail_log: Option<Vec<RailEvent>>,
+    /// Canonical key of the engine phase currently executing — the merge
+    /// tag stamped on logged rail events. Set by the runner before each
+    /// phase while logging is on.
+    rail_tag: Key,
     pub counters: PcieCounters,
 }
 
@@ -139,8 +150,40 @@ impl Nic {
             qp_quirk,
             qp_page,
             qp_fast: vec![false; nqps],
+            rail_log: None,
+            rail_tag: Key::MAX,
             counters: PcieCounters::default(),
         }
+    }
+
+    /// Detach a snapshot of the global rails (DMA unit, TLB, wire) — the
+    /// replay base of a partitioned run's validation pass.
+    pub fn rails_snapshot(&self) -> Rails {
+        Rails { dma: self.dma.clone(), tlb: self.tlb.clone(), wire: self.wire.clone() }
+    }
+
+    /// Turn rail-request logging on (fresh log) or off.
+    pub fn set_rail_logging(&mut self, on: bool) {
+        self.rail_log = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Stamp the merge tag for subsequently logged rail events (the
+    /// canonical key of the engine phase about to execute).
+    #[inline]
+    pub fn set_rail_tag(&mut self, tag: Key) {
+        self.rail_tag = tag;
+    }
+
+    /// Whether rail logging is currently on (cheap hot-path guard for
+    /// [`Nic::set_rail_tag`]).
+    #[inline]
+    pub fn rail_logging(&self) -> bool {
+        self.rail_log.is_some()
+    }
+
+    /// Take the accumulated rail log, leaving logging off.
+    pub fn take_rail_log(&mut self) -> Vec<RailEvent> {
+        self.rail_log.take().unwrap_or_default()
     }
 
     /// Mark `qp` eligible (or not) for the straight-line pipeline fast
@@ -250,7 +293,13 @@ impl Nic {
             // WQEs, 256 B read completions -> ceil(n/4) PCIe reads.
             self.counters.dma_reads += n.div_ceil(4) as u64;
             let fetch_start = self.qp_engine[qi].request(t, c.engine_doorbell).1;
-            self.dma.request_latency(fetch_start, n as u64 * c.pcie_tlp, c.dma_read_latency)
+            let occ = n as u64 * c.pcie_tlp;
+            let got = self.dma.request_latency(fetch_start, occ, c.dma_read_latency);
+            if let Some(log) = &mut self.rail_log {
+                let op = RailOp::Dma { occupancy: occ, latency: c.dma_read_latency };
+                log.push(RailEvent { tag: self.rail_tag, at: fetch_start, op, got });
+            }
+            got
         };
 
         // 2. In-order processing on the QP's chain (a shared QP's messages
@@ -271,13 +320,25 @@ impl Nic {
         } else {
             self.counters.dma_reads += n as u64;
             let translated = self.tlb.translate_batch(eng_end, cacheline, n);
-            self.dma.request_latency(translated, n as u64 * c.pcie_tlp, c.dma_read_latency)
+            let occ = n as u64 * c.pcie_tlp;
+            let fetched = self.dma.request_latency(translated, occ, c.dma_read_latency);
+            if let Some(log) = &mut self.rail_log {
+                let t_op = RailOp::Tlb { cacheline, n };
+                log.push(RailEvent { tag: self.rail_tag, at: eng_end, op: t_op, got: translated });
+                let d_op = RailOp::Dma { occupancy: occ, latency: c.dma_read_latency };
+                log.push(RailEvent { tag: self.rail_tag, at: translated, op: d_op, got: fetched });
+            }
+            fetched
         };
 
         // 4. Wire transmission: n per-message slots as one affine batch,
         //    so `wire.served()` counts messages, not postlists.
         let per_msg_wire = c.wire_slot + msg_bytes as u64 * c.wire_per_byte_ps;
         let (w_start, _) = self.wire.request_batch(payload_done, per_msg_wire, n as u64);
+        if let Some(log) = &mut self.rail_log {
+            let op = RailOp::Wire { per_msg: per_msg_wire, n: n as u64 };
+            log.push(RailEvent { tag: self.rail_tag, at: payload_done, op, got: w_start });
+        }
 
         // 5. Signaled CQEs: hardware ack from the peer NIC, then CQE DMA
         //    write, at the WQE's position within the burst.

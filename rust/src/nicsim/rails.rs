@@ -1,0 +1,247 @@
+//! The NIC's *global rails* — the only state threads of different
+//! endpoint islands share — as a detachable, replayable unit.
+//!
+//! # Why these three and nothing else
+//!
+//! `Runner::islands` partitions the threads of one simulation into
+//! connected components of the sharing graph (shared QP, shared CQ —
+//! which also covers the completion-credit atomics, since only same-CQ
+//! pollers credit each other — shared uUAR lock, shared UAR page, same
+//! MPI rank). Every other piece of NIC state (`qp_engine`, `uar_port`,
+//! `uar_last_writer`, locks, depth atomics, CQ rings) is then touched by
+//! exactly one island. What remains shared across islands is:
+//!
+//! * the **DMA read unit** (`ParallelServer`, WQE + payload fetches),
+//! * the **TLB rails** (`Tlb`, hash-distributed translation servers),
+//! * the **wire** (`Server`, the egress port),
+//!
+//! plus two order-insensitive accumulators handled by the merge instead
+//! (the additive [`PcieCounters`](super::PcieCounters) and the decimated
+//! latency sample).
+//!
+//! # The exactness argument (rail-lookahead bound)
+//!
+//! Each rail is FIFO: its response to a request is a pure function of
+//! the request's arrival time and the rail's `avail` frontier, and
+//! *call order equals canonical key order* (posts only execute while
+//! holding the smallest canonical key — globally in the sequential
+//! scheduler, island-locally in a partitioned run). So a partitioned
+//! run is bit-identical to the sequential one **iff** replaying the
+//! islands' rail requests, merged in canonical key order against the
+//! fork-time rail state, reproduces on every request exactly the value
+//! the requesting island observed on its private copy. The conservative
+//! lookahead bound is [`Rails::idle_after`]: past the latest `avail`
+//! frontier every rail is provably idle, so any island request arriving
+//! later is served at its arrival time on the private copy *and* in the
+//! merged order — such requests can never invalidate the speculation.
+//! [`replay`] checks the general case request-by-request; on the first
+//! divergent response the caller discards the speculative islands and
+//! finishes sequentially (still bit-exact, no speedup).
+
+use crate::sim::sched::Key;
+use crate::sim::{ParallelServer, Server, Time};
+
+use super::tlb::Tlb;
+
+/// One request against a global rail, replayable against a [`Rails`]
+/// snapshot. Arguments mirror the exact server calls `Nic::process_batch`
+/// makes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RailOp {
+    /// `dma.request_latency(at, occupancy, latency)`; the consumed value
+    /// is the fetch completion time.
+    Dma { occupancy: Time, latency: Time },
+    /// `tlb.translate_batch(at, cacheline, n)`; the consumed value is the
+    /// translation end.
+    Tlb { cacheline: u64, n: u32 },
+    /// `wire.request_batch(at, per_msg, n)`; the consumed value is the
+    /// batch *start* (completions are arithmetic offsets from it).
+    Wire { per_msg: Time, n: u64 },
+}
+
+/// A logged rail request: which engine phase issued it (the canonical
+/// key of that phase — the merge key), when it arrived, what it asked,
+/// and the response the issuing island consumed.
+#[derive(Debug, Clone, Copy)]
+pub struct RailEvent {
+    /// Canonical key `(phase start time, tid, per-thread phase index)` of
+    /// the issuing engine phase. Cross-island merge order.
+    pub tag: Key,
+    /// Virtual arrival time of the request at the rail.
+    pub at: Time,
+    pub op: RailOp,
+    /// The response consumed by the issuing island's private rails.
+    pub got: Time,
+}
+
+/// Snapshot of the three global rails, detached from a `Nic` (see
+/// [`Nic::rails_snapshot`](super::Nic::rails_snapshot)).
+#[derive(Debug, Clone)]
+pub struct Rails {
+    pub(crate) dma: ParallelServer,
+    pub(crate) tlb: Tlb,
+    pub(crate) wire: Server,
+}
+
+impl Rails {
+    /// Apply one rail request, returning the value its caller would
+    /// consume. Exactly the server calls `Nic::process_batch` makes.
+    #[inline]
+    pub fn apply(&mut self, at: Time, op: RailOp) -> Time {
+        match op {
+            RailOp::Dma { occupancy, latency } => self.dma.request_latency(at, occupancy, latency),
+            RailOp::Tlb { cacheline, n } => self.tlb.translate_batch(at, cacheline, n),
+            RailOp::Wire { per_msg, n } => self.wire.request_batch(at, per_msg, n).0,
+        }
+    }
+
+    /// Would a request of this kind arriving at `at` queue behind prior
+    /// work (start later than `at`)?
+    #[inline]
+    fn queues(&self, at: Time, op: RailOp) -> bool {
+        match op {
+            RailOp::Dma { .. } => self.dma.earliest_avail() > at,
+            RailOp::Tlb { cacheline, .. } => self.tlb.avail_for(cacheline) > at,
+            RailOp::Wire { .. } => self.wire.avail() > at,
+        }
+    }
+
+    /// The conservative rail-lookahead bound: after this instant every
+    /// rail (all DMA channels, all TLB rails, the wire) is provably
+    /// idle, so any request arriving later starts at its arrival time
+    /// regardless of which island issues it.
+    pub fn idle_after(&self) -> Time {
+        self.dma
+            .latest_avail()
+            .max(self.tlb.latest_avail())
+            .max(self.wire.avail())
+    }
+}
+
+/// Outcome of replaying a merged rail-event sequence.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplayOutcome {
+    /// Every response matched the issuing island's observation — the
+    /// speculative partitioned run is bit-identical to sequential.
+    pub ok: bool,
+    /// Events replayed (all of them when `ok`; up to and including the
+    /// first divergence otherwise).
+    pub replayed: usize,
+    /// Requests that queued behind work last touched by a *different*
+    /// island — the cross-island couplings diagnostic. Counted per rail
+    /// family (DMA unit / TLB / wire).
+    pub cross_island_couplings: u64,
+}
+
+/// Replay `events` — merged across islands, pre-sorted by `tag` — against
+/// the fork-time rail snapshot. `island` gives the issuing island of each
+/// event. Stops at the first response that differs from what the island's
+/// private rails returned.
+pub fn replay(rails: &mut Rails, events: &[(u32, RailEvent)]) -> ReplayOutcome {
+    debug_assert!(events.windows(2).all(|w| w[0].1.tag <= w[1].1.tag), "events must be tag-sorted");
+    let mut out = ReplayOutcome { ok: true, replayed: 0, cross_island_couplings: 0 };
+    // Last island to touch each rail family: 0 = DMA, 1 = TLB, 2 = wire.
+    let mut last_island = [u32::MAX; 3];
+    for &(island, ev) in events {
+        let fam = match ev.op {
+            RailOp::Dma { .. } => 0,
+            RailOp::Tlb { .. } => 1,
+            RailOp::Wire { .. } => 2,
+        };
+        if rails.queues(ev.at, ev.op) && last_island[fam] != u32::MAX && last_island[fam] != island
+        {
+            out.cross_island_couplings += 1;
+        }
+        last_island[fam] = island;
+        let got = rails.apply(ev.at, ev.op);
+        out.replayed += 1;
+        if got != ev.got {
+            out.ok = false;
+            return out;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nicsim::CostModel;
+    use crate::sim::ns;
+
+    fn fresh() -> Rails {
+        let c = CostModel::calibrated();
+        Rails {
+            dma: ParallelServer::new(c.dma_read_channels),
+            tlb: Tlb::new(8, c.tlb_translate),
+            wire: Server::new(),
+        }
+    }
+
+    /// Test shorthand: a wire event issued by `island`, tagged with the
+    /// canonical key of its phase, arriving at `at` with the private
+    /// observation `got`.
+    fn wire_ev(island: u32, tid: u32, at: Time, n: u64, got: Time) -> (u32, RailEvent) {
+        let tag = Key { time: at, tid, step: 0 };
+        (island, RailEvent { tag, at, op: RailOp::Wire { per_msg: ns(6.25), n }, got })
+    }
+
+    #[test]
+    fn apply_matches_direct_server_calls() {
+        let mut r = fresh();
+        let mut wire = Server::new();
+        let op = RailOp::Wire { per_msg: ns(6.25), n: 4 };
+        assert_eq!(r.apply(100, op), wire.request_batch(100, ns(6.25), 4).0);
+        assert_eq!(r.apply(100, op), wire.request_batch(100, ns(6.25), 4).0);
+        let mut tlb = Tlb::new(8, ns(30.0));
+        let t_op = RailOp::Tlb { cacheline: 7, n: 3 };
+        assert_eq!(r.apply(0, t_op), tlb.translate_batch(0, 7, 3));
+    }
+
+    #[test]
+    fn replay_accepts_disjoint_time_ranges() {
+        // Two islands whose wire requests never overlap: private
+        // observations (each against an idle wire) replay exactly.
+        let mut r = fresh();
+        let events = vec![wire_ev(0, 0, 0, 2, 0), wire_ev(1, 1, ns(100.0), 2, ns(100.0))];
+        let out = replay(&mut r, &events);
+        assert!(out.ok);
+        assert_eq!(out.replayed, 2);
+        assert_eq!(out.cross_island_couplings, 0);
+    }
+
+    #[test]
+    fn replay_rejects_cross_island_overlap() {
+        // Island 1's request lands while island 0's batch still occupies
+        // the wire: its private observation (idle start) is wrong in the
+        // merged order, so the replay must reject and count the coupling.
+        let mut r = fresh();
+        let events = vec![wire_ev(0, 0, 0, 4, 0), wire_ev(1, 1, ns(3.0), 1, ns(3.0))];
+        let out = replay(&mut r, &events);
+        assert!(!out.ok);
+        assert_eq!(out.replayed, 2);
+        assert_eq!(out.cross_island_couplings, 1);
+    }
+
+    #[test]
+    fn idle_after_bounds_every_rail() {
+        let mut r = fresh();
+        r.apply(0, RailOp::Wire { per_msg: ns(6.25), n: 8 });
+        let bound = r.idle_after();
+        assert_eq!(bound, ns(50.0));
+        // Requests past the bound start at their arrival time.
+        let got = r.apply(bound + 1, RailOp::Wire { per_msg: ns(6.25), n: 1 });
+        assert_eq!(got, bound + 1);
+    }
+
+    #[test]
+    fn same_island_queueing_is_not_a_coupling() {
+        let mut r = fresh();
+        // Island 0 queues behind itself: correct private observation
+        // (start = its own batch end, ns(25.0)), zero couplings.
+        let events = vec![wire_ev(0, 0, 0, 4, 0), wire_ev(0, 0, ns(3.0), 1, ns(25.0))];
+        let out = replay(&mut r, &events);
+        assert!(out.ok, "self-queueing with a correct observation must pass");
+        assert_eq!(out.cross_island_couplings, 0);
+    }
+}

@@ -59,6 +59,20 @@ impl Tlb {
     pub fn rails(&self) -> usize {
         self.rails.len()
     }
+
+    /// Earliest free time of the rail `cacheline` hashes to (queueing
+    /// detector for the partitioned-run replay diagnostics).
+    #[inline]
+    pub fn avail_for(&self, cacheline: u64) -> Time {
+        self.rails[self.rail_of(cacheline)].avail()
+    }
+
+    /// Latest rail-free time across all rails: after this instant every
+    /// rail is provably idle (conservative lookahead bound).
+    #[inline]
+    pub fn latest_avail(&self) -> Time {
+        self.rails.iter().map(|r| r.avail()).max().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]

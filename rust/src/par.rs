@@ -17,16 +17,40 @@
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Mutex, PoisonError};
+use std::sync::{Mutex, Once, PoisonError};
 
-/// Worker count: the `SCEP_WORKERS` env var when set (≥ 1), else the
-/// machine's available parallelism. `SCEP_WORKERS=1` forces sequential
-/// execution (useful for profiling a single DES loop).
+/// Process-wide worker-count override (`--workers N` on the CLI). 0 means
+/// "not set"; a CLI override beats the `SCEP_WORKERS` env var.
+static WORKERS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install a process-wide worker-count override (the CLI's `--workers N`
+/// flag). Takes precedence over `SCEP_WORKERS`; `n` is clamped to ≥ 1.
+pub fn set_workers_override(n: usize) {
+    WORKERS_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Worker count: the `--workers` CLI override when set, else the
+/// `SCEP_WORKERS` env var when set (≥ 1), else the machine's available
+/// parallelism. `SCEP_WORKERS=1` forces sequential execution (useful for
+/// profiling a single DES loop). A malformed or zero `SCEP_WORKERS` is
+/// ignored with a one-time stderr warning instead of silently falling
+/// through.
 pub fn workers() -> usize {
+    let over = WORKERS_OVERRIDE.load(Ordering::Relaxed);
+    if over >= 1 {
+        return over;
+    }
     if let Ok(v) = std::env::var("SCEP_WORKERS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
+        match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n,
+            _ => {
+                static WARN: Once = Once::new();
+                WARN.call_once(|| {
+                    eprintln!(
+                        "warning: ignoring malformed SCEP_WORKERS={v:?} \
+                         (expected an integer >= 1); using available parallelism"
+                    );
+                });
             }
         }
     }

@@ -172,6 +172,14 @@ pub enum Step {
 /// `tid` one step (or, under the [`may_coalesce`] guard, several
 /// coalesced steps) from `now`. Returns the virtual completion time of
 /// each thread.
+///
+/// Besides the closure-driven [`Scheduler::run`], the scheduler exposes a
+/// pull API — [`Scheduler::peek`] / [`Scheduler::advance`] /
+/// [`Scheduler::into_done`] — so a caller can own the drive loop (pause
+/// mid-run, snapshot, restrict to a thread subset with
+/// [`Scheduler::retain`]). `run` is implemented on top of the pull API,
+/// so both produce the same dispatch sequence by construction.
+#[derive(Clone)]
 pub struct Scheduler {
     /// Canonical key per thread (see [`Key`]).
     key: Vec<Key>,
@@ -232,34 +240,93 @@ impl Scheduler {
         h
     }
 
+    /// The next dispatch, without performing it: `(tid, now, horizon)`
+    /// of the live thread with the smallest canonical key, or `None`
+    /// when every thread has reported [`Step::Done`].
+    #[inline]
+    pub fn peek(&self) -> Option<(u32, Time, Key)> {
+        if self.len == 0 {
+            return None;
+        }
+        let tid = self.heap[0];
+        Some((tid, self.key[tid as usize].time, self.horizon()))
+    }
+
+    /// Apply the outcome of the step [`Scheduler::peek`] announced: bump
+    /// the root's key on [`Step::Resume`] or retire the root thread on
+    /// [`Step::Done`]. Must follow a successful `peek` — panics on an
+    /// empty scheduler.
+    #[inline]
+    pub fn advance(&mut self, step: Step) {
+        assert!(self.len > 0, "advance on a drained scheduler");
+        let tid = self.heap[0];
+        let now = self.key[tid as usize].time;
+        match step {
+            Step::Resume(t) => {
+                debug_assert!(t >= now, "time must not go backwards");
+                let k = &mut self.key[tid as usize];
+                *k = Key { time: t, tid, step: k.step + 1 };
+                self.sift_down(0);
+            }
+            Step::Done(t) => {
+                self.done[tid as usize] = Some(t);
+                self.len -= 1;
+                self.heap.swap(0, self.len);
+                if self.len > 1 {
+                    self.sift_down(0);
+                }
+            }
+        }
+    }
+
+    /// Number of threads that have not yet reported [`Step::Done`].
+    #[inline]
+    pub fn live(&self) -> usize {
+        self.len
+    }
+
+    /// Per-thread completion times recorded so far (`None` for threads
+    /// still live — or dropped by [`Scheduler::retain`]).
+    pub fn into_done(self) -> Vec<Option<Time>> {
+        self.done
+    }
+
+    /// Restrict the scheduler to the threads for which `keep[tid]` is
+    /// true, preserving every kept thread's current key (time *and*
+    /// dispatch index) and completion record. Dropped threads vanish:
+    /// their heap slots are removed and their `done` entries cleared.
+    ///
+    /// Dispatch order over the kept threads is unchanged relative to the
+    /// full scheduler: the canonical key is a total order, so the pop
+    /// sequence of a heap is independent of its internal arrangement.
+    pub fn retain(&mut self, keep: &[bool]) {
+        assert_eq!(keep.len(), self.key.len(), "retain mask must cover every thread");
+        let kept: Vec<u32> =
+            self.heap[..self.len].iter().copied().filter(|&tid| keep[tid as usize]).collect();
+        self.len = kept.len();
+        self.heap = kept;
+        // Re-establish the heap invariant bottom-up.
+        for i in (0..self.len / 2).rev() {
+            self.sift_down(i);
+        }
+        for (tid, d) in self.done.iter_mut().enumerate() {
+            if !keep[tid] {
+                *d = None;
+            }
+        }
+    }
+
     /// Drive all threads to completion; `step` is invoked as
     /// `step(tid, now, horizon)` and returns the thread's next action.
     pub fn run<F>(mut self, mut step: F) -> Vec<Time>
     where
         F: FnMut(u32, Time, Key) -> Step,
     {
-        while self.len > 0 {
-            let tid = self.heap[0];
-            let now = self.key[tid as usize].time;
-            let horizon = self.horizon();
-            match step(tid, now, horizon) {
-                Step::Resume(t) => {
-                    debug_assert!(t >= now, "time must not go backwards");
-                    let k = &mut self.key[tid as usize];
-                    *k = Key { time: t, tid, step: k.step + 1 };
-                    self.sift_down(0);
-                }
-                Step::Done(t) => {
-                    self.done[tid as usize] = Some(t);
-                    self.len -= 1;
-                    self.heap.swap(0, self.len);
-                    if self.len > 1 {
-                        self.sift_down(0);
-                    }
-                }
-            }
+        while let Some((tid, now, horizon)) = self.peek() {
+            let s = step(tid, now, horizon);
+            self.advance(s);
         }
-        self.done
+        self.into_done()
             .into_iter()
             .enumerate()
             .map(|(tid, d)| {
@@ -477,6 +544,92 @@ mod tests {
         // (it loses no (time, tid) comparison); thread 1 runs after
         // thread 0's chain completes.
         assert_eq!(order, vec![(0, 0), (0, 0), (0, 0), (0, 0), (0, 1)]);
+    }
+
+    #[test]
+    fn pull_api_reproduces_run_dispatch_sequence() {
+        // The same program driven through run() and through
+        // peek()/advance() must dispatch identically and finish with the
+        // same completion times.
+        let program = |tid: u32, now: Time, count: u32| -> Step {
+            let dt = 7_000 + 1_000 * tid as Time;
+            if count == 4 {
+                Step::Done(now + dt)
+            } else {
+                Step::Resume(now + dt)
+            }
+        };
+        let mut counts = [0u32; 3];
+        let mut via_run = Vec::new();
+        let done_run = Scheduler::new(3).run(|tid, now, _| {
+            via_run.push((now, tid));
+            counts[tid as usize] += 1;
+            program(tid, now, counts[tid as usize])
+        });
+        let mut counts2 = [0u32; 3];
+        let mut via_pull = Vec::new();
+        let mut sched = Scheduler::new(3);
+        while let Some((tid, now, _h)) = sched.peek() {
+            via_pull.push((now, tid));
+            counts2[tid as usize] += 1;
+            sched.advance(program(tid, now, counts2[tid as usize]));
+        }
+        assert_eq!(via_pull, via_run);
+        let done_pull: Vec<Time> =
+            sched.into_done().into_iter().map(|d| d.unwrap()).collect();
+        assert_eq!(done_pull, done_run);
+    }
+
+    #[test]
+    fn retain_preserves_keys_and_relative_order() {
+        // Advance a 4-thread scheduler a few dispatches, then restrict a
+        // clone to threads {1, 3}: the clone's dispatch sequence must be
+        // the full scheduler's filtered to those threads (programs are
+        // independent, so the subset's relative order is unchanged).
+        let program = |tid: u32, now: Time, count: u32| -> Step {
+            let dt = 5_000 + 1_700 * tid as Time;
+            if count >= 6 {
+                Step::Done(now + dt)
+            } else {
+                Step::Resume(now + dt)
+            }
+        };
+        let mut full = Scheduler::new(4);
+        let mut counts = [0u32; 4];
+        for _ in 0..5 {
+            let (tid, now, _) = full.peek().unwrap();
+            counts[tid as usize] += 1;
+            full.advance(program(tid, now, counts[tid as usize]));
+        }
+        let mut sub = full.clone();
+        sub.retain(&[false, true, false, true]);
+        assert_eq!(sub.live(), 2);
+        // Finish both; record orders.
+        let mut full_order = Vec::new();
+        let mut fc = counts;
+        while let Some((tid, now, _)) = full.peek() {
+            full_order.push((now, tid));
+            fc[tid as usize] += 1;
+            full.advance(program(tid, now, fc[tid as usize]));
+        }
+        let mut sub_order = Vec::new();
+        let mut sc = counts;
+        while let Some((tid, now, _)) = sub.peek() {
+            sub_order.push((now, tid));
+            sc[tid as usize] += 1;
+            sub.advance(program(tid, now, sc[tid as usize]));
+        }
+        let filtered: Vec<(Time, u32)> =
+            full_order.into_iter().filter(|&(_, tid)| tid == 1 || tid == 3).collect();
+        assert_eq!(sub_order, filtered);
+        // Completion times match the full run's for kept threads and are
+        // cleared for dropped ones.
+        let full_done = full.into_done();
+        let sub_done = sub.into_done();
+        assert_eq!(sub_done[1], full_done[1]);
+        assert_eq!(sub_done[3], full_done[3]);
+        assert_eq!(sub_done[0], None);
+        assert_eq!(sub_done[2], None);
     }
 
     #[test]

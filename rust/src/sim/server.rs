@@ -203,6 +203,20 @@ impl ParallelServer {
         self.channels.len()
     }
 
+    /// Earliest time any channel is free — the time a request arriving
+    /// now-or-later starts immediately (no cross-request queueing).
+    #[inline]
+    pub fn earliest_avail(&self) -> Time {
+        self.channels.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Latest channel-free time: after this instant the whole unit is
+    /// provably idle (the conservative rail-lookahead bound).
+    #[inline]
+    pub fn latest_avail(&self) -> Time {
+        self.channels.iter().copied().max().unwrap_or(0)
+    }
+
     pub fn served(&self) -> u64 {
         self.served
     }

@@ -10,7 +10,7 @@ use scalable_ep::endpoints::{
 use scalable_ep::mlx5::Mlx5Env;
 use scalable_ep::sim::{Server, SimLock, XorShift};
 use scalable_ep::testing::check;
-use scalable_ep::vci::{run_pooled, MapStrategy};
+use scalable_ep::vci::{pooled_threads, run_pooled, EndpointPool, MapStrategy, Stream, VciMapper};
 use scalable_ep::verbs::{Fabric, QpCaps, TdInitAttr};
 
 /// Seed for the randomized differential fuzzers: `SCEP_FUZZ_SEED=<u64>`
@@ -126,6 +126,60 @@ fn assert_same_virtual_world(
     db.sort_unstable();
     if da != db {
         return Err(format!("{what}: per-thread done-time multisets diverged"));
+    }
+    Ok(())
+}
+
+/// Comparator for the **partitioned-vs-sequential** differential: the
+/// island-partitioned engine promises bit-identity on every observable,
+/// including per-CQ occupancy high-water marks and per-thread
+/// done-times in place (islands never relabel threads). Trajectories
+/// (`sched_steps`) must match exactly; dispatches may only shrink — an
+/// island's private horizon is coarser than the global one, so the
+/// partitioned run may legally coalesce *more*.
+fn assert_partitioned_exact(
+    part: &MsgRateResult,
+    seq: &MsgRateResult,
+    what: &str,
+) -> Result<(), String> {
+    if part.duration != seq.duration {
+        return Err(format!("{what}: duration {} vs {}", part.duration, seq.duration));
+    }
+    if part.thread_done != seq.thread_done {
+        return Err(format!("{what}: per-thread done-times diverged"));
+    }
+    if part.messages != seq.messages {
+        return Err(format!("{what}: messages {} vs {}", part.messages, seq.messages));
+    }
+    if part.mmsgs_per_sec != seq.mmsgs_per_sec {
+        return Err(format!("{what}: rate {} vs {}", part.mmsgs_per_sec, seq.mmsgs_per_sec));
+    }
+    if part.pcie != seq.pcie {
+        return Err(format!("{what}: PCIe {:?} vs {:?}", part.pcie, seq.pcie));
+    }
+    if part.pcie_read_rate != seq.pcie_read_rate {
+        return Err(format!("{what}: PCIe read rate diverged"));
+    }
+    if part.p50_latency_ns != seq.p50_latency_ns || part.p99_latency_ns != seq.p99_latency_ns {
+        return Err(format!("{what}: latency percentiles diverged"));
+    }
+    if part.cq_high_water != seq.cq_high_water {
+        return Err(format!(
+            "{what}: CQ high-water {:?} vs {:?}",
+            part.cq_high_water, seq.cq_high_water
+        ));
+    }
+    if part.sched_steps != seq.sched_steps {
+        return Err(format!(
+            "{what}: trajectories differ: {} vs {} steps",
+            part.sched_steps, seq.sched_steps
+        ));
+    }
+    if part.sched_events > seq.sched_events {
+        return Err(format!(
+            "{what}: partitioned dispatched MORE events ({} vs {})",
+            part.sched_events, seq.sched_events
+        ));
     }
     Ok(())
 }
@@ -698,6 +752,210 @@ fn prop_legacy_vs_canonical_scheduler_fuzzed() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_partitioned_matches_sequential_on_golden_cells() {
+    // Tentpole acceptance pin: over every cell of the golden fig2/fig9/
+    // fig11 tables (trimmed message count) plus the golden pool table's
+    // scalable rows, the island-partitioned engine must reproduce the
+    // sequential run bit-for-bit — whether a speculation validated or
+    // the run fell back, the contract is unconditional.
+    let msgs = 2048;
+    for n in [1u32, 2, 4, 8, 16] {
+        for cat in [Category::MpiEverywhere, Category::MpiThreads] {
+            let mut f = Fabric::connectx4();
+            let set = EndpointPolicy::preset(cat).build(&mut f, n).unwrap();
+            let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+            let seq = Runner::new(&f, &set.threads, cfg).run();
+            let (part, _) = Runner::new(&f, &set.threads, cfg).run_partitioned_with(4);
+            assert_partitioned_exact(&part, &seq, &format!("fig2 {cat} x{n}"))
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+    for (fig, res) in [("fig9", SharedResource::Cq), ("fig11", SharedResource::Qp)] {
+        for ways in [1u32, 2, 4, 8, 16] {
+            for fs in FeatureSet::ALL_SETS.iter() {
+                let (fabric, eps) = EndpointPolicy::sharing(res, ways).build_fresh(16).unwrap();
+                let cfg = MsgRateConfig {
+                    msgs_per_thread: msgs,
+                    features: fs.features(),
+                    ..Default::default()
+                };
+                let seq = Runner::new(&fabric, &eps, cfg).run();
+                let (part, _) = Runner::new(&fabric, &eps, cfg).run_partitioned_with(4);
+                assert_partitioned_exact(
+                    &part,
+                    &seq,
+                    &format!("{fig} {ways}-way {:?}", fs.features()),
+                )
+                .unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+    // Golden pool cells: 16 streams over a 5-slot scalable pool, run
+    // directly on the pooled topology under both stateless placements.
+    for strategy in [MapStrategy::RoundRobin, MapStrategy::Hashed] {
+        let (fabric, pool) = EndpointPool::build_fresh(&EndpointPolicy::scalable(), 5).unwrap();
+        let mut mapper = VciMapper::new(strategy, 5);
+        for t in 0..16 {
+            mapper.assign(Stream::of_thread(t));
+        }
+        let threads = pooled_threads(&pool, &mapper);
+        let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+        let seq = Runner::new(&fabric, &threads, cfg).run();
+        let (part, _) = Runner::new(&fabric, &threads, cfg).run_partitioned_with(4);
+        assert_partitioned_exact(&part, &seq, &format!("pool 5/16 {strategy}"))
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+#[test]
+fn prop_partitioned_default_workers_matches_sequential() {
+    // Same differential under the *process* worker budget
+    // (`run_partitioned` reads `par::workers`; CI runs this leg under a
+    // SCEP_WORKERS=1 vs 4 matrix), so the engine is exercised at
+    // whatever parallelism the environment provides, including the
+    // forced-sequential workers=1 degenerate case.
+    let (fabric, eps) = EndpointPolicy::sharing(SharedResource::Ctx, 1).build_fresh(16).unwrap();
+    let cfg = MsgRateConfig { msgs_per_thread: 2048, ..Default::default() };
+    let seq = Runner::new(&fabric, &eps, cfg).run();
+    let part = Runner::new(&fabric, &eps, cfg).run_partitioned();
+    assert_partitioned_exact(&part, &seq, "default-workers x16").unwrap_or_else(|e| panic!("{e}"));
+}
+
+#[test]
+fn prop_partitioned_matches_sequential_fuzzed() {
+    // Tentpole fuzzer: random policy grid points x thread counts x
+    // features x worker budgets — and pooled topologies under every map
+    // strategy — must stay bit-identical between the island-partitioned
+    // engine and the sequential runner on every observable.
+    // `SCEP_FUZZ_SEED` reseeds the sweep; the seed is echoed.
+    check("partitioned-vs-sequential", fuzz_seed(0x15_1A2D), 20, |rng, _| {
+        let nthreads = [2u32, 4, 8, 12, 16, 24][rng.below(6) as usize];
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 256 + rng.below(512),
+            qp_depth: [32u32, 128][rng.below(2) as usize],
+            features,
+            ..Default::default()
+        };
+        let nworkers = [2usize, 4][rng.below(2) as usize];
+        let (fabric, threads, what) = if rng.below(3) == 0 {
+            // Pooled topology: more streams than slots, any placement.
+            let pool_size = 1 + rng.below(5) as u32;
+            let policy = random_policy(rng, pool_size);
+            let strategy = match rng.below(3) {
+                0 => MapStrategy::RoundRobin,
+                1 => MapStrategy::Hashed,
+                _ => MapStrategy::adaptive(),
+            };
+            let (fabric, pool) =
+                EndpointPool::build_fresh(&policy, pool_size).map_err(|e| e.to_string())?;
+            let mut mapper = VciMapper::new(strategy, pool_size);
+            for t in 0..nthreads {
+                mapper.assign(Stream::of_thread(t));
+            }
+            let threads = pooled_threads(&pool, &mapper);
+            (fabric, threads, format!("pool '{policy}' {pool_size}/{nthreads} {strategy}"))
+        } else {
+            let policy = random_policy(rng, nthreads);
+            let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
+            (fabric, eps, format!("policy '{policy}' x{nthreads}"))
+        };
+        let seq = Runner::new(&fabric, &threads, cfg).run();
+        let (part, stats) = Runner::new(&fabric, &threads, cfg).run_partitioned_with(nworkers);
+        assert_partitioned_exact(&part, &seq, &format!("{what}, {features:?}, w={nworkers}"))?;
+        if stats.parallel && stats.islands < 2 {
+            return Err(format!("{what}: claims parallel with {} islands", stats.islands));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snapshot_fork_bit_exact_fuzzed() {
+    // Snapshot-fork property: clone a runner mid-run at a random step,
+    // finish the original and the clone independently, and both must
+    // report results bit-identical to an uninterrupted closed-loop run —
+    // rates, durations, PCIe, CQ high-water occupancy, per-thread
+    // done-times. This is the primitive under island speculation and
+    // sweep memoization. `SCEP_FUZZ_SEED` reseeds; the seed is echoed.
+    check("snapshot-fork", fuzz_seed(0xF0_4C), 20, |rng, _| {
+        let nthreads = [1u32, 2, 4, 8, 16][rng.below(5) as usize];
+        let policy = random_policy(rng, nthreads);
+        let features = Features {
+            postlist: [1u32, 4, 32][rng.below(3) as usize],
+            unsignaled: [1u32, 16, 64][rng.below(3) as usize],
+            inlining: rng.below(2) == 0,
+            blueflame: rng.below(2) == 0,
+        };
+        let (fabric, eps) = policy.build_fresh(nthreads).map_err(|e| e.to_string())?;
+        let cfg = MsgRateConfig {
+            msgs_per_thread: 128 + rng.below(512),
+            features,
+            ..Default::default()
+        };
+        let reference = Runner::new(&fabric, &eps, cfg).run();
+        let mut a = Runner::new(&fabric, &eps, cfg);
+        a.ensure_started();
+        let k = rng.below(200);
+        for _ in 0..k {
+            if !a.step_one() {
+                break;
+            }
+        }
+        let b = a.fork();
+        let drive = |mut r: Runner| {
+            while r.step_one() {}
+            r.finish()
+        };
+        let what = format!("policy '{policy}' x{nthreads} fork@{k}, {features:?}");
+        assert_partitioned_exact(&drive(a), &reference, &format!("{what} (original)"))?;
+        assert_partitioned_exact(&drive(b), &reference, &format!("{what} (fork)"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memoized_sweep_matches_scratch() {
+    // Memoized-sweep acceptance: per-cell bit-identity against
+    // from-scratch runs (dispatch counts included — the continuation
+    // replays the identical schedule) and, since these shapes admit a
+    // pause point, strictly fewer executed scheduler steps.
+    for (nthreads, targets) in [(16u32, [512u64, 1024, 2048]), (8, [256, 512, 768])] {
+        let (fabric, eps) =
+            EndpointPolicy::sharing(SharedResource::Ctx, 1).build_fresh(nthreads).unwrap();
+        let cfg = MsgRateConfig::default();
+        let sweep = Runner::sweep_msgs(&fabric, &eps, cfg, &targets);
+        assert!(sweep.prefix_steps > 0, "x{nthreads}: no pause point found");
+        assert!(
+            sweep.memo_steps < sweep.scratch_steps,
+            "x{nthreads}: memoization saved nothing ({} vs {} steps)",
+            sweep.memo_steps,
+            sweep.scratch_steps
+        );
+        for (&target, memoized) in targets.iter().zip(&sweep.results) {
+            let scratch =
+                Runner::new(&fabric, &eps, MsgRateConfig { msgs_per_thread: target, ..cfg })
+                    .run();
+            let what = format!("x{nthreads} target {target}");
+            assert_eq!(memoized.duration, scratch.duration, "{what}");
+            assert_eq!(memoized.thread_done, scratch.thread_done, "{what}");
+            assert_eq!(memoized.mmsgs_per_sec, scratch.mmsgs_per_sec, "{what}");
+            assert_eq!(memoized.pcie, scratch.pcie, "{what}");
+            assert_eq!(memoized.p50_latency_ns, scratch.p50_latency_ns, "{what}");
+            assert_eq!(memoized.p99_latency_ns, scratch.p99_latency_ns, "{what}");
+            assert_eq!(memoized.cq_high_water, scratch.cq_high_water, "{what}");
+            assert_eq!(memoized.sched_steps, scratch.sched_steps, "{what}");
+            assert_eq!(memoized.sched_events, scratch.sched_events, "{what}");
+        }
+    }
 }
 
 #[test]
