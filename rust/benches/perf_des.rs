@@ -45,6 +45,11 @@
 //! `Runner::sweep_msgs` msgs-per-thread sweep against from-scratch
 //! runs, recording scheduler-step and wallclock savings.
 //!
+//! A `fleet` array (EXPERIMENTS.md §Fleet) runs the coordinator's
+//! fleet traffic engine at CI scale: open-loop arrival models x
+//! failure injection, with fleet-wide p50/p99/p999 sojourn latency and
+//! re-homed stream counts per cell.
+//!
 //! The run ends by printing paste-ready EXPERIMENTS.md §Perf markdown
 //! rows for every table above, so updating the doc after a CI run is a
 //! copy-paste, not a transcription.
@@ -52,6 +57,8 @@
 use std::time::Instant;
 
 use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource};
+use scalable_ep::coordinator::fleet::{fleet_json_rows, fleet_sweep};
+use scalable_ep::coordinator::FleetConfig;
 use scalable_ep::endpoints::EndpointPolicy;
 use scalable_ep::vci::{run_pooled, MapStrategy};
 
@@ -326,6 +333,28 @@ fn main() {
         measure_partition("4 islands (4-way CQ)", SharedResource::Cq, 4, 16, msgs / 8),
     ];
     let memo = measure_memo(msgs / 4);
+
+    // Fleet traffic engine (EXPERIMENTS.md §Fleet): open-loop arrival
+    // models x failure injection over a 64-rank universe — the CI-sized
+    // smoke of the 1k-rank `scep fleet` sweep. Cell aggregates are
+    // virtual-time observables, so they are bit-stable across runs.
+    let fleet_cfg =
+        if quick { FleetConfig::new(64, 32).quick() } else { FleetConfig::new(256, 32) };
+    let t_fleet = Instant::now();
+    let fleet_cells = fleet_sweep(&fleet_cfg);
+    let fleet_s = t_fleet.elapsed().as_secs_f64();
+    for c in &fleet_cells {
+        println!(
+            "{:>28}: {:>7.2} Mmsg/s fleet, p50 {:.0} / p99 {:.0} / p999 {:.0} ns, \
+             rehomed {}",
+            format!("fleet {}{}", c.model, if c.failure { " +kill" } else { "" }),
+            c.rate_mmsgs,
+            c.p50_ns,
+            c.p99_ns,
+            c.p999_ns,
+            c.rehomed,
+        );
+    }
     let suite_s = suite0.elapsed().as_secs_f64();
 
     // Hand-rolled JSON (no serde in the offline build environment).
@@ -385,6 +414,10 @@ fn main() {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str("  \"fleet\": ");
+    json.push_str(&fleet_json_rows(&fleet_cells));
+    json.push_str(",\n");
+    json.push_str(&format!("  \"fleet_wallclock_s\": {fleet_s:.6},\n"));
     json.push_str(&format!(
         "  \"memo\": {{\"prefix_steps\": {}, \"memo_steps\": {}, \"scratch_steps\": {}, \
          \"memo_wallclock_s\": {:.6}, \"scratch_wallclock_s\": {:.6}}}\n",
@@ -429,5 +462,14 @@ fn main() {
         memo.scratch_steps,
         memo.scratch_wallclock_s / memo.memo_wallclock_s.max(1e-9),
     );
+    println!("\nEXPERIMENTS.md §Fleet rows (paste-ready):");
+    println!("| Model | Failure | Mmsg/s | p50 ns | p99 ns | p999 ns | Rehomed |");
+    println!("|---|---|---|---|---|---|---|");
+    for c in &fleet_cells {
+        println!(
+            "| {} | {} | {:.2} | {:.0} | {:.0} | {:.0} | {} |",
+            c.model, c.failure, c.rate_mmsgs, c.p50_ns, c.p99_ns, c.p999_ns, c.rehomed,
+        );
+    }
     eprintln!("[perf_des] suite {suite_s:.2}s -> {path}");
 }

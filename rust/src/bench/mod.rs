@@ -12,7 +12,9 @@
 
 pub mod features;
 pub mod msgrate;
+pub mod traffic;
 
 pub use crate::endpoints::policy::SharedResource;
 pub use features::{FeatureSet, Features};
 pub use msgrate::{MsgRateConfig, MsgRateResult, PartitionStats, Runner, SweepOutcome};
+pub use traffic::{ArrivalGen, StreamTraffic, TrafficModel};

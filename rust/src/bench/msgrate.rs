@@ -150,6 +150,7 @@ use crate::sim::{to_secs, SimLock, Time};
 use crate::verbs::{CqId, Fabric, QpId};
 
 use super::features::Features;
+use super::traffic::{ArrivalGen, StreamTraffic};
 
 /// Configuration of one virtual-time benchmark run.
 #[derive(Debug, Clone, Copy)]
@@ -224,6 +225,16 @@ pub struct MsgRateResult {
     pub p50_latency_ns: f64,
     /// 99th-percentile signaled-completion latency, nanoseconds.
     pub p99_latency_ns: f64,
+    /// 99.9th-percentile signaled-completion latency, nanoseconds — the
+    /// fleet engine's tail-latency column. Meaningful thanks to the
+    /// interpolating percentile (nearest-rank rounding would collapse it
+    /// onto the max for any realistic sample size).
+    pub p999_latency_ns: f64,
+    /// The raw latency sample the percentiles were computed from
+    /// (already sorted). The fleet driver merges per-rank samples into
+    /// fleet-wide percentiles instead of averaging per-rank percentiles
+    /// (quantiles do not average).
+    pub latency_sample: crate::sim::stats::Sample,
     /// Scheduler events dispatched (heap pops). The general path
     /// dispatches exactly one event per step, so on a fast-path run the
     /// gap to [`MsgRateResult::sched_steps`] is the number of coalesced
@@ -311,6 +322,11 @@ struct ThreadSim {
     /// the canonical phase tag `(phase start time, tid, steps)` that
     /// orders rail requests and latency samples across islands.
     steps: u64,
+    /// Open-loop arrival process ([`Runner::set_open_loop`]); `None`
+    /// keeps the classic closed-loop (always-saturated) semantics
+    /// bit-for-bit. Thread-private state: forks and island clones copy
+    /// the generator, so speculation stays exact.
+    arr: Option<ArrivalGen>,
 }
 
 /// Immutable run topology: the config plus everything `new_multi`
@@ -554,6 +570,7 @@ impl Runner {
                 credit_target: 0,
                 msgs_total: iters * window as u64,
                 steps: 0,
+                arr: None,
             });
         }
 
@@ -603,6 +620,40 @@ impl Runner {
             .map(|_| SimAtomic::new(c.progress_atomic_base, c.progress_atomic_bounce))
             .collect();
         Arc::make_mut(&mut self.topo).thread_rank = Some(ranks.to_vec());
+    }
+
+    /// Switch the run to *open-loop* posting: each thread's post calls
+    /// are gated on its private arrival process (one [`StreamTraffic`]
+    /// per thread), and signaled latency is measured from message
+    /// *arrival* to CPU-visible completion — so it includes the queueing
+    /// delay a backlogged endpoint builds up, which is exactly what the
+    /// closed-loop benchmark cannot see. Call before the run starts.
+    pub fn set_open_loop(&mut self, traffic: &[StreamTraffic]) {
+        assert!(self.sched.is_none(), "set_open_loop before the run starts");
+        assert_eq!(traffic.len(), self.threads.len(), "one traffic spec per thread");
+        for (t, &spec) in self.threads.iter_mut().zip(traffic) {
+            t.arr = Some(ArrivalGen::new(spec));
+        }
+    }
+
+    /// Give each thread its own message target (the fleet driver's
+    /// skewed stream popularity: hot streams carry a multiple of the
+    /// tail's messages). Targets round up to whole QP windows, like the
+    /// uniform `msgs_per_thread`. Call before the run starts.
+    pub fn set_msgs_targets(&mut self, targets: &[u64]) {
+        assert!(self.sched.is_none(), "set_msgs_targets before the run starts");
+        assert_eq!(targets.len(), self.threads.len(), "one target per thread");
+        for ((t, spec), &target) in
+            self.threads.iter_mut().zip(self.topo.threads.iter()).zip(targets)
+        {
+            let w = spec.eff.window as u64;
+            t.msgs_total = target.max(1).div_ceil(w) * w;
+        }
+    }
+
+    /// Effective (window-rounded) per-thread message targets.
+    pub fn msgs_targets(&self) -> Vec<u64> {
+        self.threads.iter().map(|t| t.msgs_total).collect()
     }
 
     /// Whether any run-wide switch forces every thread onto the general
@@ -845,6 +896,7 @@ impl Runner {
         let secs = to_secs(duration.max(1));
         let cq_high_water: Vec<u32> =
             self.cq_arrivals.iter().map(|r| r.high_water() as u32).collect();
+        let mut latencies = std::mem::take(&mut self.latencies);
         MsgRateResult {
             messages,
             duration,
@@ -852,11 +904,13 @@ impl Runner {
             thread_done: done,
             pcie: self.nic.counters,
             pcie_read_rate: self.nic.counters.read_rate(duration.max(1)),
-            p50_latency_ns: self.latencies.percentile(50.0),
-            p99_latency_ns: self.latencies.percentile(99.0),
+            p50_latency_ns: latencies.percentile(50.0),
+            p99_latency_ns: latencies.percentile(99.0),
+            p999_latency_ns: latencies.percentile(99.9),
             sched_events: self.sched_events,
             sched_steps: self.sched_steps,
             cq_high_water,
+            latency_sample: latencies,
         }
     }
 
@@ -1000,6 +1054,7 @@ impl Runner {
         let duration = done.iter().copied().max().unwrap_or(0);
         let messages: u64 = self.threads.iter().map(|t| t.msgs_total).sum();
         let secs = to_secs(duration.max(1));
+        let mut latencies = std::mem::take(&mut self.latencies);
         MsgRateResult {
             messages,
             duration,
@@ -1007,11 +1062,13 @@ impl Runner {
             thread_done: done,
             pcie,
             pcie_read_rate: pcie.read_rate(duration.max(1)),
-            p50_latency_ns: self.latencies.percentile(50.0),
-            p99_latency_ns: self.latencies.percentile(99.0),
+            p50_latency_ns: latencies.percentile(50.0),
+            p99_latency_ns: latencies.percentile(99.0),
+            p999_latency_ns: latencies.percentile(99.9),
             sched_events,
             sched_steps,
             cq_high_water: cq_high,
+            latency_sample: latencies,
         }
     }
 
@@ -1163,6 +1220,16 @@ impl Runner {
         let spec = &self.topo.threads[ti];
         let eff = spec.eff;
         let p = eff.postlist;
+        // Open-loop gate: a post call of `p` messages cannot be issued
+        // before the application produced its last entry. The wait is a
+        // plain reschedule touching only thread-private state (the
+        // arrival generator), so forks/islands stay exact.
+        if let Some(arr) = self.threads[ti].arr.as_mut() {
+            let gate = arr.gate(p);
+            if gate > now {
+                return Step::Resume(gate);
+            }
+        }
         // Round-robin over the thread's endpoints per post call.
         let ep = if spec.eps.len() == 1 {
             spec.eps[0]
@@ -1237,18 +1304,26 @@ impl Runner {
         }
         for k in 0..self.comp_buf.len() {
             let ct = self.comp_buf[k];
+            // Latency base: the post call (closed loop) or the message's
+            // open-loop *arrival* — the sojourn time, including whatever
+            // queueing delay the stream built up waiting to post.
+            let base = match &self.threads[ti].arr {
+                Some(arr) => arr.arrival(self.sig_buf[k]),
+                None => now,
+            };
+            let lat_ns = crate::sim::to_ns(ct.saturating_sub(base));
             match &mut self.lat_log {
                 Some(log) => {
                     // Speculative island: log every signaled latency with
                     // its phase tag; the merge re-applies the global
                     // decimation in canonical order.
                     let tag = Key { time: now, tid, step: self.threads[ti].steps - 1 };
-                    log.push((tag, crate::sim::to_ns(ct.saturating_sub(now))));
+                    log.push((tag, lat_ns));
                 }
                 None => {
                     self.lat_decim = self.lat_decim.wrapping_add(1);
                     if self.lat_decim % 8 == 0 {
-                        self.latencies.add(crate::sim::to_ns(ct.saturating_sub(now)));
+                        self.latencies.add(lat_ns);
                     }
                 }
             }
@@ -1257,6 +1332,9 @@ impl Runner {
 
         // Advance thread state.
         let t = &mut self.threads[ti];
+        if let Some(arr) = t.arr.as_mut() {
+            arr.consume(p);
+        }
         t.posted += p as u64;
         if batch + 1 < eff.batches_per_iter {
             t.phase = Phase::Post { batch: batch + 1 };
@@ -1786,5 +1864,95 @@ mod tests {
             out.memo_steps,
             out.scratch_steps
         );
+    }
+
+    /// One open-loop runner: every thread gated on a Poisson arrival
+    /// process at `mean_gap_ns`, seeded per thread.
+    fn open_loop_runner(
+        fabric: &Fabric,
+        threads: &[ThreadEndpoint],
+        msgs: u64,
+        mean_gap_ns: f64,
+    ) -> Runner {
+        use super::super::traffic::TrafficModel;
+        let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
+        let mut r = Runner::new(fabric, threads, cfg);
+        let traffic: Vec<StreamTraffic> = (0..threads.len())
+            .map(|t| StreamTraffic {
+                model: TrafficModel::Poisson { mean_gap_ns },
+                seed: 0x5CEB + t as u64,
+            })
+            .collect();
+        r.set_open_loop(&traffic);
+        r
+    }
+
+    #[test]
+    fn open_loop_gating_stretches_the_run() {
+        // Closed loop saturates the NIC (~100 ns/msg per independent
+        // endpoint); a 1 us mean inter-arrival gap makes the arrival
+        // process the bottleneck, so the open-loop run must take several
+        // times longer for the same message count — and report sojourn
+        // (arrival-to-completion) percentiles.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 4).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 2048, ..Default::default() };
+        let closed = Runner::new(&f, &set.threads, cfg).run();
+        let open = open_loop_runner(&f, &set.threads, 2048, 1000.0).run();
+        assert_eq!(open.messages, closed.messages, "gating must not drop messages");
+        assert!(
+            open.duration > 2 * closed.duration,
+            "open loop not arrival-bound: {} vs {}",
+            open.duration,
+            closed.duration
+        );
+        assert!(open.p50_latency_ns > 0.0);
+        assert!(open.p99_latency_ns >= open.p50_latency_ns);
+        assert!(open.p999_latency_ns >= open.p99_latency_ns);
+    }
+
+    #[test]
+    fn open_loop_runs_are_bit_deterministic() {
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::Dynamic).build(&mut f, 8).unwrap();
+        let a = open_loop_runner(&f, &set.threads, 1024, 300.0).run();
+        let b = open_loop_runner(&f, &set.threads, 1024, 300.0).run();
+        assert_same_result(&a, &b, "open loop replay");
+        assert_eq!(a.p999_latency_ns, b.p999_latency_ns, "open loop replay: p999");
+    }
+
+    #[test]
+    fn open_loop_partitioned_matches_sequential() {
+        // The arrival generator is thread-private state, so island
+        // speculation (and its fork/replay machinery) must reproduce the
+        // sequential open-loop run bit-for-bit.
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 8).unwrap();
+        let seq = open_loop_runner(&f, &set.threads, 1024, 250.0).run();
+        let (par, _) = open_loop_runner(&f, &set.threads, 1024, 250.0).run_partitioned_with(4);
+        assert_same_result(&seq, &par, "open loop partitioned");
+        assert_eq!(seq.p999_latency_ns, par.p999_latency_ns, "open loop partitioned: p999");
+    }
+
+    #[test]
+    fn per_thread_msgs_targets_round_to_windows_and_complete() {
+        let mut f = Fabric::connectx4();
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut f, 2).unwrap();
+        let cfg = MsgRateConfig { msgs_per_thread: 4096, ..Default::default() };
+        let mut r = Runner::new(&f, &set.threads, cfg);
+        r.set_msgs_targets(&[100, 1000]);
+        let eff = r.msgs_targets();
+        assert!(eff[0] >= 100 && eff[1] >= 1000, "targets rounded down: {eff:?}");
+        assert!(eff[0] < eff[1]);
+        let res = r.run();
+        assert_eq!(res.messages, eff.iter().sum::<u64>(), "effective totals complete exactly");
+    }
+
+    #[test]
+    fn p999_sits_between_p99_and_max() {
+        let r = run_category(Category::MpiEverywhere, 16, Features::all());
+        assert!(r.p999_latency_ns >= r.p99_latency_ns);
+        let mut sample = r.latency_sample.clone();
+        assert!(r.p999_latency_ns <= sample.percentile(100.0));
     }
 }

@@ -1,0 +1,303 @@
+//! Open-loop traffic models for the fleet engine.
+//!
+//! The §IV benchmark is *closed-loop*: every sender is always saturated,
+//! so the engine only ever measures peak rate. "Lessons Learned on
+//! MPI+Threads Communication" (arXiv:2206.14285) shows that saturated
+//! microbenchmarks hide exactly the contention effects irregular traffic
+//! exposes — so the fleet driver generates *open-loop* per-stream
+//! arrival processes instead: a post call may not run before its
+//! messages have "arrived" from the application, and per-message latency
+//! is measured from arrival (not post) to CPU-visible completion, i.e.
+//! it includes the queueing delay a backlogged endpoint builds up.
+//!
+//! Everything is driven by the repo's deterministic
+//! [`XorShift`](crate::sim::rng::XorShift) generator: a
+//! (model, seed) pair reproduces the same arrival sequence bit-for-bit
+//! on every run and platform, which is what lets the fleet figure be
+//! byte-pinned and `SCEP_FUZZ_SEED`-reseeded.
+
+use std::collections::VecDeque;
+
+use crate::sim::rng::XorShift;
+use crate::sim::Time;
+
+/// Pareto shape for [`TrafficModel::Pareto`]: α = 1.5 gives a finite
+/// mean with an infinite variance — the classic heavy-tail regime.
+pub const PARETO_ALPHA: f64 = 1.5;
+/// Hard cap on a Pareto gap, as a multiple of the scale: keeps a single
+/// astronomically unlucky draw from dominating a whole run's makespan
+/// while preserving a three-decade tail.
+pub const PARETO_CAP: f64 = 256.0;
+
+/// An open-loop message arrival process (inter-arrival gap
+/// distribution), in nanoseconds of virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficModel {
+    /// Memoryless arrivals: exponential gaps with the given mean.
+    Poisson {
+        /// Mean inter-arrival gap, ns.
+        mean_gap_ns: f64,
+    },
+    /// Bursty ON-OFF arrivals: bursts of `burst` back-to-back messages
+    /// (constant `on_gap_ns` within the burst) separated by
+    /// exponentially distributed OFF periods.
+    OnOff {
+        /// Messages per ON burst.
+        burst: u32,
+        /// Gap between messages inside a burst, ns.
+        on_gap_ns: f64,
+        /// Mean OFF period between bursts, ns.
+        off_mean_ns: f64,
+    },
+    /// Heavy-tail arrivals: bounded-Pareto gaps (shape [`PARETO_ALPHA`],
+    /// cap [`PARETO_CAP`] × scale) — a few very long silences dominate
+    /// the tail, the elephant/mice shape of real fleet traffic.
+    Pareto {
+        /// Pareto scale (minimum gap), ns.
+        scale_ns: f64,
+    },
+}
+
+impl TrafficModel {
+    /// The valid CLI spellings, for error messages.
+    pub const VALID: &str = "poisson:<mean_ns>, onoff:<burst>:<on_ns>:<off_mean_ns>, \
+                             pareto:<scale_ns>";
+
+    /// Parse a CLI name. Round-trips with the `Display` impl.
+    pub fn parse(s: &str) -> std::result::Result<Self, String> {
+        let bad_num = |t: &str| format!("bad number '{t}' in traffic model '{s}'");
+        let parts: Vec<&str> = s.trim().split(':').collect();
+        match parts.as_slice() {
+            ["poisson", mean] => mean
+                .parse::<f64>()
+                .map(|mean_gap_ns| TrafficModel::Poisson { mean_gap_ns })
+                .map_err(|_| bad_num(mean)),
+            ["onoff", burst, on, off] => {
+                let burst = burst.parse::<u32>().map_err(|_| bad_num(burst))?;
+                if burst == 0 {
+                    return Err(format!("onoff burst must be >= 1 in '{s}'"));
+                }
+                let on_gap_ns = on.parse::<f64>().map_err(|_| bad_num(on))?;
+                let off_mean_ns = off.parse::<f64>().map_err(|_| bad_num(off))?;
+                Ok(TrafficModel::OnOff { burst, on_gap_ns, off_mean_ns })
+            }
+            ["pareto", scale] => scale
+                .parse::<f64>()
+                .map(|scale_ns| TrafficModel::Pareto { scale_ns })
+                .map_err(|_| bad_num(scale)),
+            _ => Err(format!("unknown traffic model '{s}' (valid: {})", TrafficModel::VALID)),
+        }
+    }
+
+    /// The same process sped up by `mult` (gaps divided): how the fleet
+    /// driver makes a hot stream `mult`× more demanding than the tail.
+    pub fn scaled(self, mult: f64) -> Self {
+        assert!(mult > 0.0, "traffic scaling must be positive");
+        match self {
+            TrafficModel::Poisson { mean_gap_ns } => {
+                TrafficModel::Poisson { mean_gap_ns: mean_gap_ns / mult }
+            }
+            TrafficModel::OnOff { burst, on_gap_ns, off_mean_ns } => TrafficModel::OnOff {
+                burst,
+                on_gap_ns: on_gap_ns / mult,
+                off_mean_ns: off_mean_ns / mult,
+            },
+            TrafficModel::Pareto { scale_ns } => {
+                TrafficModel::Pareto { scale_ns: scale_ns / mult }
+            }
+        }
+    }
+
+    /// Draw the next inter-arrival gap in ns. `burst_pos` is the
+    /// caller-held position within the current ON burst (ignored by the
+    /// memoryless models).
+    fn gap_ns(&self, rng: &mut XorShift, burst_pos: &mut u32) -> f64 {
+        match *self {
+            TrafficModel::Poisson { mean_gap_ns } => rng.exp_f64(mean_gap_ns),
+            TrafficModel::OnOff { burst, on_gap_ns, off_mean_ns } => {
+                let pos = *burst_pos;
+                *burst_pos = (pos + 1) % burst;
+                if pos == 0 {
+                    // A burst opens after an OFF period.
+                    on_gap_ns + rng.exp_f64(off_mean_ns)
+                } else {
+                    on_gap_ns
+                }
+            }
+            TrafficModel::Pareto { scale_ns } => {
+                rng.pareto_f64(scale_ns, PARETO_ALPHA, PARETO_CAP)
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for TrafficModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for TrafficModel {
+    /// Canonical CLI spelling; `parse` of this string reproduces the
+    /// model exactly.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrafficModel::Poisson { mean_gap_ns } => write!(f, "poisson:{mean_gap_ns}"),
+            TrafficModel::OnOff { burst, on_gap_ns, off_mean_ns } => {
+                write!(f, "onoff:{burst}:{on_gap_ns}:{off_mean_ns}")
+            }
+            TrafficModel::Pareto { scale_ns } => write!(f, "pareto:{scale_ns}"),
+        }
+    }
+}
+
+/// One stream's traffic assignment: the arrival model plus the seed of
+/// its private generator (streams never share a generator, so island
+/// speculation and rank-parallel execution stay deterministic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamTraffic {
+    pub model: TrafficModel,
+    pub seed: u64,
+}
+
+/// A stream's materialized arrival process: a private generator plus
+/// the queue of arrival timestamps not yet consumed by a post call.
+/// Cloning mid-run (island speculation, `Runner::fork`) clones the
+/// generator state, so both copies produce identical futures.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    model: TrafficModel,
+    rng: XorShift,
+    burst_pos: u32,
+    /// Virtual timestamp of the most recently generated arrival.
+    clock: Time,
+    /// Arrival timestamps of messages generated but not yet posted.
+    pending: VecDeque<Time>,
+}
+
+impl ArrivalGen {
+    pub fn new(traffic: StreamTraffic) -> Self {
+        Self {
+            model: traffic.model,
+            rng: XorShift::new(traffic.seed),
+            burst_pos: 0,
+            clock: 0,
+            pending: VecDeque::new(),
+        }
+    }
+
+    /// Extend the pending queue to at least `n` arrivals.
+    fn fill(&mut self, n: u32) {
+        while self.pending.len() < n as usize {
+            let gap_ns = self.model.gap_ns(&mut self.rng, &mut self.burst_pos);
+            // ns → ps; arrivals are strictly ordered by construction
+            // (gaps are non-negative, the queue is monotone).
+            self.clock += (gap_ns * 1000.0).round() as Time;
+            self.pending.push_back(self.clock);
+        }
+    }
+
+    /// Earliest virtual time a post call of `p` messages may run: the
+    /// arrival of its last message (an `ibv_post_send` of a list cannot
+    /// be issued before the application produced every entry).
+    pub fn gate(&mut self, p: u32) -> Time {
+        assert!(p >= 1);
+        self.fill(p);
+        self.pending[p as usize - 1]
+    }
+
+    /// Arrival timestamp of the `i`-th not-yet-posted message (the
+    /// latency base of its completion). Valid after [`ArrivalGen::gate`]
+    /// covered index `i`.
+    pub fn arrival(&self, i: u32) -> Time {
+        self.pending[i as usize]
+    }
+
+    /// Mark the first `p` pending messages posted.
+    pub fn consume(&mut self, p: u32) {
+        debug_assert!(self.pending.len() >= p as usize);
+        self.pending.drain(..p as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        for m in [
+            TrafficModel::Poisson { mean_gap_ns: 200.0 },
+            TrafficModel::OnOff { burst: 16, on_gap_ns: 50.0, off_mean_ns: 4000.0 },
+            TrafficModel::Pareto { scale_ns: 120.0 },
+            TrafficModel::Poisson { mean_gap_ns: 87.5 },
+        ] {
+            let text = m.to_string();
+            assert_eq!(TrafficModel::parse(&text), Ok(m), "round trip of '{text}'");
+        }
+    }
+
+    #[test]
+    fn bad_input_lists_valid_models() {
+        let err = TrafficModel::parse("bogus:1").unwrap_err();
+        for name in ["poisson", "onoff", "pareto"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+        assert!(TrafficModel::parse("poisson:x").is_err());
+        assert!(TrafficModel::parse("onoff:0:1:1").is_err());
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_deterministic() {
+        for model in [
+            TrafficModel::Poisson { mean_gap_ns: 200.0 },
+            TrafficModel::OnOff { burst: 8, on_gap_ns: 10.0, off_mean_ns: 2000.0 },
+            TrafficModel::Pareto { scale_ns: 120.0 },
+        ] {
+            let t = StreamTraffic { model, seed: 42 };
+            let mut a = ArrivalGen::new(t);
+            let mut b = ArrivalGen::new(t);
+            let mut last = 0;
+            for _ in 0..64 {
+                let (ga, gb) = (a.gate(4), b.gate(4));
+                assert_eq!(ga, gb, "{model}: same seed, same arrivals");
+                assert!(a.arrival(0) <= ga);
+                assert!(ga >= last, "{model}: gates must be monotone");
+                last = ga;
+                a.consume(4);
+                b.consume(4);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_speeds_up_arrivals() {
+        let base = StreamTraffic { model: TrafficModel::Poisson { mean_gap_ns: 400.0 }, seed: 7 };
+        let hot = StreamTraffic { model: base.model.scaled(4.0), seed: 7 };
+        let mut a = ArrivalGen::new(base);
+        let mut b = ArrivalGen::new(hot);
+        // Identical seeds draw identical uniforms, so every hot gap is
+        // exactly a quarter of the base gap (up to ps rounding).
+        let (ga, gb) = (a.gate(64), b.gate(64));
+        assert!(gb < ga, "scaled(4) arrivals must run ahead: {gb} vs {ga}");
+        let ratio = ga as f64 / gb as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "expected ~4x speedup, got {ratio}");
+    }
+
+    #[test]
+    fn onoff_bursts_share_the_on_gap() {
+        let t = StreamTraffic {
+            model: TrafficModel::OnOff { burst: 4, on_gap_ns: 10.0, off_mean_ns: 5000.0 },
+            seed: 3,
+        };
+        let mut g = ArrivalGen::new(t);
+        g.gate(8);
+        // Within a burst, consecutive gaps are exactly 10 ns = 10_000 ps.
+        let in_burst = g.arrival(2) - g.arrival(1);
+        assert_eq!(in_burst, 10_000);
+        // The burst boundary (index 3 → 4) pays an OFF period on top.
+        assert!(g.arrival(4) - g.arrival(3) > 10_000);
+    }
+}

@@ -73,8 +73,18 @@ impl Universe {
                 policy.msg_size = 4096;
                 let pool = EndpointPool::build(&policy, job.pool_size(), &mut fabric)?;
                 let mut mapper = VciMapper::new(job.map, job.pool_size());
+                // Stream identity: with skewed popularity, hot threads
+                // drive fleet-shared communicators and tail threads get
+                // per-rank ones; without it, thread `t` of `rank` drives
+                // communicator `rank` (the historical shape, bit-exact).
                 let threads: Vec<ThreadEndpoint> = (0..job.spec.threads_per_rank)
-                    .map(|t| pool.endpoint(mapper.assign(Stream::new(rank, t, 0))))
+                    .map(|t| {
+                        let comm = match job.hot {
+                            Some(h) => h.comm_of(rank, t),
+                            None => rank,
+                        };
+                        pool.endpoint(mapper.assign(Stream::new(comm, t, 0)))
+                    })
                     .collect();
                 ranks.push(RankComm { rank, node: n, pool, mapper, threads });
                 memories.push(Memory::new(rank_mem_bytes));
@@ -220,6 +230,24 @@ impl Universe {
         self.ranks.iter().map(|r| r.mapper.migrations()).sum()
     }
 
+    /// Total streams re-homed off killed pool slots, fleet-wide.
+    pub fn pool_rehomed(&self) -> u64 {
+        self.ranks.iter().map(|r| r.mapper.rehomed()).sum()
+    }
+
+    /// Endpoint failure injection: kill pool slot `slot` of `rank`.
+    /// The rank's mapper re-homes every stream of the dead slot onto
+    /// surviving slots ([`VciMapper::kill_slot`]) and the rank's
+    /// per-thread endpoint routing is rebuilt from the new assignment,
+    /// so subsequent phases post only to live endpoints. Returns the
+    /// number of streams re-homed.
+    pub fn kill_pool_slot(&mut self, rank: u32, slot: u32) -> u64 {
+        let rc = &mut self.ranks[rank as usize];
+        let moved = rc.mapper.kill_slot(slot);
+        rc.threads = rc.mapper.slots().iter().map(|&s| rc.pool.endpoint(s)).collect();
+        moved
+    }
+
     /// Whether the job takes the shared-QP code path — because the
     /// policy shares QPs, or because the stream mapping actually placed
     /// several streams on one pool endpoint (derived from the mapper
@@ -296,6 +324,44 @@ mod tests {
         }
         assert_eq!(u.get(w, 0, 8), vec![9u8; 8]);
         assert_eq!(u.pool_migrations(), 0);
+    }
+
+    #[test]
+    fn kill_pool_slot_rehomes_and_rma_still_works() {
+        use crate::vci::MapStrategy;
+        let job = Job::two_node(JobSpec::new(1, 4), Category::Dynamic)
+            .pooled(2, MapStrategy::RoundRobin);
+        let mut u = Universe::launch(job, 1 << 16).unwrap();
+        // Round-robin over 2 slots: threads 0,2 on slot 0; 1,3 on slot 1.
+        let moved = u.kill_pool_slot(0, 0);
+        assert_eq!(moved, 2);
+        assert_eq!(u.pool_rehomed(), 2);
+        // Every thread of rank 0 now routes through the surviving slot.
+        let live_qp = u.ranks[0].pool.endpoint(1).qp;
+        for t in &u.ranks[0].threads {
+            assert_eq!(t.qp, live_qp);
+        }
+        // RMA through the re-homed endpoints still moves real bytes.
+        u.memories[0].write(0, &[5u8; 8]);
+        let w = u.window(1, 0, 64);
+        for thread in 0..4 {
+            let n = u.rma(0, thread, Opcode::RdmaWrite, 0, w, 8 * thread, 8).unwrap();
+            assert_eq!(n, 1, "thread {thread} after the kill");
+        }
+        // Other ranks are untouched.
+        assert_eq!(u.ranks[1].mapper.rehomed(), 0);
+    }
+
+    #[test]
+    fn hot_streams_share_communicators_across_ranks() {
+        use crate::coordinator::job::HotStreams;
+        let job = Job::two_node(JobSpec::new(2, 4), Category::Dynamic)
+            .with_hot(HotStreams::new(2, 2, 4));
+        let u = Universe::launch(job, 4096).unwrap();
+        // Launch succeeds and still builds one endpoint per thread.
+        for rc in &u.ranks {
+            assert_eq!(rc.threads.len(), 4);
+        }
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Fleet-scale traffic engine: open-loop arrival processes over the
+//! coordinator's rank universe, with skewed stream popularity,
+//! per-message latency percentiles and endpoint failure injection.
+//!
+//! The §IV benchmark drives every stream closed-loop (each thread posts
+//! as fast as its QP window allows); a fleet does not. Here every
+//! stream's posts are gated on a [`TrafficModel`] arrival process
+//! (Poisson, bursty ON-OFF, heavy-tail Pareto) drawn from the
+//! deterministic [`crate::sim::XorShift`] generator, a few *hot*
+//! communicators carry a popularity-weighted multiple of the tail's
+//! traffic ([`HotStreams`]), and per-message sojourn latency is reported
+//! as p50/p99/p999 beside the rate — fleet-wide percentiles come from
+//! merging the per-rank samples ([`Sample::merge`]), never from
+//! averaging per-rank percentiles.
+//!
+//! Failure injection kills a pool slot mid-run: the run is split at
+//! every stream's half-way message into two timed phases, the kill
+//! lands between them ([`crate::vci::VciMapper::kill_slot`] re-homes
+//! the dead slot's streams onto survivors, the rank's endpoint routing
+//! is rebuilt), and the second phase completes the remaining messages
+//! on the surviving slots. Zero message loss is asserted per rank:
+//! every admitted message completes, and the combined total covers the
+//! full per-stream target.
+//!
+//! Everything is bit-deterministic at a fixed seed: rank simulations
+//! are independent DES runs fanned out on the order-preserving
+//! [`par_map`] pool, and each rank's arrival seeds are a pure mix of
+//! `(fleet seed, rank, thread, phase)`.
+
+use crate::bench::{MsgRateConfig, Runner, StreamTraffic, TrafficModel};
+use crate::endpoints::{EndpointPolicy, ThreadEndpoint};
+use crate::par::par_map;
+use crate::sim::stats::Sample;
+use crate::sim::{to_secs, Time};
+use crate::vci::MapStrategy;
+
+use super::comm::Universe;
+use super::job::{HotStreams, Job, JobSpec};
+
+/// Endpoint failure injection: kill pool slot `slot` on every
+/// `every`-th rank at each stream's half-way message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    /// Pool slot to kill (must leave at least one live slot).
+    pub slot: u32,
+    /// Ranks `r` with `r % every == 0` experience the failure.
+    pub every: u32,
+}
+
+/// One fleet run: `ranks` single-rank nodes, `streams` threads per
+/// rank over a `pool`-slot endpoint pool, every stream driven by an
+/// open-loop arrival process.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    pub ranks: u32,
+    pub streams: u32,
+    /// Endpoint-pool slots per rank.
+    pub pool: u32,
+    pub map: MapStrategy,
+    pub policy: EndpointPolicy,
+    /// Messages a tail stream must complete (hot streams complete
+    /// `hot.weight` times as many). Must cover at least two QP windows
+    /// so failure cells can split the run around the kill.
+    pub msgs_per_stream: u64,
+    /// Skewed stream popularity (hot communicators + long tail).
+    pub hot: HotStreams,
+    pub model: TrafficModel,
+    pub seed: u64,
+    pub kill: Option<KillSpec>,
+}
+
+impl FleetConfig {
+    /// Fleet defaults: §VII scalable endpoints, a quarter-size pool
+    /// under hashed placement, every 8th stream hot at weight 8.
+    pub fn new(ranks: u32, streams: u32) -> Self {
+        assert!(ranks >= 1 && streams >= 1);
+        Self {
+            ranks,
+            streams,
+            pool: (streams / 4).max(2),
+            map: MapStrategy::Hashed,
+            policy: EndpointPolicy::scalable(),
+            msgs_per_stream: 1024,
+            hot: HotStreams::new(4, 8, 8),
+            model: TrafficModel::Poisson { mean_gap_ns: 400.0 },
+            seed: 1,
+            kill: None,
+        }
+    }
+
+    /// Shrink per-stream message counts for smoke runs (the sweep keeps
+    /// its full rank/stream extent; only the per-cell work drops).
+    pub fn quick(mut self) -> Self {
+        self.msgs_per_stream = 256;
+        self.hot.weight = 4;
+        self
+    }
+}
+
+/// One cell of the fleet sweep, aggregated over every rank.
+/// `PartialEq` (floats included) is the determinism contract the
+/// fixed-seed tests pin: two runs of the same config must produce
+/// bit-equal cells.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetCell {
+    /// Canonical traffic-model label (`TrafficModel` display grammar).
+    pub model: String,
+    pub failure: bool,
+    pub ranks: u32,
+    pub streams: u32,
+    pub pool: u32,
+    /// Messages completed fleet-wide (>= the per-stream targets; the
+    /// post-kill phase re-rounds to the survivors' QP windows).
+    pub messages: u64,
+    /// Aggregate throughput: sum of per-rank message rates (ranks run
+    /// concurrently in a fleet), in Mmsg/s.
+    pub rate_mmsgs: f64,
+    /// Per-message sojourn latency percentiles over the merged
+    /// fleet-wide sample, nanoseconds.
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    /// Streams re-homed off killed slots, fleet-wide.
+    pub rehomed: u64,
+    /// Adaptive-mapping stream migrations, fleet-wide.
+    pub migrations: u64,
+}
+
+/// Deterministic per-stream arrival seed: a SplitMix64-style mix of the
+/// fleet seed with the stream coordinates, so every stream gets an
+/// independent-looking sequence and the whole fleet re-seeds from one
+/// `--seed` / `SCEP_FUZZ_SEED` value.
+fn mix(seed: u64, rank: u64, thread: u64, phase: u64) -> u64 {
+    let mut x = seed
+        ^ rank.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ thread.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ phase.wrapping_mul(0x1656_67B1_9E37_79F9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Per-stream open-loop traffic for one rank: hot streams run the model
+/// at `weight`-times the rate (gaps divided), tail streams run it as-is.
+fn traffic_for(cfg: &FleetConfig, rank: u32, phase: u64) -> Vec<StreamTraffic> {
+    (0..cfg.streams)
+        .map(|t| StreamTraffic {
+            model: cfg.model.scaled(cfg.hot.weight_of(t) as f64),
+            seed: mix(cfg.seed, rank as u64, t as u64, phase),
+        })
+        .collect()
+}
+
+fn groups(threads: &[ThreadEndpoint]) -> Vec<Vec<ThreadEndpoint>> {
+    threads.iter().map(|&t| vec![t]).collect()
+}
+
+struct RankOutcome {
+    messages: u64,
+    duration: Time,
+    latency: Sample,
+    rehomed: u64,
+    migrations: u64,
+}
+
+/// Simulate one rank's open-loop run (with the failure event if this
+/// rank is a kill target). Works on a clone of the rank's comm state so
+/// the shared `Universe` stays immutable across the rank fan-out.
+fn simulate_rank(u: &Universe, cfg: &FleetConfig, rank: u32) -> RankOutcome {
+    let mut rc = u.ranks[rank as usize].clone();
+    let fabric = &u.nodes[rc.node as usize].fabric;
+    let msg_cfg = MsgRateConfig { msgs_per_thread: cfg.msgs_per_stream, ..Default::default() };
+    let full: Vec<u64> = (0..cfg.streams)
+        .map(|t| cfg.msgs_per_stream * cfg.hot.weight_of(t) as u64)
+        .collect();
+    // Window-rounded per-stream totals: what a runner on this topology
+    // will actually complete for these targets.
+    let mut probe = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+    probe.set_msgs_targets(&full);
+    let full_eff = probe.msgs_targets();
+    drop(probe);
+    let target: u64 = full_eff.iter().sum();
+
+    let kill_here = cfg.kill.filter(|k| rank % k.every == 0);
+    let (admitted, outcome) = match kill_here {
+        None => {
+            let mut r = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+            r.set_msgs_targets(&full_eff);
+            r.set_open_loop(&traffic_for(cfg, rank, 0));
+            let res = r.run_partitioned();
+            (target, (res.messages, res.duration, res.latency_sample, 0))
+        }
+        Some(k) => {
+            // Phase 1: the first half of every stream's total (rounded
+            // up to its QP window by set_msgs_targets).
+            let half: Vec<u64> = full_eff.iter().map(|&t| t / 2).collect();
+            let mut r1 = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+            r1.set_msgs_targets(&half);
+            let half_eff = r1.msgs_targets();
+            r1.set_open_loop(&traffic_for(cfg, rank, 0));
+            let res1 = r1.run_partitioned();
+            // The failure event: the slot dies, its streams re-home
+            // onto survivors, the rank's routing is rebuilt.
+            let moved = rc.mapper.kill_slot(k.slot);
+            rc.threads = rc.mapper.slots().iter().map(|&s| rc.pool.endpoint(s)).collect();
+            // Phase 2 completes the remainder on the survivors. The
+            // remainder re-rounds to the *new* sharing's QP windows
+            // (never below it), so no targeted message is lost.
+            let rem: Vec<u64> = full_eff
+                .iter()
+                .zip(&half_eff)
+                .map(|(&f, &h)| {
+                    assert!(f > h, "phase split needs >= 2 QP windows per stream");
+                    f - h
+                })
+                .collect();
+            let mut r2 = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+            r2.set_msgs_targets(&rem);
+            let admitted: u64 =
+                half_eff.iter().sum::<u64>() + r2.msgs_targets().iter().sum::<u64>();
+            r2.set_open_loop(&traffic_for(cfg, rank, 1));
+            let res2 = r2.run_partitioned();
+            let mut latency = res1.latency_sample;
+            latency.merge(&res2.latency_sample);
+            let combined =
+                (res1.messages + res2.messages, res1.duration + res2.duration, latency, moved);
+            (admitted, combined)
+        }
+    };
+    let (messages, duration, latency, rehomed) = outcome;
+    // Zero message loss: every admitted message completed, and the
+    // admitted set covers the full per-stream targets.
+    assert_eq!(messages, admitted, "fleet rank {rank}: admitted messages went missing");
+    assert!(messages >= target, "fleet rank {rank}: kill dropped targeted messages");
+    RankOutcome { messages, duration, latency, rehomed, migrations: rc.mapper.migrations() }
+}
+
+/// Run one fleet cell: launch the universe, fan the ranks out on the
+/// DES worker pool (order-preserving, so aggregation is deterministic),
+/// and fold per-rank outcomes into fleet-wide rate and percentiles.
+pub fn run_fleet(cfg: &FleetConfig) -> FleetCell {
+    if let Some(k) = cfg.kill {
+        assert!(k.slot < cfg.pool, "kill slot {} outside pool of {}", k.slot, cfg.pool);
+        assert!(k.every >= 1, "kill cadence must be >= 1");
+        assert!(cfg.pool >= 2, "failure injection needs a surviving slot");
+    }
+    let job = Job::n_node(cfg.ranks, JobSpec::new(1, cfg.streams), cfg.policy)
+        .pooled(cfg.pool, cfg.map)
+        .with_hot(cfg.hot);
+    let u = Universe::launch(job, 64).expect("fleet launch");
+    let outcomes = par_map((0..cfg.ranks).collect(), |r| simulate_rank(&u, cfg, r));
+    let mut sample = Sample::default();
+    let (mut messages, mut rehomed, mut migrations) = (0u64, 0u64, 0u64);
+    let mut rate = 0.0f64;
+    for o in &outcomes {
+        messages += o.messages;
+        rehomed += o.rehomed;
+        migrations += o.migrations;
+        rate += o.messages as f64 / to_secs(o.duration);
+        sample.merge(&o.latency);
+    }
+    FleetCell {
+        model: cfg.model.to_string(),
+        failure: cfg.kill.is_some(),
+        ranks: cfg.ranks,
+        streams: cfg.streams,
+        pool: cfg.pool,
+        messages,
+        rate_mmsgs: rate / 1e6,
+        p50_ns: sample.percentile(50.0),
+        p99_ns: sample.percentile(99.0),
+        p999_ns: sample.percentile(99.9),
+        rehomed,
+        migrations,
+    }
+}
+
+/// The sweep's traffic-model axis: Poisson at a 400 ns mean gap, a
+/// bursty ON-OFF source with the same long-run rate, and a heavy-tail
+/// bounded-Pareto source.
+pub fn fleet_models() -> [TrafficModel; 3] {
+    [
+        TrafficModel::Poisson { mean_gap_ns: 400.0 },
+        TrafficModel::OnOff { burst: 8, on_gap_ns: 100.0, off_mean_ns: 2400.0 },
+        TrafficModel::Pareto { scale_ns: 200.0 },
+    ]
+}
+
+/// The fleet sweep: every traffic model with and without the failure
+/// event (slot 0 killed on every 8th rank). `base.model` and
+/// `base.kill` set nothing here — the sweep owns both axes.
+pub fn fleet_sweep(base: &FleetConfig) -> Vec<FleetCell> {
+    let mut cells = Vec::new();
+    for model in fleet_models() {
+        for failure in [false, true] {
+            let mut cfg = *base;
+            cfg.model = model;
+            cfg.kill = failure.then_some(KillSpec { slot: 0, every: 8 });
+            cells.push(run_fleet(&cfg));
+        }
+    }
+    cells
+}
+
+/// Hand-rolled JSON array for the sweep (no serde in the offline build
+/// environment), shaped like the other `BENCH_des.json` arrays.
+pub fn fleet_json_rows(cells: &[FleetCell]) -> String {
+    let mut s = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        let sep = if i + 1 < cells.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"model\": \"{}\", \"failure\": {}, \"ranks\": {}, \"streams\": {}, \
+             \"pool\": {}, \"messages\": {}, \"rate_mmsgs\": {:.4}, \"p50_ns\": {:.3}, \
+             \"p99_ns\": {:.3}, \"p999_ns\": {:.3}, \"rehomed\": {}, \"migrations\": {}}}{sep}\n",
+            c.model,
+            c.failure,
+            c.ranks,
+            c.streams,
+            c.pool,
+            c.messages,
+            c.rate_mmsgs,
+            c.p50_ns,
+            c.p99_ns,
+            c.p999_ns,
+            c.rehomed,
+            c.migrations,
+        ));
+    }
+    s.push_str("  ]");
+    s
+}
+
+/// Merge a `"fleet"` array into an existing `BENCH_des.json` body
+/// (replacing any previous one), or mint a fresh object when the file
+/// is absent/empty. Lets `scep fleet` extend the perf_des output
+/// in-place instead of clobbering it.
+pub fn merge_fleet_json(existing: &str, cells: &[FleetCell]) -> String {
+    let rows = fleet_json_rows(cells);
+    let t = existing.trim_end();
+    let Some(body_end) = t.rfind('}') else {
+        return format!("{{\n  \"fleet\": {rows}\n}}\n");
+    };
+    let mut head = t[..body_end].to_string();
+    // Drop any existing "fleet" entry: key through its array's matching
+    // bracket (cell strings never contain brackets), plus one adjacent
+    // comma.
+    if let Some(key) = head.find("\"fleet\"") {
+        if let Some(open_rel) = head[key..].find('[') {
+            let open = key + open_rel;
+            let mut depth = 0usize;
+            let mut close = open;
+            for (i, ch) in head[open..].char_indices() {
+                match ch {
+                    '[' => depth += 1,
+                    ']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            close = open + i;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let before = head[..key].trim_end();
+            let mut start = key;
+            let mut end = close + 1;
+            if before.ends_with(',') {
+                start = before.len() - 1;
+            } else if let Some(next) = head[end..].find(|c: char| !c.is_whitespace()) {
+                if head[end..].as_bytes()[next] == b',' {
+                    end += next + 1;
+                }
+            }
+            head.replace_range(start..end, "");
+        }
+    }
+    let head = head.trim_end();
+    let sep = if head.ends_with('{') || head.ends_with(',') { "" } else { "," };
+    format!("{head}{sep}\n  \"fleet\": {rows}\n}}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_separates_streams_and_phases() {
+        let a = mix(1, 0, 0, 0);
+        assert_ne!(a, mix(1, 0, 0, 1), "phases must reseed");
+        assert_ne!(a, mix(1, 0, 1, 0), "threads must reseed");
+        assert_ne!(a, mix(1, 1, 0, 0), "ranks must reseed");
+        assert_ne!(a, mix(2, 0, 0, 0), "the fleet seed must matter");
+        assert_eq!(a, mix(1, 0, 0, 0), "pure function");
+    }
+
+    #[test]
+    fn sweep_config_defaults_are_killable() {
+        let cfg = FleetConfig::new(64, 32);
+        assert!(cfg.pool >= 2, "default pool must survive a kill");
+        assert_eq!(cfg.pool, 8);
+        let q = cfg.quick();
+        assert_eq!(q.msgs_per_stream, 256);
+        assert_eq!(q.hot.weight, 4);
+        assert_eq!(q.ranks, cfg.ranks, "quick keeps the sweep extent");
+    }
+
+    fn cell(model: &str, failure: bool) -> FleetCell {
+        FleetCell {
+            model: model.to_string(),
+            failure,
+            ranks: 4,
+            streams: 4,
+            pool: 2,
+            messages: 4096,
+            rate_mmsgs: 1.5,
+            p50_ns: 900.0,
+            p99_ns: 2000.0,
+            p999_ns: 3000.0,
+            rehomed: 4,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn json_rows_render_every_cell() {
+        let s = fleet_json_rows(&[cell("poisson:400", false), cell("pareto:200", true)]);
+        assert!(s.starts_with("[\n"));
+        assert!(s.ends_with(']'));
+        assert_eq!(s.matches("\"model\"").count(), 2);
+        assert!(s.contains("\"p999_ns\": 3000.000"));
+        assert!(s.contains("},\n"), "cells are comma-separated");
+    }
+
+    #[test]
+    fn merge_into_empty_mints_an_object() {
+        let out = merge_fleet_json("", &[cell("poisson:400", false)]);
+        assert!(out.starts_with("{\n  \"fleet\": [\n"));
+        assert!(out.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn merge_appends_after_existing_keys() {
+        let existing = "{\n  \"suite\": \"perf_des\",\n  \"memo\": {\"prefix_steps\": 1}\n}\n";
+        let out = merge_fleet_json(existing, &[cell("poisson:400", false)]);
+        assert!(out.contains("\"suite\": \"perf_des\""));
+        assert!(out.contains("\"memo\""));
+        assert!(out.contains("\"fleet\": [\n"));
+        assert_eq!(out.matches("\"fleet\"").count(), 1);
+        // Still one object: balanced braces, comma before the new key.
+        assert!(out.contains("},\n  \"fleet\""));
+    }
+
+    #[test]
+    fn merge_replaces_a_previous_fleet_array() {
+        let first = merge_fleet_json("{\n  \"suite\": \"x\"\n}\n", &[cell("poisson:400", false)]);
+        let second = merge_fleet_json(&first, &[cell("onoff:8:100:2400", true)]);
+        assert_eq!(second.matches("\"fleet\"").count(), 1, "replaced, not duplicated");
+        assert!(second.contains("onoff:8:100:2400"));
+        assert!(!second.contains("poisson:400"));
+        assert!(second.contains("\"suite\": \"x\""));
+    }
+}

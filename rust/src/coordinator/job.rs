@@ -44,6 +44,56 @@ impl JobSpec {
     }
 }
 
+/// Skewed stream popularity: a few *hot* communicators shared across
+/// ranks plus a long per-rank tail — the fleet engine's "millions of
+/// users" shape, where popularity follows a power law rather than the
+/// benchmark's uniform symmetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HotStreams {
+    /// Number of hot (fleet-shared) communicators.
+    pub comms: u32,
+    /// Every `every`-th thread of a rank drives a hot communicator
+    /// (thread `t` is hot iff `t % every == 0`); the rest are tail.
+    pub every: u32,
+    /// Traffic and message-count multiplier of a hot stream over a tail
+    /// stream.
+    pub weight: u32,
+}
+
+impl HotStreams {
+    pub fn new(comms: u32, every: u32, weight: u32) -> Self {
+        assert!(comms > 0 && every > 0 && weight > 0);
+        Self { comms, every, weight }
+    }
+
+    /// Whether thread `t` of a rank drives a hot communicator.
+    pub fn is_hot(&self, thread: u32) -> bool {
+        thread % self.every == 0
+    }
+
+    /// The thread's traffic/message multiplier.
+    pub fn weight_of(&self, thread: u32) -> u32 {
+        if self.is_hot(thread) {
+            self.weight
+        } else {
+            1
+        }
+    }
+
+    /// The communicator id thread `t` of `rank` drives: hot threads
+    /// cycle over the `comms` fleet-shared communicators (by hot index,
+    /// so the cycle covers all of them even when `comms` divides
+    /// `every`), tail threads get their rank's private communicator (ids
+    /// above the hot range).
+    pub fn comm_of(&self, rank: u32, thread: u32) -> u32 {
+        if self.is_hot(thread) {
+            (thread / self.every) % self.comms
+        } else {
+            self.comms + rank
+        }
+    }
+}
+
 /// A full job: topology split + endpoint policy + node count, plus the
 /// per-rank VCI pool bound (how many endpoints each rank instantiates
 /// and how its threads' streams map onto them).
@@ -57,6 +107,10 @@ pub struct Job {
     pub pool: Option<u32>,
     /// Stream-to-endpoint placement within each rank's pool.
     pub map: MapStrategy,
+    /// Skewed stream popularity; `None` keeps the historical symmetric
+    /// shape (thread `t` of `rank` drives communicator `rank`, weight 1)
+    /// bit-for-bit.
+    pub hot: Option<HotStreams>,
 }
 
 impl Job {
@@ -65,13 +119,27 @@ impl Job {
     /// [`EndpointPolicy`]; the pool defaults to dedicated per-thread
     /// endpoints (bit-identical to the pre-VCI launch path).
     pub fn two_node(spec: JobSpec, policy: impl Into<EndpointPolicy>) -> Self {
+        Self::n_node(2, spec, policy)
+    }
+
+    /// An `nodes`-node job (the fleet driver's shape: one rank per node,
+    /// thousands of nodes).
+    pub fn n_node(nodes: u32, spec: JobSpec, policy: impl Into<EndpointPolicy>) -> Self {
+        assert!(nodes >= 1);
         Self {
-            nodes: 2,
+            nodes,
             spec,
             policy: policy.into(),
             pool: None,
             map: MapStrategy::Dedicated,
+            hot: None,
         }
+    }
+
+    /// Apply skewed stream popularity (builder-style).
+    pub fn with_hot(mut self, hot: HotStreams) -> Self {
+        self.hot = Some(hot);
+        self
     }
 
     /// Bound each rank's endpoint pool to `pool` endpoints mapped by
@@ -108,6 +176,25 @@ mod tests {
         for s in JobSpec::paper_sweep() {
             assert_eq!(s.hw_threads(), 16);
         }
+    }
+
+    #[test]
+    fn hot_streams_split_hot_and_tail() {
+        let h = HotStreams::new(4, 8, 16);
+        assert!(h.is_hot(0) && h.is_hot(8) && h.is_hot(16));
+        assert!(!h.is_hot(1) && !h.is_hot(7));
+        assert_eq!(h.weight_of(0), 16);
+        assert_eq!(h.weight_of(3), 1);
+        // Hot threads share fleet-wide communicators regardless of rank;
+        // tail threads get per-rank communicators above the hot range.
+        assert_eq!(h.comm_of(0, 0), h.comm_of(99, 0));
+        assert_eq!(h.comm_of(5, 1), 4 + 5);
+        assert_ne!(h.comm_of(5, 1), h.comm_of(6, 1));
+        // Distinct hot thread ids cycle over the hot communicators.
+        assert_eq!(h.comm_of(0, 0), 0);
+        assert_eq!(h.comm_of(0, 8), 1);
+        assert_eq!(h.comm_of(0, 16), 2);
+        assert_eq!(h.comm_of(0, 32), 0, "hot index wraps over the comms");
     }
 
     #[test]

@@ -14,11 +14,18 @@
 //! virtual-clock NIC model; payloads move functionally through
 //! [`rma::Window`] so applications (e.g. the global-array DGEMM) compute
 //! on real data.
+//!
+//! The [`fleet`] module drives the universe at fleet scale: open-loop
+//! arrival processes per stream, skewed stream popularity
+//! ([`HotStreams`]), per-message latency percentiles and endpoint
+//! failure injection ([`Universe::kill_pool_slot`]).
 
 pub mod comm;
+pub mod fleet;
 pub mod job;
 pub mod rma;
 
 pub use comm::{RankComm, Universe};
-pub use job::{Job, JobSpec};
+pub use fleet::{run_fleet, FleetCell, FleetConfig, KillSpec};
+pub use job::{HotStreams, Job, JobSpec};
 pub use rma::Window;

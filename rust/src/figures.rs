@@ -21,6 +21,7 @@
 use crate::apps::stencil::DEFAULT_HALO_BYTES;
 use crate::apps::{GlobalArray, StencilBench};
 use crate::bench::{FeatureSet, Features, MsgRateConfig, MsgRateResult, Runner, SharedResource};
+use crate::coordinator::fleet::{fleet_sweep, FleetConfig};
 use crate::coordinator::JobSpec;
 use crate::endpoints::{BufLayout, Category, EndpointPolicy, ResourceUsage};
 use crate::mlx5::MemModel;
@@ -618,6 +619,47 @@ pub fn pool_threads(thread_counts: &[u32], quick: bool) -> Vec<Table> {
     vec![t]
 }
 
+/// Fleet engine (coordinator::fleet): open-loop traffic models x
+/// failure injection over a many-rank universe, with fleet-wide
+/// per-message latency percentiles merged from the per-rank samples.
+/// The figure runs a scaled-down fleet so `scep bench --all` stays
+/// interactive; the full 1k-rank sweep is `scep fleet`.
+pub fn fleet(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fleet: open-loop traffic x failure injection (Scalable pool, hashed placement)",
+        &[
+            "model",
+            "failure",
+            "ranks",
+            "streams",
+            "pool",
+            "messages",
+            "rate_Mmsg/s",
+            "p50_ns",
+            "p99_ns",
+            "p999_ns",
+            "rehomed",
+        ],
+    );
+    let base = if quick { FleetConfig::new(8, 8).quick() } else { FleetConfig::new(64, 16) };
+    for c in fleet_sweep(&base) {
+        t.row(vec![
+            c.model.clone(),
+            c.failure.to_string(),
+            c.ranks.to_string(),
+            c.streams.to_string(),
+            c.pool.to_string(),
+            c.messages.to_string(),
+            f2(c.rate_mmsgs),
+            f2(c.p50_ns),
+            f2(c.p99_ns),
+            f2(c.p999_ns),
+            c.rehomed.to_string(),
+        ]);
+    }
+    vec![t]
+}
+
 /// Message-count convergence sweep, computed memoized: the sweep's
 /// shared prefix runs once and is forked into one continuation per
 /// target (`Runner::sweep_msgs`), instead of re-simulating every target
@@ -758,6 +800,7 @@ pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
         "fig14" | "14" => fig14(quick),
         "grid" | "policy-grid" => grid(quick),
         "pool" | "vci" => pool(quick),
+        "fleet" => fleet(quick),
         "sweep" | "memo-sweep" => sweep(quick),
         "ablation-qp-lock" => ablation_qp_lock(quick),
         "ablation-quirk" => ablation_quirk(quick),
@@ -785,9 +828,9 @@ pub fn render_bytes(name: &str, quick: bool) -> Option<String> {
 }
 
 /// Every figure id, in paper order, plus the policy grid, the VCI pool
-/// sweep, the memoized convergence sweep and the design-choice
-/// ablations.
-pub const ALL_FIGURES: [&str; 18] = [
+/// sweep, the fleet traffic engine, the memoized convergence sweep and
+/// the design-choice ablations.
+pub const ALL_FIGURES: [&str; 19] = [
     "table1",
     "fig2",
     "fig3",
@@ -802,6 +845,7 @@ pub const ALL_FIGURES: [&str; 18] = [
     "fig14",
     "grid",
     "pool",
+    "fleet",
     "sweep",
     "ablation-qp-lock",
     "ablation-quirk",

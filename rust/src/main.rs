@@ -7,6 +7,8 @@
 //! scep resources --policy ctx=shared,qp=2x,uar=indep,cq=1 --threads 16
 //! scep resources --policy scalable --threads 16 --pool 5 [--map rr]
 //! scep pool [--threads 16] [--pool 5] [--map rr] [--policy <spec>]
+//! scep fleet [--quick] [--ranks 1024] [--streams 32] [--pool 8] [--map hash]
+//!           [--msgs 1024] [--seed 1] [--workers <n>]
 //! scep run global-array [--n 256] [--category 2xdynamic | --policy <spec>]
 //! scep run stencil [--spec 4.4] [--category dynamic | --policy <spec>]
 //! scep calibrate                          print model calibration points
@@ -24,7 +26,8 @@ use std::process::ExitCode;
 
 use scalable_ep::apps::{GlobalArray, StencilBench};
 use scalable_ep::bench::{Features, MsgRateConfig, Runner};
-use scalable_ep::coordinator::JobSpec;
+use scalable_ep::coordinator::fleet::{fleet_sweep, merge_fleet_json};
+use scalable_ep::coordinator::{FleetConfig, JobSpec};
 use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::runtime::ArtifactRuntime;
 use scalable_ep::vci::{run_pooled, EndpointPool, MapStrategy, Stream, VciMapper};
@@ -38,6 +41,8 @@ fn usage() -> ExitCode {
          [--pool <k> [--map <strategy>]]\n  \
          scep pool [--threads <n>] [--pool <k>] [--map <strategy>] \
          [--policy <spec>] [--msgs <m>] [--workers <n>]\n  \
+         scep fleet [--quick] [--ranks <n>] [--streams <n>] [--pool <k>] \
+         [--map <strategy>] [--msgs <m>] [--seed <s>] [--workers <n>]\n  \
          scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
          scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
          scep calibrate\n\
@@ -231,6 +236,70 @@ fn main() -> ExitCode {
                 }
                 Err(e) => {
                     eprintln!("pool build failed: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        "fleet" => {
+            // The fleet-scale traffic engine: open-loop arrivals,
+            // p50/p99/p999 percentiles, failure injection — merged into
+            // BENCH_des.json's "fleet" array.
+            let Ok(()) = workers_from_args(&args) else { return usage() };
+            let quick = args.iter().any(|a| a == "--quick");
+            let ranks: u32 =
+                flag_value(&args, "--ranks").and_then(|v| v.parse().ok()).unwrap_or(1024);
+            let streams: u32 =
+                flag_value(&args, "--streams").and_then(|v| v.parse().ok()).unwrap_or(32);
+            let mut cfg = FleetConfig::new(ranks, streams);
+            if quick {
+                cfg = cfg.quick();
+            }
+            let Ok(pool) = pool_from_args(&args) else { return usage() };
+            if let Some(p) = pool {
+                cfg.pool = p;
+            }
+            let Some(map) = map_from_args(&args, cfg.map) else { return usage() };
+            cfg.map = map;
+            if let Some(m) = flag_value(&args, "--msgs").and_then(|v| v.parse().ok()) {
+                cfg.msgs_per_stream = m;
+            }
+            // --seed beats SCEP_FUZZ_SEED beats the default; echo it so
+            // any sweep is reproducible by exporting the env var.
+            cfg.seed = flag_value(&args, "--seed")
+                .and_then(|v| v.parse().ok())
+                .or_else(|| {
+                    std::env::var("SCEP_FUZZ_SEED").ok().and_then(|v| v.trim().parse().ok())
+                })
+                .unwrap_or(1);
+            eprintln!("[fleet] SCEP_FUZZ_SEED={}", cfg.seed);
+            let cells = fleet_sweep(&cfg);
+            for c in &cells {
+                println!(
+                    "fleet {} ranks x {} streams /pool {} [{}{}]: {:.2} Mmsg/s over {} \
+                     msgs; p50 {:.0} ns, p99 {:.0} ns, p999 {:.0} ns, rehomed {}",
+                    c.ranks,
+                    c.streams,
+                    c.pool,
+                    c.model,
+                    if c.failure { ", failure" } else { "" },
+                    c.rate_mmsgs,
+                    c.messages,
+                    c.p50_ns,
+                    c.p99_ns,
+                    c.p999_ns,
+                    c.rehomed,
+                );
+            }
+            let path = std::env::var("SCEP_BENCH_JSON")
+                .unwrap_or_else(|_| "BENCH_des.json".to_string());
+            let existing = std::fs::read_to_string(&path).unwrap_or_default();
+            match std::fs::write(&path, merge_fleet_json(&existing, &cells)) {
+                Ok(()) => {
+                    eprintln!("[fleet] {} cells -> {path} (\"fleet\" array)", cells.len());
+                    ExitCode::SUCCESS
+                }
+                Err(e) => {
+                    eprintln!("cannot write {path}: {e}");
                     ExitCode::FAILURE
                 }
             }

@@ -54,6 +54,21 @@ impl XorShift {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len() as u64) as usize]
     }
+
+    /// Exponentially distributed f64 with the given mean (inverse-CDF
+    /// over [`Self::unit_f64`]); the inter-arrival gap of a Poisson
+    /// process. `unit_f64` < 1 strictly, so `ln(1 - u)` is finite.
+    pub fn exp_f64(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.unit_f64()).ln()
+    }
+
+    /// Bounded-Pareto f64: scale `xm`, shape `alpha`, hard cap
+    /// `cap * xm` (heavy-tail service/arrival gaps whose moments stay
+    /// finite — the fleet traffic engine's heavy-tail model).
+    pub fn pareto_f64(&mut self, xm: f64, alpha: f64, cap: f64) -> f64 {
+        let u = self.unit_f64();
+        (xm / (1.0 - u).powf(1.0 / alpha)).min(xm * cap)
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +98,28 @@ mod tests {
         for _ in 0..1000 {
             let x = r.unit_f64();
             assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn exp_f64_is_positive_with_plausible_mean() {
+        let mut r = XorShift::new(11);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.exp_f64(200.0);
+            assert!(x >= 0.0 && x.is_finite());
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 200.0).abs() < 20.0, "sample mean {mean} far from 200");
+    }
+
+    #[test]
+    fn pareto_f64_respects_scale_and_cap() {
+        let mut r = XorShift::new(13);
+        for _ in 0..10_000 {
+            let x = r.pareto_f64(120.0, 1.5, 256.0);
+            assert!((120.0..=120.0 * 256.0).contains(&x), "out of bounds: {x}");
         }
     }
 

@@ -1,24 +1,34 @@
 //! Lightweight statistics helpers for benchmark reporting.
 
-/// Online mean/min/max/count accumulator.
+/// Online mean/variance/min/max/count accumulator (Welford's algorithm).
+///
+/// The naive `sumsq - sum*mean` variance form cancels catastrophically
+/// at nanosecond-scale latency magnitudes (mean ~1e9 with a sub-unit
+/// spread squares to ~1e18, where f64 has ~0.25 of absolute precision)
+/// and can come out *negative*. Welford's update keeps the running
+/// second moment `m2` as a sum of non-negative terms, so the variance
+/// is provably non-negative and accurate at any magnitude.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
     n: u64,
-    sum: f64,
-    sumsq: f64,
+    mean: f64,
+    /// Sum of squared deviations from the running mean.
+    m2: f64,
     min: f64,
     max: f64,
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Self { n: 0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
     pub fn add(&mut self, x: f64) {
         self.n += 1;
-        self.sum += x;
-        self.sumsq += x * x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        let d2 = x - self.mean;
+        self.m2 += d * d2;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
     }
@@ -31,20 +41,23 @@ impl Summary {
         if self.n == 0 {
             0.0
         } else {
-            self.sum / self.n as f64
+            self.mean
         }
     }
 
+    /// Sample variance (n-1 denominator). Non-negative by construction:
+    /// `m2` accumulates `d * d2` terms whose running sum equals the sum
+    /// of squared deviations; the final clamp only absorbs the last ulp
+    /// of rounding.
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        (self.sumsq - self.sum * m) / (self.n as f64 - 1.0)
+        (self.m2 / (self.n as f64 - 1.0)).max(0.0)
     }
 
     pub fn stddev(&self) -> f64 {
-        self.variance().max(0.0).sqrt()
+        self.variance().sqrt()
     }
 
     pub fn min(&self) -> f64 {
@@ -65,9 +78,16 @@ impl Summary {
 }
 
 /// Exact percentile over a stored sample (fine at benchmark scale).
+///
+/// Sorted lazily, once per batch of [`Sample::percentile`] calls: `add`
+/// only marks the vector dirty, and the first percentile after an add
+/// re-sorts. Percentiles interpolate linearly between ranks, so p99 of
+/// a small sample no longer collapses onto the maximum the way the old
+/// nearest-rank rounding did.
 #[derive(Debug, Clone, Default)]
 pub struct Sample {
     xs: Vec<f64>,
+    sorted: bool,
 }
 
 impl Sample {
@@ -77,6 +97,13 @@ impl Sample {
 
     pub fn add(&mut self, x: f64) {
         self.xs.push(x);
+        self.sorted = false;
+    }
+
+    /// Append every value of `other` (fleet aggregation across ranks).
+    pub fn merge(&mut self, other: &Sample) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
     }
 
     pub fn len(&self) -> usize {
@@ -87,14 +114,25 @@ impl Sample {
         self.xs.is_empty()
     }
 
-    /// p in [0, 100].
+    /// `p` in [0, 100]; linear interpolation between the two ranks
+    /// bracketing `p/100 * (n-1)` (the "exclusive" definition NumPy
+    /// defaults to).
     pub fn percentile(&mut self, p: f64) -> f64 {
         if self.xs.is_empty() {
             return 0.0;
         }
-        self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0 * (self.xs.len() - 1) as f64).round() as usize;
-        self.xs[rank.min(self.xs.len() - 1)]
+        if !self.sorted {
+            self.xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let frac = rank - lo as f64;
+        if frac == 0.0 || lo + 1 >= self.xs.len() {
+            self.xs[lo.min(self.xs.len() - 1)]
+        } else {
+            self.xs[lo] + frac * (self.xs[lo + 1] - self.xs[lo])
+        }
     }
 }
 
@@ -115,6 +153,33 @@ mod tests {
         assert!((s.variance() - 5.0 / 3.0).abs() < 1e-9);
     }
 
+    /// Regression: the pre-Welford `sumsq - sum*mean` form returned a
+    /// *negative* variance for exactly this input (mean ~1e9 ns with a
+    /// millisecond-scale spread — the magnitude of the fleet engine's
+    /// latency samples), which `stddev` then silently clamped to 0.
+    #[test]
+    fn welford_variance_is_nonnegative_at_nanosecond_magnitudes() {
+        let mut s = Summary::new();
+        let (mut naive_sum, mut naive_sumsq) = (0.0f64, 0.0f64);
+        for i in 0..1000 {
+            let x = 1e9 + i as f64 * 1e-3;
+            s.add(x);
+            naive_sum += x;
+            naive_sumsq += x * x;
+        }
+        let naive = (naive_sumsq - naive_sum * (naive_sum / 1000.0)) / 999.0;
+        assert!(naive < 0.0, "this input no longer demonstrates the cancellation ({naive})");
+        let v = s.variance();
+        assert!(v >= 0.0, "Welford variance must be non-negative, got {v}");
+        // True sample variance of {1e-3 * i, i in 0..1000} spread. At a
+        // 1e9 offset each `x - mean` term itself rounds at ~1e-7, so
+        // Welford lands within ~1e-4 relative — 9 decades better than
+        // the naive form's sign flip.
+        let want = 1e-6 * (1000.0 * 1001.0 / 12.0);
+        assert!((v - want).abs() / want < 1e-3, "variance {v} vs expected {want}");
+        assert!((s.stddev() - want.sqrt()).abs() / want.sqrt() < 1e-3);
+    }
+
     #[test]
     fn percentiles() {
         let mut s = Sample::new();
@@ -124,5 +189,41 @@ mod tests {
         assert_eq!(s.percentile(0.0), 0.0);
         assert_eq!(s.percentile(50.0), 50.0);
         assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    /// Regression: nearest-rank rounding collapsed p99 onto the max for
+    /// any sample smaller than ~200 entries; interpolation keeps them
+    /// distinct (the fleet engine's p999 column depends on this).
+    #[test]
+    fn percentile_interpolates_instead_of_collapsing_to_max() {
+        let mut s = Sample::new();
+        for i in 0..1000 {
+            s.add(i as f64);
+        }
+        let p99 = s.percentile(99.0);
+        assert_ne!(p99, s.percentile(100.0), "p99 must not equal the max");
+        assert!((p99 - 989.01).abs() < 1e-9, "p99 of 0..999 is 989.01, got {p99}");
+        let p999 = s.percentile(99.9);
+        assert!((p999 - 998.001).abs() < 1e-9, "p999 of 0..999 is 998.001, got {p999}");
+        assert!(p999 < 999.0);
+    }
+
+    /// The dirty-flag sort must survive interleaved add/percentile calls.
+    #[test]
+    fn percentile_resorts_after_adds() {
+        let mut s = Sample::new();
+        for i in (0..10).rev() {
+            s.add(i as f64);
+        }
+        assert_eq!(s.percentile(100.0), 9.0);
+        s.add(99.0);
+        assert_eq!(s.percentile(100.0), 99.0, "max must see the post-sort add");
+        assert_eq!(s.percentile(0.0), 0.0);
+
+        let mut other = Sample::new();
+        other.add(-5.0);
+        s.merge(&other);
+        assert_eq!(s.percentile(0.0), -5.0, "min must see merged values");
+        assert_eq!(s.len(), 12);
     }
 }

@@ -101,8 +101,12 @@ pub struct VciMapper {
     assigned: Vec<(Stream, u32)>,
     /// Streams per slot.
     loads: Vec<u32>,
+    /// Slots killed by failure injection ([`VciMapper::kill_slot`]);
+    /// never assigned to, never a rebalance target.
+    dead: Vec<bool>,
     next_rr: u32,
     migrations: u64,
+    rehomed: u64,
 }
 
 impl VciMapper {
@@ -113,8 +117,10 @@ impl VciMapper {
             pool_size,
             assigned: Vec::new(),
             loads: vec![0; pool_size as usize],
+            dead: vec![false; pool_size as usize],
             next_rr: 0,
             migrations: 0,
+            rehomed: 0,
         }
     }
 
@@ -126,7 +132,12 @@ impl VciMapper {
         self.pool_size
     }
 
-    /// Place `stream` and return its slot.
+    /// Place `stream` and return its slot. Killed slots are skipped:
+    /// round-robin advances past them, hashed/adaptive linear-probe to
+    /// the next live slot (so a stream's placement stays a pure function
+    /// of identity × pool size × the set of live slots), and a dedicated
+    /// stream whose home slot died is a hard error — there is no other
+    /// legal slot for it.
     pub fn assign(&mut self, stream: Stream) -> u32 {
         let slot = match self.strategy {
             MapStrategy::Dedicated => {
@@ -137,15 +148,27 @@ impl VciMapper {
                     stream.thread,
                     self.pool_size
                 );
+                assert!(
+                    !self.dead[stream.thread as usize],
+                    "Dedicated stream for thread {} maps to a killed slot",
+                    stream.thread
+                );
                 stream.thread
             }
             MapStrategy::RoundRobin => {
-                let s = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % self.pool_size;
+                let mut s = self.next_rr;
+                while self.dead[s as usize] {
+                    s = (s + 1) % self.pool_size;
+                }
+                self.next_rr = (s + 1) % self.pool_size;
                 s
             }
             MapStrategy::Hashed | MapStrategy::Adaptive { .. } => {
-                (stream.key() % self.pool_size as u64) as u32
+                let mut s = (stream.key() % self.pool_size as u64) as u32;
+                while self.dead[s as usize] {
+                    s = (s + 1) % self.pool_size;
+                }
+                s
             }
         };
         self.assigned.push((stream, slot));
@@ -173,13 +196,75 @@ impl VciMapper {
         self.migrations
     }
 
+    /// Total streams re-homed off killed slots by
+    /// [`VciMapper::kill_slot`] (distinct from rebalance migrations).
+    pub fn rehomed(&self) -> u64 {
+        self.rehomed
+    }
+
+    /// Whether `slot` is still accepting streams.
+    pub fn is_live(&self, slot: u32) -> bool {
+        !self.dead[slot as usize]
+    }
+
+    /// Test-only: force a stream onto a slot, bypassing the strategy
+    /// (for crafting exact load/occupancy scenarios).
+    #[cfg(test)]
+    fn place(&mut self, stream: Stream, slot: u32) {
+        self.assigned.push((stream, slot));
+        self.loads[slot as usize] += 1;
+    }
+
+    /// Kill `slot` (endpoint failure injection) and re-home every stream
+    /// assigned to it onto surviving slots — each, in registration
+    /// order, to the least-loaded live slot (ties broken by lowest
+    /// index). Idempotent: killing an already-dead slot is a no-op.
+    /// Returns the number of streams re-homed; deterministic in the
+    /// mapper state. Panics if the kill would leave no live slot — a
+    /// pool with zero endpoints cannot make progress, so the caller must
+    /// keep at least one survivor.
+    pub fn kill_slot(&mut self, slot: u32) -> u64 {
+        let s = slot as usize;
+        assert!(s < self.pool_size as usize, "slot {slot} out of range");
+        if self.dead[s] {
+            return 0;
+        }
+        assert!(
+            self.dead.iter().filter(|&&d| !d).count() > 1,
+            "killing slot {slot} would leave the pool with no live endpoint"
+        );
+        self.dead[s] = true;
+        let mut moved = 0u64;
+        for i in 0..self.assigned.len() {
+            if self.assigned[i].1 != slot {
+                continue;
+            }
+            let target = (0..self.pool_size as usize)
+                .filter(|&j| !self.dead[j])
+                .min_by_key(|&j| self.loads[j])
+                .expect("at least one live slot survives the kill");
+            self.assigned[i].1 = target as u32;
+            self.loads[s] -= 1;
+            self.loads[target] += 1;
+            moved += 1;
+        }
+        debug_assert_eq!(self.loads[s], 0, "a killed slot keeps no streams");
+        self.rehomed += moved;
+        moved
+    }
+
     /// Contention-aware migration (`Adaptive` only; a no-op returning 0
     /// for every other strategy): for each slot whose observed
     /// occupancy exceeds the strategy threshold, move its most recently
-    /// registered streams to the least-loaded slot (ties broken by
-    /// lowest index) until the slot is within one stream of it.
-    /// `occupancy[s]` is the DES-observed completion-queue high-water
-    /// mark of slot `s` (see
+    /// registered streams to the coldest candidate slot until the slot
+    /// is within one stream of it. A candidate is the least-loaded
+    /// *under-threshold* live slot (ties broken by lowest index) — a
+    /// load-light slot whose own observed occupancy exceeds the
+    /// threshold is already contended and must not absorb shed streams.
+    /// Only when every live slot is over the threshold does the target
+    /// fall back to plain load-leveling (least-loaded live slot).
+    /// Killed slots are never targets. `occupancy[s]` is the
+    /// DES-observed completion-queue high-water mark of slot `s` (see
     /// [`MsgRateResult::cq_high_water`](crate::bench::MsgRateResult::cq_high_water)).
     /// Returns the number of migrations performed; deterministic in its
     /// inputs.
@@ -194,13 +279,22 @@ impl VciMapper {
         );
         let before = self.migrations;
         for (hot, &occ) in occupancy.iter().enumerate() {
-            if occ <= threshold as u64 {
+            if occ <= threshold as u64 || self.dead[hot] {
                 continue;
             }
             loop {
+                // Under-threshold live slots first (`hot` itself is over
+                // threshold, so the filter excludes it); when all live
+                // slots are hot, level load among them instead.
                 let cold = (0..self.pool_size as usize)
+                    .filter(|&i| !self.dead[i] && occupancy[i] <= threshold as u64)
                     .min_by_key(|&i| self.loads[i])
-                    .expect("non-empty pool");
+                    .or_else(|| {
+                        (0..self.pool_size as usize)
+                            .filter(|&i| !self.dead[i])
+                            .min_by_key(|&i| self.loads[i])
+                    })
+                    .expect("a pool keeps at least one live slot");
                 if self.loads[hot] <= self.loads[cold] + 1 {
                     break;
                 }
@@ -328,6 +422,108 @@ mod tests {
             counts[s as usize] += 1;
         }
         assert_eq!(counts, m.loads());
+    }
+
+    /// Regression: the migration target used to be chosen by minimum
+    /// load alone, so a load-light slot whose *occupancy* was also over
+    /// the threshold absorbed the shed streams — trading one contended
+    /// slot for another. Under-threshold slots must win even at higher
+    /// load.
+    #[test]
+    fn rebalance_prefers_under_threshold_targets_over_min_load() {
+        let mut m = VciMapper::new(MapStrategy::Adaptive { occupancy: 2 }, 3);
+        let mut t = 0..;
+        for _ in 0..5 {
+            m.place(Stream::of_thread(t.next().unwrap()), 0);
+        }
+        m.place(Stream::of_thread(t.next().unwrap()), 1);
+        for _ in 0..2 {
+            m.place(Stream::of_thread(t.next().unwrap()), 2);
+        }
+        assert_eq!(m.loads(), &[5, 1, 2]);
+        // Slot 1 is load-light but occupancy-hot; slot 2 is the only
+        // under-threshold candidate.
+        let moved = m.rebalance(&[10, 10, 0]);
+        assert_eq!(moved, 1, "one migration brings slot 0 within one of slot 2");
+        assert_eq!(
+            m.loads(),
+            &[4, 1, 3],
+            "the shed stream must land on under-threshold slot 2, not min-load slot 1"
+        );
+    }
+
+    #[test]
+    fn rebalance_falls_back_to_load_leveling_when_every_slot_is_hot() {
+        let mut m = VciMapper::new(MapStrategy::Adaptive { occupancy: 2 }, 3);
+        let mut t = 0..;
+        for _ in 0..5 {
+            m.place(Stream::of_thread(t.next().unwrap()), 0);
+        }
+        m.place(Stream::of_thread(t.next().unwrap()), 1);
+        for _ in 0..2 {
+            m.place(Stream::of_thread(t.next().unwrap()), 2);
+        }
+        let moved = m.rebalance(&[10, 10, 10]);
+        assert!(moved > 0, "an all-hot pool still levels load");
+        let (min, max) =
+            (*m.loads().iter().min().unwrap(), *m.loads().iter().max().unwrap());
+        assert!(max - min <= 1, "leveling fallback left skew: {:?}", m.loads());
+        assert_eq!(m.loads().iter().sum::<u32>(), 8);
+    }
+
+    #[test]
+    fn kill_slot_rehomes_streams_onto_survivors() {
+        let mut m = VciMapper::new(MapStrategy::RoundRobin, 4);
+        for t in 0..8 {
+            m.assign(Stream::of_thread(t));
+        }
+        assert_eq!(m.loads(), &[2, 2, 2, 2]);
+        let moved = m.kill_slot(1);
+        assert_eq!(moved, 2);
+        assert_eq!(m.rehomed(), 2);
+        assert_eq!(m.loads()[1], 0, "a killed slot keeps no streams");
+        assert_eq!(m.loads().iter().sum::<u32>(), 8, "streams conserved");
+        assert!(!m.slots().contains(&1), "no stream may reference the dead slot");
+        assert!(!m.is_live(1));
+        // Idempotent.
+        assert_eq!(m.kill_slot(1), 0);
+        assert_eq!(m.rehomed(), 2);
+        // New registrations skip the dead slot (next_rr was back at 0).
+        assert_eq!(m.assign(Stream::of_thread(8)), 0);
+        assert_ne!(m.assign(Stream::of_thread(9)), 1);
+        // Rebalance never targets the dead slot either.
+        let mut a = VciMapper::new(MapStrategy::Adaptive { occupancy: 0 }, 3);
+        let mut t = 20..;
+        for _ in 0..6 {
+            a.place(Stream::of_thread(t.next().unwrap()), 0);
+        }
+        a.kill_slot(2);
+        a.rebalance(&[10, 0, 0]);
+        assert_eq!(a.loads()[2], 0, "rebalance must not resurrect a killed slot");
+        assert_eq!(a.loads().iter().sum::<u32>(), 6);
+    }
+
+    #[test]
+    fn hashed_assign_probes_past_dead_slots() {
+        let mut reference = VciMapper::new(MapStrategy::Hashed, 5);
+        let home = reference.assign(Stream::of_thread(0));
+        let mut m = VciMapper::new(MapStrategy::Hashed, 5);
+        // Register a placeholder on a *different* slot so the pool has a
+        // survivor, then kill the stream's home slot before it arrives.
+        let other = (home + 1) % 5;
+        m.place(Stream::of_thread(100), other);
+        m.kill_slot(home);
+        let got = m.assign(Stream::of_thread(0));
+        assert_eq!(got, other, "linear probe lands on the next live slot");
+    }
+
+    #[test]
+    #[should_panic(expected = "no live endpoint")]
+    fn killing_the_last_live_slot_panics() {
+        let mut m = VciMapper::new(MapStrategy::RoundRobin, 2);
+        m.assign(Stream::of_thread(0));
+        m.kill_slot(0);
+        m.kill_slot(1);
     }
 
     #[test]

@@ -23,6 +23,20 @@ pub struct PooledResult {
     /// Stream migrations the `Adaptive` rebalance performed (0 for the
     /// static strategies).
     pub migrations: u64,
+    /// Streams re-homed off killed pool slots (0 unless the run injected
+    /// an endpoint failure via [`VciMapper::kill_slot`]).
+    pub rehomed: u64,
+}
+
+/// Probe length for the `Adaptive` pre-run: an eighth of the timed
+/// phase, floored at 64 so short configs still produce an occupancy
+/// signal, but never *longer* than the timed phase itself (the old
+/// unclamped `max(64)` made a 64-message run probe with 64 messages and
+/// a 128-message run probe with 64 — but a 100-message run probe with
+/// 64 and a 500-message run probe with 64 vs. *its own* length only by
+/// luck; below 512 the floor used to exceed the timed phase).
+fn probe_msgs(msgs_per_thread: u64) -> u64 {
+    (msgs_per_thread / 8).max(64).min(msgs_per_thread)
 }
 
 /// Resolve the mapper's current assignment into one endpoint per stream
@@ -67,7 +81,7 @@ pub fn run_pooled(
     }
     if matches!(strategy, MapStrategy::Adaptive { .. }) {
         let probe_cfg =
-            MsgRateConfig { msgs_per_thread: (cfg.msgs_per_thread / 8).max(64), ..cfg };
+            MsgRateConfig { msgs_per_thread: probe_msgs(cfg.msgs_per_thread), ..cfg };
         let probe = Runner::new(&fabric, &pooled_threads(&pool, &mapper), probe_cfg).run();
         let occupancy: Vec<u64> = pool
             .endpoints()
@@ -84,6 +98,7 @@ pub fn run_pooled(
         usage,
         loads: mapper.loads().to_vec(),
         migrations: mapper.migrations(),
+        rehomed: mapper.rehomed(),
     })
 }
 
@@ -137,6 +152,25 @@ mod tests {
             (*r.loads.iter().min().unwrap(), *r.loads.iter().max().unwrap());
         assert!(max - min <= 1, "adaptive left skew: {:?}", r.loads);
         assert_eq!(r.result.messages, 16 * 512);
+    }
+
+    /// Regression: the unclamped `(msgs / 8).max(64)` probe ran *more*
+    /// messages than the timed phase for any config under 512 messages
+    /// per thread. The probe must never exceed the timed phase.
+    #[test]
+    fn adaptive_probe_never_exceeds_timed_phase() {
+        assert_eq!(probe_msgs(64), 64);
+        assert_eq!(probe_msgs(32), 32);
+        assert_eq!(probe_msgs(511), 64);
+        assert_eq!(probe_msgs(512), 64);
+        assert_eq!(probe_msgs(4096), 512);
+        // End-to-end at the pinned satellite size: the probe equals the
+        // timed phase (64 == 64) and the run still completes correctly.
+        let cfg = MsgRateConfig { msgs_per_thread: 64, ..Default::default() };
+        let r = run_pooled(&EndpointPolicy::scalable(), 8, 4, MapStrategy::adaptive(), cfg)
+            .unwrap();
+        assert_eq!(r.result.messages, 8 * 64);
+        assert_eq!(r.loads.iter().sum::<u32>(), 8);
     }
 
     #[test]

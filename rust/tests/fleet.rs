@@ -1,0 +1,111 @@
+//! Fleet traffic-engine properties: fixed-seed bit-determinism of the
+//! sweep cells and zero message loss under endpoint failure injection.
+//!
+//! Configs here are deliberately tiny (a few ranks, round-robin
+//! placement) so every placement — and therefore every re-homing count
+//! — is known in closed form; the CI-scale sweep lives in perf_des and
+//! `scep fleet`.
+
+use scalable_ep::coordinator::fleet::{fleet_sweep, run_fleet, FleetConfig, KillSpec};
+use scalable_ep::coordinator::HotStreams;
+use scalable_ep::vci::MapStrategy;
+
+/// Seed for the fleet determinism properties: `SCEP_FUZZ_SEED=<u64>`
+/// overrides the fixed default (same convention as tests/properties.rs,
+/// so the CI randomized leg reseeds this suite too and every failure
+/// log carries its reproduction recipe).
+fn fuzz_seed(default: u64) -> u64 {
+    match std::env::var("SCEP_FUZZ_SEED") {
+        Ok(s) => {
+            let seed = s
+                .trim()
+                .parse::<u64>()
+                .unwrap_or_else(|e| panic!("SCEP_FUZZ_SEED={s:?} is not a u64: {e}"));
+            eprintln!("[fleet] SCEP_FUZZ_SEED={seed} (reproduce with this env var)");
+            seed
+        }
+        Err(_) => default,
+    }
+}
+
+/// A 4-rank, 4-stream fleet over 2-slot round-robin pools: thread `t`
+/// lands on slot `t % 2`, so slot 0 always carries streams {0, 2}.
+fn tiny(seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::new(4, 4).quick();
+    cfg.pool = 2;
+    cfg.map = MapStrategy::RoundRobin;
+    cfg.hot = HotStreams::new(2, 2, 2);
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn fleet_cells_are_bit_deterministic_at_fixed_seed() {
+    let cfg = tiny(fuzz_seed(11));
+    let a = run_fleet(&cfg);
+    let b = run_fleet(&cfg);
+    // FleetCell's PartialEq covers every float: rates, percentiles and
+    // counters must reproduce bit-for-bit, not approximately.
+    assert_eq!(a, b, "same config + seed must give bit-equal cells");
+    assert!(a.p50_ns > 0.0, "per-message sojourn latencies must be populated");
+    assert!(a.p99_ns >= a.p50_ns && a.p999_ns >= a.p99_ns);
+}
+
+#[test]
+fn different_seeds_give_different_arrival_processes() {
+    let a = run_fleet(&tiny(fuzz_seed(11)));
+    let b = run_fleet(&tiny(fuzz_seed(11).wrapping_add(1)));
+    // Same topology and targets -> same message count; different
+    // arrivals -> different virtual timing.
+    assert_eq!(a.messages, b.messages);
+    assert_ne!(a.rate_mmsgs, b.rate_mmsgs, "reseeding must change the traffic");
+}
+
+#[test]
+fn failure_injection_rehomes_streams_with_zero_message_loss() {
+    let seed = fuzz_seed(23);
+    let calm = run_fleet(&tiny(seed));
+    let mut kill_cfg = tiny(seed);
+    kill_cfg.kill = Some(KillSpec { slot: 0, every: 2 });
+    let killed = run_fleet(&kill_cfg);
+    // Round-robin puts streams {0, 2} on slot 0 of every rank; ranks
+    // 0 and 2 are kill targets -> exactly 4 re-homed streams.
+    assert_eq!(killed.rehomed, 4, "2 kill ranks x 2 streams on the dead slot");
+    assert_eq!(calm.rehomed, 0);
+    // Zero message loss: every stream's full target still completes.
+    // The post-kill phase re-rounds remainders up to the survivors' QP
+    // windows, so the failure run may complete slightly *more*.
+    assert!(
+        killed.messages >= calm.messages,
+        "kill dropped messages: {} vs {}",
+        killed.messages,
+        calm.messages
+    );
+    assert!(killed.p999_ns >= killed.p99_ns && killed.p99_ns >= killed.p50_ns);
+    assert!(killed.p50_ns > 0.0);
+}
+
+#[test]
+fn failure_cells_are_bit_deterministic_too() {
+    let mut cfg = tiny(fuzz_seed(37));
+    cfg.kill = Some(KillSpec { slot: 1, every: 2 });
+    let a = run_fleet(&cfg);
+    let b = run_fleet(&cfg);
+    assert_eq!(a, b, "failure injection must not introduce nondeterminism");
+    assert_eq!(a.rehomed, 4, "slot 1 carries streams {{1, 3}} on 2 kill ranks");
+}
+
+#[test]
+fn sweep_covers_every_model_with_and_without_failure() {
+    let cells = fleet_sweep(&tiny(fuzz_seed(41)));
+    assert_eq!(cells.len(), 6, "3 traffic models x {{calm, failure}}");
+    assert_eq!(cells.iter().filter(|c| c.failure).count(), 3);
+    let mut models: Vec<&str> = cells.iter().map(|c| c.model.as_str()).collect();
+    models.sort_unstable();
+    models.dedup();
+    assert_eq!(models.len(), 3, "three distinct traffic models");
+    for c in &cells {
+        assert_eq!((c.ranks, c.streams, c.pool), (4, 4, 2));
+        assert!(c.messages > 0 && c.rate_mmsgs > 0.0);
+    }
+}
