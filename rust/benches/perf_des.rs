@@ -47,8 +47,14 @@
 //!
 //! A `fleet` array (EXPERIMENTS.md §Fleet) runs the coordinator's
 //! fleet traffic engine at CI scale: open-loop arrival models x
-//! failure injection, with fleet-wide p50/p99/p999 sojourn latency and
-//! re-homed stream counts per cell.
+//! failure injection, with fleet-wide p50/p99/p999 sojourn latency,
+//! re-homed stream counts and total `sched_steps` per cell (steps are
+//! execution-strategy independent, so they belong in the determinism
+//! contract alongside the rates).
+//!
+//! This bench is the wide perf surface; the narrow, *gating* perf
+//! check is `scep experiment experiments/gate.json` + `scep compare`
+//! against the committed baseline (EXPERIMENTS.md §Experiments).
 //!
 //! The run ends by printing paste-ready EXPERIMENTS.md §Perf markdown
 //! rows for every table above, so updating the doc after a CI run is a
@@ -463,12 +469,13 @@ fn main() {
         memo.scratch_wallclock_s / memo.memo_wallclock_s.max(1e-9),
     );
     println!("\nEXPERIMENTS.md §Fleet rows (paste-ready):");
-    println!("| Model | Failure | Mmsg/s | p50 ns | p99 ns | p999 ns | Rehomed |");
-    println!("|---|---|---|---|---|---|---|");
+    println!("| Model | Failure | Mmsg/s | p50 ns | p99 ns | p999 ns | Rehomed | sched_steps |");
+    println!("|---|---|---|---|---|---|---|---|");
     for c in &fleet_cells {
         println!(
-            "| {} | {} | {:.2} | {:.0} | {:.0} | {:.0} | {} |",
+            "| {} | {} | {:.2} | {:.0} | {:.0} | {:.0} | {} | {} |",
             c.model, c.failure, c.rate_mmsgs, c.p50_ns, c.p99_ns, c.p999_ns, c.rehomed,
+            c.sched_steps,
         );
     }
     eprintln!("[perf_des] suite {suite_s:.2}s -> {path}");

@@ -1089,15 +1089,46 @@ impl Runner {
         cfg: MsgRateConfig,
         targets: &[u64],
     ) -> SweepOutcome {
-        assert!(!targets.is_empty(), "sweep_msgs needs at least one target");
+        Self::sweep_with(cfg.use_legacy_scheduler, targets, |msgs| {
+            Runner::new(fabric, threads, MsgRateConfig { msgs_per_thread: msgs, ..cfg })
+        })
+    }
+
+    /// Open-loop variant of [`Runner::sweep_msgs`], the SLO capacity
+    /// search's probe engine: the same snapshot memoization, with every
+    /// cell's runner gated on the given arrival processes (`groups` and
+    /// `traffic` follow [`Runner::new_multi`] /
+    /// [`Runner::set_open_loop`]). Forks carry the arrival generators'
+    /// state, so memoized cells stay bit-identical to from-scratch
+    /// open-loop runs.
+    pub fn sweep_open_loop(
+        fabric: &Fabric,
+        groups: &[Vec<ThreadEndpoint>],
+        cfg: MsgRateConfig,
+        traffic: &[StreamTraffic],
+        targets: &[u64],
+    ) -> SweepOutcome {
+        Self::sweep_with(cfg.use_legacy_scheduler, targets, |msgs| {
+            let mut r =
+                Runner::new_multi(fabric, groups, MsgRateConfig { msgs_per_thread: msgs, ..cfg });
+            r.set_open_loop(traffic);
+            r
+        })
+    }
+
+    /// The shared sweep body: `mk(msgs)` builds an unstarted runner for
+    /// one target (closing over fabric/threads/traffic), and the memo
+    /// machinery forks each cell off the smallest target's paused
+    /// prefix when it safely can.
+    fn sweep_with(legacy: bool, targets: &[u64], mk: impl Fn(u64) -> Runner) -> SweepOutcome {
+        assert!(!targets.is_empty(), "sweep needs at least one target");
         let c_min = *targets.iter().min().unwrap();
-        let mut base =
-            Runner::new(fabric, threads, MsgRateConfig { msgs_per_thread: c_min, ..cfg });
+        let mut base = mk(c_min);
         let max_window = base.topo.threads.iter().map(|s| s.eff.window as u64).max().unwrap_or(1);
         // Pause at half the smallest target; the guard below keeps the
         // worst overshoot (one window past the first thread to arrive)
         // strictly inside every target's common prefix.
-        let pause = if cfg.use_legacy_scheduler || c_min < 2 * max_window { 0 } else { c_min / 2 };
+        let pause = if legacy || c_min < 2 * max_window { 0 } else { c_min / 2 };
         let mut memo_ok = pause > 0 && !base.threads.is_empty();
         if memo_ok {
             base.ensure_started();
@@ -1125,7 +1156,7 @@ impl Runner {
                 while f.step_one() {}
                 f.finish()
             } else {
-                Runner::new(fabric, threads, MsgRateConfig { msgs_per_thread: target, ..cfg }).run()
+                mk(target).run()
             };
             scratch_steps += r.sched_steps;
             memo_steps += r.sched_steps - prefix_steps;

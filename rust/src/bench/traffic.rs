@@ -108,6 +108,34 @@ impl TrafficModel {
         }
     }
 
+    /// Long-run mean inter-arrival gap, ns — the analytic rate the SLO
+    /// capacity search reports beside its measured percentiles.
+    ///
+    /// * Poisson: the mean parameter itself.
+    /// * ON-OFF: a burst of `burst` messages spans `burst` gaps, one of
+    ///   which carries the mean OFF period → `on + off / burst`.
+    /// * Pareto: the sampler clamps (not truncates) at `H = cap × L`
+    ///   ([`crate::sim::rng::XorShift::pareto_f64`]), so the mean is
+    ///   `E[min(X, H)] = αL^α/(α−1) · (L^{1−α} − H^{1−α}) + H(L/H)^α`.
+    pub fn mean_gap_ns(&self) -> f64 {
+        match *self {
+            TrafficModel::Poisson { mean_gap_ns } => mean_gap_ns,
+            TrafficModel::OnOff { burst, on_gap_ns, off_mean_ns } => {
+                on_gap_ns + off_mean_ns / burst as f64
+            }
+            TrafficModel::Pareto { scale_ns } => {
+                let (a, l, h) = (PARETO_ALPHA, scale_ns, PARETO_CAP * scale_ns);
+                a * l.powf(a) / (a - 1.0) * (l.powf(1.0 - a) - h.powf(1.0 - a))
+                    + h * (l / h).powf(a)
+            }
+        }
+    }
+
+    /// Long-run offered load of one stream, messages per second.
+    pub fn offered_per_sec(&self) -> f64 {
+        1e9 / self.mean_gap_ns()
+    }
+
     /// Draw the next inter-arrival gap in ns. `burst_pos` is the
     /// caller-held position within the current ON burst (ignored by the
     /// memoryless models).
@@ -284,6 +312,49 @@ mod tests {
         assert!(gb < ga, "scaled(4) arrivals must run ahead: {gb} vs {ga}");
         let ratio = ga as f64 / gb as f64;
         assert!((ratio - 4.0).abs() < 0.1, "expected ~4x speedup, got {ratio}");
+    }
+
+    #[test]
+    fn mean_gap_is_analytic_for_the_closed_forms() {
+        assert_eq!(TrafficModel::Poisson { mean_gap_ns: 400.0 }.mean_gap_ns(), 400.0);
+        // A burst of 8 spans 8 gaps, one carrying the OFF period:
+        // 100 + 2400/8 = 400 — the sweep's ON-OFF model matches its
+        // Poisson sibling's long-run rate by construction.
+        let onoff = TrafficModel::OnOff { burst: 8, on_gap_ns: 100.0, off_mean_ns: 2400.0 };
+        assert_eq!(onoff.mean_gap_ns(), 400.0);
+        assert_eq!(onoff.offered_per_sec(), 2.5e6);
+        // Clamped Pareto with α = 1.5, cap = 256: E = 2.875 × scale.
+        let pareto = TrafficModel::Pareto { scale_ns: 200.0 };
+        assert!((pareto.mean_gap_ns() - 2.875 * 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_gap_matches_the_sampler_empirically() {
+        for model in [
+            TrafficModel::Poisson { mean_gap_ns: 300.0 },
+            TrafficModel::OnOff { burst: 4, on_gap_ns: 50.0, off_mean_ns: 1000.0 },
+            TrafficModel::Pareto { scale_ns: 150.0 },
+        ] {
+            let n = 100_000u32;
+            let mut g = ArrivalGen::new(StreamTraffic { model, seed: 9 });
+            let span_ps = g.gate(n) as f64;
+            let measured_ns = span_ps / 1000.0 / n as f64;
+            let analytic = model.mean_gap_ns();
+            let err = (measured_ns - analytic).abs() / analytic;
+            assert!(err < 0.05, "{model}: measured {measured_ns:.1} vs analytic {analytic:.1}");
+        }
+    }
+
+    #[test]
+    fn scaling_divides_the_mean_gap() {
+        for model in [
+            TrafficModel::Poisson { mean_gap_ns: 400.0 },
+            TrafficModel::OnOff { burst: 8, on_gap_ns: 100.0, off_mean_ns: 2400.0 },
+            TrafficModel::Pareto { scale_ns: 200.0 },
+        ] {
+            let scaled = model.scaled(4.0).mean_gap_ns();
+            assert!((scaled - model.mean_gap_ns() / 4.0).abs() < 1e-9, "{model}");
+        }
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Flag parsing for the `scep` binary, factored out of `main` so every
+//! error path is unit-testable. Each parser returns `Result<_, String>`
+//! with a message that names the offending flag and lists the valid
+//! values; `main` prints the message and exits nonzero — no silent
+//! fallback to a default on a malformed value, and no panicking
+//! `expect` between the user and a diagnostic.
+
+use crate::bench::TrafficModel;
+use crate::coordinator::JobSpec;
+use crate::endpoints::{Category, EndpointPolicy};
+use crate::vci::MapStrategy;
+
+/// The value following `name`, if the flag is present.
+pub fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// `--map <strategy>`; `default` when absent.
+pub fn parse_map(args: &[String], default: MapStrategy) -> Result<MapStrategy, String> {
+    match flag_value(args, "--map") {
+        None => Ok(default),
+        Some(s) => MapStrategy::parse(&s)
+            .map_err(|e| format!("bad --map '{s}': {e} (valid: {})", MapStrategy::VALID)),
+    }
+}
+
+/// `--pool <count>`; `Ok(None)` when absent.
+pub fn parse_pool(args: &[String]) -> Result<Option<u32>, String> {
+    match flag_value(args, "--pool") {
+        None => Ok(None),
+        Some(v) => match v.parse::<u32>() {
+            Ok(p) if p >= 1 => Ok(Some(p)),
+            _ => Err(format!("bad --pool '{v}' (expect an endpoint count >= 1)")),
+        },
+    }
+}
+
+/// `--workers <count>`; `Ok(None)` when absent. The caller applies the
+/// override (`par::set_workers_override`) — parsing stays side-effect
+/// free so it can be tested.
+pub fn parse_workers(args: &[String]) -> Result<Option<usize>, String> {
+    match flag_value(args, "--workers") {
+        None => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => Err(format!("bad --workers '{v}' (expect a worker count >= 1)")),
+        },
+    }
+}
+
+/// `--policy <spec>` / `--category <cat>` into a policy plus a display
+/// label. `--policy` wins when both are given; it takes the full
+/// grammar plus the bare preset names (`scalable`, category labels).
+/// Unknown categories are an error listing the valid names — not a
+/// silent fall-through to the default.
+pub fn parse_policy(
+    args: &[String],
+    default: Category,
+) -> Result<(EndpointPolicy, String), String> {
+    if let Some(spec) = flag_value(args, "--policy") {
+        return EndpointPolicy::parse(&spec)
+            .map(|p| (p, spec.clone()))
+            .map_err(|e| format!("bad --policy '{spec}': {e}"));
+    }
+    let cat = match flag_value(args, "--category") {
+        None => default,
+        Some(c) => Category::parse(&c).ok_or_else(|| {
+            format!("bad --category '{c}' (valid: {})", category_names().join(", "))
+        })?,
+    };
+    Ok((EndpointPolicy::preset(cat), cat.to_string()))
+}
+
+/// The paper-category labels, for error messages and usage text.
+pub fn category_names() -> Vec<String> {
+    Category::ALL.iter().map(|c| c.to_string()).collect()
+}
+
+/// `--<name> <u32>`; `default` when absent, error below `min` or on a
+/// malformed count.
+pub fn parse_u32(args: &[String], name: &str, default: u32, min: u32) -> Result<u32, String> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => match v.parse::<u32>() {
+            Ok(n) if n >= min => Ok(n),
+            _ => Err(format!("bad {name} '{v}' (expect an integer >= {min})")),
+        },
+    }
+}
+
+/// `--<name> <u64>`; `default` when absent.
+pub fn parse_u64(args: &[String], name: &str, default: u64, min: u64) -> Result<u64, String> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => match v.parse::<u64>() {
+            Ok(n) if n >= min => Ok(n),
+            _ => Err(format!("bad {name} '{v}' (expect an integer >= {min})")),
+        },
+    }
+}
+
+/// `--<name> <f64>`; `default` when absent, error on non-finite or
+/// negative values (tolerances are percentages).
+pub fn parse_f64(args: &[String], name: &str, default: f64) -> Result<f64, String> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => match v.parse::<f64>() {
+            Ok(x) if x.is_finite() && x >= 0.0 => Ok(x),
+            _ => Err(format!("bad {name} '{v}' (expect a percentage >= 0)")),
+        },
+    }
+}
+
+/// `--spec P.T`; `default` when absent.
+pub fn parse_spec(args: &[String], default: JobSpec) -> Result<JobSpec, String> {
+    match flag_value(args, "--spec") {
+        None => Ok(default),
+        Some(s) => JobSpec::parse(&s)
+            .ok_or_else(|| format!("bad --spec '{s}' (expect P.T, e.g. 4.4)")),
+    }
+}
+
+/// `--traffic <model>`; `default` when absent.
+pub fn parse_traffic(args: &[String], default: TrafficModel) -> Result<TrafficModel, String> {
+    match flag_value(args, "--traffic") {
+        None => Ok(default),
+        Some(s) => TrafficModel::parse(&s)
+            .map_err(|e| format!("bad --traffic '{s}': {e} (valid: {})", TrafficModel::VALID)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn map_rejects_unknown_strategy_listing_valid() {
+        let e = parse_map(&args(&["--map", "zigzag"]), MapStrategy::RoundRobin).unwrap_err();
+        assert!(e.contains("--map 'zigzag'"), "{e}");
+        assert!(e.contains("rr"), "must list the valid strategies: {e}");
+        assert_eq!(
+            parse_map(&args(&[]), MapStrategy::Hashed).unwrap(),
+            MapStrategy::Hashed,
+            "absent flag takes the default"
+        );
+    }
+
+    #[test]
+    fn pool_rejects_zero_and_garbage() {
+        assert!(parse_pool(&args(&["--pool", "0"])).is_err());
+        assert!(parse_pool(&args(&["--pool", "many"])).is_err());
+        assert_eq!(parse_pool(&args(&["--pool", "5"])).unwrap(), Some(5));
+        assert_eq!(parse_pool(&args(&[])).unwrap(), None);
+    }
+
+    #[test]
+    fn workers_rejects_zero_without_side_effects() {
+        assert!(parse_workers(&args(&["--workers", "0"])).is_err());
+        assert!(parse_workers(&args(&["--workers", "x"])).is_err());
+        assert_eq!(parse_workers(&args(&["--workers", "3"])).unwrap(), Some(3));
+        assert_eq!(parse_workers(&args(&[])).unwrap(), None);
+    }
+
+    #[test]
+    fn category_errors_list_the_valid_names() {
+        let e = parse_policy(&args(&["--category", "warp9"]), Category::Dynamic).unwrap_err();
+        assert!(e.contains("--category 'warp9'"), "{e}");
+        for c in category_names() {
+            assert!(e.contains(&c), "error must list '{c}': {e}");
+        }
+        let (_, label) = parse_policy(&args(&[]), Category::Dynamic).unwrap();
+        assert_eq!(label, Category::Dynamic.to_string());
+    }
+
+    #[test]
+    fn policy_grammar_errors_surface() {
+        assert!(parse_policy(&args(&["--policy", "ctx=banana"]), Category::Dynamic).is_err());
+        let (p, label) = parse_policy(&args(&["--policy", "scalable"]), Category::Dynamic).unwrap();
+        assert_eq!(label, "scalable");
+        assert_eq!(p, EndpointPolicy::scalable());
+    }
+
+    #[test]
+    fn numeric_flags_no_longer_fall_back_silently() {
+        // The old CLI turned `--threads banana` into the default; now
+        // it is an error naming the flag.
+        let e = parse_u32(&args(&["--threads", "banana"]), "--threads", 16, 1).unwrap_err();
+        assert!(e.contains("--threads 'banana'"), "{e}");
+        assert!(parse_u32(&args(&["--threads", "0"]), "--threads", 16, 1).is_err());
+        assert_eq!(parse_u32(&args(&[]), "--threads", 16, 1).unwrap(), 16);
+        assert_eq!(parse_u64(&args(&["--msgs", "512"]), "--msgs", 1024, 1).unwrap(), 512);
+        assert!(parse_u64(&args(&["--msgs", "-4"]), "--msgs", 1024, 1).is_err());
+    }
+
+    #[test]
+    fn tolerance_flag_rejects_negatives_and_garbage() {
+        assert!(parse_f64(&args(&["--tol", "-1"]), "--tol", 10.0).is_err());
+        assert!(parse_f64(&args(&["--tol", "inf"]), "--tol", 10.0).is_err());
+        assert_eq!(parse_f64(&args(&["--tol", "12.5"]), "--tol", 10.0).unwrap(), 12.5);
+        assert_eq!(parse_f64(&args(&[]), "--tol", 10.0).unwrap(), 10.0);
+    }
+
+    #[test]
+    fn spec_flag_errors_name_the_shape() {
+        let e = parse_spec(&args(&["--spec", "4x4"]), JobSpec::new(4, 4)).unwrap_err();
+        assert!(e.contains("--spec '4x4'"), "{e}");
+        assert!(e.contains("P.T"), "{e}");
+        assert_eq!(parse_spec(&args(&[]), JobSpec::new(2, 8)).unwrap(), JobSpec::new(2, 8));
+    }
+
+    #[test]
+    fn traffic_flag_lists_models() {
+        let e = parse_traffic(
+            &args(&["--traffic", "tsunami"]),
+            TrafficModel::Poisson { mean_gap_ns: 400.0 },
+        )
+        .unwrap_err();
+        assert!(e.contains("--traffic 'tsunami'"), "{e}");
+        assert!(e.contains("poisson"), "{e}");
+    }
+}

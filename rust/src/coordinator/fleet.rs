@@ -28,11 +28,11 @@
 //! `(fleet seed, rank, thread, phase)`.
 
 use crate::bench::{MsgRateConfig, Runner, StreamTraffic, TrafficModel};
-use crate::endpoints::{EndpointPolicy, ThreadEndpoint};
+use crate::endpoints::{EndpointPolicy, ResourceUsage, ThreadEndpoint};
 use crate::par::par_map;
 use crate::sim::stats::Sample;
 use crate::sim::{to_secs, Time};
-use crate::vci::MapStrategy;
+use crate::vci::{EndpointPool, MapStrategy};
 
 use super::comm::Universe;
 use super::job::{HotStreams, Job, JobSpec};
@@ -124,13 +124,19 @@ pub struct FleetCell {
     pub rehomed: u64,
     /// Adaptive-mapping stream migrations, fleet-wide.
     pub migrations: u64,
+    /// Program phases executed fleet-wide (`MsgRateResult::sched_steps`)
+    /// — the execution-strategy-*independent* work count: identical
+    /// whether ranks ran sequentially or partitioned, unlike
+    /// `sched_events`, so it belongs in the determinism contract.
+    pub sched_steps: u64,
 }
 
 /// Deterministic per-stream arrival seed: a SplitMix64-style mix of the
 /// fleet seed with the stream coordinates, so every stream gets an
 /// independent-looking sequence and the whole fleet re-seeds from one
-/// `--seed` / `SCEP_FUZZ_SEED` value.
-fn mix(seed: u64, rank: u64, thread: u64, phase: u64) -> u64 {
+/// `--seed` / `SCEP_FUZZ_SEED` value. Public so the experiment
+/// subsystem's SLO probe seeds its streams exactly like a fleet rank.
+pub fn stream_seed(seed: u64, rank: u64, thread: u64, phase: u64) -> u64 {
     let mut x = seed
         ^ rank.wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ thread.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
@@ -144,11 +150,11 @@ fn mix(seed: u64, rank: u64, thread: u64, phase: u64) -> u64 {
 
 /// Per-stream open-loop traffic for one rank: hot streams run the model
 /// at `weight`-times the rate (gaps divided), tail streams run it as-is.
-fn traffic_for(cfg: &FleetConfig, rank: u32, phase: u64) -> Vec<StreamTraffic> {
+pub fn stream_traffic(cfg: &FleetConfig, rank: u32, phase: u64) -> Vec<StreamTraffic> {
     (0..cfg.streams)
         .map(|t| StreamTraffic {
             model: cfg.model.scaled(cfg.hot.weight_of(t) as f64),
-            seed: mix(cfg.seed, rank as u64, t as u64, phase),
+            seed: stream_seed(cfg.seed, rank as u64, t as u64, phase),
         })
         .collect()
 }
@@ -163,6 +169,7 @@ struct RankOutcome {
     latency: Sample,
     rehomed: u64,
     migrations: u64,
+    sched_steps: u64,
 }
 
 /// Simulate one rank's open-loop run (with the failure event if this
@@ -188,9 +195,9 @@ fn simulate_rank(u: &Universe, cfg: &FleetConfig, rank: u32) -> RankOutcome {
         None => {
             let mut r = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
             r.set_msgs_targets(&full_eff);
-            r.set_open_loop(&traffic_for(cfg, rank, 0));
+            r.set_open_loop(&stream_traffic(cfg, rank, 0));
             let res = r.run_partitioned();
-            (target, (res.messages, res.duration, res.latency_sample, 0))
+            (target, (res.messages, res.duration, res.latency_sample, 0, res.sched_steps))
         }
         Some(k) => {
             // Phase 1: the first half of every stream's total (rounded
@@ -199,7 +206,7 @@ fn simulate_rank(u: &Universe, cfg: &FleetConfig, rank: u32) -> RankOutcome {
             let mut r1 = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
             r1.set_msgs_targets(&half);
             let half_eff = r1.msgs_targets();
-            r1.set_open_loop(&traffic_for(cfg, rank, 0));
+            r1.set_open_loop(&stream_traffic(cfg, rank, 0));
             let res1 = r1.run_partitioned();
             // The failure event: the slot dies, its streams re-home
             // onto survivors, the rank's routing is rebuilt.
@@ -220,21 +227,42 @@ fn simulate_rank(u: &Universe, cfg: &FleetConfig, rank: u32) -> RankOutcome {
             r2.set_msgs_targets(&rem);
             let admitted: u64 =
                 half_eff.iter().sum::<u64>() + r2.msgs_targets().iter().sum::<u64>();
-            r2.set_open_loop(&traffic_for(cfg, rank, 1));
+            r2.set_open_loop(&stream_traffic(cfg, rank, 1));
             let res2 = r2.run_partitioned();
             let mut latency = res1.latency_sample;
             latency.merge(&res2.latency_sample);
-            let combined =
-                (res1.messages + res2.messages, res1.duration + res2.duration, latency, moved);
+            let combined = (
+                res1.messages + res2.messages,
+                res1.duration + res2.duration,
+                latency,
+                moved,
+                res1.sched_steps + res2.sched_steps,
+            );
             (admitted, combined)
         }
     };
-    let (messages, duration, latency, rehomed) = outcome;
+    let (messages, duration, latency, rehomed, sched_steps) = outcome;
     // Zero message loss: every admitted message completed, and the
     // admitted set covers the full per-stream targets.
     assert_eq!(messages, admitted, "fleet rank {rank}: admitted messages went missing");
     assert!(messages >= target, "fleet rank {rank}: kill dropped targeted messages");
-    RankOutcome { messages, duration, latency, rehomed, migrations: rc.mapper.migrations() }
+    RankOutcome {
+        messages,
+        duration,
+        latency,
+        rehomed,
+        migrations: rc.mapper.migrations(),
+        sched_steps,
+    }
+}
+
+/// Per-rank endpoint-pool resource accounting for this config: what
+/// one rank's `pool` slots cost under `policy` (every rank is
+/// identical, so a fleet's total is `ranks ×` this). The experiment
+/// reports surface it beside the rates.
+pub fn rank_usage(cfg: &FleetConfig) -> crate::verbs::Result<ResourceUsage> {
+    let (fabric, pool) = EndpointPool::build_fresh(&cfg.policy, cfg.pool)?;
+    Ok(pool.usage(&fabric))
 }
 
 /// Run one fleet cell: launch the universe, fan the ranks out on the
@@ -252,12 +280,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetCell {
     let u = Universe::launch(job, 64).expect("fleet launch");
     let outcomes = par_map((0..cfg.ranks).collect(), |r| simulate_rank(&u, cfg, r));
     let mut sample = Sample::default();
-    let (mut messages, mut rehomed, mut migrations) = (0u64, 0u64, 0u64);
+    let (mut messages, mut rehomed, mut migrations, mut sched_steps) = (0u64, 0u64, 0u64, 0u64);
     let mut rate = 0.0f64;
     for o in &outcomes {
         messages += o.messages;
         rehomed += o.rehomed;
         migrations += o.migrations;
+        sched_steps += o.sched_steps;
         rate += o.messages as f64 / to_secs(o.duration);
         sample.merge(&o.latency);
     }
@@ -274,6 +303,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetCell {
         p999_ns: sample.percentile(99.9),
         rehomed,
         migrations,
+        sched_steps,
     }
 }
 
@@ -313,7 +343,8 @@ pub fn fleet_json_rows(cells: &[FleetCell]) -> String {
         s.push_str(&format!(
             "    {{\"model\": \"{}\", \"failure\": {}, \"ranks\": {}, \"streams\": {}, \
              \"pool\": {}, \"messages\": {}, \"rate_mmsgs\": {:.4}, \"p50_ns\": {:.3}, \
-             \"p99_ns\": {:.3}, \"p999_ns\": {:.3}, \"rehomed\": {}, \"migrations\": {}}}{sep}\n",
+             \"p99_ns\": {:.3}, \"p999_ns\": {:.3}, \"rehomed\": {}, \"migrations\": {}, \
+             \"sched_steps\": {}}}{sep}\n",
             c.model,
             c.failure,
             c.ranks,
@@ -326,6 +357,7 @@ pub fn fleet_json_rows(cells: &[FleetCell]) -> String {
             c.p999_ns,
             c.rehomed,
             c.migrations,
+            c.sched_steps,
         ));
     }
     s.push_str("  ]");
@@ -388,12 +420,12 @@ mod tests {
 
     #[test]
     fn mix_separates_streams_and_phases() {
-        let a = mix(1, 0, 0, 0);
-        assert_ne!(a, mix(1, 0, 0, 1), "phases must reseed");
-        assert_ne!(a, mix(1, 0, 1, 0), "threads must reseed");
-        assert_ne!(a, mix(1, 1, 0, 0), "ranks must reseed");
-        assert_ne!(a, mix(2, 0, 0, 0), "the fleet seed must matter");
-        assert_eq!(a, mix(1, 0, 0, 0), "pure function");
+        let a = stream_seed(1, 0, 0, 0);
+        assert_ne!(a, stream_seed(1, 0, 0, 1), "phases must reseed");
+        assert_ne!(a, stream_seed(1, 0, 1, 0), "threads must reseed");
+        assert_ne!(a, stream_seed(1, 1, 0, 0), "ranks must reseed");
+        assert_ne!(a, stream_seed(2, 0, 0, 0), "the fleet seed must matter");
+        assert_eq!(a, stream_seed(1, 0, 0, 0), "pure function");
     }
 
     #[test]
@@ -421,6 +453,7 @@ mod tests {
             p999_ns: 3000.0,
             rehomed: 4,
             migrations: 0,
+            sched_steps: 8192,
         }
     }
 
@@ -431,6 +464,7 @@ mod tests {
         assert!(s.ends_with(']'));
         assert_eq!(s.matches("\"model\"").count(), 2);
         assert!(s.contains("\"p999_ns\": 3000.000"));
+        assert!(s.contains("\"sched_steps\": 8192"));
         assert!(s.contains("},\n"), "cells are comma-separated");
     }
 

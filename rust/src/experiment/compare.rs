@@ -1,0 +1,254 @@
+//! `scep compare a.json b.json`: row-by-row report diffing with
+//! tolerance bands. The baseline report carries its own gate width
+//! (`config.tol_pct`), so CI workflows never hardcode a tolerance.
+//!
+//! Semantics:
+//! * rows match by label, metrics by name; a row or metric present on
+//!   one side only is a breach (shape changes never pass silently);
+//! * the band is relative: `|b - a| / |a| * 100 <= tol_pct` passes, and
+//!   the comparison is **inclusive** — a delta exactly at the band is
+//!   inside it;
+//! * a zero baseline has no relative scale: `b == a == 0` passes,
+//!   any nonzero `b` against a zero `a` breaches (delta `inf`);
+//! * wallclock (when both reports carry it) is one-sided with its own
+//!   band: only `b` *slower* than `a` by more than `wallclock_tol_pct`
+//!   breaches — a faster run is never a regression.
+
+use crate::report::Table;
+
+use super::json::Json;
+use super::report::Report;
+
+/// One compared metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricDiff {
+    pub row: String,
+    pub metric: String,
+    pub a: f64,
+    pub b: f64,
+    /// Relative delta, percent; `f64::INFINITY` for nonzero-vs-zero.
+    pub delta_pct: f64,
+    pub breach: bool,
+}
+
+/// The full diff: every matched metric, shape notes (missing rows or
+/// metrics), and the breach count that drives the exit code.
+#[derive(Debug, Clone)]
+pub struct CompareOutcome {
+    pub diffs: Vec<MetricDiff>,
+    pub notes: Vec<String>,
+    pub breaches: usize,
+    pub tol_pct: f64,
+    pub wallclock_tol_pct: f64,
+}
+
+/// Tolerances a baseline report asks for: its config's `tol_pct` /
+/// `wallclock_tol_pct`, or the subsystem defaults when absent.
+pub fn default_tols(baseline: &Report) -> (f64, f64) {
+    let read = |k: &str, d: f64| baseline.config.get(k).and_then(Json::as_f64).unwrap_or(d);
+    (read("tol_pct", 10.0), read("wallclock_tol_pct", 50.0))
+}
+
+/// Diff `b` against baseline `a` with inclusive relative bands.
+pub fn compare(a: &Report, b: &Report, tol_pct: f64, wallclock_tol_pct: f64) -> CompareOutcome {
+    let mut out = CompareOutcome {
+        diffs: Vec::new(),
+        notes: Vec::new(),
+        breaches: 0,
+        tol_pct,
+        wallclock_tol_pct,
+    };
+    if a.seed != b.seed {
+        out.notes.push(format!("note: seeds differ (a: {}, b: {})", a.seed, b.seed));
+    }
+    for ra in &a.rows {
+        let Some(rb) = b.rows.iter().find(|r| r.label == ra.label) else {
+            out.notes.push(format!("breach: row \"{}\" missing from b", ra.label));
+            out.breaches += 1;
+            continue;
+        };
+        for (name, va) in &ra.metrics {
+            let Some(vb) = rb.get(name) else {
+                out.notes
+                    .push(format!("breach: metric \"{}\" of row \"{}\" missing from b", name, ra.label));
+                out.breaches += 1;
+                continue;
+            };
+            let delta_pct = if *va == 0.0 {
+                if vb == 0.0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                (vb - va).abs() / va.abs() * 100.0
+            };
+            let breach = delta_pct > tol_pct;
+            if breach {
+                out.breaches += 1;
+            }
+            out.diffs.push(MetricDiff {
+                row: ra.label.clone(),
+                metric: name.clone(),
+                a: *va,
+                b: vb,
+                delta_pct,
+                breach,
+            });
+        }
+        for (name, _) in &rb.metrics {
+            if ra.get(name).is_none() {
+                out.notes
+                    .push(format!("breach: metric \"{}\" of row \"{}\" new in b", name, ra.label));
+                out.breaches += 1;
+            }
+        }
+    }
+    for rb in &b.rows {
+        if !a.rows.iter().any(|r| r.label == rb.label) {
+            out.notes.push(format!("breach: row \"{}\" new in b", rb.label));
+            out.breaches += 1;
+        }
+    }
+    if let (Some(wa), Some(wb)) = (a.wallclock_s, b.wallclock_s) {
+        let slower_pct = if wa > 0.0 { (wb - wa) / wa * 100.0 } else { 0.0 };
+        let breach = slower_pct > wallclock_tol_pct;
+        if breach {
+            out.breaches += 1;
+        }
+        out.diffs.push(MetricDiff {
+            row: "(report)".to_string(),
+            metric: "wallclock_s".to_string(),
+            a: wa,
+            b: wb,
+            delta_pct: slower_pct.max(0.0),
+            breach,
+        });
+    }
+    out
+}
+
+impl CompareOutcome {
+    pub fn ok(&self) -> bool {
+        self.breaches == 0
+    }
+
+    /// Render the diff for the terminal / CI log.
+    pub fn table(&self) -> Table {
+        let title = format!("compare (tol {}%, wallclock {}%)", self.tol_pct, self.wallclock_tol_pct);
+        let mut t = Table::new(&title, &["row", "metric", "a", "b", "delta%", "ok"]);
+        for d in &self.diffs {
+            let delta = if d.delta_pct.is_finite() {
+                format!("{:.2}", d.delta_pct)
+            } else {
+                "inf".to_string()
+            };
+            t.row(vec![
+                d.row.clone(),
+                d.metric.clone(),
+                format!("{:.4}", d.a),
+                format!("{:.4}", d.b),
+                delta,
+                if d.breach { "BREACH".to_string() } else { "ok".to_string() },
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::report::ReportRow;
+    use super::*;
+
+    fn report(rows: Vec<ReportRow>) -> Report {
+        Report {
+            name: "t".into(),
+            kind: "fleet".into(),
+            seed: 1,
+            config: Json::Obj(vec![("tol_pct".into(), Json::Num(10.0))]),
+            wallclock_s: None,
+            rows,
+        }
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let a = report(vec![ReportRow::new("x").metric("rate", 2.0)]);
+        let out = compare(&a, &a.clone(), 10.0, 50.0);
+        assert!(out.ok());
+        assert_eq!(out.diffs.len(), 1);
+        assert_eq!(out.diffs[0].delta_pct, 0.0);
+    }
+
+    #[test]
+    fn delta_beyond_the_band_breaches() {
+        let a = report(vec![ReportRow::new("x").metric("rate", 100.0)]);
+        let b = report(vec![ReportRow::new("x").metric("rate", 85.0)]);
+        let out = compare(&a, &b, 10.0, 50.0);
+        assert_eq!(out.breaches, 1, "15% against a 10% band");
+        assert!(out.diffs[0].breach);
+    }
+
+    #[test]
+    fn delta_exactly_at_the_band_passes() {
+        let a = report(vec![ReportRow::new("x").metric("rate", 100.0)]);
+        let b = report(vec![ReportRow::new("x").metric("rate", 110.0)]);
+        let out = compare(&a, &b, 10.0, 50.0);
+        assert!(out.ok(), "inclusive band: delta == tol is inside");
+        assert_eq!(out.diffs[0].delta_pct, 10.0);
+    }
+
+    #[test]
+    fn zero_baselines_compare_exactly() {
+        let a = report(vec![ReportRow::new("x").metric("rehomed", 0.0).metric("rate", 1.0)]);
+        let same = compare(&a, &a.clone(), 10.0, 50.0);
+        assert!(same.ok(), "0 == 0 passes");
+        let b = report(vec![ReportRow::new("x").metric("rehomed", 1.0).metric("rate", 1.0)]);
+        let out = compare(&a, &b, 10.0, 50.0);
+        assert_eq!(out.breaches, 1, "nonzero against a zero baseline breaches");
+        assert!(out.diffs[0].delta_pct.is_infinite());
+    }
+
+    #[test]
+    fn missing_and_new_rows_and_metrics_breach() {
+        let a = report(vec![
+            ReportRow::new("x").metric("rate", 1.0).metric("p99", 2.0),
+            ReportRow::new("gone").metric("rate", 1.0),
+        ]);
+        let b = report(vec![
+            ReportRow::new("x").metric("rate", 1.0).metric("extra", 3.0),
+            ReportRow::new("fresh").metric("rate", 1.0),
+        ]);
+        let out = compare(&a, &b, 10.0, 50.0);
+        // missing row "gone", missing metric "p99", new metric "extra",
+        // new row "fresh".
+        assert_eq!(out.breaches, 4);
+        assert!(!out.ok());
+    }
+
+    #[test]
+    fn wallclock_is_one_sided() {
+        let mut a = report(vec![]);
+        let mut b = report(vec![]);
+        a.wallclock_s = Some(10.0);
+        b.wallclock_s = Some(4.0);
+        assert!(compare(&a, &b, 10.0, 50.0).ok(), "faster is never a regression");
+        b.wallclock_s = Some(16.0);
+        let out = compare(&a, &b, 10.0, 50.0);
+        assert_eq!(out.breaches, 1, "60% slower against a 50% band");
+        assert!(compare(&a, &b, 10.0, 60.0).ok(), "inclusive wallclock band");
+    }
+
+    #[test]
+    fn baseline_carries_its_own_tolerance() {
+        let a = report(vec![]);
+        assert_eq!(default_tols(&a), (10.0, 50.0));
+        let mut loose = a.clone();
+        loose.config = Json::Obj(vec![
+            ("tol_pct".into(), Json::Num(25.0)),
+            ("wallclock_tol_pct".into(), Json::Num(80.0)),
+        ]);
+        assert_eq!(default_tols(&loose), (25.0, 80.0));
+    }
+}

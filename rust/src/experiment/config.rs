@@ -1,0 +1,592 @@
+//! Experiment configs: an experiment is *data*. A JSON file names a
+//! workload kind (`figure` | `fleet` | `pool-sweep`) plus the knobs the
+//! CLI used to take as flags — policy, pool, map, threads, ranks, msgs,
+//! traffic, kill, hot, seed, repeat — and the report echoes the parsed
+//! config back in canonical form so any run is reproducible from its
+//! report alone.
+//!
+//! Every value parses through the same grammars the CLI uses
+//! ([`EndpointPolicy::parse`], [`MapStrategy::parse`],
+//! [`TrafficModel::parse`]), and every error lists the valid values —
+//! a config typo exits nonzero with a usable message, never a panic.
+
+use crate::bench::TrafficModel;
+use crate::coordinator::{FleetConfig, HotStreams, KillSpec};
+use crate::endpoints::EndpointPolicy;
+use crate::figures;
+use crate::vci::MapStrategy;
+
+use super::json::Json;
+
+/// What a config runs. `Figure` re-runs a named figure table; `Fleet`
+/// drives [`crate::coordinator::run_fleet`]; `PoolSweep` walks the
+/// rate-vs-resources frontier over pool sizes × map strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Figure,
+    Fleet,
+    PoolSweep,
+}
+
+impl WorkloadKind {
+    pub const VALID: &str = "figure, fleet, pool-sweep";
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "figure" => Ok(WorkloadKind::Figure),
+            "fleet" => Ok(WorkloadKind::Fleet),
+            "pool-sweep" => Ok(WorkloadKind::PoolSweep),
+            _ => Err(format!("bad \"kind\" '{s}' (valid: {})", Self::VALID)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WorkloadKind::Figure => "figure",
+            WorkloadKind::Fleet => "fleet",
+            WorkloadKind::PoolSweep => "pool-sweep",
+        }
+    }
+}
+
+/// The tail-latency metric an SLO bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloMetric {
+    P50,
+    P99,
+    P999,
+}
+
+impl SloMetric {
+    pub const VALID: &str = "p50, p99, p999";
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "p50" => Ok(SloMetric::P50),
+            "p99" => Ok(SloMetric::P99),
+            "p999" => Ok(SloMetric::P999),
+            _ => Err(format!("bad \"slo.metric\" '{s}' (valid: {})", Self::VALID)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SloMetric::P50 => "p50",
+            SloMetric::P99 => "p99",
+            SloMetric::P999 => "p999",
+        }
+    }
+}
+
+/// The closed-loop capacity question: what open-loop arrival rate holds
+/// `metric <= bound_ns`? The search scales the config's traffic model
+/// by a rate multiplier in `[lo_mult, ..)` — see [`super::slo`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub metric: SloMetric,
+    /// Sojourn-latency bound, nanoseconds.
+    pub bound_ns: f64,
+    /// Bisection probes after the bracketing phase.
+    pub probes: u32,
+    /// Lowest rate multiplier considered (the feasibility floor).
+    pub lo_mult: f64,
+    /// First bracketing probe; doubled until the bound breaches.
+    pub hi_mult: f64,
+}
+
+/// A parsed, validated experiment. Field defaults mirror the CLI /
+/// [`FleetConfig`] defaults so a minimal config (`name` + `kind`) runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub description: String,
+    pub kind: WorkloadKind,
+    /// Figure name (kind=figure), from [`figures::ALL_FIGURES`].
+    pub figure: Option<String>,
+    /// Quick variant of figure workloads (same flag as `scep bench`).
+    pub quick: bool,
+    pub policy: EndpointPolicy,
+    /// Canonical policy spec (what `policy` parsed from; echoed back).
+    pub policy_spec: String,
+    /// Endpoint-pool slots per rank (kind=fleet).
+    pub pool: u32,
+    /// Pool sizes walked by kind=pool-sweep, largest first.
+    pub pools: Vec<u32>,
+    pub map: MapStrategy,
+    /// Streams in a pool-sweep cell / the SLO probe rank.
+    pub threads: u32,
+    pub ranks: u32,
+    pub streams: u32,
+    /// Messages per (tail) stream.
+    pub msgs: u64,
+    pub traffic: TrafficModel,
+    /// kind=fleet: run the full model × failure sweep instead of the
+    /// single configured cell.
+    pub sweep: bool,
+    pub kill: Option<KillSpec>,
+    pub hot: HotStreams,
+    pub seed: u64,
+    /// Repetitions at seed, seed+1, ...; each gets its own report rows.
+    pub repeat: u32,
+    /// `scep compare` tolerance band, percent, echoed into the report
+    /// so the baseline carries its own gate width.
+    pub tol_pct: f64,
+    /// One-sided wallclock regression band, percent.
+    pub wallclock_tol_pct: f64,
+    /// Record host wallclock in the report. Off by default: wallclock
+    /// is the one non-deterministic field, and the byte-identity
+    /// contract on repeated runs only holds without it.
+    pub record_wallclock: bool,
+    pub slo: Option<SloSpec>,
+}
+
+const VALID_KEYS: [&str; 23] = [
+    "name",
+    "description",
+    "kind",
+    "figure",
+    "quick",
+    "policy",
+    "pool",
+    "pools",
+    "map",
+    "threads",
+    "ranks",
+    "streams",
+    "msgs",
+    "traffic",
+    "sweep",
+    "kill",
+    "hot",
+    "seed",
+    "repeat",
+    "tol_pct",
+    "wallclock_tol_pct",
+    "record_wallclock",
+    "slo",
+];
+
+fn get<'a>(obj: &'a Json, key: &str) -> Option<&'a Json> {
+    obj.get(key).filter(|v| **v != Json::Null)
+}
+
+fn num_u64(obj: &Json, key: &str, default: u64, min: u64) -> Result<u64, String> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .filter(|&n| n >= min)
+            .ok_or_else(|| format!("bad \"{key}\" (expect an integer >= {min})")),
+    }
+}
+
+fn num_u32(obj: &Json, key: &str, default: u32, min: u32) -> Result<u32, String> {
+    num_u64(obj, key, default as u64, min as u64).and_then(|n| {
+        u32::try_from(n).map_err(|_| format!("bad \"{key}\" (expect an integer >= {min})"))
+    })
+}
+
+fn num_f64(obj: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x > 0.0)
+            .ok_or_else(|| format!("bad \"{key}\" (expect a number > 0)")),
+    }
+}
+
+fn boolean(obj: &Json, key: &str, default: bool) -> Result<bool, String> {
+    match get(obj, key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| format!("bad \"{key}\" (expect true or false)")),
+    }
+}
+
+fn string<'a>(obj: &'a Json, key: &str) -> Result<Option<&'a str>, String> {
+    match get(obj, key) {
+        None => Ok(None),
+        Some(v) => v.as_str().map(Some).ok_or_else(|| format!("bad \"{key}\" (expect a string)")),
+    }
+}
+
+fn check_keys(obj: &Json, valid: &[&str], scope: &str) -> Result<(), String> {
+    for (k, _) in obj.as_obj().unwrap() {
+        if !valid.contains(&k.as_str()) {
+            return Err(format!(
+                "unknown {scope}key \"{k}\" (valid: {})",
+                valid.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl ExperimentConfig {
+    /// Parse and validate a config document. Every error names the bad
+    /// key and lists the valid values for it.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        if v.as_obj().is_none() {
+            return Err("config must be a JSON object".to_string());
+        }
+        check_keys(v, &VALID_KEYS, "config ")?;
+        let name = string(v, "name")?
+            .ok_or("config needs a \"name\"")?
+            .to_string();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_') {
+            return Err(format!(
+                "bad \"name\" '{name}' (expect [A-Za-z0-9_-]+; it names the report files)"
+            ));
+        }
+        let kind = WorkloadKind::parse(string(v, "kind")?.ok_or("config needs a \"kind\"")?)?;
+        let description = string(v, "description")?.unwrap_or("").to_string();
+
+        let figure = string(v, "figure")?.map(str::to_string);
+        match (&figure, kind) {
+            (Some(f), WorkloadKind::Figure) if !figures::ALL_FIGURES.contains(&f.as_str()) => {
+                return Err(format!(
+                    "bad \"figure\" '{f}' (valid: {})",
+                    figures::ALL_FIGURES.join(", ")
+                ));
+            }
+            (None, WorkloadKind::Figure) => {
+                return Err(format!(
+                    "kind=figure needs a \"figure\" (valid: {})",
+                    figures::ALL_FIGURES.join(", ")
+                ));
+            }
+            (Some(_), k) if k != WorkloadKind::Figure => {
+                return Err("\"figure\" only applies to kind=figure".to_string());
+            }
+            _ => {}
+        }
+
+        let policy_spec = string(v, "policy")?.unwrap_or("scalable").to_string();
+        let policy = EndpointPolicy::parse(&policy_spec)
+            .map_err(|e| format!("bad \"policy\" '{policy_spec}': {e}"))?;
+        let map = match string(v, "map")? {
+            None => MapStrategy::Hashed,
+            Some(s) => MapStrategy::parse(s)
+                .map_err(|e| format!("bad \"map\" '{s}': {e} (valid: {})", MapStrategy::VALID))?,
+        };
+        let traffic = match string(v, "traffic")? {
+            None => TrafficModel::Poisson { mean_gap_ns: 400.0 },
+            Some(s) => TrafficModel::parse(s)
+                .map_err(|e| format!("bad \"traffic\": {e} (valid: {})", TrafficModel::VALID))?,
+        };
+
+        let threads = num_u32(v, "threads", 16, 1)?;
+        let ranks = num_u32(v, "ranks", 64, 1)?;
+        let streams = num_u32(v, "streams", 16, 1)?;
+        let msgs = num_u64(v, "msgs", 1024, 1)?;
+        let pool = num_u32(v, "pool", (streams / 4).max(2), 1)?;
+        let pools = match get(v, "pools") {
+            None => {
+                let mut ps = vec![threads, (threads / 2).max(1), (threads / 3).max(1)];
+                ps.dedup();
+                ps
+            }
+            Some(arr) => {
+                let xs = arr
+                    .as_arr()
+                    .ok_or("bad \"pools\" (expect an array of pool sizes)")?;
+                if xs.is_empty() {
+                    return Err("bad \"pools\" (expect at least one pool size)".to_string());
+                }
+                xs.iter()
+                    .map(|x| {
+                        x.as_u64()
+                            .filter(|&n| n >= 1)
+                            .and_then(|n| u32::try_from(n).ok())
+                            .ok_or_else(|| "bad \"pools\" (expect integers >= 1)".to_string())
+                    })
+                    .collect::<Result<Vec<u32>, String>>()?
+            }
+        };
+        let sweep = boolean(v, "sweep", false)?;
+        let quick = boolean(v, "quick", false)?;
+
+        let kill = match get(v, "kill") {
+            None => None,
+            Some(k) => {
+                if k.as_obj().is_none() {
+                    return Err("bad \"kill\" (expect {\"slot\": S, \"every\": N})".to_string());
+                }
+                check_keys(k, &["slot", "every"], "\"kill\" ")?;
+                let slot = num_u32(k, "slot", 0, 0)?;
+                let every = num_u32(k, "every", 1, 1)?;
+                if slot >= pool {
+                    return Err(format!(
+                        "bad \"kill.slot\" {slot} (the pool has slots 0..{pool})"
+                    ));
+                }
+                if pool < 2 {
+                    return Err("\"kill\" needs \"pool\" >= 2 (a slot must survive)".to_string());
+                }
+                Some(KillSpec { slot, every })
+            }
+        };
+
+        let hot = match get(v, "hot") {
+            None => HotStreams::new(4, 8, 8),
+            Some(h) => {
+                if h.as_obj().is_none() {
+                    return Err(
+                        "bad \"hot\" (expect {\"comms\": C, \"every\": N, \"weight\": W})"
+                            .to_string(),
+                    );
+                }
+                check_keys(h, &["comms", "every", "weight"], "\"hot\" ")?;
+                HotStreams::new(
+                    num_u32(h, "comms", 4, 1)?,
+                    num_u32(h, "every", 8, 1)?,
+                    num_u32(h, "weight", 8, 1)?,
+                )
+            }
+        };
+
+        let slo = match get(v, "slo") {
+            None => None,
+            Some(s) => {
+                if s.as_obj().is_none() {
+                    return Err(
+                        "bad \"slo\" (expect {\"metric\": \"p999\", \"bound_ns\": N, ...})"
+                            .to_string(),
+                    );
+                }
+                check_keys(s, &["metric", "bound_ns", "probes", "lo_mult", "hi_mult"], "\"slo\" ")?;
+                let metric = SloMetric::parse(
+                    string(s, "metric")?.ok_or("\"slo\" needs a \"metric\"")?,
+                )?;
+                let bound_ns = num_f64(s, "bound_ns", 0.0)?;
+                if bound_ns <= 0.0 {
+                    return Err("\"slo\" needs a \"bound_ns\" > 0".to_string());
+                }
+                let lo_mult = num_f64(s, "lo_mult", 0.25)?;
+                let hi_mult = num_f64(s, "hi_mult", 2.0)?;
+                if hi_mult <= lo_mult {
+                    return Err("bad \"slo\": hi_mult must exceed lo_mult".to_string());
+                }
+                Some(SloSpec {
+                    metric,
+                    bound_ns,
+                    probes: num_u32(s, "probes", 6, 1)?,
+                    lo_mult,
+                    hi_mult,
+                })
+            }
+        };
+        if slo.is_some() && kind == WorkloadKind::Figure {
+            return Err("\"slo\" applies to kind=fleet or kind=pool-sweep".to_string());
+        }
+        if map == MapStrategy::Dedicated {
+            let need = match kind {
+                WorkloadKind::Fleet => streams <= pool,
+                _ => true,
+            };
+            if !need {
+                return Err(format!(
+                    "map=dedicated needs pool >= streams ({pool} < {streams})"
+                ));
+            }
+        }
+
+        Ok(ExperimentConfig {
+            name,
+            description,
+            kind,
+            figure,
+            quick,
+            policy,
+            policy_spec,
+            pool,
+            pools,
+            map,
+            threads,
+            ranks,
+            streams,
+            msgs,
+            traffic,
+            sweep,
+            kill,
+            hot,
+            seed: num_u64(v, "seed", 1, 0)?,
+            repeat: num_u32(v, "repeat", 1, 1)?,
+            tol_pct: num_f64(v, "tol_pct", 10.0)?,
+            wallclock_tol_pct: num_f64(v, "wallclock_tol_pct", 50.0)?,
+            record_wallclock: boolean(v, "record_wallclock", false)?,
+            slo,
+        })
+    }
+
+    /// Canonical config echo: every knob, defaults included, in fixed
+    /// key order — the report's reproduction recipe. Round-trips:
+    /// `from_json(to_json(c)) == c`.
+    pub fn to_json(&self) -> Json {
+        let mut o: Vec<(String, Json)> = vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("description".into(), Json::Str(self.description.clone())),
+            ("kind".into(), Json::Str(self.kind.label().into())),
+        ];
+        if let Some(f) = &self.figure {
+            o.push(("figure".into(), Json::Str(f.clone())));
+        }
+        o.push(("quick".into(), Json::Bool(self.quick)));
+        o.push(("policy".into(), Json::Str(self.policy_spec.clone())));
+        o.push(("pool".into(), Json::Num(self.pool as f64)));
+        o.push((
+            "pools".into(),
+            Json::Arr(self.pools.iter().map(|&p| Json::Num(p as f64)).collect()),
+        ));
+        o.push(("map".into(), Json::Str(self.map.to_string())));
+        o.push(("threads".into(), Json::Num(self.threads as f64)));
+        o.push(("ranks".into(), Json::Num(self.ranks as f64)));
+        o.push(("streams".into(), Json::Num(self.streams as f64)));
+        o.push(("msgs".into(), Json::Num(self.msgs as f64)));
+        o.push(("traffic".into(), Json::Str(self.traffic.to_string())));
+        o.push(("sweep".into(), Json::Bool(self.sweep)));
+        o.push((
+            "kill".into(),
+            match self.kill {
+                None => Json::Null,
+                Some(k) => Json::Obj(vec![
+                    ("slot".into(), Json::Num(k.slot as f64)),
+                    ("every".into(), Json::Num(k.every as f64)),
+                ]),
+            },
+        ));
+        o.push((
+            "hot".into(),
+            Json::Obj(vec![
+                ("comms".into(), Json::Num(self.hot.comms as f64)),
+                ("every".into(), Json::Num(self.hot.every as f64)),
+                ("weight".into(), Json::Num(self.hot.weight as f64)),
+            ]),
+        ));
+        o.push(("seed".into(), Json::Num(self.seed as f64)));
+        o.push(("repeat".into(), Json::Num(self.repeat as f64)));
+        o.push(("tol_pct".into(), Json::Num(self.tol_pct)));
+        o.push(("wallclock_tol_pct".into(), Json::Num(self.wallclock_tol_pct)));
+        o.push(("record_wallclock".into(), Json::Bool(self.record_wallclock)));
+        if let Some(s) = self.slo {
+            o.push((
+                "slo".into(),
+                Json::Obj(vec![
+                    ("metric".into(), Json::Str(s.metric.label().into())),
+                    ("bound_ns".into(), Json::Num(s.bound_ns)),
+                    ("probes".into(), Json::Num(s.probes as f64)),
+                    ("lo_mult".into(), Json::Num(s.lo_mult)),
+                    ("hi_mult".into(), Json::Num(s.hi_mult)),
+                ]),
+            ));
+        }
+        Json::Obj(o)
+    }
+
+    /// The fleet run this config describes (kind=fleet), at `seed`.
+    pub fn fleet_config(&self, seed: u64) -> FleetConfig {
+        let mut fc = FleetConfig::new(self.ranks, self.streams);
+        fc.pool = self.pool;
+        fc.map = self.map;
+        fc.policy = self.policy;
+        fc.msgs_per_stream = self.msgs;
+        fc.hot = self.hot;
+        fc.model = self.traffic;
+        fc.seed = seed;
+        fc.kill = self.kill;
+        fc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(kind: &str) -> String {
+        format!("{{\"name\": \"t\", \"kind\": \"{kind}\"}}")
+    }
+
+    #[test]
+    fn minimal_fleet_config_gets_defaults() {
+        let c = ExperimentConfig::parse(&minimal("fleet")).unwrap();
+        assert_eq!(c.kind, WorkloadKind::Fleet);
+        assert_eq!(c.pool, 4, "streams/4 default");
+        assert_eq!(c.seed, 1);
+        assert_eq!(c.repeat, 1);
+        assert_eq!(c.tol_pct, 10.0);
+        assert!(!c.record_wallclock);
+        assert_eq!(c.traffic, TrafficModel::Poisson { mean_gap_ns: 400.0 });
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_with_the_valid_list() {
+        let e = ExperimentConfig::parse("{\"name\": \"t\", \"kind\": \"fleet\", \"poool\": 3}")
+            .unwrap_err();
+        assert!(e.contains("unknown config key \"poool\""), "{e}");
+        assert!(e.contains("pools"), "lists valid keys: {e}");
+    }
+
+    #[test]
+    fn bad_values_list_valid_values() {
+        for (doc, needle) in [
+            ("{\"name\": \"t\", \"kind\": \"x\"}", WorkloadKind::VALID),
+            ("{\"name\": \"t\", \"kind\": \"fleet\", \"map\": \"x\"}", MapStrategy::VALID),
+            ("{\"name\": \"t\", \"kind\": \"fleet\", \"traffic\": \"x\"}", "poisson:<mean_ns>"),
+            (
+                "{\"name\": \"t\", \"kind\": \"fleet\", \"slo\": {\"metric\": \"p12\", \
+                 \"bound_ns\": 1}}",
+                SloMetric::VALID,
+            ),
+            ("{\"name\": \"t\", \"kind\": \"figure\"}", "fig2"),
+        ] {
+            let e = ExperimentConfig::parse(doc).unwrap_err();
+            assert!(e.contains(needle), "{doc} -> {e}");
+        }
+        let e = ExperimentConfig::parse("{\"name\": \"t\", \"kind\": \"fleet\", \"policy\": \"x\"}")
+            .unwrap_err();
+        assert!(e.starts_with("bad \"policy\""), "{e}");
+    }
+
+    #[test]
+    fn kill_outside_the_pool_is_rejected() {
+        let e = ExperimentConfig::parse(
+            "{\"name\": \"t\", \"kind\": \"fleet\", \"pool\": 2, \"kill\": {\"slot\": 5}}",
+        )
+        .unwrap_err();
+        assert!(e.contains("slots 0..2"), "{e}");
+    }
+
+    #[test]
+    fn echo_round_trips_and_is_canonical() {
+        let doc = "{\"kind\":\"fleet\",\"name\":\"rt\",\"msgs\":512,\"kill\":{\"slot\":1,\
+                   \"every\":4},\"traffic\":\"pareto:200\",\"slo\":{\"metric\":\"p999\",\
+                   \"bound_ns\":50000},\"repeat\":2}";
+        let c = ExperimentConfig::parse(doc).unwrap();
+        let echo = c.to_json();
+        let c2 = ExperimentConfig::from_json(&echo).unwrap();
+        assert_eq!(c, c2, "from_json(to_json(c)) == c");
+        assert_eq!(c2.to_json().render(0), echo.render(0), "echo is a fixed point");
+    }
+
+    #[test]
+    fn fleet_config_mapping_carries_every_knob() {
+        let c = ExperimentConfig::parse(
+            "{\"name\": \"t\", \"kind\": \"fleet\", \"ranks\": 4, \"streams\": 8, \"pool\": 3, \
+             \"map\": \"rr\", \"msgs\": 512, \"traffic\": \"poisson:250\", \
+             \"hot\": {\"comms\": 2, \"every\": 4, \"weight\": 2}}",
+        )
+        .unwrap();
+        let fc = c.fleet_config(7);
+        assert_eq!((fc.ranks, fc.streams, fc.pool), (4, 8, 3));
+        assert_eq!(fc.map, MapStrategy::RoundRobin);
+        assert_eq!(fc.msgs_per_stream, 512);
+        assert_eq!(fc.model, TrafficModel::Poisson { mean_gap_ns: 250.0 });
+        assert_eq!(fc.seed, 7);
+        assert_eq!(fc.hot.weight, 2);
+    }
+}

@@ -1,0 +1,34 @@
+//! Experiments as *data*: a JSON config names a workload (a figure, a
+//! fleet run, or a pool sweep), pins its policy / pool / mapping /
+//! traffic / seed axes, and `scep experiment` turns it into a
+//! self-contained report — metrics, resource accounting, the seed, and
+//! the full config echoed back, serialized canonically so a fixed seed
+//! yields a byte-identical artifact. `scep compare` then diffs two such
+//! reports row-by-row under tolerance bands, which is what the CI perf
+//! gate runs against a committed baseline.
+//!
+//! Modules:
+//!
+//! * [`json`] — the dependency-free JSON value, parser, and canonical
+//!   writer every other piece rides on;
+//! * [`config`] — [`ExperimentConfig`]: schema, defaults, validation;
+//! * [`report`] — [`Report`]: rows of named metrics, canonical JSON and
+//!   markdown renderings;
+//! * [`run`] — [`run_experiment`]: config in, report out;
+//! * [`compare`] — [`compare`]: tolerance-banded report diffing;
+//! * [`slo`] — [`capacity_search`]: the closed-loop max-rate search
+//!   under a tail-latency bound.
+
+pub mod compare;
+pub mod config;
+pub mod json;
+pub mod report;
+pub mod run;
+pub mod slo;
+
+pub use compare::{compare, default_tols, CompareOutcome, MetricDiff};
+pub use config::{ExperimentConfig, SloMetric, SloSpec, WorkloadKind};
+pub use json::Json;
+pub use report::{Report, ReportRow};
+pub use run::run_experiment;
+pub use slo::{capacity_search, SloOutcome, SloProbe, SloProbeSpec};

@@ -1,0 +1,272 @@
+//! Self-contained experiment reports. A report is the whole record of a
+//! run: the canonical config echo (the reproduction recipe), the seed,
+//! and a flat list of labeled metric rows — rates, sojourn percentiles,
+//! resource usage, migration/rehome counts, sched-step accounting.
+//!
+//! The JSON form is the machine contract: metrics are written in
+//! shortest-round-trip form ([`super::json::format_num`]), so two runs
+//! of the same config at the same seed emit *byte-identical* files
+//! (wallclock, the one non-deterministic field, is only recorded when
+//! the config opts in). The markdown form renders the same rows through
+//! [`crate::report::Table`] for humans.
+
+use crate::report::Table;
+
+use super::json::{format_num, Json};
+
+/// The report schema version written to and required from the JSON.
+pub const SCHEMA: u64 = 1;
+
+/// One labeled result: a fleet cell, a pool-sweep cell, a figure-table
+/// row, or an SLO probe. Metric order is meaningful (it is the render
+/// order) and metric names are the compare keys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportRow {
+    pub label: String,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl ReportRow {
+    pub fn new(label: impl Into<String>) -> Self {
+        ReportRow { label: label.into(), metrics: Vec::new() }
+    }
+
+    pub fn metric(mut self, name: &str, value: f64) -> Self {
+        self.metrics.push((name.to_string(), value));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// A complete run record. `PartialEq` is the determinism contract:
+/// fixed config + fixed seed must reproduce an equal report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub name: String,
+    pub kind: String,
+    pub seed: u64,
+    /// Canonical config echo ([`super::ExperimentConfig::to_json`]).
+    pub config: Json,
+    /// Host wallclock of the workload, seconds — present only when the
+    /// config sets `record_wallclock` (it breaks byte-identity).
+    pub wallclock_s: Option<f64>,
+    pub rows: Vec<ReportRow>,
+}
+
+impl Report {
+    /// The JSON document, canonical form. Byte-stable for a
+    /// deterministic row set: round-trips through [`Report::parse`].
+    pub fn to_json_text(&self) -> String {
+        let mut o: Vec<(String, Json)> = vec![
+            ("schema".into(), Json::Num(SCHEMA as f64)),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("kind".into(), Json::Str(self.kind.clone())),
+            ("seed".into(), Json::Num(self.seed as f64)),
+        ];
+        if let Some(w) = self.wallclock_s {
+            o.push(("wallclock_s".into(), Json::Num(w)));
+        }
+        o.push(("config".into(), self.config.clone()));
+        o.push((
+            "rows".into(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            ("label".into(), Json::Str(r.label.clone())),
+                            (
+                                "metrics".into(),
+                                Json::Obj(
+                                    r.metrics
+                                        .iter()
+                                        .map(|(n, v)| (n.clone(), Json::Num(*v)))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        let mut text = Json::Obj(o).render(0);
+        text.push('\n');
+        text
+    }
+
+    /// Parse a report document (schema-checked).
+    pub fn parse(text: &str) -> Result<Report, String> {
+        let v = Json::parse(text)?;
+        if v.as_obj().is_none() {
+            return Err("report must be a JSON object".to_string());
+        }
+        match v.get("schema").and_then(Json::as_u64) {
+            Some(SCHEMA) => {}
+            other => {
+                return Err(format!(
+                    "unsupported report schema {other:?} (this build reads schema {SCHEMA})"
+                ))
+            }
+        }
+        let field = |k: &str| v.get(k).ok_or_else(|| format!("report is missing \"{k}\""));
+        let name = field("name")?.as_str().ok_or("bad report \"name\"")?.to_string();
+        let kind = field("kind")?.as_str().ok_or("bad report \"kind\"")?.to_string();
+        let seed = field("seed")?.as_u64().ok_or("bad report \"seed\"")?;
+        let config = field("config")?.clone();
+        let wallclock_s = match v.get("wallclock_s") {
+            None => None,
+            Some(w) => Some(w.as_f64().ok_or("bad report \"wallclock_s\"")?),
+        };
+        let mut rows = Vec::new();
+        for r in field("rows")?.as_arr().ok_or("bad report \"rows\"")? {
+            let label =
+                r.get("label").and_then(Json::as_str).ok_or("report row without a label")?;
+            let metrics = r
+                .get("metrics")
+                .and_then(Json::as_obj)
+                .ok_or("report row without metrics")?
+                .iter()
+                .map(|(n, x)| {
+                    x.as_f64()
+                        .map(|x| (n.clone(), x))
+                        .ok_or_else(|| format!("non-numeric metric \"{n}\""))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            rows.push(ReportRow { label: label.to_string(), metrics });
+        }
+        Ok(Report { name, kind, seed, config, wallclock_s, rows })
+    }
+
+    /// Rows grouped into [`Table`]s: consecutive rows sharing a metric
+    /// signature share a table (a fleet sweep is one table; SLO probe
+    /// rows get their own).
+    pub fn tables(&self) -> Vec<Table> {
+        let mut tables: Vec<Table> = Vec::new();
+        let mut sig: Vec<String> = Vec::new();
+        for row in &self.rows {
+            let names: Vec<String> = row.metrics.iter().map(|(n, _)| n.clone()).collect();
+            if tables.is_empty() || names != sig {
+                let title = if tables.is_empty() {
+                    self.name.clone()
+                } else {
+                    format!("{} ({})", self.name, tables.len() + 1)
+                };
+                let mut header: Vec<&str> = vec!["row"];
+                header.extend(names.iter().map(String::as_str));
+                tables.push(Table::new(&title, &header));
+                sig = names;
+            }
+            let mut cells = vec![row.label.clone()];
+            cells.extend(row.metrics.iter().map(|(_, v)| format_metric(*v)));
+            tables.last_mut().unwrap().row(cells);
+        }
+        tables
+    }
+
+    /// The human-readable rendering: run metadata, every row table in
+    /// markdown, and the config echo in a fenced block.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("# experiment {}\n\n", self.name);
+        out.push_str(&format!("- kind: {}\n- seed: {}\n", self.kind, self.seed));
+        if let Some(d) = self.config.get("description").and_then(Json::as_str) {
+            if !d.is_empty() {
+                out.push_str(&format!("- description: {d}\n"));
+            }
+        }
+        if let Some(w) = self.wallclock_s {
+            out.push_str(&format!("- wallclock_s: {w:.3}\n"));
+        }
+        out.push('\n');
+        for t in self.tables() {
+            out.push_str(&t.render_markdown());
+            out.push('\n');
+        }
+        out.push_str("## config\n\n```json\n");
+        out.push_str(&self.config.render(0));
+        out.push_str("\n```\n");
+        out
+    }
+}
+
+/// Markdown/table cell form: integers plainly, reals at a readable
+/// precision (the JSON keeps full precision; tables are for humans).
+fn format_metric(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 2f64.powi(53) {
+        format_num(x)
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            name: "t".into(),
+            kind: "fleet".into(),
+            seed: 3,
+            config: Json::Obj(vec![
+                ("name".into(), Json::Str("t".into())),
+                ("tol_pct".into(), Json::Num(10.0)),
+            ]),
+            wallclock_s: None,
+            rows: vec![
+                ReportRow::new("poisson:400")
+                    .metric("rate_mmsgs", 1.5)
+                    .metric("p999_ns", 0.1 + 0.2),
+                ReportRow::new("pareto:200").metric("rate_mmsgs", 2.0).metric("p999_ns", 4.0),
+                ReportRow::new("slo:found").metric("mult", 1.25),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bit_exactly() {
+        let r = sample();
+        let text = r.to_json_text();
+        let back = Report::parse(&text).unwrap();
+        assert_eq!(back, r, "parse(to_json_text(r)) == r");
+        assert_eq!(back.to_json_text(), text, "emission is a fixed point");
+        assert_eq!(back.rows[0].get("p999_ns").unwrap().to_bits(), (0.1f64 + 0.2).to_bits());
+    }
+
+    #[test]
+    fn wallclock_is_optional_and_preserved() {
+        let mut r = sample();
+        assert!(!r.to_json_text().contains("wallclock_s"));
+        r.wallclock_s = Some(1.25);
+        let back = Report::parse(&r.to_json_text()).unwrap();
+        assert_eq!(back.wallclock_s, Some(1.25));
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let text = sample().to_json_text().replace("\"schema\": 1", "\"schema\": 99");
+        let e = Report::parse(&text).unwrap_err();
+        assert!(e.contains("schema"), "{e}");
+    }
+
+    #[test]
+    fn tables_split_on_metric_signature() {
+        let ts = sample().tables();
+        assert_eq!(ts.len(), 2, "fleet rows share a table; the SLO row gets its own");
+        assert_eq!(ts[0].header()[0], "row");
+        assert_eq!(ts[0].rows().len(), 2);
+        assert_eq!(ts[1].rows().len(), 1);
+    }
+
+    #[test]
+    fn markdown_contains_rows_and_config_echo() {
+        let md = sample().markdown();
+        assert!(md.starts_with("# experiment t\n"));
+        assert!(md.contains("| row |"), "pipe tables: {md}");
+        assert!(md.contains("poisson:400"));
+        assert!(md.contains("```json"));
+        assert!(md.contains("\"tol_pct\": 10"));
+    }
+}

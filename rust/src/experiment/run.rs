@@ -1,0 +1,180 @@
+//! The experiment runner: dispatch a parsed [`ExperimentConfig`] to the
+//! workload engines and fold the outcome into a [`Report`].
+//!
+//! * `figure` — re-runs a named figure ([`figures::by_name`]) and lifts
+//!   every numeric table cell into metrics (row labels carry the table
+//!   and row index, so duplicate first cells stay distinct);
+//! * `fleet` — [`run_fleet`] (or the full model × failure
+//!   [`fleet_sweep`] when `sweep` is set), one row per cell, with the
+//!   per-rank [`ResourceUsage`](crate::endpoints::ResourceUsage)
+//!   accounting beside the rates; `repeat` re-runs at `seed`, `seed+1`,
+//!   ... with labeled rows;
+//! * `pool-sweep` — the paper's rate-vs-resources frontier: a dedicated
+//!   baseline at `pool = threads`, then every configured pool size
+//!   under round-robin, hashed, and adaptive placement via
+//!   [`run_pooled`] (sequential execution: every metric, including
+//!   `sched_events`, is deterministic).
+//!
+//! When the config carries an `slo` stanza the capacity search
+//! ([`super::slo`]) runs after the workload and appends its probe
+//! trajectory plus the `slo:found` / `slo:breach` bracket rows.
+
+use crate::bench::MsgRateConfig;
+use crate::coordinator::fleet::{fleet_sweep, rank_usage, run_fleet};
+use crate::figures;
+use crate::vci::{run_pooled, MapStrategy, PooledResult};
+
+use super::config::{ExperimentConfig, WorkloadKind};
+use super::report::{Report, ReportRow};
+use super::slo::{self, SloProbe, SloProbeSpec};
+
+/// Run the experiment and assemble its report. Wallclock is recorded
+/// only when the config opts in (`record_wallclock`) — it is the one
+/// field that breaks byte-identity across runs.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Report, String> {
+    let t0 = std::time::Instant::now();
+    let mut rows = match cfg.kind {
+        WorkloadKind::Figure => figure_rows(cfg)?,
+        WorkloadKind::Fleet => fleet_rows(cfg)?,
+        WorkloadKind::PoolSweep => pool_sweep_rows(cfg)?,
+    };
+    if let Some(spec) = cfg.slo {
+        rows.extend(slo_rows(cfg, &spec)?);
+    }
+    Ok(Report {
+        name: cfg.name.clone(),
+        kind: cfg.kind.label().to_string(),
+        seed: cfg.seed,
+        config: cfg.to_json(),
+        wallclock_s: cfg.record_wallclock.then(|| t0.elapsed().as_secs_f64()),
+        rows,
+    })
+}
+
+fn figure_rows(cfg: &ExperimentConfig) -> Result<Vec<ReportRow>, String> {
+    let name = cfg.figure.as_deref().unwrap();
+    let tables = figures::by_name(name, cfg.quick)
+        .ok_or_else(|| format!("unknown figure '{name}' (valid: {})", figures::ALL_FIGURES.join(", ")))?;
+    let mut rows = Vec::new();
+    for (ti, t) in tables.iter().enumerate() {
+        for (ri, cells) in t.rows().iter().enumerate() {
+            let mut row = ReportRow::new(format!("t{ti}:r{ri}:{}", cells[0]));
+            for (h, cell) in t.header().iter().zip(cells) {
+                // Lift every numeric cell; textual cells (labels,
+                // strategy names) live in the row label instead.
+                if let Ok(x) = cell.parse::<f64>() {
+                    row = row.metric(h, x);
+                }
+            }
+            rows.push(row);
+        }
+    }
+    Ok(rows)
+}
+
+fn fleet_rows(cfg: &ExperimentConfig) -> Result<Vec<ReportRow>, String> {
+    let mut rows = Vec::new();
+    for rep in 0..cfg.repeat {
+        let fc = cfg.fleet_config(cfg.seed + rep as u64);
+        let usage = rank_usage(&fc).map_err(|e| format!("fleet pool build: {e}"))?;
+        let cells = if cfg.sweep { fleet_sweep(&fc) } else { vec![run_fleet(&fc)] };
+        for c in cells {
+            let mut label = format!("{}{}", c.model, if c.failure { "+kill" } else { "" });
+            if cfg.repeat > 1 {
+                label = format!("rep{rep}:{label}");
+            }
+            rows.push(
+                ReportRow::new(label)
+                    .metric("messages", c.messages as f64)
+                    .metric("rate_mmsgs", c.rate_mmsgs)
+                    .metric("p50_ns", c.p50_ns)
+                    .metric("p99_ns", c.p99_ns)
+                    .metric("p999_ns", c.p999_ns)
+                    .metric("rehomed", c.rehomed as f64)
+                    .metric("migrations", c.migrations as f64)
+                    .metric("sched_steps", c.sched_steps as f64)
+                    .metric("rank_qps", usage.qps as f64)
+                    .metric("rank_uuars", usage.uuars_allocated as f64)
+                    .metric("rank_uuars_used", usage.uuars_used as f64)
+                    .metric("rank_memory_mib", usage.memory_mib()),
+            );
+        }
+    }
+    Ok(rows)
+}
+
+fn pool_row(label: String, r: &PooledResult) -> ReportRow {
+    ReportRow::new(label)
+        .metric("messages", r.result.messages as f64)
+        .metric("rate_mmsgs", r.result.mmsgs_per_sec)
+        .metric("p50_ns", r.result.p50_latency_ns)
+        .metric("p99_ns", r.result.p99_latency_ns)
+        .metric("p999_ns", r.result.p999_latency_ns)
+        .metric("migrations", r.migrations as f64)
+        .metric("rehomed", r.rehomed as f64)
+        .metric("sched_steps", r.result.sched_steps as f64)
+        .metric("sched_events", r.result.sched_events as f64)
+        .metric("qps", r.usage.qps as f64)
+        .metric("uuars", r.usage.uuars_allocated as f64)
+        .metric("uuars_used", r.usage.uuars_used as f64)
+        .metric("memory_mib", r.usage.memory_mib())
+}
+
+fn pool_sweep_rows(cfg: &ExperimentConfig) -> Result<Vec<ReportRow>, String> {
+    let msg_cfg = MsgRateConfig { msgs_per_thread: cfg.msgs, ..Default::default() };
+    let run = |pool: u32, strategy: MapStrategy| {
+        run_pooled(&cfg.policy, cfg.threads, pool, strategy, msg_cfg)
+            .map_err(|e| format!("pool {pool} under {strategy}: {e}"))
+    };
+    let mut rows = Vec::new();
+    let ded = run(cfg.threads, MapStrategy::Dedicated)?;
+    rows.push(pool_row(format!("dedicated/{}", cfg.threads), &ded));
+    for &pool in &cfg.pools {
+        for strategy in [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()] {
+            let r = run(pool, strategy)?;
+            rows.push(pool_row(format!("{strategy}/{pool}"), &r));
+        }
+    }
+    Ok(rows)
+}
+
+fn slo_rows(
+    cfg: &ExperimentConfig,
+    slo_spec: &super::config::SloSpec,
+) -> Result<Vec<ReportRow>, String> {
+    let streams = match cfg.kind {
+        WorkloadKind::PoolSweep => cfg.threads,
+        _ => cfg.streams,
+    };
+    let spec = SloProbeSpec {
+        policy: cfg.policy,
+        pool: cfg.pool,
+        map: cfg.map,
+        streams,
+        msgs: cfg.msgs,
+        traffic: cfg.traffic,
+        seed: cfg.seed,
+    };
+    let out = slo::capacity_search(&spec, slo_spec)?;
+    let metric_key = format!("{}_ns", out.metric.label());
+    let probe_row = |label: String, p: &SloProbe| {
+        ReportRow::new(label)
+            .metric("mult", p.mult)
+            .metric("offered_per_sec", p.offered_per_sec)
+            .metric("achieved_mmsgs", p.achieved_mmsgs)
+            .metric(&metric_key, p.metric_ns)
+            .metric("bound_ns", out.bound_ns)
+            .metric("holds", p.holds as u8 as f64)
+    };
+    let mut rows = Vec::new();
+    for (i, p) in out.probes.iter().enumerate() {
+        rows.push(probe_row(format!("slo:probe{i}"), p));
+    }
+    if let Some(f) = &out.found {
+        rows.push(probe_row("slo:found".to_string(), f));
+    }
+    if let Some(b) = &out.breach {
+        rows.push(probe_row("slo:breach".to_string(), b));
+    }
+    Ok(rows)
+}

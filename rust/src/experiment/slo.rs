@@ -1,0 +1,253 @@
+//! Closed-loop SLO capacity search: the paper's rate-vs-resources
+//! frontier as a *controller*. Given a traffic model and a tail-latency
+//! bound (`"slo": {"metric": "p999", "bound_ns": N}`), find the maximum
+//! open-loop arrival rate — as a multiplier on the configured model —
+//! whose measured sojourn percentile still holds the bound.
+//!
+//! The search is a bracketing pass (double the multiplier until the
+//! bound breaches, from `hi_mult`, capped) followed by a geometric
+//! bisection (`mid = sqrt(lo * hi)` — rate multipliers live on a log
+//! scale). Every probe is one deterministic DES run of a single
+//! symmetric rank: `streams` threads placed on a `pool`-slot endpoint
+//! pool by the configured map strategy, each stream seeded exactly like
+//! fleet rank 0 ([`stream_seed`]). Probes measure through
+//! [`Runner::sweep_open_loop`], so the half-target cell is forked off
+//! the full run's paused snapshot (`Runner::fork`/`retarget_msgs`)
+//! rather than simulated from scratch.
+//!
+//! Determinism: probes are pure functions of `(spec, mult)` and the
+//! bisection arithmetic is exact IEEE-754, so the whole trajectory —
+//! every probed multiplier and every measured percentile — is
+//! bit-reproducible at a fixed seed. The monotonicity guard holds by
+//! construction: `found` is always the largest *measured-holding*
+//! multiplier, `breach` the smallest *measured-breaching* one, and
+//! `found.mult < breach.mult`.
+
+use crate::bench::{MsgRateConfig, Runner, StreamTraffic, TrafficModel};
+use crate::coordinator::stream_seed;
+use crate::endpoints::{EndpointPolicy, ThreadEndpoint};
+use crate::vci::{EndpointPool, MapStrategy, Stream, VciMapper};
+
+use super::config::{SloMetric, SloSpec};
+
+/// Doublings past `hi_mult` before the search concedes the system
+/// never breaches (the bound is slack even at `hi_mult * 2^8` ≈
+/// saturation for any realistic config).
+const MAX_EXPANSIONS: u32 = 8;
+
+/// The probe topology: one symmetric rank, streams over a bounded pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloProbeSpec {
+    pub policy: EndpointPolicy,
+    pub pool: u32,
+    pub map: MapStrategy,
+    pub streams: u32,
+    /// Messages per stream in a probe run (tail percentiles need the
+    /// run long enough to populate them).
+    pub msgs: u64,
+    /// The base arrival process; probes run `traffic.scaled(mult)`.
+    pub traffic: TrafficModel,
+    pub seed: u64,
+}
+
+/// One measured point on the rate axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloProbe {
+    /// Rate multiplier on the base traffic model.
+    pub mult: f64,
+    /// Analytic offered load at this multiplier, messages/s (all
+    /// streams; [`TrafficModel::offered_per_sec`]).
+    pub offered_per_sec: f64,
+    /// Measured completion rate, Mmsg/s.
+    pub achieved_mmsgs: f64,
+    /// The measured SLO metric, ns.
+    pub metric_ns: f64,
+    /// `metric_ns <= bound_ns` (inclusive, like the compare bands).
+    pub holds: bool,
+}
+
+/// The search result: the full probe trajectory (in probe order — the
+/// fixed-seed determinism contract covers every entry) plus the
+/// bracketing endpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloOutcome {
+    pub metric: SloMetric,
+    pub bound_ns: f64,
+    pub probes: Vec<SloProbe>,
+    /// Largest probed multiplier that held the bound; `None` when even
+    /// `lo_mult` breaches (the bound is infeasible on this topology).
+    pub found: Option<SloProbe>,
+    /// Smallest probed multiplier that breached; `None` when the bound
+    /// never breached (slack even at the expansion cap).
+    pub breach: Option<SloProbe>,
+}
+
+/// Measure one rate point: a full open-loop DES run at
+/// `spec.traffic.scaled(mult)`, percentile read per `metric`.
+pub fn measure(
+    spec: &SloProbeSpec,
+    metric: SloMetric,
+    bound_ns: f64,
+    mult: f64,
+) -> Result<SloProbe, String> {
+    let model = spec.traffic.scaled(mult);
+    let (fabric, pool) = EndpointPool::build_fresh(&spec.policy, spec.pool)
+        .map_err(|e| format!("slo probe pool build: {e}"))?;
+    let mut mapper = VciMapper::new(spec.map, spec.pool);
+    let threads: Vec<ThreadEndpoint> =
+        (0..spec.streams).map(|t| pool.endpoint(mapper.assign(Stream::of_thread(t)))).collect();
+    let groups: Vec<Vec<ThreadEndpoint>> = threads.iter().map(|&t| vec![t]).collect();
+    let traffic: Vec<StreamTraffic> = (0..spec.streams)
+        .map(|t| StreamTraffic { model, seed: stream_seed(spec.seed, 0, t as u64, 0) })
+        .collect();
+    let cfg = MsgRateConfig { msgs_per_thread: spec.msgs, ..Default::default() };
+    // Two targets through the memoized sweep: the full run plus a
+    // half-length cell forked off its paused snapshot — the fork /
+    // retarget machinery is the probe engine, not a from-scratch run
+    // per target.
+    let targets = [(spec.msgs / 2).max(1), spec.msgs];
+    let sweep = Runner::sweep_open_loop(&fabric, &groups, cfg, &traffic, &targets);
+    let full = sweep.results.last().unwrap();
+    let metric_ns = match metric {
+        SloMetric::P50 => full.p50_latency_ns,
+        SloMetric::P99 => full.p99_latency_ns,
+        SloMetric::P999 => full.p999_latency_ns,
+    };
+    Ok(SloProbe {
+        mult,
+        offered_per_sec: spec.streams as f64 * model.offered_per_sec(),
+        achieved_mmsgs: full.mmsgs_per_sec,
+        metric_ns,
+        holds: metric_ns <= bound_ns,
+    })
+}
+
+/// Run the capacity search. See the module docs for the algorithm and
+/// its invariants.
+pub fn capacity_search(spec: &SloProbeSpec, slo: &SloSpec) -> Result<SloOutcome, String> {
+    let mut probes = Vec::new();
+    let mut run = |mult: f64, probes: &mut Vec<SloProbe>| -> Result<SloProbe, String> {
+        let p = measure(spec, slo.metric, slo.bound_ns, mult)?;
+        probes.push(p);
+        Ok(p)
+    };
+    let outcome = |probes, found, breach| SloOutcome {
+        metric: slo.metric,
+        bound_ns: slo.bound_ns,
+        probes,
+        found,
+        breach,
+    };
+
+    let lo_probe = run(slo.lo_mult, &mut probes)?;
+    if !lo_probe.holds {
+        // Infeasible even at the floor: report the breach, no capacity.
+        return Ok(outcome(probes, None, Some(lo_probe)));
+    }
+    let (mut lo, mut found) = (slo.lo_mult, lo_probe);
+    let mut hi = slo.hi_mult;
+    let mut hi_probe = run(hi, &mut probes)?;
+    let mut expansions = 0;
+    while hi_probe.holds && expansions < MAX_EXPANSIONS {
+        (lo, found) = (hi, hi_probe);
+        hi *= 2.0;
+        hi_probe = run(hi, &mut probes)?;
+        expansions += 1;
+    }
+    if hi_probe.holds {
+        // The bound never breached: the system saturates under it.
+        return Ok(outcome(probes, Some(hi_probe), None));
+    }
+    let mut breach = hi_probe;
+    for _ in 0..slo.probes {
+        let mid = (lo * hi).sqrt();
+        let p = run(mid, &mut probes)?;
+        if p.holds {
+            (lo, found) = (mid, p);
+        } else {
+            (hi, breach) = (mid, p);
+        }
+    }
+    Ok(outcome(probes, Some(found), Some(breach)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SloProbeSpec {
+        SloProbeSpec {
+            policy: EndpointPolicy::scalable(),
+            pool: 2,
+            map: MapStrategy::RoundRobin,
+            streams: 4,
+            msgs: 256,
+            traffic: TrafficModel::Poisson { mean_gap_ns: 800.0 },
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn search_brackets_the_bound() {
+        let s = spec();
+        // A bound just above the measured p999 at the base rate: held
+        // at 1x by construction, and overload must eventually breach it.
+        let base = measure(&s, SloMetric::P999, f64::MAX, 1.0).unwrap();
+        assert!(base.metric_ns > 0.0, "probe must populate the percentile");
+        let slo = SloSpec {
+            metric: SloMetric::P999,
+            bound_ns: base.metric_ns * 1.05,
+            probes: 4,
+            lo_mult: 0.5,
+            hi_mult: 2.0,
+        };
+        let out = capacity_search(&s, &slo).unwrap();
+        let found = out.found.expect("the base rate holds, so capacity exists");
+        assert!(found.holds && found.metric_ns <= slo.bound_ns);
+        let breach = out.breach.expect("overload must breach a near-base bound");
+        assert!(!breach.holds && breach.metric_ns > slo.bound_ns);
+        assert!(found.mult < breach.mult, "the bracket is ordered");
+        assert!(out.probes.len() >= 2 + slo.probes as usize, "bisection probes all ran");
+    }
+
+    #[test]
+    fn trajectory_is_deterministic() {
+        let s = spec();
+        let slo = SloSpec {
+            metric: SloMetric::P999,
+            bound_ns: 20_000.0,
+            probes: 3,
+            lo_mult: 0.5,
+            hi_mult: 2.0,
+        };
+        let a = capacity_search(&s, &slo).unwrap();
+        let b = capacity_search(&s, &slo).unwrap();
+        assert_eq!(a, b, "fixed seed: the whole trajectory is bit-reproducible");
+    }
+
+    #[test]
+    fn infeasible_bounds_report_no_capacity() {
+        let s = spec();
+        let slo = SloSpec {
+            metric: SloMetric::P50,
+            bound_ns: 0.001,
+            probes: 3,
+            lo_mult: 0.25,
+            hi_mult: 2.0,
+        };
+        let out = capacity_search(&s, &slo).unwrap();
+        assert!(out.found.is_none());
+        let breach = out.breach.expect("the floor probe is the breach");
+        assert_eq!(breach.mult, 0.25);
+        assert_eq!(out.probes.len(), 1, "the search stops at the infeasible floor");
+    }
+
+    #[test]
+    fn offered_rate_scales_with_the_multiplier() {
+        let s = spec();
+        let a = measure(&s, SloMetric::P99, 1e9, 1.0).unwrap();
+        let b = measure(&s, SloMetric::P99, 1e9, 2.0).unwrap();
+        assert!((b.offered_per_sec / a.offered_per_sec - 2.0).abs() < 1e-9);
+        assert!(a.holds && b.holds, "a 1-second bound holds trivially");
+    }
+}

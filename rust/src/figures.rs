@@ -639,6 +639,7 @@ pub fn fleet(quick: bool) -> Vec<Table> {
             "p99_ns",
             "p999_ns",
             "rehomed",
+            "sched_steps",
         ],
     );
     let base = if quick { FleetConfig::new(8, 8).quick() } else { FleetConfig::new(64, 16) };
@@ -655,6 +656,7 @@ pub fn fleet(quick: bool) -> Vec<Table> {
             f2(c.p99_ns),
             f2(c.p999_ns),
             c.rehomed.to_string(),
+            c.sched_steps.to_string(),
         ]);
     }
     vec![t]

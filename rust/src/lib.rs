@@ -39,11 +39,17 @@
 //!   suite's independent simulation cells across cores.
 //! * [`apps`] — the global-array DGEMM and 5-pt stencil benchmarks of §VII.
 //! * [`report`] — table/CSV emitters used by the figure benches.
+//! * [`experiment`] — experiments as data: JSON configs in,
+//!   self-contained reports out, tolerance-banded report comparison,
+//!   and the closed-loop SLO capacity search.
+//! * [`cli`] — testable flag parsers for the `scep` binary.
 
 pub mod apps;
 pub mod bench;
+pub mod cli;
 pub mod coordinator;
 pub mod endpoints;
+pub mod experiment;
 pub mod figures;
 pub mod mlx5;
 pub mod nicsim;

@@ -11,6 +11,9 @@
 //!           [--msgs 1024] [--seed 1] [--workers <n>]
 //! scep run global-array [--n 256] [--category 2xdynamic | --policy <spec>]
 //! scep run stencil [--spec 4.4] [--category dynamic | --policy <spec>]
+//! scep experiment <config.json> [--seed <s>] [--out <dir>] [--workers <n>]
+//! scep experiment --list [--dir experiments]
+//! scep compare <a.json> <b.json> [--tol <pct>] [--wallclock-tol <pct>]
 //! scep calibrate                          print model calibration points
 //! ```
 //!
@@ -21,14 +24,25 @@
 //! stream-to-endpoint placement (see `vci::MapStrategy::parse`). Both
 //! grammars round-trip: `scep resources` and `scep pool` print the
 //! canonical strings back.
+//!
+//! `scep experiment` runs a JSON experiment config (see
+//! `experiment::ExperimentConfig`) and writes a self-contained report
+//! (`<name>.report.json` + `<name>.report.md`); `scep compare` diffs
+//! two such reports under tolerance bands and exits nonzero on a
+//! breach — the CI perf gate is exactly those two commands. Flag
+//! parsing lives in `scalable_ep::cli`; every malformed value is a
+//! nonzero exit naming the flag and the valid values, never a silent
+//! fall-through to a default.
 
 use std::process::ExitCode;
 
 use scalable_ep::apps::{GlobalArray, StencilBench};
 use scalable_ep::bench::{Features, MsgRateConfig, Runner};
+use scalable_ep::cli;
 use scalable_ep::coordinator::fleet::{fleet_sweep, merge_fleet_json};
 use scalable_ep::coordinator::{FleetConfig, JobSpec};
 use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage};
+use scalable_ep::experiment::{self, ExperimentConfig, Report};
 use scalable_ep::runtime::ArtifactRuntime;
 use scalable_ep::vci::{run_pooled, EndpointPool, MapStrategy, Stream, VciMapper};
 use scalable_ep::verbs::Fabric;
@@ -45,6 +59,9 @@ fn usage() -> ExitCode {
          [--map <strategy>] [--msgs <m>] [--seed <s>] [--workers <n>]\n  \
          scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
          scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
+         scep experiment <config.json> [--seed <s>] [--out <dir>] [--workers <n>]\n  \
+         scep experiment --list [--dir <d>]\n  \
+         scep compare <a.json> <b.json> [--tol <pct>] [--wallclock-tol <pct>]\n  \
          scep calibrate\n\
          policy grammar: ctx=shared|<k>,qp=1|2x|shared[:k],uar=indep|paired|static,\
          cq=<k>|shared,depth=scaled:<b>|fixed:<v>,buf=aligned|packed|group:<w>|one,\
@@ -57,76 +74,134 @@ fn usage() -> ExitCode {
     ExitCode::from(2)
 }
 
-fn flag_value(args: &[String], name: &str) -> Option<String> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+/// Print a flag/config diagnostic and exit 2 (distinct from a runtime
+/// failure's exit 1).
+fn bad(msg: String) -> ExitCode {
+    eprintln!("{msg}");
+    ExitCode::from(2)
 }
 
-/// Resolve `--map` into a strategy (`default` when absent). Returns
-/// `None` (after printing the error, which lists the valid strategies)
-/// on a bad spec.
-fn map_from_args(args: &[String], default: MapStrategy) -> Option<MapStrategy> {
-    match flag_value(args, "--map") {
-        Some(s) => match MapStrategy::parse(&s) {
-            Ok(m) => Some(m),
-            Err(e) => {
-                eprintln!("bad --map '{s}': {e}");
-                None
-            }
-        },
-        None => Some(default),
+/// Unwrap a `cli::*` parse or exit through [`bad`].
+macro_rules! try_flag {
+    ($e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(msg) => return bad(msg),
+        }
+    };
+}
+
+/// Apply `--workers` (process-wide DES worker override) if present.
+fn apply_workers(args: &[String]) -> Result<(), String> {
+    if let Some(n) = cli::parse_workers(args)? {
+        scalable_ep::par::set_workers_override(n);
     }
+    Ok(())
 }
 
-/// Resolve `--pool` into a pool size. `Ok(None)` when the flag is
-/// absent; `Err` (after printing) on a malformed count.
-fn pool_from_args(args: &[String]) -> Result<Option<u32>, ()> {
-    match flag_value(args, "--pool") {
-        None => Ok(None),
-        Some(v) => match v.parse::<u32>() {
-            Ok(p) if p >= 1 => Ok(Some(p)),
-            _ => {
-                eprintln!("bad --pool '{v}' (expect an endpoint count >= 1)");
-                Err(())
-            }
-        },
-    }
-}
-
-/// Resolve `--workers` into a process-wide DES worker-pool override
-/// (beats the `SCEP_WORKERS` env var; see `par::workers`). `Ok(())`
-/// when the flag is absent; `Err` (after printing) on a malformed count.
-fn workers_from_args(args: &[String]) -> Result<(), ()> {
-    match flag_value(args, "--workers") {
-        None => Ok(()),
-        Some(v) => match v.parse::<usize>() {
-            Ok(n) if n >= 1 => {
-                scalable_ep::par::set_workers_override(n);
-                Ok(())
-            }
-            _ => {
-                eprintln!("bad --workers '{v}' (expect a worker count >= 1)");
-                Err(())
-            }
-        },
-    }
-}
-
-/// Resolve `--policy` / `--category` into a policy plus a display label.
-/// `--policy` wins when both are given; it takes the full grammar plus
-/// the bare preset names (`scalable`, category labels). Returns `None`
-/// (after printing the error) on a bad spec.
-fn policy_from_args(args: &[String], default: Category) -> Option<(EndpointPolicy, String)> {
-    if let Some(spec) = flag_value(args, "--policy") {
-        return match EndpointPolicy::parse(&spec) {
-            Ok(p) => Some((p, spec)),
-            Err(e) => {
-                eprintln!("bad --policy '{spec}': {e}");
-                None
-            }
+fn cmd_experiment(args: &[String]) -> ExitCode {
+    if args.iter().any(|a| a == "--list") {
+        let dir = cli::flag_value(args, "--dir").unwrap_or_else(|| "experiments".to_string());
+        let mut entries: Vec<String> = match std::fs::read_dir(&dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                .map(|p| p.to_string_lossy().into_owned())
+                .collect(),
+            Err(e) => return bad(format!("cannot list '{dir}': {e}")),
         };
+        entries.sort();
+        for path in entries {
+            match std::fs::read_to_string(&path).map_err(|e| e.to_string()).and_then(|t| {
+                ExperimentConfig::parse(&t)
+            }) {
+                Ok(cfg) => println!(
+                    "{:<16} {:<10} {}",
+                    cfg.name,
+                    cfg.kind.label(),
+                    cfg.description
+                ),
+                Err(e) => println!("{path}: invalid config: {e}"),
+            }
+        }
+        return ExitCode::SUCCESS;
     }
-    let cat = flag_value(args, "--category").and_then(|c| Category::parse(&c)).unwrap_or(default);
-    Some((EndpointPolicy::preset(cat), cat.to_string()))
+    try_flag!(apply_workers(args));
+    let Some(path) = args.get(1).filter(|a| !a.starts_with("--")) else {
+        eprintln!("scep experiment: missing <config.json> (or --list)");
+        return usage();
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return bad(format!("cannot read '{path}': {e}")),
+    };
+    let mut cfg = match ExperimentConfig::parse(&text) {
+        Ok(c) => c,
+        Err(e) => return bad(format!("{path}: {e}")),
+    };
+    cfg.seed = try_flag!(cli::parse_u64(args, "--seed", cfg.seed, 0));
+    let out_dir = cli::flag_value(args, "--out").unwrap_or_else(|| ".".to_string());
+    let rep = match experiment::run_experiment(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("experiment '{}' failed: {e}", cfg.name);
+            return ExitCode::FAILURE;
+        }
+    };
+    if let Err(e) = std::fs::create_dir_all(&out_dir) {
+        eprintln!("cannot create '{out_dir}': {e}");
+        return ExitCode::FAILURE;
+    }
+    let json_path = format!("{out_dir}/{}.report.json", cfg.name);
+    let md_path = format!("{out_dir}/{}.report.md", cfg.name);
+    let md = rep.markdown();
+    for (p, body) in [(&json_path, rep.to_json_text()), (&md_path, md.clone())] {
+        if let Err(e) = std::fs::write(p, body) {
+            eprintln!("cannot write {p}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    print!("{md}");
+    eprintln!("[experiment] report -> {json_path} + {md_path}");
+    ExitCode::SUCCESS
+}
+
+fn cmd_compare(args: &[String]) -> ExitCode {
+    let (Some(pa), Some(pb)) = (
+        args.get(1).filter(|a| !a.starts_with("--")),
+        args.get(2).filter(|a| !a.starts_with("--")),
+    ) else {
+        eprintln!("scep compare: expect two report paths (baseline first)");
+        return usage();
+    };
+    let load = |p: &str| -> Result<Report, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("cannot read '{p}': {e}"))?;
+        Report::parse(&text).map_err(|e| format!("{p}: {e}"))
+    };
+    let a = match load(pa) {
+        Ok(r) => r,
+        Err(e) => return bad(e),
+    };
+    let b = match load(pb) {
+        Ok(r) => r,
+        Err(e) => return bad(e),
+    };
+    let (dtol, dwtol) = experiment::default_tols(&a);
+    let tol = try_flag!(cli::parse_f64(args, "--tol", dtol));
+    let wtol = try_flag!(cli::parse_f64(args, "--wallclock-tol", dwtol));
+    let out = experiment::compare(&a, &b, tol, wtol);
+    print!("{}", out.table().render());
+    for n in &out.notes {
+        println!("note: {n}");
+    }
+    if out.ok() {
+        println!("compare: ok ({} metrics within {tol}% of '{pa}')", out.diffs.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("compare: {} breach(es) beyond {tol}% (wallclock {wtol}%)", out.breaches);
+        ExitCode::FAILURE
+    }
 }
 
 fn main() -> ExitCode {
@@ -134,7 +209,7 @@ fn main() -> ExitCode {
     let Some(cmd) = args.first() else { return usage() };
     match cmd.as_str() {
         "bench" => {
-            let Ok(()) = workers_from_args(&args) else { return usage() };
+            try_flag!(apply_workers(&args));
             let quick = args.iter().any(|a| a == "--quick");
             if args.iter().any(|a| a == "--all") {
                 for name in figures::ALL_FIGURES {
@@ -144,7 +219,7 @@ fn main() -> ExitCode {
                 }
                 return ExitCode::SUCCESS;
             }
-            let Some(fig) = flag_value(&args, "--figure") else { return usage() };
+            let Some(fig) = cli::flag_value(&args, "--figure") else { return usage() };
             match figures::by_name(&fig, quick) {
                 Some(tables) => {
                     for t in tables {
@@ -152,33 +227,31 @@ fn main() -> ExitCode {
                     }
                     ExitCode::SUCCESS
                 }
-                None => {
-                    eprintln!(
-                        "unknown figure '{fig}'; available figures: {}",
-                        figures::ALL_FIGURES.join(", ")
-                    );
-                    usage()
-                }
+                None => bad(format!(
+                    "unknown figure '{fig}'; available figures: {}",
+                    figures::ALL_FIGURES.join(", ")
+                )),
             }
         }
         "resources" => {
-            let Some((policy, label)) = policy_from_args(&args, Category::TwoXDynamic) else {
-                return usage();
-            };
-            let threads: u32 =
-                flag_value(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(16);
-            let Ok(pool) = pool_from_args(&args) else { return usage() };
+            let (policy, label) =
+                try_flag!(cli::parse_policy(&args, Category::TwoXDynamic));
+            let threads = try_flag!(cli::parse_u32(&args, "--threads", 16, 1));
+            let pool = try_flag!(cli::parse_pool(&args));
             if let Some(pool_size) = pool {
                 // Pooled accounting: N endpoints, streams mapped on top.
-                let Some(strategy) = map_from_args(&args, MapStrategy::RoundRobin) else {
-                    return usage();
-                };
+                let strategy = try_flag!(cli::parse_map(&args, MapStrategy::RoundRobin));
                 if strategy == MapStrategy::Dedicated && pool_size < threads {
-                    eprintln!("--map dedicated needs --pool >= --threads");
-                    return usage();
+                    return bad("--map dedicated needs --pool >= --threads".to_string());
                 }
                 let mut f = Fabric::connectx4();
-                let pool = EndpointPool::build(&policy, pool_size, &mut f).expect("build");
+                let pool = match EndpointPool::build(&policy, pool_size, &mut f) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("pool build failed: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                };
                 let mut mapper = VciMapper::new(strategy, pool_size);
                 for t in 0..threads {
                     mapper.assign(Stream::of_thread(t));
@@ -193,7 +266,13 @@ fn main() -> ExitCode {
                 return ExitCode::SUCCESS;
             }
             let mut f = Fabric::connectx4();
-            let set = policy.build(&mut f, threads).expect("build");
+            let set = match policy.build(&mut f, threads) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("endpoint build failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
             let u = ResourceUsage::of_set(&f, &set);
             println!("{} x {} threads:\n  policy: {}\n  {}", label, threads, policy, u);
             println!("  sharing level: {}", policy.sharing_level(threads));
@@ -202,25 +281,18 @@ fn main() -> ExitCode {
         }
         "pool" => {
             // The VCI tentpole end-to-end: N streams over a bounded pool.
-            let Ok(()) = workers_from_args(&args) else { return usage() };
+            try_flag!(apply_workers(&args));
             let (policy, label) = if args.iter().any(|a| a == "--policy" || a == "--category")
             {
-                match policy_from_args(&args, Category::Dynamic) {
-                    Some(x) => x,
-                    None => return usage(),
-                }
+                try_flag!(cli::parse_policy(&args, Category::Dynamic))
             } else {
                 (EndpointPolicy::scalable(), "scalable".to_string())
             };
-            let threads: u32 =
-                flag_value(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(16);
-            let Ok(pool) = pool_from_args(&args) else { return usage() };
+            let threads = try_flag!(cli::parse_u32(&args, "--threads", 16, 1));
+            let pool = try_flag!(cli::parse_pool(&args));
             let pool_size = pool.unwrap_or((threads / 3).max(1));
-            let Some(strategy) = map_from_args(&args, MapStrategy::RoundRobin) else {
-                return usage();
-            };
-            let msgs: u64 =
-                flag_value(&args, "--msgs").and_then(|v| v.parse().ok()).unwrap_or(16 * 1024);
+            let strategy = try_flag!(cli::parse_map(&args, MapStrategy::RoundRobin));
+            let msgs = try_flag!(cli::parse_u64(&args, "--msgs", 16 * 1024, 1));
             let cfg = MsgRateConfig { msgs_per_thread: msgs, ..Default::default() };
             match run_pooled(&policy, threads, pool_size, strategy, cfg) {
                 Ok(r) => {
@@ -244,33 +316,25 @@ fn main() -> ExitCode {
             // The fleet-scale traffic engine: open-loop arrivals,
             // p50/p99/p999 percentiles, failure injection — merged into
             // BENCH_des.json's "fleet" array.
-            let Ok(()) = workers_from_args(&args) else { return usage() };
+            try_flag!(apply_workers(&args));
             let quick = args.iter().any(|a| a == "--quick");
-            let ranks: u32 =
-                flag_value(&args, "--ranks").and_then(|v| v.parse().ok()).unwrap_or(1024);
-            let streams: u32 =
-                flag_value(&args, "--streams").and_then(|v| v.parse().ok()).unwrap_or(32);
+            let ranks = try_flag!(cli::parse_u32(&args, "--ranks", 1024, 1));
+            let streams = try_flag!(cli::parse_u32(&args, "--streams", 32, 1));
             let mut cfg = FleetConfig::new(ranks, streams);
             if quick {
                 cfg = cfg.quick();
             }
-            let Ok(pool) = pool_from_args(&args) else { return usage() };
-            if let Some(p) = pool {
+            if let Some(p) = try_flag!(cli::parse_pool(&args)) {
                 cfg.pool = p;
             }
-            let Some(map) = map_from_args(&args, cfg.map) else { return usage() };
-            cfg.map = map;
-            if let Some(m) = flag_value(&args, "--msgs").and_then(|v| v.parse().ok()) {
-                cfg.msgs_per_stream = m;
-            }
+            cfg.map = try_flag!(cli::parse_map(&args, cfg.map));
+            cfg.msgs_per_stream =
+                try_flag!(cli::parse_u64(&args, "--msgs", cfg.msgs_per_stream, 1));
             // --seed beats SCEP_FUZZ_SEED beats the default; echo it so
             // any sweep is reproducible by exporting the env var.
-            cfg.seed = flag_value(&args, "--seed")
-                .and_then(|v| v.parse().ok())
-                .or_else(|| {
-                    std::env::var("SCEP_FUZZ_SEED").ok().and_then(|v| v.trim().parse().ok())
-                })
-                .unwrap_or(1);
+            let env_seed =
+                std::env::var("SCEP_FUZZ_SEED").ok().and_then(|v| v.trim().parse().ok());
+            cfg.seed = try_flag!(cli::parse_u64(&args, "--seed", env_seed.unwrap_or(1), 0));
             eprintln!("[fleet] SCEP_FUZZ_SEED={}", cfg.seed);
             let cells = fleet_sweep(&cfg);
             for c in &cells {
@@ -304,22 +368,32 @@ fn main() -> ExitCode {
                 }
             }
         }
+        "experiment" => cmd_experiment(&args),
+        "compare" => cmd_compare(&args),
         "run" => {
-            let Some((policy, label)) = policy_from_args(&args, Category::TwoXDynamic) else {
-                return usage();
-            };
+            let (policy, label) = try_flag!(cli::parse_policy(&args, Category::TwoXDynamic));
             match args.get(1).map(String::as_str) {
                 Some("global-array") => {
-                    let n: usize =
-                        flag_value(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(256);
-                    let ga = GlobalArray::new(policy, 16).expect("build");
+                    let n = try_flag!(cli::parse_u64(&args, "--n", 256, 1)) as usize;
+                    let ga = match GlobalArray::new(policy, 16) {
+                        Ok(g) => g,
+                        Err(e) => {
+                            eprintln!("global-array build failed: {e}");
+                            return ExitCode::FAILURE;
+                        }
+                    };
                     let r = ga.time_comm(16 * 1024, 2);
                     println!(
                         "global-array [{}]: comm {:.2} Mmsg/s over {} msgs; {}",
                         label, r.mmsgs_per_sec, r.messages, ga.resources()
                     );
-                    let mut rt = ArtifactRuntime::new(ArtifactRuntime::default_dir())
-                        .expect("PJRT client");
+                    let mut rt = match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            eprintln!("runtime init failed: {e:#}");
+                            return ExitCode::FAILURE;
+                        }
+                    };
                     match ga.run_dgemm(&mut rt, n) {
                         Ok(err) => println!("dgemm {n}x{n} via Pallas/PJRT: max |err| = {err:.3e}"),
                         Err(e) => {
@@ -330,17 +404,19 @@ fn main() -> ExitCode {
                     ExitCode::SUCCESS
                 }
                 Some("stencil") => {
-                    let spec = flag_value(&args, "--spec")
-                        .and_then(|s| JobSpec::parse(&s))
-                        .unwrap_or(JobSpec::new(4, 4));
-                    let iters: u64 =
-                        flag_value(&args, "--iters").and_then(|v| v.parse().ok()).unwrap_or(2048);
-                    let s = StencilBench::new(
+                    let spec = try_flag!(cli::parse_spec(&args, JobSpec::new(4, 4)));
+                    let iters = try_flag!(cli::parse_u64(&args, "--iters", 2048, 1));
+                    let s = match StencilBench::new(
                         spec,
                         policy,
                         scalable_ep::apps::stencil::DEFAULT_HALO_BYTES,
-                    )
-                    .expect("build");
+                    ) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("stencil build failed: {e}");
+                            return ExitCode::FAILURE;
+                        }
+                    };
                     let r = s.time_exchange(iters);
                     println!(
                         "stencil {} [{}]: halo exchange {:.2} Mmsg/s; {}",

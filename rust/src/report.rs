@@ -27,6 +27,18 @@ impl Table {
         self
     }
 
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -61,6 +73,26 @@ impl Table {
         out.push_str(&format!("csv,{},{}\n", slug, self.header.join(",")));
         for row in &self.rows {
             out.push_str(&format!("csv,{},{}\n", slug, row.join(",")));
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown: `### title`, a pipe header, one pipe
+    /// row per data row. Pipes in cells are escaped so a cell can never
+    /// change the column count.
+    pub fn render_markdown(&self) -> String {
+        let esc = |c: &str| c.replace('|', "\\|");
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!(
+            "| {} |\n",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(" | ")
+        ));
+        out.push_str(&format!("|{}|\n", vec!["---"; self.header.len()].join("|")));
+        for row in &self.rows {
+            out.push_str(&format!(
+                "| {} |\n",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(" | ")
+            ));
         }
         out
     }
@@ -113,5 +145,23 @@ mod tests {
     #[should_panic(expected = "arity")]
     fn arity_checked() {
         Table::new("t", &["a"]).row(vec![]);
+    }
+
+    #[test]
+    fn accessors_expose_the_shape() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.title(), "demo");
+        assert_eq!(t.header(), ["a", "b"]);
+        assert_eq!(t.rows(), [["1", "2"]]);
+    }
+
+    #[test]
+    fn markdown_pipes_are_escaped() {
+        let mut t = Table::new("md", &["k", "v"]);
+        t.row(vec!["a|b".into(), "2".into()]);
+        let s = t.render_markdown();
+        assert!(s.starts_with("### md\n\n| k | v |\n|---|---|\n"));
+        assert!(s.contains("| a\\|b | 2 |"));
     }
 }

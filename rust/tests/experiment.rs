@@ -1,0 +1,196 @@
+//! End-to-end coverage for the experiment harness: config parsing,
+//! report determinism, the `run_fleet` equivalence contract, compare
+//! exit semantics, and the SLO capacity search (satellites 4 and 5 of
+//! the harness PR).
+
+use scalable_ep::coordinator::run_fleet;
+use scalable_ep::experiment::{
+    capacity_search, compare, default_tols, run_experiment, ExperimentConfig, Report, SloMetric,
+    SloProbeSpec, SloSpec,
+};
+
+/// The committed fleet-quick config, inlined so the test is hermetic
+/// (integration tests run from the crate root; the committed copy in
+/// `experiments/` is exercised by the CI smoke leg).
+const FLEET_QUICK: &str = r#"{
+  "name": "fleet-quick",
+  "kind": "fleet",
+  "ranks": 4,
+  "streams": 8,
+  "pool": 4,
+  "map": "hash",
+  "msgs": 128,
+  "seed": 7
+}"#;
+
+const POOL_SWEEP: &str = r#"{
+  "name": "mini-frontier",
+  "kind": "pool-sweep",
+  "threads": 4,
+  "pools": [4, 2],
+  "msgs": 512
+}"#;
+
+#[test]
+fn config_round_trips_through_its_echo() {
+    let cfg = ExperimentConfig::parse(FLEET_QUICK).unwrap();
+    let echoed = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(cfg, echoed, "to_json -> from_json is the identity");
+}
+
+#[test]
+fn config_errors_name_the_key_and_valid_values() {
+    let e = ExperimentConfig::parse(r#"{"name": "x", "kind": "vibes"}"#).unwrap_err();
+    assert!(e.contains("fleet"), "kind error lists valid kinds: {e}");
+    let e = ExperimentConfig::parse(r#"{"name": "x", "kind": "fleet", "banana": 1}"#).unwrap_err();
+    assert!(e.contains("banana") && e.contains("valid"), "{e}");
+    let e = ExperimentConfig::parse(r#"{"name": "x", "kind": "figure"}"#).unwrap_err();
+    assert!(e.contains("figure") && e.contains("fig2"), "lists figure names: {e}");
+}
+
+#[test]
+fn fleet_experiment_reproduces_run_fleet_bit_exactly() {
+    let cfg = ExperimentConfig::parse(FLEET_QUICK).unwrap();
+    let rep = run_experiment(&cfg).unwrap();
+    let cell = run_fleet(&cfg.fleet_config(cfg.seed));
+    let row = &rep.rows[0];
+    assert_eq!(row.label, cell.model);
+    // f64 equality on purpose: the experiment path must be the *same*
+    // computation as `scep fleet`, not an approximation of it.
+    assert_eq!(row.get("messages").unwrap(), cell.messages as f64);
+    assert_eq!(row.get("rate_mmsgs").unwrap(), cell.rate_mmsgs);
+    assert_eq!(row.get("p50_ns").unwrap(), cell.p50_ns);
+    assert_eq!(row.get("p99_ns").unwrap(), cell.p99_ns);
+    assert_eq!(row.get("p999_ns").unwrap(), cell.p999_ns);
+    assert_eq!(row.get("rehomed").unwrap(), cell.rehomed as f64);
+    assert_eq!(row.get("sched_steps").unwrap(), cell.sched_steps as f64);
+}
+
+#[test]
+fn report_json_is_byte_identical_across_runs_and_round_trips() {
+    let cfg = ExperimentConfig::parse(FLEET_QUICK).unwrap();
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a, b, "fixed seed: identical reports");
+    let ta = a.to_json_text();
+    assert_eq!(ta, b.to_json_text(), "... and byte-identical JSON");
+    let parsed = Report::parse(&ta).unwrap();
+    assert_eq!(parsed, a, "serde round trip");
+    assert_eq!(parsed.to_json_text(), ta, "canonical: reserialization is a fixed point");
+}
+
+#[test]
+fn seed_moves_the_fleet_rows() {
+    let cfg = ExperimentConfig::parse(FLEET_QUICK).unwrap();
+    let mut other = cfg.clone();
+    other.seed += 1;
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&other).unwrap();
+    assert_ne!(
+        a.rows[0].get("p999_ns"),
+        b.rows[0].get("p999_ns"),
+        "a different seed draws different arrivals"
+    );
+}
+
+#[test]
+fn pool_sweep_reports_the_dedicated_baseline_and_every_cell() {
+    let cfg = ExperimentConfig::parse(POOL_SWEEP).unwrap();
+    let rep = run_experiment(&cfg).unwrap();
+    assert_eq!(rep.rows[0].label, "dedicated/4");
+    // 1 baseline + 2 pools x 3 strategies.
+    assert_eq!(rep.rows.len(), 7);
+    for row in &rep.rows {
+        assert!(row.get("rate_mmsgs").unwrap() > 0.0, "{}: rate present", row.label);
+        assert!(row.get("memory_mib").unwrap() > 0.0, "{}: usage present", row.label);
+    }
+}
+
+#[test]
+fn compare_breaches_on_an_injected_rate_delta() {
+    let cfg = ExperimentConfig::parse(FLEET_QUICK).unwrap();
+    let a = run_experiment(&cfg).unwrap();
+    let mut b = a.clone();
+    // Inject a 15% simulated-rate regression into every row.
+    for row in &mut b.rows {
+        for (name, v) in &mut row.metrics {
+            if name == "rate_mmsgs" {
+                *v *= 0.85;
+            }
+        }
+    }
+    let (tol, wtol) = default_tols(&a);
+    assert_eq!(tol, 10.0, "the config default rides in the report");
+    assert!(compare(&a, &a.clone(), tol, wtol).ok(), "self-compare passes");
+    let out = compare(&a, &b, tol, wtol);
+    assert!(!out.ok(), "15% delta vs 10% band must breach");
+    assert!(out.diffs.iter().any(|d| d.metric == "rate_mmsgs" && d.breach));
+}
+
+#[test]
+fn slo_search_in_an_experiment_holds_its_bound() {
+    let text = r#"{
+      "name": "slo-mini",
+      "kind": "fleet",
+      "ranks": 1,
+      "streams": 4,
+      "pool": 2,
+      "map": "rr",
+      "msgs": 256,
+      "traffic": "poisson:800",
+      "seed": 5,
+      "slo": { "metric": "p999", "bound_ns": 40000, "probes": 3, "lo_mult": 0.5, "hi_mult": 2.0 }
+    }"#;
+    let cfg = ExperimentConfig::parse(text).unwrap();
+    let rep = run_experiment(&cfg).unwrap();
+    let slo = cfg.slo.unwrap();
+    if let Some(found) = rep.rows.iter().find(|r| r.label == "slo:found") {
+        assert!(found.get("p999_ns").unwrap() <= slo.bound_ns, "found rate holds the bound");
+        assert_eq!(found.get("holds"), Some(1.0));
+        if let Some(breach) = rep.rows.iter().find(|r| r.label == "slo:breach") {
+            assert!(breach.get("p999_ns").unwrap() > slo.bound_ns);
+            assert!(
+                found.get("mult").unwrap() < breach.get("mult").unwrap(),
+                "the bracket is ordered: capacity below the first breaching rate"
+            );
+        }
+    } else {
+        // Infeasible bound: the report must carry the breach instead.
+        let breach = rep.rows.iter().find(|r| r.label == "slo:breach").unwrap();
+        assert!(breach.get("p999_ns").unwrap() > slo.bound_ns);
+    }
+    // The whole report — search trajectory included — is deterministic.
+    assert_eq!(rep.to_json_text(), run_experiment(&cfg).unwrap().to_json_text());
+}
+
+#[test]
+fn slo_monotonicity_guard_across_the_bracket() {
+    let spec = SloProbeSpec {
+        policy: scalable_ep::EndpointPolicy::scalable(),
+        pool: 2,
+        map: scalable_ep::vci::MapStrategy::RoundRobin,
+        streams: 4,
+        msgs: 256,
+        traffic: scalable_ep::bench::TrafficModel::Poisson { mean_gap_ns: 800.0 },
+        seed: 5,
+    };
+    let slo =
+        SloSpec { metric: SloMetric::P999, bound_ns: 30000.0, probes: 4, lo_mult: 0.5, hi_mult: 2.0 };
+    let out = capacity_search(&spec, &slo).unwrap();
+    if let (Some(found), Some(breach)) = (out.found, out.breach) {
+        assert!(found.holds && found.metric_ns <= slo.bound_ns);
+        assert!(!breach.holds && breach.metric_ns > slo.bound_ns);
+        assert!(found.mult < breach.mult);
+        // No probe between found and breach contradicts the bracket:
+        // anything that held is <= found.mult, anything that breached
+        // is >= breach.mult.
+        for p in &out.probes {
+            if p.holds {
+                assert!(p.mult <= found.mult, "held probe above the found capacity");
+            } else {
+                assert!(p.mult >= breach.mult, "breaching probe below the bracket");
+            }
+        }
+    }
+    assert_eq!(out, capacity_search(&spec, &slo).unwrap(), "trajectory determinism");
+}
