@@ -1,6 +1,11 @@
 //! Bench harness regenerating paper fig12 (see rust/src/figures.rs for
-//! the workload; EXPERIMENTS.md records paper-vs-measured). Accepts the
+//! the sweep; EXPERIMENTS.md records paper-vs-measured). Accepts the
 //! uniform `--quick` flag; cells run on the shared worker pool.
+//!
+//! The figure's driver is the `GlobalArrayComm` traffic matrix through
+//! the generic workload path (rust/src/workload/) — the same engine as
+//! every `scep workload` scenario; tests/workload.rs pins it
+//! bit-identical to the historical hand-rolled driver.
 fn main() {
     scalable_ep::figures::bench_main("fig12_global_array", &["fig12"]);
 }

@@ -45,6 +45,12 @@
 //! `Runner::sweep_msgs` msgs-per-thread sweep against from-scratch
 //! runs, recording scheduler-step and wallclock savings.
 //!
+//! A `workloads` array (EXPERIMENTS.md §Workloads) runs every pluggable
+//! scenario (alltoall / sparse / rpc / everywhere) through the generic
+//! workload driver at the scalable preset over a third-size hashed
+//! pool, recording each cell's virtual-time rate and uUAR footprint —
+//! the wallclock trajectory of the workload path itself.
+//!
 //! A `fleet` array (EXPERIMENTS.md §Fleet) runs the coordinator's
 //! fleet traffic engine at CI scale: open-loop arrival models x
 //! failure injection, with fleet-wide p50/p99/p999 sojourn latency,
@@ -67,6 +73,8 @@ use scalable_ep::coordinator::fleet::{fleet_json_rows, fleet_sweep};
 use scalable_ep::coordinator::FleetConfig;
 use scalable_ep::endpoints::EndpointPolicy;
 use scalable_ep::vci::{run_pooled, MapStrategy};
+use scalable_ep::workload::drive::run_cell;
+use scalable_ep::workload::Scenario;
 
 struct Row {
     label: &'static str,
@@ -238,6 +246,46 @@ fn measure_partition(
     }
 }
 
+/// One workload-scenario row (EXPERIMENTS.md §Workloads): the scenario
+/// through the generic driver at the scalable preset over a third-size
+/// hashed pool, with wallclock + virtual-time rate and uUAR footprint.
+struct WorkloadRow {
+    workload: &'static str,
+    streams: u32,
+    pool: u32,
+    wallclock_s: f64,
+    rate_mmsgs: f64,
+    messages: u64,
+    uuars: u32,
+}
+
+fn measure_workload(s: Scenario, quick: bool) -> WorkloadRow {
+    let w = s.instantiate(quick);
+    let n = w.shape().threads_per_rank;
+    let pool = (n / 3).max(1);
+    let t0 = Instant::now();
+    let c = run_cell(&*w, &EndpointPolicy::scalable(), pool, MapStrategy::Hashed)
+        .expect("workload cell");
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:>28}: {:>7.2} Mmsg/s virtual ({} msgs, {} uUARs, {:.3}s)",
+        format!("workload {}", s.name()),
+        c.result.mmsgs_per_sec,
+        c.result.messages,
+        c.usage.uuars_allocated,
+        dt,
+    );
+    WorkloadRow {
+        workload: s.name(),
+        streams: n,
+        pool,
+        wallclock_s: dt,
+        rate_mmsgs: c.result.mmsgs_per_sec,
+        messages: c.result.messages,
+        uuars: c.usage.uuars_allocated,
+    }
+}
+
 /// The memoized msgs-per-thread sweep vs from-scratch runs
 /// (EXPERIMENTS.md §Partitioned DES): scheduler-step and wallclock
 /// savings, bit-identity asserted per cell.
@@ -340,6 +388,11 @@ fn main() {
     ];
     let memo = measure_memo(msgs / 4);
 
+    // Pluggable workload scenarios (EXPERIMENTS.md §Workloads): every
+    // scenario through the shared generic driver, one cell each.
+    let workload_rows: Vec<WorkloadRow> =
+        Scenario::ALL.iter().map(|&s| measure_workload(s, quick)).collect();
+
     // Fleet traffic engine (EXPERIMENTS.md §Fleet): open-loop arrival
     // models x failure injection over a 64-rank universe — the CI-sized
     // smoke of the 1k-rank `scep fleet` sweep. Cell aggregates are
@@ -420,6 +473,17 @@ fn main() {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str("  \"workloads\": [\n");
+    for (i, w) in workload_rows.iter().enumerate() {
+        let sep = if i + 1 < workload_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"streams\": {}, \"pool\": {}, \
+             \"wallclock_s\": {:.6}, \"rate_mmsgs\": {:.4}, \"messages\": {}, \
+             \"uuars\": {}}}{sep}\n",
+            w.workload, w.streams, w.pool, w.wallclock_s, w.rate_mmsgs, w.messages, w.uuars,
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"fleet\": ");
     json.push_str(&fleet_json_rows(&fleet_cells));
     json.push_str(",\n");
@@ -468,6 +532,15 @@ fn main() {
         memo.scratch_steps,
         memo.scratch_wallclock_s / memo.memo_wallclock_s.max(1e-9),
     );
+    println!("\nEXPERIMENTS.md §Workloads rows (paste-ready):");
+    println!("| Workload | Streams | Pool | Mmsg/s | Messages | uUARs |");
+    println!("|---|---|---|---|---|---|");
+    for w in &workload_rows {
+        println!(
+            "| {} | {} | {} | {:.2} | {} | {} |",
+            w.workload, w.streams, w.pool, w.rate_mmsgs, w.messages, w.uuars,
+        );
+    }
     println!("\nEXPERIMENTS.md §Fleet rows (paste-ready):");
     println!("| Model | Failure | Mmsg/s | p50 ns | p99 ns | p999 ns | Rehomed | sched_steps |");
     println!("|---|---|---|---|---|---|---|---|");

@@ -15,13 +15,14 @@
 //!   move through RMA windows and the compute runs the AOT-compiled
 //!   Pallas kernel through PJRT, validated against a host-side oracle.
 
-use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
+use crate::bench::MsgRateResult;
 use crate::coordinator::{Job, JobSpec, Universe};
-use crate::endpoints::{EndpointPolicy, EndpointSet, ResourceUsage};
-use crate::nicsim::CostModel;
+use crate::endpoints::{EndpointPolicy, EndpointSet, ResourceUsage, ThreadEndpoint};
 use crate::runtime::{ArtifactRuntime, DGEMM_TILE};
 use crate::verbs::error::Result;
 use crate::verbs::Fabric;
+use crate::workload::drive::{build_policy_set, drive, DriveSpec};
+use crate::workload::{thread_targets, GlobalArrayComm, Topology, Workload};
 
 /// The global-array benchmark for one endpoint policy.
 pub struct GlobalArray {
@@ -38,34 +39,40 @@ impl GlobalArray {
     /// [`EndpointPolicy`].
     pub fn new(policy: impl Into<EndpointPolicy>, nthreads: u32) -> Result<Self> {
         let policy = policy.into();
-        let mut fabric = Fabric::connectx4();
-        let set = policy.build(&mut fabric, nthreads)?;
-        // Two extra tile buffers + MRs per thread (A, B, C tiles). The
-        // builder registered one; add the other two on the thread's PD.
-        for (i, te) in set.threads.iter().enumerate() {
-            let pd = fabric.qp(te.qp)?.pd;
-            let tile_bytes = (DGEMM_TILE * DGEMM_TILE * 4) as u64;
-            for k in 1..3u64 {
-                let addr = 0x8000_0000 + (i as u64 * 3 + k) * tile_bytes;
-                fabric.declare_buf(addr, tile_bytes);
-                fabric.reg_mr(pd, addr, tile_bytes)?;
-            }
-        }
+        // The tile registration pattern (3 BUFs/MRs per QP: A, B, C) is
+        // the workload's topology hint; `build_policy_set` reproduces
+        // the historical fabric layout from it.
+        let Topology::PolicySet { extra_mrs, tile_bytes, tile_base } =
+            (GlobalArrayComm { threads: nthreads, msgs_per_thread: 0, msg_size: 2 }).topology()
+        else {
+            unreachable!("the global array takes the policy-set topology")
+        };
+        let (fabric, set) = build_policy_set(&policy, nthreads, extra_mrs, tile_bytes, tile_base)?;
         Ok(Self { policy, nthreads, fabric, set })
     }
 
     /// Timed communication phase: `msgs_per_thread` RDMA writes with the
-    /// §VII conservative semantics.
+    /// §VII conservative semantics — the [`GlobalArrayComm`] traffic
+    /// matrix through the generic workload driver.
     pub fn time_comm(&self, msgs_per_thread: u64, msg_size: u32) -> MsgRateResult {
-        let cfg = MsgRateConfig {
-            msgs_per_thread,
-            msg_size,
-            features: Features::conservative(),
-            cost: CostModel::calibrated(),
-            force_shared_qp_path: self.policy.shares_qp(),
-            ..Default::default()
-        };
-        Runner::new(&self.fabric, &self.set.threads, cfg).run()
+        let wl = GlobalArrayComm { threads: self.nthreads, msgs_per_thread, msg_size };
+        let targets = thread_targets(&wl, 0);
+        let groups: Vec<Vec<ThreadEndpoint>> =
+            self.set.threads.iter().map(|&t| vec![t]).collect();
+        drive(
+            &self.fabric,
+            &groups,
+            &DriveSpec {
+                targets: &targets,
+                msg_size,
+                shares_qp: self.policy.shares_qp(),
+                ranks: None,
+                open_loop: None,
+                conservative: true,
+                force_general: false,
+                partitioned: false,
+            },
+        )
     }
 
     /// Resource usage of the client's endpoints.

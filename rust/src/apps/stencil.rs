@@ -22,15 +22,16 @@
 //! | Static         | 2 plain QPs -> 1 CQ (static uUARs)        | 1    |
 //! | MpiThreads     | rank-wide: 2 QPs -> 1 CQ shared by all    | 1    |
 
-use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
+use crate::bench::MsgRateResult;
 use crate::coordinator::JobSpec;
 use crate::endpoints::{
-    BufLayout, EndpointPolicy, MrMap, QpProvision, ResourceUsage, ThreadEndpoint, UarMap, Ways,
+    BufLayout, EndpointPolicy, MrMap, QpProvision, ResourceUsage, ThreadEndpoint, Ways,
 };
-use crate::nicsim::CostModel;
 use crate::runtime::{ArtifactRuntime, STENCIL_TILE};
 use crate::verbs::error::Result;
-use crate::verbs::{BufId, CtxId, Fabric, MrId, PdId, QpCaps, TdInitAttr};
+use crate::verbs::{Fabric, QpCaps};
+use crate::workload::drive::{build_halo, drive, DriveSpec};
+use crate::workload::{thread_targets, HaloExchange, Topology, Workload};
 
 /// Default halo-row payload: an 8-column f32 subtile row. Small enough
 /// that the exchange is initiation-bound, as in the paper (its message
@@ -77,107 +78,47 @@ impl StencilBench {
                 "exclusive stencil pairs complete into per-thread CQs"
             ),
         }
-        let mut fabric = Fabric::connectx4();
-        let mut threads = Vec::new();
-        let t = spec.threads_per_rank;
-        let caps = QpCaps::default();
-        let buf_base = 0x100_0000u64;
-        let mut bufno = 0u64;
-        let mut buf_mr = |fabric: &mut Fabric, pd: PdId| -> Result<(BufId, MrId)> {
-            let addr = buf_base + bufno * 64 * ((halo_bytes as u64).div_ceil(64) + 1);
-            bufno += 1;
-            let buf = fabric.declare_buf(addr, halo_bytes as u64);
-            let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
-            Ok((buf, mr))
+        // The per-thread up/down peer set is the workload's topology
+        // hint; `build_halo` reproduces the historical fabric layout
+        // (rank-wide shared pair under level-4 policies, exclusive
+        // pairs with 2x-even spares otherwise) from it.
+        let Topology::Halo { peers } =
+            (HaloExchange { spec, halo_bytes, iterations: 0 }).topology()
+        else {
+            unreachable!("the stencil workload is halo-shaped")
         };
-        for _rank in 0..spec.ranks_per_node {
-            if policy.shares_qp() {
-                // Level 4: one rank-wide up/down pair into one shared CQ.
-                let ctx = fabric.open_ctx(policy.env)?;
-                let pd = fabric.alloc_pd(ctx)?;
-                let cq = fabric.create_cq(ctx, (4 * t).max(64))?;
-                let up = fabric.create_qp(pd, cq, caps, None)?;
-                let down = fabric.create_qp(pd, cq, caps, None)?;
-                for _ in 0..t {
-                    let mut eps = Vec::new();
-                    for qp in [up, down] {
-                        let (buf, mr) = buf_mr(&mut fabric, pd)?;
-                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
-                    }
-                    threads.push(eps);
-                }
-            } else {
-                // Thread-exclusive pairs. `ctx` decides the context
-                // granularity; `qp`/`uar` decide provisioning and TDs.
-                let per_thread_ctx = policy.ctx.is_dedicated();
-                let stride: u32 = if policy.qp == QpProvision::TwoXEven { 2 } else { 1 };
-                let mut rank_scope: Option<(CtxId, PdId)> = None;
-                for _ in 0..t {
-                    let (ctx, pd) = if per_thread_ctx {
-                        let ctx = fabric.open_ctx(policy.env)?;
-                        let pd = fabric.alloc_pd(ctx)?;
-                        (ctx, pd)
-                    } else {
-                        match rank_scope {
-                            Some(scope) => scope,
-                            None => {
-                                let ctx = fabric.open_ctx(policy.env)?;
-                                let pd = fabric.alloc_pd(ctx)?;
-                                rank_scope = Some((ctx, pd));
-                                (ctx, pd)
-                            }
-                        }
-                    };
-                    // Create 2*stride QPs; the used pair is every
-                    // `stride`-th, mapped to one CQ; a 2x spare pair gets
-                    // its own CQ.
-                    let used_cq = fabric.create_cq(ctx, 64)?;
-                    let spare_cq =
-                        if stride == 2 { Some(fabric.create_cq(ctx, 64)?) } else { None };
-                    let mut eps = Vec::new();
-                    for k in 0..(2 * stride) {
-                        let td = match policy.uar {
-                            UarMap::Independent => {
-                                Some(fabric.alloc_td(ctx, TdInitAttr::independent())?)
-                            }
-                            UarMap::Paired => Some(fabric.alloc_td(ctx, TdInitAttr::paired())?),
-                            UarMap::Static => None,
-                        };
-                        let used = k % stride == 0;
-                        let cq = if used { used_cq } else { spare_cq.unwrap() };
-                        let qp = fabric.create_qp(pd, cq, caps, td)?;
-                        if used {
-                            let (buf, mr) = buf_mr(&mut fabric, pd)?;
-                            eps.push(ThreadEndpoint { qp, cq, buf, mr });
-                        }
-                    }
-                    threads.push(eps);
-                }
-            }
-        }
+        let (fabric, threads) = build_halo(spec, &policy, halo_bytes, peers)?;
         Ok(Self { spec, policy, fabric, threads, halo_bytes })
     }
 
     /// Timed halo-exchange phase: each hardware thread sends
     /// `2 * iterations` halo rows (one up, one down per iteration) with
-    /// conservative semantics. Threads of one rank additionally share the
-    /// MPI library's rank-wide progress state, which is why
-    /// processes-only splits outrun fully-hybrid ones (§VII, Fig 14).
+    /// conservative semantics — the [`HaloExchange`] traffic matrix
+    /// through the generic workload driver. Threads of one rank
+    /// additionally share the MPI library's rank-wide progress state,
+    /// which is why processes-only splits outrun fully-hybrid ones
+    /// (§VII, Fig 14).
     pub fn time_exchange(&self, iterations: u64) -> MsgRateResult {
-        let cfg = MsgRateConfig {
-            msgs_per_thread: 2 * iterations,
-            msg_size: self.halo_bytes,
-            features: Features::conservative(),
-            cost: CostModel::calibrated(),
-            force_shared_qp_path: self.policy.shares_qp(),
-            ..Default::default()
-        };
-        let mut runner = Runner::new_multi(&self.fabric, &self.threads, cfg);
+        let wl = HaloExchange { spec: self.spec, halo_bytes: self.halo_bytes, iterations };
+        let targets: Vec<u64> =
+            (0..self.spec.ranks_per_node).flat_map(|r| thread_targets(&wl, r)).collect();
         let ranks: Vec<u32> = (0..self.spec.ranks_per_node)
             .flat_map(|r| std::iter::repeat(r).take(self.spec.threads_per_rank as usize))
             .collect();
-        runner.set_rank_groups(&ranks);
-        runner.run()
+        drive(
+            &self.fabric,
+            &self.threads,
+            &DriveSpec {
+                targets: &targets,
+                msg_size: self.halo_bytes,
+                shares_qp: self.policy.shares_qp(),
+                ranks: Some(&ranks),
+                open_loop: None,
+                conservative: true,
+                force_general: false,
+                partitioned: false,
+            },
+        )
     }
 
     /// Node-wide resource usage (Fig 14 right panels).

@@ -14,9 +14,13 @@
 //! [`XorShift`](crate::sim::rng::XorShift) generator: a
 //! (model, seed) pair reproduces the same arrival sequence bit-for-bit
 //! on every run and platform, which is what lets the fleet figure be
-//! byte-pinned and `SCEP_FUZZ_SEED`-reseeded.
+//! byte-pinned and `SCEP_FUZZ_SEED`-reseeded. The one model with no
+//! randomness at all is [`TrafficModel::Trace`]: a recorded timestamp
+//! file replayed gap-for-gap, for re-running a captured arrival
+//! pattern against a different endpoint configuration.
 
 use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
 
 use crate::sim::rng::XorShift;
 use crate::sim::Time;
@@ -56,16 +60,113 @@ pub enum TrafficModel {
         /// Pareto scale (minimum gap), ns.
         scale_ns: f64,
     },
+    /// Replay of a recorded arrival trace: the `trace:<path>` grammar
+    /// loads a file of nanosecond timestamps (one per line, monotone
+    /// non-decreasing; `#` comments and blank lines skipped), derives
+    /// the inter-arrival gaps, and cycles through them verbatim — no
+    /// randomness, so a replayed fleet is reproducible from the capture
+    /// alone.
+    Trace {
+        /// Interned trace id (the parsed file's gap sequence lives in a
+        /// process-global registry, keeping the model `Copy`).
+        trace: u32,
+        /// Rate multiplier applied to the replayed gaps (gaps divided);
+        /// `parse` yields 1.0, [`TrafficModel::scaled`] raises it.
+        mult: f64,
+    },
+}
+
+/// One loaded trace: its source path (for `Display`) and the derived
+/// inter-arrival gaps in ns.
+struct TraceEntry {
+    path: String,
+    gaps_ns: Vec<f64>,
+}
+
+/// Process-global registry of loaded traces. Interning keeps
+/// [`TrafficModel`] `Copy + PartialEq`: two parses of the same
+/// unchanged file share one id and compare equal.
+fn trace_registry() -> &'static Mutex<Vec<TraceEntry>> {
+    static REG: OnceLock<Mutex<Vec<TraceEntry>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Load, validate and intern a trace file. Every malformed input is a
+/// `Config`-style error naming the path (and line) — a bad file never
+/// occupies a registry id.
+fn intern_trace(path: &str) -> std::result::Result<u32, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace '{path}': {e}"))?;
+    let mut stamps: Vec<f64> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let v: f64 = t
+            .parse()
+            .map_err(|_| format!("trace '{path}' line {}: bad timestamp '{t}'", lineno + 1))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!(
+                "trace '{path}' line {}: timestamp '{t}' must be finite and >= 0",
+                lineno + 1
+            ));
+        }
+        if stamps.last().is_some_and(|&prev| v < prev) {
+            return Err(format!(
+                "trace '{path}' line {}: timestamps must be non-decreasing",
+                lineno + 1
+            ));
+        }
+        stamps.push(v);
+    }
+    if stamps.len() < 2 {
+        return Err(format!(
+            "trace '{path}': need >= 2 timestamps to derive gaps (got {})",
+            stamps.len()
+        ));
+    }
+    let gaps_ns: Vec<f64> = stamps.windows(2).map(|w| w[1] - w[0]).collect();
+    let mut reg = trace_registry().lock().unwrap();
+    if let Some(i) = reg.iter().position(|e| e.path == path && e.gaps_ns == gaps_ns) {
+        return Ok(i as u32);
+    }
+    reg.push(TraceEntry { path: path.to_string(), gaps_ns });
+    Ok((reg.len() - 1) as u32)
+}
+
+fn trace_path(id: u32) -> String {
+    trace_registry().lock().unwrap()[id as usize].path.clone()
+}
+
+/// The gap at cyclic position `pos`, plus the successor position.
+fn trace_gap(id: u32, pos: u32) -> (f64, u32) {
+    let reg = trace_registry().lock().unwrap();
+    let gaps = &reg[id as usize].gaps_ns;
+    let n = gaps.len() as u32;
+    (gaps[(pos % n) as usize], (pos + 1) % n)
+}
+
+fn trace_mean_ns(id: u32) -> f64 {
+    let reg = trace_registry().lock().unwrap();
+    let gaps = &reg[id as usize].gaps_ns;
+    gaps.iter().sum::<f64>() / gaps.len() as f64
 }
 
 impl TrafficModel {
     /// The valid CLI spellings, for error messages.
     pub const VALID: &str = "poisson:<mean_ns>, onoff:<burst>:<on_ns>:<off_mean_ns>, \
-                             pareto:<scale_ns>";
+                             pareto:<scale_ns>, trace:<path>";
 
     /// Parse a CLI name. Round-trips with the `Display` impl.
     pub fn parse(s: &str) -> std::result::Result<Self, String> {
         let bad_num = |t: &str| format!("bad number '{t}' in traffic model '{s}'");
+        // The trace form is matched on the whole prefix before any ':'
+        // splitting — paths may themselves contain colons.
+        if let Some(path) = s.trim().strip_prefix("trace:") {
+            let trace = intern_trace(path)?;
+            return Ok(TrafficModel::Trace { trace, mult: 1.0 });
+        }
         let parts: Vec<&str> = s.trim().split(':').collect();
         match parts.as_slice() {
             ["poisson", mean] => mean
@@ -105,6 +206,9 @@ impl TrafficModel {
             TrafficModel::Pareto { scale_ns } => {
                 TrafficModel::Pareto { scale_ns: scale_ns / mult }
             }
+            TrafficModel::Trace { trace, mult: m } => {
+                TrafficModel::Trace { trace, mult: m * mult }
+            }
         }
     }
 
@@ -128,6 +232,8 @@ impl TrafficModel {
                 a * l.powf(a) / (a - 1.0) * (l.powf(1.0 - a) - h.powf(1.0 - a))
                     + h * (l / h).powf(a)
             }
+            // Trace: the exact mean of the replayed gap cycle.
+            TrafficModel::Trace { trace, mult } => trace_mean_ns(trace) / mult,
         }
     }
 
@@ -155,6 +261,14 @@ impl TrafficModel {
             TrafficModel::Pareto { scale_ns } => {
                 rng.pareto_f64(scale_ns, PARETO_ALPHA, PARETO_CAP)
             }
+            TrafficModel::Trace { trace, mult } => {
+                // Deterministic replay: `burst_pos` doubles as the
+                // cyclic cursor into the gap sequence; the rng is never
+                // touched.
+                let (gap, next) = trace_gap(trace, *burst_pos);
+                *burst_pos = next;
+                gap / mult
+            }
         }
     }
 }
@@ -169,7 +283,11 @@ impl std::str::FromStr for TrafficModel {
 
 impl std::fmt::Display for TrafficModel {
     /// Canonical CLI spelling; `parse` of this string reproduces the
-    /// model exactly.
+    /// model exactly. (The one in-memory-only transform is a `scaled`
+    /// trace: the grammar names the capture file, not the multiplier,
+    /// so a hot-stream-scaled replay displays its base spelling —
+    /// exactly like the fleet reports, which label cells with the base
+    /// model and keep per-stream scaling internal.)
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             TrafficModel::Poisson { mean_gap_ns } => write!(f, "poisson:{mean_gap_ns}"),
@@ -177,6 +295,7 @@ impl std::fmt::Display for TrafficModel {
                 write!(f, "onoff:{burst}:{on_gap_ns}:{off_mean_ns}")
             }
             TrafficModel::Pareto { scale_ns } => write!(f, "pareto:{scale_ns}"),
+            TrafficModel::Trace { trace, .. } => write!(f, "trace:{}", trace_path(*trace)),
         }
     }
 }
@@ -270,11 +389,69 @@ mod tests {
     #[test]
     fn bad_input_lists_valid_models() {
         let err = TrafficModel::parse("bogus:1").unwrap_err();
-        for name in ["poisson", "onoff", "pareto"] {
+        for name in ["poisson", "onoff", "pareto", "trace"] {
             assert!(err.contains(name), "error should list '{name}': {err}");
         }
         assert!(TrafficModel::parse("poisson:x").is_err());
         assert!(TrafficModel::parse("onoff:0:1:1").is_err());
+    }
+
+    /// Write a trace body to a unique temp file, returning its path.
+    fn write_trace(name: &str, body: &str) -> String {
+        let path =
+            std::env::temp_dir().join(format!("scep_trace_{}_{name}.txt", std::process::id()));
+        std::fs::write(&path, body).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn trace_errors_name_the_path() {
+        let missing = "/no/such/dir/scep_missing.trace";
+        let err = TrafficModel::parse(&format!("trace:{missing}")).unwrap_err();
+        assert!(err.contains(missing), "missing-file error must name the path: {err}");
+
+        let garbled = write_trace("garbled", "0\nnot-a-number\n");
+        let err = TrafficModel::parse(&format!("trace:{garbled}")).unwrap_err();
+        assert!(err.contains(&garbled) && err.contains("line 2"), "{err}");
+
+        let backwards = write_trace("backwards", "100\n50\n");
+        let err = TrafficModel::parse(&format!("trace:{backwards}")).unwrap_err();
+        assert!(err.contains("non-decreasing"), "{err}");
+
+        let short = write_trace("short", "# just a comment\n42\n");
+        let err = TrafficModel::parse(&format!("trace:{short}")).unwrap_err();
+        assert!(err.contains(">= 2 timestamps"), "{err}");
+    }
+
+    #[test]
+    fn trace_replays_the_recorded_gaps_cyclically() {
+        // Timestamps 0/100/300/600 ns -> gap cycle [100, 200, 300].
+        let path = write_trace("cycle", "# capture\n0\n\n100\n300\n600\n");
+        let spec = format!("trace:{path}");
+        let m = TrafficModel::parse(&spec).unwrap();
+        assert_eq!(m.to_string(), spec, "display round-trips the spelling");
+        assert_eq!(TrafficModel::parse(&spec), Ok(m), "re-parse interns to the same id");
+        assert_eq!(m.mean_gap_ns(), 200.0);
+
+        let mut g = ArrivalGen::new(StreamTraffic { model: m, seed: 1 });
+        g.gate(7);
+        // First lap replays the capture verbatim (ps units), then the
+        // cycle wraps; a different seed changes nothing (no rng).
+        let arrivals: Vec<Time> = (0..7).map(|i| g.arrival(i)).collect();
+        assert_eq!(
+            arrivals,
+            vec![100_000, 300_000, 600_000, 700_000, 900_000, 1_200_000, 1_300_000]
+        );
+        let mut h = ArrivalGen::new(StreamTraffic { model: m, seed: 999 });
+        assert_eq!(h.gate(7), g.gate(7), "replay ignores the seed");
+
+        // Hot-stream scaling divides the replayed gaps.
+        let hot = m.scaled(2.0);
+        assert_eq!(hot.mean_gap_ns(), 100.0);
+        let mut s = ArrivalGen::new(StreamTraffic { model: hot, seed: 1 });
+        s.gate(3);
+        assert_eq!(s.arrival(2), 300_000, "gaps halved");
+        assert_eq!(hot.to_string(), spec, "a scaled trace displays its base spelling");
     }
 
     #[test]

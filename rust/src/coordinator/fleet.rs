@@ -67,6 +67,11 @@ pub struct FleetConfig {
     pub model: TrafficModel,
     pub seed: u64,
     pub kill: Option<KillSpec>,
+    /// Optional workload scenario shaping the per-stream demand: when
+    /// set, each stream's message target and arrival-rate multiplier
+    /// come from the scenario's traffic-matrix row sums (per rank and
+    /// phase) instead of the [`HotStreams`] popularity skew.
+    pub workload: Option<crate::workload::Scenario>,
 }
 
 impl FleetConfig {
@@ -85,6 +90,7 @@ impl FleetConfig {
             model: TrafficModel::Poisson { mean_gap_ns: 400.0 },
             seed: 1,
             kill: None,
+            workload: None,
         }
     }
 
@@ -148,12 +154,27 @@ pub fn stream_seed(seed: u64, rank: u64, thread: u64, phase: u64) -> u64 {
     x ^ (x >> 31)
 }
 
-/// Per-stream open-loop traffic for one rank: hot streams run the model
-/// at `weight`-times the rate (gaps divided), tail streams run it as-is.
+/// Per-stream demand weights for one rank: without a workload, the
+/// [`HotStreams`] skew (hot streams carry `weight`-times the tail's
+/// traffic); with one, the scenario's traffic-matrix row sums for this
+/// `(rank, phase)` — so a fleet's arrival shape follows the workload's
+/// actual communication pattern.
+pub fn stream_weights(cfg: &FleetConfig, rank: u32, phase: u64) -> Vec<u64> {
+    match cfg.workload {
+        None => (0..cfg.streams).map(|t| cfg.hot.weight_of(t) as u64).collect(),
+        Some(s) => crate::workload::fleet_weights(s, cfg.streams, cfg.seed, rank, phase),
+    }
+}
+
+/// Per-stream open-loop traffic for one rank: each stream runs the model
+/// at its demand weight times the rate (gaps divided) — hot streams
+/// under the default skew, matrix-heavy streams under a workload.
 pub fn stream_traffic(cfg: &FleetConfig, rank: u32, phase: u64) -> Vec<StreamTraffic> {
-    (0..cfg.streams)
-        .map(|t| StreamTraffic {
-            model: cfg.model.scaled(cfg.hot.weight_of(t) as f64),
+    stream_weights(cfg, rank, phase)
+        .into_iter()
+        .enumerate()
+        .map(|(t, w)| StreamTraffic {
+            model: cfg.model.scaled(w as f64),
             seed: stream_seed(cfg.seed, rank as u64, t as u64, phase),
         })
         .collect()
@@ -179,8 +200,9 @@ fn simulate_rank(u: &Universe, cfg: &FleetConfig, rank: u32) -> RankOutcome {
     let mut rc = u.ranks[rank as usize].clone();
     let fabric = &u.nodes[rc.node as usize].fabric;
     let msg_cfg = MsgRateConfig { msgs_per_thread: cfg.msgs_per_stream, ..Default::default() };
-    let full: Vec<u64> = (0..cfg.streams)
-        .map(|t| cfg.msgs_per_stream * cfg.hot.weight_of(t) as u64)
+    let full: Vec<u64> = stream_weights(cfg, rank, 0)
+        .into_iter()
+        .map(|w| cfg.msgs_per_stream * w)
         .collect();
     // Window-rounded per-stream totals: what a runner on this topology
     // will actually complete for these targets.
@@ -426,6 +448,25 @@ mod tests {
         assert_ne!(a, stream_seed(1, 1, 0, 0), "ranks must reseed");
         assert_ne!(a, stream_seed(2, 0, 0, 0), "the fleet seed must matter");
         assert_eq!(a, stream_seed(1, 0, 0, 0), "pure function");
+    }
+
+    #[test]
+    fn workload_weights_replace_the_hot_skew() {
+        let cfg = FleetConfig::new(4, 8);
+        // Default: the HotStreams skew, exactly as computed by hand.
+        let hot: Vec<u64> = (0..cfg.streams).map(|t| cfg.hot.weight_of(t) as u64).collect();
+        assert_eq!(stream_weights(&cfg, 0, 0), hot);
+        assert_eq!(stream_weights(&cfg, 3, 1), hot, "skew is rank/phase-invariant");
+        // With a workload: matrix row sums. Alltoall over 8 streams is
+        // uniform all-pairs — every stream weighs (streams - 1).
+        let mut wcfg = cfg;
+        wcfg.workload = Some(crate::workload::Scenario::Alltoall);
+        assert_eq!(stream_weights(&wcfg, 0, 0), vec![7u64; 8]);
+        assert_ne!(stream_weights(&wcfg, 0, 0), hot);
+        // The traffic models follow the weights (gaps divided by them).
+        let traffic = stream_traffic(&wcfg, 0, 0);
+        assert_eq!(traffic.len(), 8);
+        assert_eq!(traffic[0].model, wcfg.model.scaled(7.0));
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Experiment configs: an experiment is *data*. A JSON file names a
-//! workload kind (`figure` | `fleet` | `pool-sweep`) plus the knobs the
-//! CLI used to take as flags — policy, pool, map, threads, ranks, msgs,
+//! workload kind (`figure` | `fleet` | `pool-sweep` | `workload`) plus
+//! the knobs the CLI used to take as flags — policy, pool, map, threads, ranks, msgs,
 //! traffic, kill, hot, seed, repeat — and the report echoes the parsed
 //! config back in canonical form so any run is reproducible from its
 //! report alone.
@@ -15,27 +15,32 @@ use crate::coordinator::{FleetConfig, HotStreams, KillSpec};
 use crate::endpoints::EndpointPolicy;
 use crate::figures;
 use crate::vci::MapStrategy;
+use crate::workload::Scenario;
 
 use super::json::Json;
 
 /// What a config runs. `Figure` re-runs a named figure table; `Fleet`
 /// drives [`crate::coordinator::run_fleet`]; `PoolSweep` walks the
-/// rate-vs-resources frontier over pool sizes × map strategies.
+/// rate-vs-resources frontier over pool sizes × map strategies;
+/// `Workload` runs one pluggable [`Scenario`]'s policy × pool × map
+/// sweep through the generic workload driver.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WorkloadKind {
     Figure,
     Fleet,
     PoolSweep,
+    Workload,
 }
 
 impl WorkloadKind {
-    pub const VALID: &str = "figure, fleet, pool-sweep";
+    pub const VALID: &str = "figure, fleet, pool-sweep, workload";
 
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "figure" => Ok(WorkloadKind::Figure),
             "fleet" => Ok(WorkloadKind::Fleet),
             "pool-sweep" => Ok(WorkloadKind::PoolSweep),
+            "workload" => Ok(WorkloadKind::Workload),
             _ => Err(format!("bad \"kind\" '{s}' (valid: {})", Self::VALID)),
         }
     }
@@ -45,6 +50,7 @@ impl WorkloadKind {
             WorkloadKind::Figure => "figure",
             WorkloadKind::Fleet => "fleet",
             WorkloadKind::PoolSweep => "pool-sweep",
+            WorkloadKind::Workload => "workload",
         }
     }
 }
@@ -103,6 +109,9 @@ pub struct ExperimentConfig {
     pub kind: WorkloadKind,
     /// Figure name (kind=figure), from [`figures::ALL_FIGURES`].
     pub figure: Option<String>,
+    /// Scenario name (kind=workload; optional fleet demand shaper),
+    /// from [`Scenario::names`].
+    pub workload: Option<Scenario>,
     /// Quick variant of figure workloads (same flag as `scep bench`).
     pub quick: bool,
     pub policy: EndpointPolicy,
@@ -140,11 +149,12 @@ pub struct ExperimentConfig {
     pub slo: Option<SloSpec>,
 }
 
-const VALID_KEYS: [&str; 23] = [
+const VALID_KEYS: [&str; 24] = [
     "name",
     "description",
     "kind",
     "figure",
+    "workload",
     "quick",
     "policy",
     "pool",
@@ -264,6 +274,29 @@ impl ExperimentConfig {
                 return Err("\"figure\" only applies to kind=figure".to_string());
             }
             _ => {}
+        }
+
+        // kind=workload names its scenario; a fleet may optionally name
+        // one to shape per-stream demand from its traffic matrix.
+        let workload = match string(v, "workload")? {
+            None => None,
+            Some(s) => {
+                Some(Scenario::parse(s).map_err(|e| format!("bad \"workload\": {e}"))?)
+            }
+        };
+        match (workload, kind) {
+            (None, WorkloadKind::Workload) => {
+                return Err(format!(
+                    "kind=workload needs a \"workload\" (valid: {})",
+                    Scenario::names()
+                ));
+            }
+            (Some(_), WorkloadKind::Workload | WorkloadKind::Fleet) | (None, _) => {}
+            (Some(_), _) => {
+                return Err(
+                    "\"workload\" only applies to kind=workload or kind=fleet".to_string()
+                );
+            }
         }
 
         let policy_spec = string(v, "policy")?.unwrap_or("scalable").to_string();
@@ -401,6 +434,7 @@ impl ExperimentConfig {
             description,
             kind,
             figure,
+            workload,
             quick,
             policy,
             policy_spec,
@@ -435,6 +469,9 @@ impl ExperimentConfig {
         ];
         if let Some(f) = &self.figure {
             o.push(("figure".into(), Json::Str(f.clone())));
+        }
+        if let Some(s) = self.workload {
+            o.push(("workload".into(), Json::Str(s.name().into())));
         }
         o.push(("quick".into(), Json::Bool(self.quick)));
         o.push(("policy".into(), Json::Str(self.policy_spec.clone())));
@@ -499,6 +536,7 @@ impl ExperimentConfig {
         fc.model = self.traffic;
         fc.seed = seed;
         fc.kill = self.kill;
+        fc.workload = self.workload;
         fc
     }
 }
@@ -550,6 +588,40 @@ mod tests {
         let e = ExperimentConfig::parse("{\"name\": \"t\", \"kind\": \"fleet\", \"policy\": \"x\"}")
             .unwrap_err();
         assert!(e.starts_with("bad \"policy\""), "{e}");
+    }
+
+    #[test]
+    fn workload_kind_names_its_scenario() {
+        // kind=workload without a scenario lists the valid set.
+        let e = ExperimentConfig::parse(&minimal("workload")).unwrap_err();
+        assert!(e.contains("kind=workload needs a \"workload\""), "{e}");
+        assert!(e.contains("alltoall") && e.contains("everywhere"), "{e}");
+        // Unknown names reuse the Scenario::parse error.
+        let e = ExperimentConfig::parse(
+            "{\"name\": \"t\", \"kind\": \"workload\", \"workload\": \"fft\"}",
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown workload 'fft'"), "{e}");
+        // The key only applies where it means something.
+        let e = ExperimentConfig::parse(
+            "{\"name\": \"t\", \"kind\": \"pool-sweep\", \"workload\": \"rpc\"}",
+        )
+        .unwrap_err();
+        assert!(e.contains("kind=workload or kind=fleet"), "{e}");
+        // A valid scenario parses, echoes and reaches the fleet config.
+        let c = ExperimentConfig::parse(
+            "{\"name\": \"t\", \"kind\": \"workload\", \"workload\": \"sparse\", \
+             \"quick\": true}",
+        )
+        .unwrap();
+        assert_eq!(c.workload, Some(Scenario::Sparse));
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "workload key round-trips");
+        let f = ExperimentConfig::parse(
+            "{\"name\": \"t\", \"kind\": \"fleet\", \"workload\": \"alltoall\"}",
+        )
+        .unwrap();
+        assert_eq!(f.fleet_config(1).workload, Some(Scenario::Alltoall));
     }
 
     #[test]

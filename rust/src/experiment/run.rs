@@ -13,7 +13,11 @@
 //!   baseline at `pool = threads`, then every configured pool size
 //!   under round-robin, hashed, and adaptive placement via
 //!   [`run_pooled`] (sequential execution: every metric, including
-//!   `sched_events`, is deterministic).
+//!   `sched_events`, is deterministic);
+//! * `workload` — one pluggable scenario's policy × pool × map sweep
+//!   through the generic workload driver
+//!   ([`run_cell`](crate::workload::drive::run_cell)), the same cells
+//!   as the `workloads` figure but addressable by scenario name.
 //!
 //! When the config carries an `slo` stanza the capacity search
 //! ([`super::slo`]) runs after the workload and appends its probe
@@ -37,6 +41,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Report, String> {
         WorkloadKind::Figure => figure_rows(cfg)?,
         WorkloadKind::Fleet => fleet_rows(cfg)?,
         WorkloadKind::PoolSweep => pool_sweep_rows(cfg)?,
+        WorkloadKind::Workload => workload_rows(cfg),
     };
     if let Some(spec) = cfg.slo {
         rows.extend(slo_rows(cfg, &spec)?);
@@ -101,6 +106,26 @@ fn fleet_rows(cfg: &ExperimentConfig) -> Result<Vec<ReportRow>, String> {
         }
     }
     Ok(rows)
+}
+
+fn workload_rows(cfg: &ExperimentConfig) -> Vec<ReportRow> {
+    // The config validated the scenario name; the sweep is exactly the
+    // `workloads` figure's table for it, lifted cell by cell so a
+    // workload experiment compares against the golden-pinned numbers.
+    let s = cfg.workload.expect("kind=workload carries a scenario");
+    let t = figures::workload_table(s, cfg.quick);
+    let mut rows = Vec::new();
+    for cells in t.rows() {
+        let mut row =
+            ReportRow::new(format!("{}:{}:{}:{}", s.name(), cells[0], cells[1], cells[2]));
+        for (h, cell) in t.header().iter().zip(cells) {
+            if let Ok(x) = cell.parse::<f64>() {
+                row = row.metric(h, x);
+            }
+        }
+        rows.push(row);
+    }
+    rows
 }
 
 fn pool_row(label: String, r: &PooledResult) -> ReportRow {

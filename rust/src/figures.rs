@@ -29,6 +29,8 @@ use crate::par::par_map;
 use crate::report::{f2, pct, Table};
 use crate::vci::{run_pooled, MapStrategy};
 use crate::verbs::Fabric;
+use crate::workload::drive::{everywhere_head_to_head, run_cell};
+use crate::workload::Scenario;
 
 /// The thread/way sweep shared by most figures.
 const SWEEP: [u32; 5] = [1, 2, 4, 8, 16];
@@ -619,6 +621,87 @@ pub fn pool_threads(thread_counts: &[u32], quick: bool) -> Vec<Table> {
     vec![t]
 }
 
+/// Workload sweep: every pluggable [`Scenario`] through the shared
+/// generic path — one table per workload, policy x pool x map-strategy
+/// cells over the scenario's stream count, with per-cell resource
+/// accounting. The `everywhere` table leads with the MPI-everywhere
+/// side of the head-to-head (N single-thread ranks at the same core
+/// count), so both models' rate and uUARs/QPs/CQs sit in one table.
+pub fn workloads(quick: bool) -> Vec<Table> {
+    Scenario::ALL.iter().map(|&s| workload_table(s, quick)).collect()
+}
+
+/// One scenario's sweep table — `scep workload <name>` prints exactly
+/// this, so a single-workload run matches the corresponding slice of
+/// the `workloads` figure byte for byte.
+pub fn workload_table(s: Scenario, quick: bool) -> Table {
+    let strategies = [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()];
+    let w = s.instantiate(quick);
+    let n = w.shape().threads_per_rank;
+    let mut t = Table::new(
+        &format!("Workload '{}': {} ({n} streams)", s.name(), w.description()),
+        &[
+            "config",
+            "pool",
+            "map",
+            "rate_Mmsg/s",
+            "messages",
+            "uUARs",
+            "QPs",
+            "CQs",
+            "mem_MiB",
+            "migrations",
+        ],
+    );
+    if s == Scenario::Everywhere {
+        let (r, u) = everywhere_head_to_head(quick).expect("everywhere build");
+        t.row(vec![
+            format!("everywhere {n}x1"),
+            "-".to_string(),
+            "-".to_string(),
+            f2(r.mmsgs_per_sec),
+            r.messages.to_string(),
+            u.uuars_allocated.to_string(),
+            u.qps.to_string(),
+            u.cqs.to_string(),
+            f2(u.memory_mib()),
+            "0".to_string(),
+        ]);
+    }
+    let mut cells: Vec<(&'static str, EndpointPolicy, u32, MapStrategy)> = Vec::new();
+    cells.push(("dedicated", EndpointPolicy::default(), n, MapStrategy::Dedicated));
+    for (label, policy) in [
+        ("scalable", EndpointPolicy::scalable()),
+        ("dynamic", EndpointPolicy::preset(Category::Dynamic)),
+    ] {
+        for pool_size in pool_sizes(n) {
+            for &strategy in &strategies {
+                cells.push((label, policy, pool_size, strategy));
+            }
+        }
+    }
+    let results = par_map(cells, move |(label, policy, pool_size, strategy)| {
+        let w = s.instantiate(quick);
+        let c = run_cell(&*w, &policy, pool_size, strategy).expect("workload cell");
+        (label, pool_size, strategy, c)
+    });
+    for (label, pool_size, strategy, c) in &results {
+        t.row(vec![
+            label.to_string(),
+            pool_size.to_string(),
+            strategy.to_string(),
+            f2(c.result.mmsgs_per_sec),
+            c.result.messages.to_string(),
+            c.usage.uuars_allocated.to_string(),
+            c.usage.qps.to_string(),
+            c.usage.cqs.to_string(),
+            f2(c.usage.memory_mib()),
+            c.migrations.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Fleet engine (coordinator::fleet): open-loop traffic models x
 /// failure injection over a many-rank universe, with fleet-wide
 /// per-message latency percentiles merged from the per-rank samples.
@@ -802,6 +885,7 @@ pub fn by_name(name: &str, quick: bool) -> Option<Vec<Table>> {
         "fig14" | "14" => fig14(quick),
         "grid" | "policy-grid" => grid(quick),
         "pool" | "vci" => pool(quick),
+        "workloads" | "workload" => workloads(quick),
         "fleet" => fleet(quick),
         "sweep" | "memo-sweep" => sweep(quick),
         "ablation-qp-lock" => ablation_qp_lock(quick),
@@ -830,9 +914,9 @@ pub fn render_bytes(name: &str, quick: bool) -> Option<String> {
 }
 
 /// Every figure id, in paper order, plus the policy grid, the VCI pool
-/// sweep, the fleet traffic engine, the memoized convergence sweep and
-/// the design-choice ablations.
-pub const ALL_FIGURES: [&str; 19] = [
+/// sweep, the pluggable workload sweep, the fleet traffic engine, the
+/// memoized convergence sweep and the design-choice ablations.
+pub const ALL_FIGURES: [&str; 20] = [
     "table1",
     "fig2",
     "fig3",
@@ -847,6 +931,7 @@ pub const ALL_FIGURES: [&str; 19] = [
     "fig14",
     "grid",
     "pool",
+    "workloads",
     "fleet",
     "sweep",
     "ablation-qp-lock",

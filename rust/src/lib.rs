@@ -42,6 +42,10 @@
 //! * [`experiment`] — experiments as data: JSON configs in,
 //!   self-contained reports out, tolerance-banded report comparison,
 //!   and the closed-loop SLO capacity search.
+//! * [`workload`] — workloads as data: the pluggable [`workload::Workload`]
+//!   trait (traffic matrix + completion semantics + topology hint), the
+//!   paper apps as data definitions, and the sequel's scenarios
+//!   (alltoall / sparse / rpc / the MPI-everywhere head-to-head).
 //! * [`cli`] — testable flag parsers for the `scep` binary.
 
 pub mod apps;
@@ -60,5 +64,6 @@ pub mod sim;
 pub mod testing;
 pub mod vci;
 pub mod verbs;
+pub mod workload;
 
 pub use endpoints::{Category, EndpointPolicy};

@@ -8,7 +8,8 @@
 //! scep resources --policy scalable --threads 16 --pool 5 [--map rr]
 //! scep pool [--threads 16] [--pool 5] [--map rr] [--policy <spec>]
 //! scep fleet [--quick] [--ranks 1024] [--streams 32] [--pool 8] [--map hash]
-//!           [--msgs 1024] [--seed 1] [--workers <n>]
+//!           [--msgs 1024] [--seed 1] [--workers <n>] [--workload <name>]
+//! scep workload [<name>] [--quick] [--workers <n>]
 //! scep run global-array [--n 256] [--category 2xdynamic | --policy <spec>]
 //! scep run stencil [--spec 4.4] [--category dynamic | --policy <spec>]
 //! scep experiment <config.json> [--seed <s>] [--out <dir>] [--workers <n>]
@@ -24,6 +25,12 @@
 //! stream-to-endpoint placement (see `vci::MapStrategy::parse`). Both
 //! grammars round-trip: `scep resources` and `scep pool` print the
 //! canonical strings back.
+//!
+//! `scep workload` prints one pluggable scenario's policy x pool x
+//! map-strategy sweep (or every scenario's, with no name) through the
+//! shared generic driver — the same tables as `--figure workloads`.
+//! `scep fleet --workload <name>` shapes the fleet's per-stream demand
+//! from that scenario's traffic matrix instead of the hot-stream skew.
 //!
 //! `scep experiment` runs a JSON experiment config (see
 //! `experiment::ExperimentConfig`) and writes a self-contained report
@@ -46,6 +53,7 @@ use scalable_ep::experiment::{self, ExperimentConfig, Report};
 use scalable_ep::runtime::ArtifactRuntime;
 use scalable_ep::vci::{run_pooled, EndpointPool, MapStrategy, Stream, VciMapper};
 use scalable_ep::verbs::Fabric;
+use scalable_ep::workload::Scenario;
 use scalable_ep::{figures, report};
 
 fn usage() -> ExitCode {
@@ -56,7 +64,8 @@ fn usage() -> ExitCode {
          scep pool [--threads <n>] [--pool <k>] [--map <strategy>] \
          [--policy <spec>] [--msgs <m>] [--workers <n>]\n  \
          scep fleet [--quick] [--ranks <n>] [--streams <n>] [--pool <k>] \
-         [--map <strategy>] [--msgs <m>] [--seed <s>] [--workers <n>]\n  \
+         [--map <strategy>] [--msgs <m>] [--seed <s>] [--workers <n>] [--workload <name>]\n  \
+         scep workload [<name>] [--quick] [--workers <n>]\n  \
          scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
          scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
          scep experiment <config.json> [--seed <s>] [--out <dir>] [--workers <n>]\n  \
@@ -67,9 +76,11 @@ fn usage() -> ExitCode {
          cq=<k>|shared,depth=scaled:<b>|fixed:<v>,buf=aligned|packed|group:<w>|one,\
          pd=<k>|shared,mr=per-thread|span:<k>[,uuars=T:L][,msg=N] — or 'scalable'\n\
          map strategies: {}\n\
-         figures: {}",
+         figures: {}\n\
+         workloads: {}",
         MapStrategy::VALID,
-        figures::ALL_FIGURES.join(", ")
+        figures::ALL_FIGURES.join(", "),
+        Scenario::names()
     );
     ExitCode::from(2)
 }
@@ -330,6 +341,9 @@ fn main() -> ExitCode {
             cfg.map = try_flag!(cli::parse_map(&args, cfg.map));
             cfg.msgs_per_stream =
                 try_flag!(cli::parse_u64(&args, "--msgs", cfg.msgs_per_stream, 1));
+            if let Some(name) = cli::flag_value(&args, "--workload") {
+                cfg.workload = Some(try_flag!(Scenario::parse(&name)));
+            }
             // --seed beats SCEP_FUZZ_SEED beats the default; echo it so
             // any sweep is reproducible by exporting the env var.
             let env_seed =
@@ -367,6 +381,23 @@ fn main() -> ExitCode {
                     ExitCode::FAILURE
                 }
             }
+        }
+        "workload" => {
+            // One scenario's sweep (or all of them) through the shared
+            // generic driver — the same tables as `--figure workloads`.
+            try_flag!(apply_workers(&args));
+            let quick = args.iter().any(|a| a == "--quick");
+            let scenarios: Vec<Scenario> = match args.get(1).filter(|a| !a.starts_with("--")) {
+                Some(name) => match Scenario::parse(name) {
+                    Ok(s) => vec![s],
+                    Err(e) => return bad(e),
+                },
+                None => Scenario::ALL.to_vec(),
+            };
+            for s in scenarios {
+                figures::workload_table(s, quick).print();
+            }
+            ExitCode::SUCCESS
         }
         "experiment" => cmd_experiment(&args),
         "compare" => cmd_compare(&args),

@@ -1,0 +1,44 @@
+//! Dense all-to-all exchange (FFT-style transpose): every stream sends
+//! the same tile count to every other stream, the communication pattern
+//! of distributed FFTs and transposes ("Lessons Learned on MPI+Threads
+//! Communication", arXiv:2206.14285). Uniform targets, so the driver
+//! stays on the historical `msgs_per_thread` fast path.
+
+use crate::coordinator::JobSpec;
+
+use super::{Flow, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Alltoall {
+    pub threads: u32,
+    /// Messages to each of the `threads - 1` peers.
+    pub msgs_per_peer: u64,
+    pub msg_size: u32,
+}
+
+impl Alltoall {
+    pub fn new(quick: bool) -> Self {
+        Self { threads: 16, msgs_per_peer: if quick { 32 } else { 256 }, msg_size: 512 }
+    }
+}
+
+impl Workload for Alltoall {
+    fn name(&self) -> &'static str {
+        "alltoall"
+    }
+
+    fn description(&self) -> &'static str {
+        "FFT-style dense exchange, every stream to every other"
+    }
+
+    fn shape(&self) -> JobSpec {
+        JobSpec::new(1, self.threads)
+    }
+
+    fn matrix(&self, _rank: u32, thread: u32, _phase: u64) -> Vec<Flow> {
+        (0..self.threads)
+            .filter(|&p| p != thread)
+            .map(|p| Flow { peer: p, msgs: self.msgs_per_peer, msg_size: self.msg_size, tag: p })
+            .collect()
+    }
+}

@@ -1,0 +1,422 @@
+//! Generic drivers: turn any [`Workload`] into a timed run.
+//!
+//! Three surfaces:
+//! * [`build_policy_set`] / [`build_halo`] — the two endpoint-topology
+//!   builders the paper apps used to hand-roll, generalized over the
+//!   [`Topology`] hint. With the legacy parameters (`extra_mrs = 2`,
+//!   `peers = 2`) the fabric call sequences are byte-identical to the
+//!   pre-refactor `apps::{GlobalArray, StencilBench}` constructors —
+//!   the fig12/fig14 golden fixtures and tests/workload.rs pin this.
+//! * [`drive`] — one timed [`Runner`] phase from a [`DriveSpec`].
+//!   Uniform targets take the historical `msgs_per_thread` fast path
+//!   (never `set_msgs_targets`), preserving the legacy code path
+//!   bit-exactly; non-uniform matrices (sparse degree skew) take the
+//!   per-thread-target path.
+//! * [`run_cell`] — one policy × pool × map-strategy cell for a pooled
+//!   single-rank workload, mirroring `vci::run_pooled` (including the
+//!   `Adaptive` probe), plus
+//!   [`run_everywhere_ranks`] for the MPI-everywhere side of the
+//!   head-to-head.
+
+use crate::bench::{Features, MsgRateConfig, MsgRateResult, Runner, StreamTraffic};
+use crate::coordinator::JobSpec;
+use crate::endpoints::{
+    Category, EndpointPolicy, EndpointSet, QpProvision, ResourceUsage, ThreadEndpoint, UarMap,
+};
+use crate::nicsim::CostModel;
+use crate::vci::{pooled_threads, EndpointPool, MapStrategy, Stream, VciMapper};
+use crate::verbs::error::{Result, VerbsError};
+use crate::verbs::{BufId, CtxId, Fabric, MrId, PdId, QpCaps, QpId, TdInitAttr};
+
+use super::{msg_size_of, open_loop_traffic, thread_targets, Everywhere, Topology, Workload};
+
+/// Build a policy-layout endpoint set plus `extra_mrs` tile BUF/MR
+/// registrations per thread ([`Topology::PolicySet`]). `extra_mrs = 2`
+/// at the DGEMM tile geometry reproduces the global-array constructor's
+/// fabric calls exactly.
+pub fn build_policy_set(
+    policy: &EndpointPolicy,
+    nthreads: u32,
+    extra_mrs: u32,
+    tile_bytes: u64,
+    tile_base: u64,
+) -> Result<(Fabric, EndpointSet)> {
+    let mut fabric = Fabric::connectx4();
+    let set = policy.build(&mut fabric, nthreads)?;
+    if extra_mrs > 0 {
+        // The builder registered one buffer per thread; add the others
+        // on the thread's PD (A/B/C tiles for the global array).
+        let per_thread = 1 + extra_mrs as u64;
+        for (i, te) in set.threads.iter().enumerate() {
+            let pd = fabric.qp(te.qp)?.pd;
+            for k in 1..per_thread {
+                let addr = tile_base + (i as u64 * per_thread + k) * tile_bytes;
+                fabric.declare_buf(addr, tile_bytes);
+                fabric.reg_mr(pd, addr, tile_bytes)?;
+            }
+        }
+    }
+    Ok((fabric, set))
+}
+
+/// Build the stencil-shaped topology ([`Topology::Halo`]): `peers` QPs
+/// per hardware thread with one halo buffer each, honoring the policy's
+/// ctx / qp-provision / uar axes — a rank-wide shared QP set under
+/// level-4 policies, thread-exclusive sets otherwise (with 2x-even
+/// provisioning giving each spare set its own CQ). `peers = 2`
+/// reproduces the stencil constructor's fabric calls exactly.
+pub fn build_halo(
+    spec: JobSpec,
+    policy: &EndpointPolicy,
+    halo_bytes: u32,
+    peers: u32,
+) -> Result<(Fabric, Vec<Vec<ThreadEndpoint>>)> {
+    let mut fabric = Fabric::connectx4();
+    let mut threads = Vec::new();
+    let t = spec.threads_per_rank;
+    let caps = QpCaps::default();
+    let buf_base = 0x100_0000u64;
+    let mut bufno = 0u64;
+    let mut buf_mr = |fabric: &mut Fabric, pd: PdId| -> Result<(BufId, MrId)> {
+        let addr = buf_base + bufno * 64 * ((halo_bytes as u64).div_ceil(64) + 1);
+        bufno += 1;
+        let buf = fabric.declare_buf(addr, halo_bytes as u64);
+        let mr = fabric.reg_mr(pd, addr, halo_bytes as u64)?;
+        Ok((buf, mr))
+    };
+    for _rank in 0..spec.ranks_per_node {
+        if policy.shares_qp() {
+            // Level 4: one rank-wide peer set into one shared CQ.
+            let ctx = fabric.open_ctx(policy.env)?;
+            let pd = fabric.alloc_pd(ctx)?;
+            let cq = fabric.create_cq(ctx, (2 * peers * t).max(64))?;
+            let mut qps: Vec<QpId> = Vec::new();
+            for _ in 0..peers {
+                qps.push(fabric.create_qp(pd, cq, caps, None)?);
+            }
+            for _ in 0..t {
+                let mut eps = Vec::new();
+                for &qp in &qps {
+                    let (buf, mr) = buf_mr(&mut fabric, pd)?;
+                    eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+                threads.push(eps);
+            }
+        } else {
+            // Thread-exclusive sets. `ctx` decides the context
+            // granularity; `qp`/`uar` decide provisioning and TDs.
+            let per_thread_ctx = policy.ctx.is_dedicated();
+            let stride: u32 = if policy.qp == QpProvision::TwoXEven { 2 } else { 1 };
+            let mut rank_scope: Option<(CtxId, PdId)> = None;
+            for _ in 0..t {
+                let (ctx, pd) = if per_thread_ctx {
+                    let ctx = fabric.open_ctx(policy.env)?;
+                    let pd = fabric.alloc_pd(ctx)?;
+                    (ctx, pd)
+                } else {
+                    match rank_scope {
+                        Some(scope) => scope,
+                        None => {
+                            let ctx = fabric.open_ctx(policy.env)?;
+                            let pd = fabric.alloc_pd(ctx)?;
+                            rank_scope = Some((ctx, pd));
+                            (ctx, pd)
+                        }
+                    }
+                };
+                // Create peers*stride QPs; the used set is every
+                // `stride`-th, mapped to one CQ; a 2x spare set gets
+                // its own CQ.
+                let used_cq = fabric.create_cq(ctx, 64)?;
+                let spare_cq =
+                    if stride == 2 { Some(fabric.create_cq(ctx, 64)?) } else { None };
+                let mut eps = Vec::new();
+                for k in 0..(peers * stride) {
+                    let td = match policy.uar {
+                        UarMap::Independent => {
+                            Some(fabric.alloc_td(ctx, TdInitAttr::independent())?)
+                        }
+                        UarMap::Paired => Some(fabric.alloc_td(ctx, TdInitAttr::paired())?),
+                        UarMap::Static => None,
+                    };
+                    let used = k % stride == 0;
+                    let cq = if used { used_cq } else { spare_cq.unwrap() };
+                    let qp = fabric.create_qp(pd, cq, caps, td)?;
+                    if used {
+                        let (buf, mr) = buf_mr(&mut fabric, pd)?;
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+                threads.push(eps);
+            }
+        }
+    }
+    Ok((fabric, threads))
+}
+
+/// One timed phase over an already-built topology.
+#[derive(Debug, Clone, Copy)]
+pub struct DriveSpec<'a> {
+    /// Per-thread message targets (the workload's matrix row sums).
+    pub targets: &'a [u64],
+    pub msg_size: u32,
+    /// Model `MPI_THREAD_MULTIPLE` QP-sharing overhead (the policy's
+    /// `shares_qp()`).
+    pub shares_qp: bool,
+    /// Rank membership per thread (threads of one rank share the MPI
+    /// library's rank-wide progress state).
+    pub ranks: Option<&'a [u32]>,
+    /// Open-loop arrival gating (None = closed loop).
+    pub open_loop: Option<&'a [StreamTraffic]>,
+    /// §VII conservative semantics + calibrated costs (the apps'
+    /// historical config) instead of the All-features default.
+    pub conservative: bool,
+    /// Disable the coalescing fast path (differential testing).
+    pub force_general: bool,
+    /// Execute via `run_partitioned` instead of the sequential path.
+    pub partitioned: bool,
+}
+
+/// Run one timed phase. Uniform targets configure `msgs_per_thread`
+/// directly — the pre-refactor drivers' exact path — and only a
+/// genuinely non-uniform matrix engages `set_msgs_targets`.
+pub fn drive(fabric: &Fabric, groups: &[Vec<ThreadEndpoint>], spec: &DriveSpec) -> MsgRateResult {
+    let uniform = spec.targets.windows(2).all(|w| w[0] == w[1]);
+    let mut cfg = MsgRateConfig {
+        msg_size: spec.msg_size,
+        force_shared_qp_path: spec.shares_qp,
+        force_general_path: spec.force_general,
+        ..Default::default()
+    };
+    if spec.conservative {
+        cfg.features = Features::conservative();
+        cfg.cost = CostModel::calibrated();
+    }
+    if uniform {
+        cfg.msgs_per_thread = spec.targets.first().copied().unwrap_or(cfg.msgs_per_thread);
+    }
+    let mut runner = Runner::new_multi(fabric, groups, cfg);
+    if !uniform {
+        runner.set_msgs_targets(spec.targets);
+    }
+    if let Some(ranks) = spec.ranks {
+        runner.set_rank_groups(ranks);
+    }
+    if let Some(traffic) = spec.open_loop {
+        runner.set_open_loop(traffic);
+    }
+    if spec.partitioned {
+        runner.run_partitioned()
+    } else {
+        runner.run()
+    }
+}
+
+/// One workload sweep cell's outcome (the pooled analogue of
+/// [`PooledResult`](crate::vci::PooledResult)).
+#[derive(Debug, Clone)]
+pub struct WorkloadCell {
+    pub result: MsgRateResult,
+    pub usage: ResourceUsage,
+    /// `Adaptive` stream migrations (0 for the static strategies).
+    pub migrations: u64,
+}
+
+/// `Adaptive` probe length — kept in lockstep with `vci::run`'s probe
+/// (an eighth of the timed phase, floored at 64, never longer than the
+/// phase itself).
+fn probe_msgs(msgs_per_thread: u64) -> u64 {
+    (msgs_per_thread / 8).max(64).min(msgs_per_thread)
+}
+
+/// Run one policy × pool × map-strategy cell of a pooled single-rank
+/// workload on the sequential engine path.
+pub fn run_cell(
+    w: &dyn Workload,
+    policy: &EndpointPolicy,
+    pool_size: u32,
+    strategy: MapStrategy,
+) -> Result<WorkloadCell> {
+    run_cell_opts(w, policy, pool_size, strategy, false, false)
+}
+
+/// [`run_cell`] with the engine-path toggles exposed: `force_general`
+/// disables the coalescing fast path, `partitioned` executes via
+/// island partitioning. Results must be bit-identical across all four
+/// combinations (the tests/workload.rs fuzzer pins this).
+pub fn run_cell_opts(
+    w: &dyn Workload,
+    policy: &EndpointPolicy,
+    pool_size: u32,
+    strategy: MapStrategy,
+    force_general: bool,
+    partitioned: bool,
+) -> Result<WorkloadCell> {
+    let shape = w.shape();
+    assert_eq!(shape.ranks_per_node, 1, "pooled cells drive one rank's streams");
+    assert!(
+        matches!(w.topology(), Topology::PolicySet { extra_mrs: 0, .. }),
+        "pooled cells take the plain policy topology"
+    );
+    let nstreams = shape.threads_per_rank;
+    if strategy == MapStrategy::Dedicated && pool_size < nstreams {
+        return Err(VerbsError::Config(format!(
+            "dedicated stream mapping needs pool_size >= streams ({pool_size} < {nstreams})"
+        )));
+    }
+    let (fabric, pool) = EndpointPool::build_fresh(policy, pool_size)?;
+    let mut mapper = VciMapper::new(strategy, pool_size);
+    for t in 0..nstreams {
+        mapper.assign(Stream::of_thread(t));
+    }
+    let targets = thread_targets(w, 0);
+    let msg_size = msg_size_of(w);
+    if matches!(strategy, MapStrategy::Adaptive { .. }) {
+        let mean = targets.iter().sum::<u64>() / targets.len() as u64;
+        let probe_cfg = MsgRateConfig {
+            msgs_per_thread: probe_msgs(mean),
+            msg_size,
+            ..Default::default()
+        };
+        let probe = Runner::new(&fabric, &pooled_threads(&pool, &mapper), probe_cfg).run();
+        let occupancy: Vec<u64> = pool
+            .endpoints()
+            .iter()
+            .map(|ep| probe.cq_high_water[ep.cq.index()] as u64)
+            .collect();
+        mapper.rebalance(&occupancy);
+    }
+    let groups: Vec<Vec<ThreadEndpoint>> =
+        pooled_threads(&pool, &mapper).iter().map(|&t| vec![t]).collect();
+    let traffic = open_loop_traffic(w, 0);
+    let result = drive(
+        &fabric,
+        &groups,
+        &DriveSpec {
+            targets: &targets,
+            msg_size,
+            shares_qp: policy.shares_qp(),
+            ranks: None,
+            open_loop: traffic.as_deref(),
+            conservative: false,
+            force_general,
+            partitioned,
+        },
+    );
+    let usage = pool.usage(&fabric);
+    Ok(WorkloadCell { result, usage, migrations: mapper.migrations() })
+}
+
+/// The MPI-everywhere side of the head-to-head: `cores` single-thread
+/// ranks, each with its own MpiEverywhere-preset endpoint on one NIC,
+/// running the same closed-loop per-core message count. No rank-group
+/// coupling is applied on either side of the comparison (the pooled
+/// side sets none), so the two models differ only in endpoint topology
+/// — see EXPERIMENTS.md §Workloads for the methodology.
+pub fn run_everywhere_ranks(
+    cores: u32,
+    msgs_per_rank: u64,
+    msg_size: u32,
+) -> Result<(MsgRateResult, ResourceUsage)> {
+    let mut fabric = Fabric::connectx4();
+    let mut threads = Vec::new();
+    for _ in 0..cores {
+        let set = EndpointPolicy::preset(Category::MpiEverywhere).build(&mut fabric, 1)?;
+        threads.push(set.threads[0]);
+    }
+    let cfg = MsgRateConfig { msgs_per_thread: msgs_per_rank, msg_size, ..Default::default() };
+    let result = Runner::new(&fabric, &threads, cfg).run();
+    Ok((result, ResourceUsage::of_fabric(&fabric)))
+}
+
+/// Both sides of the `everywhere` head-to-head at the scenario's core
+/// count: (rate + usage of N×1 MPI everywhere, the workload itself for
+/// the pooled 1×N side).
+pub fn everywhere_head_to_head(quick: bool) -> Result<(MsgRateResult, ResourceUsage)> {
+    let w = Everywhere::new(quick);
+    run_everywhere_ranks(w.cores, w.msgs_per_core, w.msg_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Alltoall, Scenario, Sparse};
+
+    #[test]
+    fn policy_set_with_no_extras_matches_the_plain_build() {
+        let policy = EndpointPolicy::scalable();
+        let (fa, _) = build_policy_set(&policy, 4, 0, 0, 0).unwrap();
+        let (fb, _) = policy.build_fresh(4).unwrap();
+        let live = |f: &Fabric| f.mrs.iter().filter(|m| m.live).count();
+        assert_eq!(live(&fa), live(&fb), "extra_mrs = 0 must register nothing extra");
+    }
+
+    #[test]
+    fn policy_set_extras_register_per_thread_tiles() {
+        let (fabric, set) = build_policy_set(
+            &EndpointPolicy::preset(Category::Dynamic),
+            4,
+            2,
+            4096,
+            0x8000_0000,
+        )
+        .unwrap();
+        let live = fabric.mrs.iter().filter(|m| m.live).count();
+        assert_eq!(live, set.threads.len() * 3, "1 builder MR + 2 tiles per thread");
+    }
+
+    #[test]
+    fn cells_complete_every_stream_and_are_deterministic() {
+        let w = Alltoall::new(true);
+        let total: u64 = thread_targets(&w, 0).iter().sum();
+        for strategy in [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()]
+        {
+            let a = run_cell(&w, &EndpointPolicy::scalable(), 5, strategy).unwrap();
+            assert_eq!(a.result.messages, total, "{strategy}");
+            let b = run_cell(&w, &EndpointPolicy::scalable(), 5, strategy).unwrap();
+            assert_eq!(a.result.duration, b.result.duration, "{strategy}");
+            assert_eq!(a.result.thread_done, b.result.thread_done, "{strategy}");
+        }
+    }
+
+    #[test]
+    fn sparse_targets_round_up_to_qp_windows() {
+        // Skewed matrices take the set_msgs_targets path, which rounds
+        // each stream up to whole QP windows — completed messages must
+        // cover the matrix without loss.
+        let w = Sparse::new(true);
+        let total: u64 = thread_targets(&w, 0).iter().sum();
+        let c = run_cell(&w, &EndpointPolicy::scalable(), 4, MapStrategy::Hashed).unwrap();
+        assert!(c.result.messages >= total, "{} < {total}", c.result.messages);
+    }
+
+    #[test]
+    fn undersized_dedicated_pool_is_a_config_error() {
+        let w = Alltoall::new(true);
+        let r = run_cell(&w, &EndpointPolicy::default(), 4, MapStrategy::Dedicated);
+        assert!(
+            r.map(|_| ()).map_err(|e| e.to_string()).unwrap_err().contains("pool_size"),
+            "undersized dedicated pool must surface a Config error"
+        );
+    }
+
+    #[test]
+    fn every_scenario_runs_one_cell() {
+        for s in Scenario::ALL {
+            let w = s.instantiate(true);
+            let c = run_cell(&*w, &EndpointPolicy::scalable(), 4, MapStrategy::Hashed)
+                .unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert!(c.result.messages > 0, "{s}");
+            assert!(c.result.mmsgs_per_sec > 0.0, "{s}");
+        }
+    }
+
+    #[test]
+    fn head_to_head_sides_share_the_core_count() {
+        let (r, u) = everywhere_head_to_head(true).unwrap();
+        let w = Everywhere::new(true);
+        assert_eq!(r.messages, w.cores as u64 * w.msgs_per_core);
+        // N everywhere ranks cost N CTXs — the resource side of Fig 2.
+        assert_eq!(u.ctxs, w.cores);
+    }
+}

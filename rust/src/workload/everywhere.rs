@@ -1,0 +1,50 @@
+//! The MPI-everywhere vs MPI+threads head-to-head at equal core count
+//! (the sequel's headline comparison): the *same* ring traffic — each
+//! core sends 2 B messages to its successor — run two ways. As a
+//! [`Workload`] this is the MPI+threads side: 1 rank × `cores` pooled
+//! streams through the policy × pool × strategy sweep. The everywhere
+//! side (`cores` single-thread ranks, one MpiEverywhere endpoint each)
+//! is [`drive::run_everywhere_ranks`](super::drive::run_everywhere_ranks);
+//! the `workloads` figure puts both in one table so rate and
+//! uUARs/QPs/CQs compare at equal core count.
+
+use crate::coordinator::JobSpec;
+
+use super::{Flow, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Everywhere {
+    pub cores: u32,
+    pub msgs_per_core: u64,
+    /// 2 B — the paper's §IV message-rate payload.
+    pub msg_size: u32,
+}
+
+impl Everywhere {
+    pub fn new(quick: bool) -> Self {
+        Self { cores: 16, msgs_per_core: if quick { 512 } else { 4096 }, msg_size: 2 }
+    }
+}
+
+impl Workload for Everywhere {
+    fn name(&self) -> &'static str {
+        "everywhere"
+    }
+
+    fn description(&self) -> &'static str {
+        "MPI-everywhere vs MPI+threads ring at equal core count"
+    }
+
+    fn shape(&self) -> JobSpec {
+        JobSpec::new(1, self.cores)
+    }
+
+    fn matrix(&self, _rank: u32, thread: u32, _phase: u64) -> Vec<Flow> {
+        vec![Flow {
+            peer: (thread + 1) % self.cores,
+            msgs: self.msgs_per_core,
+            msg_size: self.msg_size,
+            tag: 0,
+        }]
+    }
+}

@@ -1,0 +1,45 @@
+//! The global-array tile traffic (§VII, Fig 12) as data: every client
+//! thread streams RDMA writes at the server rank, with the NWChem-style
+//! 3-tile (A, B, C) BUF/MR registration pattern expressed as the
+//! topology hint. `apps::GlobalArray` delegates its build and timed
+//! phase to this definition through [`drive`](super::drive).
+
+use crate::coordinator::JobSpec;
+use crate::runtime::DGEMM_TILE;
+
+use super::{Flow, Topology, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalArrayComm {
+    pub threads: u32,
+    pub msgs_per_thread: u64,
+    pub msg_size: u32,
+}
+
+impl Workload for GlobalArrayComm {
+    fn name(&self) -> &'static str {
+        "global-array"
+    }
+
+    fn description(&self) -> &'static str {
+        "global-array tile fetch/write stream at the server"
+    }
+
+    fn shape(&self) -> JobSpec {
+        JobSpec::new(1, self.threads)
+    }
+
+    fn matrix(&self, _rank: u32, _thread: u32, _phase: u64) -> Vec<Flow> {
+        // Every client thread drives one flow at the server (peer 0 on
+        // the remote node); rate is what Fig 12 measures.
+        vec![Flow { peer: 0, msgs: self.msgs_per_thread, msg_size: self.msg_size, tag: 0 }]
+    }
+
+    fn topology(&self) -> Topology {
+        Topology::PolicySet {
+            extra_mrs: 2,
+            tile_bytes: (DGEMM_TILE * DGEMM_TILE * 4) as u64,
+            tile_base: 0x8000_0000,
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Workloads as data: a scenario is a deterministic per-(rank, thread,
+//! phase) traffic matrix — peer targets, message sizes, tag classes —
+//! plus completion semantics (closed-loop or an open-loop
+//! [`TrafficModel`] service process) and an endpoint-topology hint,
+//! not a hand-rolled driver.
+//!
+//! The [`Workload`] trait is the contract; [`drive`] turns any
+//! implementation into a timed [`Runner`](crate::bench::Runner) run, a
+//! pooled policy × pool × map-strategy cell, or the MPI-everywhere
+//! head-to-head. The paper's two apps ([`HaloExchange`],
+//! [`GlobalArrayComm`]) are data definitions on the same trait —
+//! `apps::{StencilBench, GlobalArray}` delegate here and stay
+//! byte-identical to their pre-refactor drivers (pinned by the fig12/
+//! fig14 golden fixtures and tests/workload.rs). The sequel's missing
+//! scenarios ([`Alltoall`], [`Sparse`], [`Rpc`], [`Everywhere`]) are
+//! one file each; every one automatically gets the `workloads` figure
+//! sweep, the `scep workload` subcommand, fleet arrival weighting,
+//! experiment configs and perf_des rows.
+
+pub mod drive;
+
+mod alltoall;
+mod everywhere;
+mod global_array;
+mod rpc;
+mod sparse;
+mod stencil;
+
+pub use alltoall::Alltoall;
+pub use everywhere::Everywhere;
+pub use global_array::GlobalArrayComm;
+pub use rpc::Rpc;
+pub use sparse::Sparse;
+pub use stencil::HaloExchange;
+
+use crate::bench::{StreamTraffic, TrafficModel};
+use crate::coordinator::fleet::stream_seed;
+use crate::coordinator::JobSpec;
+
+/// One directed edge of a thread's traffic matrix: `msgs` RDMA writes
+/// of `msg_size` bytes toward `peer` (a global thread index), under tag
+/// class `tag` (distinct tags model distinct communicators / QP lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flow {
+    pub peer: u32,
+    pub msgs: u64,
+    pub msg_size: u32,
+    pub tag: u32,
+}
+
+/// How a workload's streams finish: closed-loop (each thread posts as
+/// fast as its QP window allows until its matrix is drained) or gated
+/// on an open-loop arrival/service-time process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Completion {
+    Closed,
+    OpenLoop(TrafficModel),
+}
+
+/// Endpoint-topology hint: how the workload's fabric is built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// The policy's own layout (one `EndpointPolicy::build`), plus
+    /// `extra_mrs` additional tile BUF/MR registrations per thread at
+    /// `tile_base + (thread * (1 + extra_mrs) + k) * tile_bytes`.
+    PolicySet { extra_mrs: u32, tile_bytes: u64, tile_base: u64 },
+    /// The stencil shape: `peers` QPs per thread (rank-wide shared pair
+    /// under level-4 policies), one halo buffer per QP.
+    Halo { peers: u32 },
+}
+
+/// A workload is data: a shape, a traffic matrix, completion semantics
+/// and a topology hint. Everything must be a pure function of the
+/// inputs (plus [`Workload::seed`]) so runs are bit-deterministic.
+pub trait Workload {
+    /// Stable scenario id (CLI / figure / JSON key).
+    fn name(&self) -> &'static str;
+    /// One-line description for tables and `scep workload` listings.
+    fn description(&self) -> &'static str;
+    /// Ranks × threads the workload occupies on one node.
+    fn shape(&self) -> JobSpec;
+    /// Distinct phases of the matrix (fleet arrivals re-key per phase).
+    fn phases(&self) -> u64 {
+        1
+    }
+    /// The traffic matrix row for one (rank, thread, phase).
+    fn matrix(&self, rank: u32, thread: u32, phase: u64) -> Vec<Flow>;
+    /// Completion semantics (service-time model for RPC-style loads).
+    fn completion(&self) -> Completion {
+        Completion::Closed
+    }
+    /// Endpoint-topology hint.
+    fn topology(&self) -> Topology {
+        Topology::PolicySet { extra_mrs: 0, tile_bytes: 0, tile_base: 0 }
+    }
+    /// Base seed for matrix randomness and open-loop arrival streams.
+    fn seed(&self) -> u64 {
+        1
+    }
+}
+
+/// Per-thread message targets for one rank: each thread's matrix rows
+/// summed over every phase. This is what the driver feeds
+/// [`Runner::set_msgs_targets`](crate::bench::Runner::set_msgs_targets)
+/// (or `msgs_per_thread` when uniform — the historical fast path).
+pub fn thread_targets(w: &dyn Workload, rank: u32) -> Vec<u64> {
+    (0..w.shape().threads_per_rank)
+        .map(|t| {
+            (0..w.phases())
+                .map(|p| w.matrix(rank, t, p).iter().map(|f| f.msgs).sum::<u64>())
+                .sum()
+        })
+        .collect()
+}
+
+/// The workload's (uniform) message size. Every flow of a workload
+/// carries one size — mixed-size matrices would need per-flow runner
+/// plumbing the engine does not model yet, so this asserts uniformity.
+pub fn msg_size_of(w: &dyn Workload) -> u32 {
+    let mut size = None;
+    for t in 0..w.shape().threads_per_rank {
+        for p in 0..w.phases() {
+            for f in w.matrix(0, t, p) {
+                let s = *size.get_or_insert(f.msg_size);
+                assert_eq!(s, f.msg_size, "{}: mixed per-flow message sizes", w.name());
+            }
+        }
+    }
+    size.expect("workload with an empty traffic matrix")
+}
+
+/// Open-loop arrival streams for one rank (None for closed-loop
+/// workloads), seeded exactly like a fleet rank's streams.
+pub fn open_loop_traffic(w: &dyn Workload, rank: u32) -> Option<Vec<StreamTraffic>> {
+    match w.completion() {
+        Completion::Closed => None,
+        Completion::OpenLoop(model) => Some(
+            (0..w.shape().threads_per_rank)
+                .map(|t| StreamTraffic {
+                    model,
+                    seed: stream_seed(w.seed(), rank as u64, t as u64, 0),
+                })
+                .collect(),
+        ),
+    }
+}
+
+/// The pluggable scenarios `scep workload`, the `workloads` figure, the
+/// fleet engine and the experiment harness address by name. (The two
+/// paper apps keep their own fig12/fig14 surfaces; this enum is the
+/// sequel's missing-workload set.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    Alltoall,
+    Sparse,
+    Rpc,
+    Everywhere,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 4] =
+        [Scenario::Alltoall, Scenario::Sparse, Scenario::Rpc, Scenario::Everywhere];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Alltoall => "alltoall",
+            Scenario::Sparse => "sparse",
+            Scenario::Rpc => "rpc",
+            Scenario::Everywhere => "everywhere",
+        }
+    }
+
+    /// Comma-separated valid names (error messages, usage text).
+    pub fn names() -> String {
+        Self::ALL.iter().map(|s| s.name()).collect::<Vec<_>>().join(", ")
+    }
+
+    /// Parse a scenario name; unknown names list the valid set,
+    /// mirroring the unknown `--figure` error.
+    pub fn parse(s: &str) -> Result<Scenario, String> {
+        match s {
+            "alltoall" | "a2a" => Ok(Scenario::Alltoall),
+            "sparse" => Ok(Scenario::Sparse),
+            "rpc" => Ok(Scenario::Rpc),
+            "everywhere" | "mpi-everywhere" => Ok(Scenario::Everywhere),
+            _ => Err(format!(
+                "unknown workload '{s}'; available workloads: {}",
+                Self::names()
+            )),
+        }
+    }
+
+    /// Build the scenario at its default shape (`quick` trims message
+    /// counts, never the shape — same contract as the figures).
+    pub fn instantiate(self, quick: bool) -> Box<dyn Workload> {
+        match self {
+            Scenario::Alltoall => Box::new(Alltoall::new(quick)),
+            Scenario::Sparse => Box::new(Sparse::new(quick)),
+            Scenario::Rpc => Box::new(Rpc::new(quick)),
+            Scenario::Everywhere => Box::new(Everywhere::new(quick)),
+        }
+    }
+
+    /// Build the scenario at an explicit stream count with unit message
+    /// counts: the matrix row sums then act as *relative* per-stream
+    /// traffic weights (the fleet engine's popularity skew).
+    fn sized(self, streams: u32, seed: u64) -> Box<dyn Workload> {
+        match self {
+            Scenario::Alltoall => {
+                Box::new(Alltoall { threads: streams, msgs_per_peer: 1, msg_size: 512 })
+            }
+            Scenario::Sparse => {
+                Box::new(Sparse { threads: streams, msgs_per_edge: 1, msg_size: 64, seed })
+            }
+            Scenario::Rpc => Box::new(Rpc {
+                threads: streams,
+                requests: 1,
+                msg_size: 128,
+                service: TrafficModel::Poisson { mean_gap_ns: 200.0 },
+                seed,
+            }),
+            Scenario::Everywhere => {
+                Box::new(Everywhere { cores: streams, msgs_per_core: 1, msg_size: 2 })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-stream fleet traffic weights from a scenario's matrix: the
+/// phase's row sums at unit message counts, floored at 1 so every
+/// stream keeps a live arrival process. `coordinator::fleet` multiplies
+/// its base [`TrafficModel`] rate and per-stream message targets by
+/// these instead of the uniform `HotStreams` skew when a workload is
+/// named.
+pub fn fleet_weights(s: Scenario, streams: u32, seed: u64, rank: u32, phase: u64) -> Vec<u64> {
+    let w = s.sized(streams, seed);
+    let p = phase % w.phases();
+    (0..streams)
+        .map(|t| w.matrix(rank, t, p).iter().map(|f| f.msgs).sum::<u64>().max(1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.name()), Ok(s));
+            assert_eq!(s.to_string(), s.name());
+            let w = s.instantiate(true);
+            assert_eq!(w.name(), s.name());
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_lists_the_valid_set() {
+        let e = Scenario::parse("fft").unwrap_err();
+        assert!(e.contains("unknown workload 'fft'"), "{e}");
+        for s in Scenario::ALL {
+            assert!(e.contains(s.name()), "{e} must list {}", s.name());
+        }
+    }
+
+    #[test]
+    fn matrices_are_deterministic_and_self_loop_free() {
+        for s in Scenario::ALL {
+            let w = s.instantiate(true);
+            let shape = w.shape();
+            for t in 0..shape.threads_per_rank {
+                for p in 0..w.phases() {
+                    let a = w.matrix(0, t, p);
+                    assert_eq!(a, w.matrix(0, t, p), "{s}: matrix must be pure");
+                    let global = t; // single-rank scenarios
+                    for f in &a {
+                        assert_ne!(f.peer, global, "{s}: self-loop flow");
+                        assert!(f.msgs >= 1, "{s}: empty flow");
+                    }
+                }
+            }
+            let targets = thread_targets(&*w, 0);
+            assert!(targets.iter().all(|&m| m >= 1), "{s}: idle stream");
+            let _ = msg_size_of(&*w);
+        }
+    }
+
+    #[test]
+    fn quick_trims_counts_not_shapes() {
+        for s in Scenario::ALL {
+            let q = s.instantiate(true);
+            let f = s.instantiate(false);
+            assert_eq!(q.shape(), f.shape(), "{s}");
+            let tq: u64 = thread_targets(&*q, 0).iter().sum();
+            let tf: u64 = thread_targets(&*f, 0).iter().sum();
+            assert!(tq < tf, "{s}: quick must trim message counts");
+        }
+    }
+
+    #[test]
+    fn fleet_weights_reflect_the_matrix_and_stay_positive() {
+        // Alltoall at unit counts: every stream talks to every other.
+        let w = fleet_weights(Scenario::Alltoall, 8, 1, 0, 0);
+        assert_eq!(w, vec![7; 8]);
+        // RPC: one partner each.
+        assert_eq!(fleet_weights(Scenario::Rpc, 8, 1, 0, 0), vec![1; 8]);
+        // Sparse: skewed but never zero, deterministic in the seed.
+        let a = fleet_weights(Scenario::Sparse, 16, 7, 3, 0);
+        assert_eq!(a, fleet_weights(Scenario::Sparse, 16, 7, 3, 0));
+        assert!(a.iter().all(|&x| x >= 1));
+        assert_ne!(a, fleet_weights(Scenario::Sparse, 16, 8, 3, 0), "seed must matter");
+    }
+
+    #[test]
+    fn rpc_is_open_loop_the_rest_closed() {
+        for s in Scenario::ALL {
+            let w = s.instantiate(true);
+            let open = open_loop_traffic(&*w, 0);
+            if s == Scenario::Rpc {
+                let streams = open.expect("rpc is open-loop");
+                assert_eq!(streams.len(), w.shape().threads_per_rank as usize);
+                assert_ne!(streams[0].seed, streams[1].seed, "per-stream seeds");
+            } else {
+                assert!(open.is_none(), "{s} is closed-loop");
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! RPC-style request/reply: streams pair up (client `2k` ↔ server
+//! `2k+1`), requests and replies ride distinct tag classes, and posts
+//! are gated on a configurable service-time distribution — any
+//! [`TrafficModel`], reusing the fleet grammar (poisson/onoff/pareto/
+//! trace) — instead of running closed-loop.
+
+use crate::bench::TrafficModel;
+use crate::coordinator::JobSpec;
+
+use super::{Completion, Flow, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rpc {
+    /// Must be even: streams pair up client/server.
+    pub threads: u32,
+    /// Requests per client (servers send one reply each).
+    pub requests: u64,
+    pub msg_size: u32,
+    /// Service-time distribution gating every post.
+    pub service: TrafficModel,
+    pub seed: u64,
+}
+
+impl Rpc {
+    pub fn new(quick: bool) -> Self {
+        Self {
+            threads: 16,
+            requests: if quick { 512 } else { 4096 },
+            msg_size: 128,
+            service: TrafficModel::Poisson { mean_gap_ns: 200.0 },
+            seed: 1,
+        }
+    }
+}
+
+impl Workload for Rpc {
+    fn name(&self) -> &'static str {
+        "rpc"
+    }
+
+    fn description(&self) -> &'static str {
+        "request/reply pairs gated on a service-time distribution"
+    }
+
+    fn shape(&self) -> JobSpec {
+        JobSpec::new(1, self.threads)
+    }
+
+    fn matrix(&self, _rank: u32, thread: u32, _phase: u64) -> Vec<Flow> {
+        let partner = thread ^ 1;
+        // An odd trailing stream has no partner and stays idle-free by
+        // talking to stream 0 (shapes are even in practice).
+        let peer = if partner < self.threads { partner } else { 0 };
+        let tag = thread % 2; // 0 = request class, 1 = reply class
+        vec![Flow { peer, msgs: self.requests, msg_size: self.msg_size, tag }]
+    }
+
+    fn completion(&self) -> Completion {
+        Completion::OpenLoop(self.service)
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}

@@ -1,0 +1,63 @@
+//! Irregular sparse exchange: a graph-style neighborhood pattern with
+//! power-law degree skew (bounded-Pareto, α = 1.2), the shape of
+//! unstructured-mesh and graph-analytics halo traffic. Per-thread
+//! degrees differ, so the driver takes the non-uniform
+//! `set_msgs_targets` path; everything reseeds from one base seed
+//! through the fleet's `stream_seed` mix, so matrices are pure.
+
+use crate::coordinator::fleet::stream_seed;
+use crate::coordinator::JobSpec;
+use crate::sim::XorShift;
+
+use super::{Flow, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sparse {
+    pub threads: u32,
+    /// Messages along each sampled edge.
+    pub msgs_per_edge: u64,
+    pub msg_size: u32,
+    pub seed: u64,
+}
+
+impl Sparse {
+    pub fn new(quick: bool) -> Self {
+        Self { threads: 16, msgs_per_edge: if quick { 128 } else { 1024 }, msg_size: 64, seed: 1 }
+    }
+}
+
+impl Workload for Sparse {
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+
+    fn description(&self) -> &'static str {
+        "irregular sparse exchange, power-law degree skew"
+    }
+
+    fn shape(&self) -> JobSpec {
+        JobSpec::new(1, self.threads)
+    }
+
+    fn matrix(&self, rank: u32, thread: u32, phase: u64) -> Vec<Flow> {
+        let mut rng = XorShift::new(stream_seed(self.seed, rank as u64, thread as u64, phase));
+        let fanout = self.threads - 1;
+        // Heavy-tail degree in [1, threads-1]: most streams keep a few
+        // neighbors, a few talk to almost everyone.
+        let degree =
+            (rng.pareto_f64(1.0, 1.2, fanout as f64).floor() as u32).clamp(1, fanout);
+        (0..degree)
+            .map(|e| {
+                let mut p = rng.below(self.threads as u64) as u32;
+                if p == thread {
+                    p = (p + 1) % self.threads;
+                }
+                Flow { peer: p, msgs: self.msgs_per_edge, msg_size: self.msg_size, tag: e }
+            })
+            .collect()
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}

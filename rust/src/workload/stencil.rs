@@ -1,0 +1,47 @@
+//! The 5-point stencil halo exchange (§VII, Figs 13-14) as data: each
+//! hardware thread owns a band of rows and exchanges one halo row per
+//! iteration with its up and down neighbors, on distinct tag classes
+//! (the two QP lanes of the historical driver).
+//! `apps::StencilBench` delegates its build and timed phase to this
+//! definition through [`drive`](super::drive).
+
+use crate::coordinator::JobSpec;
+
+use super::{Flow, Topology, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HaloExchange {
+    pub spec: JobSpec,
+    pub halo_bytes: u32,
+    /// Exchange iterations: one up + one down halo row each.
+    pub iterations: u64,
+}
+
+impl Workload for HaloExchange {
+    fn name(&self) -> &'static str {
+        "stencil"
+    }
+
+    fn description(&self) -> &'static str {
+        "5-pt stencil halo exchange, up/down neighbor rows"
+    }
+
+    fn shape(&self) -> JobSpec {
+        self.spec
+    }
+
+    fn matrix(&self, rank: u32, thread: u32, _phase: u64) -> Vec<Flow> {
+        let total = self.spec.ranks_per_node * self.spec.threads_per_rank;
+        let global = rank * self.spec.threads_per_rank + thread;
+        let up = (global + total - 1) % total;
+        let down = (global + 1) % total;
+        vec![
+            Flow { peer: up, msgs: self.iterations, msg_size: self.halo_bytes, tag: 0 },
+            Flow { peer: down, msgs: self.iterations, msg_size: self.halo_bytes, tag: 1 },
+        ]
+    }
+
+    fn topology(&self) -> Topology {
+        Topology::Halo { peers: 2 }
+    }
+}

@@ -8,6 +8,7 @@ use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
 use scalable_ep::apps::{GlobalArray, StencilBench};
 use scalable_ep::endpoints::{BufLayout, Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::verbs::Fabric;
+use scalable_ep::workload::Scenario;
 
 const MSGS: u64 = 16 * 1024;
 
@@ -27,11 +28,13 @@ fn run_category(cat: Category, n: u32, features: Features) -> f64 {
 // ------------------------------------------- Golden snapshots (engine net)
 
 /// Byte-identity pin on the `--quick` table output of fig2/fig9/fig11
-/// plus the VCI pool sweep: the DES engine is bit-deterministic, so ANY
-/// engine change that perturbs results — a fast path that is not exact,
-/// a cost-model edit, a scheduler reorder, a stream-placement change —
-/// fails this test loudly instead of silently shifting the
-/// reproduction's numbers.
+/// plus the VCI pool sweep, the §VII application figures (fig12/fig14 —
+/// pinned across the workload-trait refactor, tests/workload.rs holds
+/// the matching legacy differential) and the pluggable workload sweep:
+/// the DES engine is bit-deterministic, so ANY engine change that
+/// perturbs results — a fast path that is not exact, a cost-model edit,
+/// a scheduler reorder, a stream-placement change — fails this test
+/// loudly instead of silently shifting the reproduction's numbers.
 ///
 /// Fixtures live in `tests/fixtures/<fig>_quick.golden.txt`. A missing
 /// fixture (or `SCEP_BLESS=1`) is written from the current engine and
@@ -50,7 +53,7 @@ fn run_category(cat: Category, n: u32, features: Features) -> f64 {
 fn golden_fig_tables_are_byte_stable() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
     let require = std::env::var("SCEP_REQUIRE_GOLDEN").is_ok();
-    for name in ["fig2", "fig9", "fig11", "pool"] {
+    for name in ["fig2", "fig9", "fig11", "pool", "fig12", "fig14", "workloads"] {
         // (Run-to-run determinism itself is pinned by `deterministic` in
         // bench::msgrate and the worker-pool invariants; one render per
         // figure keeps this test affordable in debug CI.)
@@ -150,6 +153,44 @@ fn pool_figure_covers_size_by_strategy_matrix() {
                 it.nth(3) == Some("Scalable") && it.next() == Some(third.as_str())
             }),
             "{tier}-stream tier lacks the pool = threads/3 scalable point"
+        );
+    }
+}
+
+/// The pluggable workload figure must run the full policy × pool × map
+/// sweep for every scenario through the shared generic driver: per
+/// scenario, one dedicated baseline row plus {n, n/2, n/3, n/4} pool
+/// sizes × {rr, hash, adaptive} strategies over two pooled policies —
+/// and the `everywhere` table must lead with the MPI-everywhere side of
+/// the head-to-head so both models sit in one table at equal core count.
+#[test]
+fn workloads_figure_covers_every_scenario_sweep() {
+    let bytes = scalable_ep::figures::render_bytes("workloads", true).expect("known figure");
+    let csv: Vec<&str> = bytes.lines().filter(|l| l.starts_with("csv,")).collect();
+    // dedicated baseline + {scalable, dynamic} x 4 pool sizes x 3 maps.
+    let sweep = 1 + 2 * 4 * 3;
+    for s in Scenario::ALL {
+        let tag = format!("csv,Workload_'{}'", s.name());
+        let rows = csv.iter().filter(|l| l.starts_with(&tag)).count();
+        let head_to_head = usize::from(s == Scenario::Everywhere);
+        assert_eq!(rows, 1 + sweep + head_to_head, "{s}: header + sweep rows");
+    }
+    // The head-to-head row reports the process-per-core model (16 ranks
+    // x 1 thread at the same 16-core budget as the pooled sweep below it).
+    assert!(bytes.contains("everywhere 16x1"), "MPI-everywhere side missing");
+    for strategy in ["dedicated", "rr", "hash", "adaptive:2"] {
+        assert!(bytes.contains(strategy), "strategy '{strategy}' missing");
+    }
+    // The paper's headline operating point: the scalable policy at
+    // pool = streams/3 (16 streams -> 5 slots) in every scenario.
+    for s in Scenario::ALL {
+        let tag = format!("csv,Workload_'{}'", s.name());
+        assert!(
+            csv.iter().any(|l| {
+                let mut it = l.split(',');
+                l.starts_with(&tag) && it.nth(2) == Some("scalable") && it.next() == Some("5")
+            }),
+            "{s}: pool = streams/3 scalable point missing"
         );
     }
 }

@@ -1,0 +1,354 @@
+//! Workload-refactor differential suite.
+//!
+//! PR 9 rebuilt the §VII application benchmarks (`apps::GlobalArray`,
+//! `apps::StencilBench`) on the generic workload driver
+//! (`workload::drive`): the apps are now pure traffic-matrix data and
+//! the fabric layout + runner configuration live in one shared path.
+//! This file pins that refactor:
+//!
+//! * [`prop_workload_driver_matches_legacy`] freezes the pre-refactor
+//!   hand-rolled drivers **verbatim** (transcribed from git history)
+//!   and asserts the trait-driven benchmarks reproduce them bit for bit
+//!   — fabric resource layout and every virtual-time observable — on
+//!   every fig12 cell (six categories × 16 threads) and every fig14
+//!   cell (the paper's rank/thread sweep × six categories). This is
+//!   what lets the fig12/fig14 golden fixtures stay byte-identical
+//!   across the refactor without re-blessing.
+//! * [`workload_cell_paths_agree_fuzzed`] drives random scenarios
+//!   through the pooled cell runner under all three engine paths
+//!   (coalescing fast path, general one-event-per-step path,
+//!   island-partitioned path) and asserts they agree on every
+//!   virtual-time observable. `SCEP_FUZZ_SEED=<u64>` reseeds the sweep
+//!   (same convention as tests/properties.rs).
+
+use scalable_ep::apps::stencil::DEFAULT_HALO_BYTES;
+use scalable_ep::apps::{GlobalArray, StencilBench};
+use scalable_ep::bench::{Features, MsgRateConfig, MsgRateResult, Runner};
+use scalable_ep::coordinator::JobSpec;
+use scalable_ep::endpoints::{
+    Category, EndpointPolicy, QpProvision, ResourceUsage, ThreadEndpoint, UarMap,
+};
+use scalable_ep::nicsim::CostModel;
+use scalable_ep::runtime::DGEMM_TILE;
+use scalable_ep::testing::check;
+use scalable_ep::vci::MapStrategy;
+use scalable_ep::verbs::{BufId, Fabric, MrId, PdId, QpCaps, TdInitAttr};
+use scalable_ep::workload::drive::run_cell_opts;
+use scalable_ep::workload::Scenario;
+
+/// Seed override hook: `SCEP_FUZZ_SEED=<u64>` reseeds the fuzzed
+/// property below, echoing the value so failure logs carry their
+/// reproduction recipe.
+fn fuzz_seed(default: u64) -> u64 {
+    match std::env::var("SCEP_FUZZ_SEED") {
+        Ok(s) => {
+            let seed = s
+                .trim()
+                .parse::<u64>()
+                .unwrap_or_else(|e| panic!("SCEP_FUZZ_SEED={s:?} is not a u64: {e}"));
+            eprintln!("[workload] SCEP_FUZZ_SEED={seed} (reproduce with this env var)");
+            seed
+        }
+        Err(_) => default,
+    }
+}
+
+/// Bit-exact comparison of every virtual-time observable **except**
+/// `sched_events` (an engine diagnostic whose relation depends on which
+/// paths are being compared — callers assert it separately).
+fn exact(a: &MsgRateResult, b: &MsgRateResult, what: &str) -> Result<(), String> {
+    if a.duration != b.duration {
+        return Err(format!("{what}: duration {} vs {}", a.duration, b.duration));
+    }
+    if a.thread_done != b.thread_done {
+        return Err(format!("{what}: per-thread done-times diverged"));
+    }
+    if a.messages != b.messages {
+        return Err(format!("{what}: messages {} vs {}", a.messages, b.messages));
+    }
+    if a.mmsgs_per_sec != b.mmsgs_per_sec {
+        return Err(format!("{what}: rate {} vs {}", a.mmsgs_per_sec, b.mmsgs_per_sec));
+    }
+    if a.pcie != b.pcie {
+        return Err(format!("{what}: PCIe {:?} vs {:?}", a.pcie, b.pcie));
+    }
+    if a.pcie_read_rate != b.pcie_read_rate {
+        return Err(format!("{what}: PCIe read rate diverged"));
+    }
+    if a.p50_latency_ns != b.p50_latency_ns
+        || a.p99_latency_ns != b.p99_latency_ns
+        || a.p999_latency_ns != b.p999_latency_ns
+    {
+        return Err(format!("{what}: latency percentiles diverged"));
+    }
+    if a.cq_high_water != b.cq_high_water {
+        return Err(format!(
+            "{what}: CQ high-water {:?} vs {:?}",
+            a.cq_high_water, b.cq_high_water
+        ));
+    }
+    if a.sched_steps != b.sched_steps {
+        return Err(format!(
+            "{what}: trajectories differ: {} vs {} steps",
+            a.sched_steps, b.sched_steps
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Frozen pre-refactor drivers (transcribed from the git-history versions
+// of rust/src/apps/{global_array,stencil}.rs; only error plumbing was
+// adapted to `unwrap` — no topology or configuration change).
+// ---------------------------------------------------------------------------
+
+/// The historical `GlobalArray::new` body: build the policy's endpoint
+/// set, then register the extra A/B tile MRs (the set's own build
+/// already made the C/default one per QP).
+fn legacy_global_array(
+    policy: EndpointPolicy,
+    nthreads: u32,
+) -> (Fabric, scalable_ep::endpoints::EndpointSet) {
+    let mut fabric = Fabric::connectx4();
+    let set = policy.build(&mut fabric, nthreads).unwrap();
+    for (i, te) in set.threads.iter().enumerate() {
+        let pd = fabric.qp(te.qp).unwrap().pd;
+        let tile_bytes = (DGEMM_TILE * DGEMM_TILE * 4) as u64;
+        for k in 1..3u64 {
+            let addr = 0x8000_0000 + (i as u64 * 3 + k) * tile_bytes;
+            fabric.declare_buf(addr, tile_bytes);
+            fabric.reg_mr(pd, addr, tile_bytes).unwrap();
+        }
+    }
+    (fabric, set)
+}
+
+/// The historical `GlobalArray::time_comm` body.
+fn legacy_time_comm(
+    fabric: &Fabric,
+    threads: &[ThreadEndpoint],
+    policy: &EndpointPolicy,
+    msgs_per_thread: u64,
+    msg_size: u32,
+) -> MsgRateResult {
+    let cfg = MsgRateConfig {
+        msgs_per_thread,
+        msg_size,
+        features: Features::conservative(),
+        cost: CostModel::calibrated(),
+        force_shared_qp_path: policy.shares_qp(),
+        ..Default::default()
+    };
+    Runner::new(fabric, threads, cfg).run()
+}
+
+/// The historical `StencilBench::new` body: per-rank up/down halo
+/// endpoints, shared-QP path vs exclusive path with 2x spare provision.
+fn legacy_stencil(
+    spec: JobSpec,
+    policy: EndpointPolicy,
+    halo_bytes: u32,
+) -> (Fabric, Vec<Vec<ThreadEndpoint>>) {
+    let mut fabric = Fabric::connectx4();
+    let mut threads = Vec::new();
+    let t = spec.threads_per_rank;
+    let caps = QpCaps::default();
+    let buf_base = 0x100_0000u64;
+    let mut bufno = 0u64;
+    let mut buf_mr = |fabric: &mut Fabric, pd: PdId| -> (BufId, MrId) {
+        let addr = buf_base + bufno * 64 * ((halo_bytes as u64).div_ceil(64) + 1);
+        bufno += 1;
+        let buf = fabric.declare_buf(addr, halo_bytes as u64);
+        let mr = fabric.reg_mr(pd, addr, halo_bytes as u64).unwrap();
+        (buf, mr)
+    };
+    for _rank in 0..spec.ranks_per_node {
+        if policy.shares_qp() {
+            let ctx = fabric.open_ctx(policy.env).unwrap();
+            let pd = fabric.alloc_pd(ctx).unwrap();
+            let cq = fabric.create_cq(ctx, (4 * t).max(64)).unwrap();
+            let up = fabric.create_qp(pd, cq, caps, None).unwrap();
+            let down = fabric.create_qp(pd, cq, caps, None).unwrap();
+            for _ in 0..t {
+                let mut eps = Vec::new();
+                for qp in [up, down] {
+                    let (buf, mr) = buf_mr(&mut fabric, pd);
+                    eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                }
+                threads.push(eps);
+            }
+        } else {
+            let per_thread_ctx = policy.ctx.is_dedicated();
+            let stride: u32 = if policy.qp == QpProvision::TwoXEven { 2 } else { 1 };
+            let mut rank_scope = None;
+            for _ in 0..t {
+                let (ctx, pd) = if per_thread_ctx {
+                    let ctx = fabric.open_ctx(policy.env).unwrap();
+                    (ctx, fabric.alloc_pd(ctx).unwrap())
+                } else {
+                    match rank_scope {
+                        Some(scope) => scope,
+                        None => {
+                            let ctx = fabric.open_ctx(policy.env).unwrap();
+                            let scope = (ctx, fabric.alloc_pd(ctx).unwrap());
+                            rank_scope = Some(scope);
+                            scope
+                        }
+                    }
+                };
+                let used_cq = fabric.create_cq(ctx, 64).unwrap();
+                let spare_cq =
+                    if stride == 2 { Some(fabric.create_cq(ctx, 64).unwrap()) } else { None };
+                let mut eps = Vec::new();
+                for k in 0..(2 * stride) {
+                    let td = match policy.uar {
+                        UarMap::Independent => {
+                            Some(fabric.alloc_td(ctx, TdInitAttr::independent()).unwrap())
+                        }
+                        UarMap::Paired => {
+                            Some(fabric.alloc_td(ctx, TdInitAttr::paired()).unwrap())
+                        }
+                        UarMap::Static => None,
+                    };
+                    let used = k % stride == 0;
+                    let cq = if used { used_cq } else { spare_cq.unwrap() };
+                    let qp = fabric.create_qp(pd, cq, caps, td).unwrap();
+                    if used {
+                        let (buf, mr) = buf_mr(&mut fabric, pd);
+                        eps.push(ThreadEndpoint { qp, cq, buf, mr });
+                    }
+                }
+                threads.push(eps);
+            }
+        }
+    }
+    (fabric, threads)
+}
+
+/// The historical `StencilBench::time_exchange` body.
+fn legacy_time_exchange(
+    fabric: &Fabric,
+    threads: &[Vec<ThreadEndpoint>],
+    spec: JobSpec,
+    policy: &EndpointPolicy,
+    halo_bytes: u32,
+    iterations: u64,
+) -> MsgRateResult {
+    let cfg = MsgRateConfig {
+        msgs_per_thread: 2 * iterations,
+        msg_size: halo_bytes,
+        features: Features::conservative(),
+        cost: CostModel::calibrated(),
+        force_shared_qp_path: policy.shares_qp(),
+        ..Default::default()
+    };
+    let mut runner = Runner::new_multi(fabric, threads, cfg);
+    let ranks: Vec<u32> = (0..spec.ranks_per_node)
+        .flat_map(|r| std::iter::repeat(r).take(spec.threads_per_rank as usize))
+        .collect();
+    runner.set_rank_groups(&ranks);
+    runner.run()
+}
+
+// ---------------------------------------------------------------------------
+// The differential properties.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_workload_driver_matches_legacy() {
+    // fig12 cells: every category at the paper's 16 threads, quick
+    // message count (figures.rs: msgs(quick)/4 = 2048).
+    for cat in Category::ALL {
+        let policy = EndpointPolicy::preset(cat);
+        let ga = GlobalArray::new(cat, 16).unwrap();
+        let (lf, lset) = legacy_global_array(policy, 16);
+        assert_eq!(
+            ResourceUsage::of_fabric(&ga.fabric),
+            ResourceUsage::of_fabric(&lf),
+            "fig12 {cat}: fabric layouts diverged"
+        );
+        let new = ga.time_comm(2048, 2);
+        let old = legacy_time_comm(&lf, &lset.threads, &policy, 2048, 2);
+        exact(&new, &old, &format!("fig12 {cat} x16")).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(new.sched_events, old.sched_events, "fig12 {cat}: sched_events");
+    }
+
+    // fig14 cells: the paper's rank/thread sweep x every category,
+    // quick iteration count (figures.rs: msgs(quick)/16 = 512).
+    for spec in JobSpec::paper_sweep() {
+        for cat in Category::ALL {
+            let policy = EndpointPolicy::preset(cat);
+            let s = StencilBench::new(spec, cat, DEFAULT_HALO_BYTES).unwrap();
+            let (lf, lthreads) = legacy_stencil(spec, policy, DEFAULT_HALO_BYTES);
+            assert_eq!(
+                ResourceUsage::of_fabric(&s.fabric),
+                ResourceUsage::of_fabric(&lf),
+                "fig14 {} {cat}: fabric layouts diverged",
+                spec.label()
+            );
+            let new = s.time_exchange(512);
+            let old =
+                legacy_time_exchange(&lf, &lthreads, spec, &policy, DEFAULT_HALO_BYTES, 512);
+            exact(&new, &old, &format!("fig14 {} {cat}", spec.label()))
+                .unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(
+                new.sched_events,
+                old.sched_events,
+                "fig14 {} {cat}: sched_events",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn workload_cell_paths_agree_fuzzed() {
+    // Random scenario x policy x pool x placement, three engine paths:
+    // the coalescing fast path (baseline), the forced general path, and
+    // the island-partitioned engine must agree on every virtual-time
+    // observable. Event counts obey the documented relations: the
+    // general path dispatches one event per step (never fewer than the
+    // fast path), an accepted partitioned run coalesces against the
+    // island-local horizon (never more).
+    check("workload-cell-paths", fuzz_seed(0x3C_EA90), 6, |rng, _| {
+        let s = Scenario::ALL[rng.below(Scenario::ALL.len() as u64) as usize];
+        let w = s.instantiate(true);
+        let n = w.shape().threads_per_rank;
+        let policy = if rng.below(2) == 0 {
+            EndpointPolicy::scalable()
+        } else {
+            EndpointPolicy::preset(Category::Dynamic)
+        };
+        let pool = 1 + rng.below(n as u64) as u32;
+        let strategy = [MapStrategy::RoundRobin, MapStrategy::Hashed, MapStrategy::adaptive()]
+            [rng.below(3) as usize];
+        let what = format!("{s} pool {pool} {strategy:?}");
+        let fast = run_cell_opts(&*w, &policy, pool, strategy, false, false)
+            .map_err(|e| format!("{what}: {e}"))?;
+        let general = run_cell_opts(&*w, &policy, pool, strategy, true, false)
+            .map_err(|e| format!("{what}: {e}"))?;
+        let part = run_cell_opts(&*w, &policy, pool, strategy, false, true)
+            .map_err(|e| format!("{what}: {e}"))?;
+        if fast.usage != general.usage || fast.usage != part.usage {
+            return Err(format!("{what}: resource accounting diverged across paths"));
+        }
+        if fast.migrations != general.migrations || fast.migrations != part.migrations {
+            return Err(format!("{what}: adaptive migration counts diverged"));
+        }
+        exact(&general.result, &fast.result, &format!("{what} general-vs-fast"))?;
+        exact(&part.result, &fast.result, &format!("{what} partitioned-vs-fast"))?;
+        if general.result.sched_events < fast.result.sched_events {
+            return Err(format!(
+                "{what}: general path dispatched FEWER events ({} vs {})",
+                general.result.sched_events, fast.result.sched_events
+            ));
+        }
+        if part.result.sched_events > general.result.sched_events {
+            return Err(format!(
+                "{what}: partitioned dispatched MORE events than general ({} vs {})",
+                part.result.sched_events, general.result.sched_events
+            ));
+        }
+        Ok(())
+    });
+}
