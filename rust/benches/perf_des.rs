@@ -58,6 +58,13 @@
 //! execution-strategy independent, so they belong in the determinism
 //! contract alongside the rates).
 //!
+//! The JSON's `metrics` member is the unified metrics-registry
+//! snapshot (EXPERIMENTS.md §Observability): one traced pool cell run
+//! through the deterministic trace layer, rendered by the same
+//! canonical serializer `scep trace` uses — so the bench artifact and
+//! the CLI agree on the registry schema, and the member is byte-stable
+//! across runs (every value is a virtual-time observable).
+//!
 //! This bench is the wide perf surface; the narrow, *gating* perf
 //! check is `scep experiment experiments/gate.json` + `scep compare`
 //! against the committed baseline (EXPERIMENTS.md §Experiments).
@@ -72,7 +79,8 @@ use scalable_ep::bench::{Features, MsgRateConfig, Runner, SharedResource};
 use scalable_ep::coordinator::fleet::{fleet_json_rows, fleet_sweep};
 use scalable_ep::coordinator::FleetConfig;
 use scalable_ep::endpoints::EndpointPolicy;
-use scalable_ep::vci::{run_pooled, MapStrategy};
+use scalable_ep::trace::{merge_metrics_json, snapshot, SnapshotInput};
+use scalable_ep::vci::{run_pooled, run_pooled_traced, MapStrategy};
 use scalable_ep::workload::drive::run_cell;
 use scalable_ep::workload::Scenario;
 
@@ -498,6 +506,40 @@ fn main() {
         memo.scratch_wallclock_s,
     ));
     json.push_str("}\n");
+
+    // Unified metrics registry (EXPERIMENTS.md §Observability): one
+    // traced pool cell — the paper's headline threads/3 point under
+    // adaptive placement — snapshotted through the trace layer and
+    // merged in as the `metrics` member. Same serializer `scep trace`
+    // uses, so bench artifact and CLI agree on the registry schema;
+    // every value is a virtual-time observable, so the member is
+    // byte-stable across runs.
+    let msg_cfg = MsgRateConfig { msgs_per_thread: pool_msgs, ..Default::default() };
+    let (traced, trace, vci) = run_pooled_traced(
+        &EndpointPolicy::scalable(),
+        16,
+        5,
+        MapStrategy::adaptive(),
+        msg_cfg,
+        "pool:scalable-16s-5slots-adaptive",
+    )
+    .expect("traced pool cell");
+    println!(
+        "{:>28}: {} trace events ({} dropped), {} VCI events",
+        "metrics snapshot",
+        trace.events.len(),
+        trace.dropped,
+        trace.vci.len(),
+    );
+    let metrics = snapshot(&SnapshotInput {
+        label: &trace.label,
+        result: &traced.result,
+        parts: None,
+        vci: Some(&vci),
+        trace: Some(&trace),
+    });
+    let json = merge_metrics_json(&json, &metrics);
+
     let path = std::env::var("SCEP_BENCH_JSON").unwrap_or_else(|_| "BENCH_des.json".to_string());
     std::fs::write(&path, &json).expect("write BENCH_des.json");
 

@@ -147,6 +147,7 @@ use crate::sim::ring::ArrivalRing;
 use crate::sim::sched::{may_coalesce, Interaction, Key, Scheduler, Step};
 use crate::sim::sched_legacy::LegacyScheduler;
 use crate::sim::{to_secs, SimLock, Time};
+use crate::trace::{LockCounters, LockKind, TraceBuf, TraceEventKind};
 use crate::verbs::{CqId, Fabric, QpId};
 
 use super::features::Features;
@@ -256,6 +257,16 @@ pub struct MsgRateResult {
     /// bit-equal); *not* a cross-scheduler observable (the legacy
     /// tie-break may drain rings in a different interleaving).
     pub cq_high_water: Vec<u32>,
+    /// Contended lock acquisitions per lock class, summed over every
+    /// lock at the end of the run — the ROADMAP's contention signal for
+    /// the future `Adaptive`-on-contention strategy. Trajectory-derived,
+    /// so identical across fast/general/partitioned execution; *not* a
+    /// cross-scheduler observable (tie interleavings may differ).
+    pub lock_contended: LockCounters,
+    /// The trace buffer, when [`Runner::set_tracing`] enabled the sink
+    /// (`None` otherwise — the common case). Feed it to
+    /// [`Trace::assemble`](crate::trace::Trace::assemble).
+    pub trace: Option<Box<TraceBuf>>,
 }
 
 /// Per-thread effective parameters after QP-window clamping. Everything
@@ -433,6 +444,9 @@ pub struct Runner {
     /// re-applies the global every-8th decimation in canonical order so
     /// the percentile sample is bit-identical to the sequential run's.
     lat_log: Option<Vec<(Key, f64)>>,
+    /// The trace sink: `None` (zero-cost off; every record site is one
+    /// branch on this cold pointer) until [`Runner::set_tracing`].
+    trace: Option<Box<TraceBuf>>,
     /// The pull-driven scheduler; `None` until `ensure_started` (or for
     /// the whole run under the frozen legacy scheduler).
     sched: Option<Scheduler>,
@@ -603,6 +617,7 @@ impl Runner {
             latencies: crate::sim::stats::Sample::new(),
             lat_decim: 0,
             lat_log: None,
+            trace: None,
             sched: None,
             sched_events: 0,
             sched_steps: 0,
@@ -633,6 +648,26 @@ impl Runner {
         assert_eq!(traffic.len(), self.threads.len(), "one traffic spec per thread");
         for (t, &spec) in self.threads.iter_mut().zip(traffic) {
             t.arr = Some(ArrivalGen::new(spec));
+        }
+    }
+
+    /// Enable (or disable) the deterministic trace sink. Call before
+    /// the run starts; records are keyed on the canonical
+    /// `(time, tid, step)` phase key, so the resulting stream is
+    /// bit-identical across the sequential, fast-path and
+    /// partitioned-parallel execution strategies. The buffer comes back
+    /// on [`MsgRateResult::trace`].
+    pub fn set_tracing(&mut self, on: bool) {
+        assert!(self.sched.is_none(), "set_tracing before the run starts");
+        self.trace = on.then(|| Box::new(TraceBuf::new(self.cq_arrivals.len())));
+    }
+
+    /// Contended-acquire totals per lock class (monotone over the run).
+    fn lock_counters(&self) -> LockCounters {
+        LockCounters {
+            qp: self.qp_locks.iter().map(|l| l.contended_acquires()).sum(),
+            cq: self.cq_locks.iter().map(|l| l.contended_acquires()).sum(),
+            uuar: self.uuar_locks.iter().map(|l| l.contended_acquires()).sum(),
         }
     }
 
@@ -910,6 +945,8 @@ impl Runner {
             sched_events: self.sched_events,
             sched_steps: self.sched_steps,
             cq_high_water,
+            lock_contended: self.lock_counters(),
+            trace: self.trace.take(),
             latency_sample: latencies,
         }
     }
@@ -976,6 +1013,16 @@ impl Runner {
                 c.sched.as_mut().expect("started").retain(&keep);
                 c.nic.set_rail_logging(true);
                 c.lat_log = Some(Vec::new());
+                // The island records only its own continuation: the
+                // fork-point buffer keeps the warmup records (they'd
+                // double-count on merge), and the clone's CQ peaks seed
+                // from the fork-time ring high-waters so warmup
+                // transitions are not re-emitted.
+                if let Some(tr) = c.trace.as_deref_mut() {
+                    let hw: Vec<u32> =
+                        c.cq_arrivals.iter().map(|r| r.high_water() as u32).collect();
+                    tr.fork_island(&hw);
+                }
                 clones.push(c);
             }
             let nw = nworkers.min(islands.len());
@@ -1017,6 +1064,8 @@ impl Runner {
         let warm_pcie = self.nic.counters;
         let warm_events = self.sched_events;
         let warm_steps = self.sched_steps;
+        let warm_locks = self.lock_counters();
+        let mut lock_contended = warm_locks;
         let mut done: Vec<Time> = vec![0; n];
         let mut pcie = warm_pcie;
         let mut sched_events = warm_events;
@@ -1038,7 +1087,20 @@ impl Runner {
             pcie.dma_writes += part.nic.counters.dma_writes - warm_pcie.dma_writes;
             sched_events += part.sched_events - warm_events;
             sched_steps += part.sched_steps - warm_steps;
+            let part_locks = part.lock_counters();
+            lock_contended.qp += part_locks.qp - warm_locks.qp;
+            lock_contended.cq += part_locks.cq - warm_locks.cq;
+            lock_contended.uuar += part_locks.uuar - warm_locks.uuar;
             lat_entries.extend(part.lat_log.take().unwrap_or_default());
+            // Fold the island's trace records back into the fork-point
+            // buffer (which kept the warmup records); into_events
+            // re-sorts into canonical order, so the merged stream is
+            // bit-identical to the sequential run's.
+            if let Some(pt) = part.trace.take() {
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.absorb(*pt);
+                }
+            }
         }
         // Re-apply the global every-8th latency decimation in canonical
         // phase-key order — bit-identical to the sequential sample, which
@@ -1068,6 +1130,8 @@ impl Runner {
             sched_events,
             sched_steps,
             cq_high_water: cq_high,
+            lock_contended,
+            trace: self.trace.take(),
             latency_sample: latencies,
         }
     }
@@ -1276,6 +1340,17 @@ impl Runner {
         // QP's own lock already covers the BlueFlame write, §V: "The lock
         // on the QP also protects concurrent BlueFlame writes".)
         //
+        // Tracing (cold): capture pre-acquire holder + contention
+        // counts so the post-scope records can attribute lock waits.
+        let trace_pre = self.trace.is_some().then(|| {
+            let uuar = ep.uuar_lock.map(|i| {
+                let l = &self.uuar_locks[i as usize];
+                (l.last_holder(), l.contended_acquires())
+            });
+            let l = &self.qp_locks[qi];
+            (l.last_holder(), l.contended_acquires(), uuar)
+        });
+
         // Destructure so the lock, the NIC and the atomics borrow
         // disjoint fields (no swaps on the hot path).
         let Runner { qp_locks, uuar_locks, nic, qp_depth_atomic, .. } = self;
@@ -1305,6 +1380,34 @@ impl Runner {
             Some(ranks) => self.rank_atomic[ranks[ti] as usize].rmw(release, tid),
             None => release,
         };
+
+        if let Some((qp_holder, qp_base, uuar_pre)) = trace_pre {
+            let tkey = Key { time: now, tid, step: self.threads[ti].steps - 1 };
+            let qp_contended = self.qp_locks[qi].contended_acquires() > qp_base;
+            let uuar_wait = match (ep.uuar_lock, uuar_pre) {
+                (Some(ui), Some((h, base)))
+                    if self.uuar_locks[ui as usize].contended_acquires() > base =>
+                {
+                    Some((ui, h))
+                }
+                _ => None,
+            };
+            let tr = self.trace.as_deref_mut().expect("trace_pre implies a sink");
+            if qp_contended {
+                tr.push(
+                    tkey,
+                    TraceEventKind::LockWait {
+                        kind: LockKind::Qp,
+                        id: qi as u32,
+                        holder: qp_holder,
+                    },
+                );
+            }
+            if let Some((ui, holder)) = uuar_wait {
+                tr.push(tkey, TraceEventKind::LockWait { kind: LockKind::Uuar, id: ui, holder });
+            }
+            tr.push(tkey, TraceEventKind::Post { qp: qi as u32, msgs: p, release });
+        }
 
         // Signaled positions within this batch: i such that
         // (posted + i + 1) % q == 0, i.e. i ≡ q-1-posted (mod q) —
@@ -1359,6 +1462,13 @@ impl Runner {
                 }
             }
             self.cq_arrivals[cq_ix].push(ct, tid);
+            if self.trace.is_some() {
+                let tkey = Key { time: now, tid, step: self.threads[ti].steps - 1 };
+                let hw = self.cq_arrivals[cq_ix].high_water() as u32;
+                let tr = self.trace.as_deref_mut().unwrap();
+                tr.push(tkey, TraceEventKind::Completion { cq: cq_ix as u32, done: ct, lat_ns });
+                tr.observe_cq(tkey, cq_ix, hw);
+            }
         }
 
         // Advance thread state.
@@ -1420,6 +1530,13 @@ impl Runner {
             }
         }
 
+        // Tracing (cold): pre-acquire holder + contention count for the
+        // CQ lock, read before the scope advances them.
+        let trace_pre = self.trace.is_some().then(|| {
+            let l = &self.cq_locks[cq.index()];
+            (l.last_holder(), l.contended_acquires())
+        });
+
         let Runner { cq_locks, credit_atomic, got_buf, .. } = self;
         let got = &*got_buf;
         let ngot = got.len();
@@ -1437,6 +1554,22 @@ impl Runner {
         for i in 0..ngot {
             let owner = self.got_buf[i].1;
             self.threads[owner as usize].credits += 1;
+        }
+
+        if let Some((holder, base)) = trace_pre {
+            let tkey = Key { time: now, tid, step: self.threads[ti].steps - 1 };
+            let contended = self.cq_locks[cq.index()].contended_acquires() > base;
+            let tr = self.trace.as_deref_mut().expect("trace_pre implies a sink");
+            if contended {
+                tr.push(
+                    tkey,
+                    TraceEventKind::LockWait { kind: LockKind::Cq, id: cq.index() as u32, holder },
+                );
+            }
+            tr.push(
+                tkey,
+                TraceEventKind::Poll { cq: cq.index() as u32, got: ngot as u32, release },
+            );
         }
 
         let t = &mut self.threads[ti];

@@ -84,8 +84,8 @@ struct TraceEntry {
 }
 
 /// Process-global registry of loaded traces. Interning keeps
-/// [`TrafficModel`] `Copy + PartialEq`: two parses of the same
-/// unchanged file share one id and compare equal.
+/// [`TrafficModel`] `Copy + PartialEq`: every parse of one path shares
+/// one id, so two parses of the same capture always compare equal.
 fn trace_registry() -> &'static Mutex<Vec<TraceEntry>> {
     static REG: OnceLock<Mutex<Vec<TraceEntry>>> = OnceLock::new();
     REG.get_or_init(|| Mutex::new(Vec::new()))
@@ -128,7 +128,13 @@ fn intern_trace(path: &str) -> std::result::Result<u32, String> {
     }
     let gaps_ns: Vec<f64> = stamps.windows(2).map(|w| w[1] - w[0]).collect();
     let mut reg = trace_registry().lock().unwrap();
-    if let Some(i) = reg.iter().position(|e| e.path == path && e.gaps_ns == gaps_ns) {
+    if let Some(i) = reg.iter().position(|e| e.path == path) {
+        // One path, one id — re-parsing a capture whose file changed
+        // used to leak a second registry entry whose model compared
+        // *unequal* to the first parse's despite naming the same
+        // capture. Keep the id and refresh the gaps to the file's
+        // current contents.
+        reg[i].gaps_ns = gaps_ns;
         return Ok(i as u32);
     }
     reg.push(TraceEntry { path: path.to_string(), gaps_ns });
@@ -452,6 +458,31 @@ mod tests {
         s.gate(3);
         assert_eq!(s.arrival(2), 300_000, "gaps halved");
         assert_eq!(hot.to_string(), spec, "a scaled trace displays its base spelling");
+    }
+
+    /// Regression: re-parsing a path whose file changed used to intern
+    /// a *second* registry entry, so two models naming the same capture
+    /// compared unequal. One path must map to one id — pinning the
+    /// `Copy + PartialEq` contract interning exists for.
+    #[test]
+    fn reparsing_a_path_interns_to_one_registry_entry() {
+        let path = write_trace("dedupe", "0\n100\n300\n");
+        let spec = format!("trace:{path}");
+        let a = TrafficModel::parse(&spec).unwrap();
+        let b = a; // Copy: the original stays usable after the move.
+        assert_eq!(a, b);
+        std::fs::write(&path, "0\n50\n150\n").unwrap();
+        let c = TrafficModel::parse(&spec).unwrap();
+        assert_eq!(a, c, "one path must intern to one registry entry");
+        let (TrafficModel::Trace { trace: ia, .. }, TrafficModel::Trace { trace: ic, .. }) =
+            (a, c)
+        else {
+            panic!("parse must yield trace models")
+        };
+        assert_eq!(ia, ic, "registry id reused across re-parses");
+        // The reused entry follows the file's current contents: the
+        // rewritten capture's gaps are [50, 100] -> mean 75 ns.
+        assert_eq!(c.mean_gap_ns(), 75.0, "re-parse refreshes the gap cycle");
     }
 
     #[test]

@@ -15,6 +15,27 @@ pub fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Every `scep` subcommand, for the unknown-subcommand diagnostic.
+pub const SUBCOMMANDS: [&str; 10] = [
+    "bench",
+    "resources",
+    "pool",
+    "fleet",
+    "workload",
+    "trace",
+    "experiment",
+    "compare",
+    "run",
+    "calibrate",
+];
+
+/// Diagnostic for an unrecognized subcommand: names the bad command and
+/// lists the valid ones (mirroring the unknown `--figure` error), so a
+/// typo gets a targeted message instead of only the full usage dump.
+pub fn unknown_subcommand(cmd: &str) -> String {
+    format!("unknown subcommand '{cmd}'; valid subcommands: {}", SUBCOMMANDS.join(", "))
+}
+
 /// `--map <strategy>`; `default` when absent.
 pub fn parse_map(args: &[String], default: MapStrategy) -> Result<MapStrategy, String> {
     match flag_value(args, "--map") {
@@ -135,6 +156,15 @@ mod tests {
 
     fn args(v: &[&str]) -> Vec<String> {
         v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_subcommand_names_it_and_lists_the_valid_set() {
+        let e = unknown_subcommand("benhc");
+        assert!(e.contains("'benhc'"), "must name the bad command: {e}");
+        for c in SUBCOMMANDS {
+            assert!(e.contains(c), "must list subcommand '{c}': {e}");
+        }
     }
 
     #[test]

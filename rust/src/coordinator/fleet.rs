@@ -27,11 +27,12 @@
 //! [`par_map`] pool, and each rank's arrival seeds are a pure mix of
 //! `(fleet seed, rank, thread, phase)`.
 
-use crate::bench::{MsgRateConfig, Runner, StreamTraffic, TrafficModel};
+use crate::bench::{MsgRateConfig, MsgRateResult, Runner, StreamTraffic, TrafficModel};
 use crate::endpoints::{EndpointPolicy, ResourceUsage, ThreadEndpoint};
 use crate::par::par_map;
 use crate::sim::stats::Sample;
 use crate::sim::{to_secs, Time};
+use crate::trace::{Trace, VciSnapshot};
 use crate::vci::{EndpointPool, MapStrategy};
 
 use super::comm::Universe;
@@ -276,6 +277,87 @@ fn simulate_rank(u: &Universe, cfg: &FleetConfig, rank: u32) -> RankOutcome {
         migrations: rc.mapper.migrations(),
         sched_steps,
     }
+}
+
+/// [`simulate_rank`] for one rank with the deterministic trace sink
+/// enabled — the `scep trace fleet` entry point. The traced timed phase
+/// is the rank's open-loop run; under failure injection the trace
+/// covers the *post-kill* phase (each phase is an independent DES run
+/// restarting at virtual time zero, so their record keys would
+/// interleave misleadingly), while the returned [`VciSnapshot`]'s event
+/// log still carries the full lifecycle: the launch-time assigns, the
+/// kill, and every re-home. Virtual-time observables of the traced
+/// phase are bit-identical to the untraced fleet run's.
+pub fn trace_fleet_rank(
+    u: &Universe,
+    cfg: &FleetConfig,
+    rank: u32,
+) -> (MsgRateResult, Trace, VciSnapshot) {
+    let mut rc = u.ranks[rank as usize].clone();
+    let fabric = &u.nodes[rc.node as usize].fabric;
+    let msg_cfg = MsgRateConfig { msgs_per_thread: cfg.msgs_per_stream, ..Default::default() };
+    let full: Vec<u64> = stream_weights(cfg, rank, 0)
+        .into_iter()
+        .map(|w| cfg.msgs_per_stream * w)
+        .collect();
+    let mut probe = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+    probe.set_msgs_targets(&full);
+    let full_eff = probe.msgs_targets();
+    drop(probe);
+
+    let kill_here = cfg.kill.filter(|k| rank % k.every == 0);
+    let mut result = match kill_here {
+        None => {
+            let mut r = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+            r.set_tracing(true);
+            r.set_msgs_targets(&full_eff);
+            r.set_open_loop(&stream_traffic(cfg, rank, 0));
+            r.run_partitioned()
+        }
+        Some(k) => {
+            let half: Vec<u64> = full_eff.iter().map(|&t| t / 2).collect();
+            let mut r1 = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+            r1.set_msgs_targets(&half);
+            let half_eff = r1.msgs_targets();
+            r1.set_open_loop(&stream_traffic(cfg, rank, 0));
+            let _ = r1.run_partitioned();
+            rc.mapper.kill_slot(k.slot);
+            rc.threads = rc.mapper.slots().iter().map(|&s| rc.pool.endpoint(s)).collect();
+            let rem: Vec<u64> = full_eff
+                .iter()
+                .zip(&half_eff)
+                .map(|(&f, &h)| {
+                    assert!(f > h, "phase split needs >= 2 QP windows per stream");
+                    f - h
+                })
+                .collect();
+            let mut r2 = Runner::new_multi(fabric, &groups(&rc.threads), msg_cfg);
+            r2.set_tracing(true);
+            r2.set_msgs_targets(&rem);
+            r2.set_open_loop(&stream_traffic(cfg, rank, 1));
+            r2.run_partitioned()
+        }
+    };
+    let vci = VciSnapshot::of_mapper(&rc.mapper);
+    let label = format!("fleet:rank{rank}");
+    let trace = Trace::assemble(&label, result.trace.take(), vci.events.clone());
+    (result, trace, vci)
+}
+
+/// Launch the fleet universe and trace one rank — the `scep trace
+/// fleet` convenience wrapper over [`trace_fleet_rank`].
+pub fn trace_fleet(cfg: &FleetConfig, rank: u32) -> (MsgRateResult, Trace, VciSnapshot) {
+    assert!(rank < cfg.ranks, "trace rank {rank} outside fleet of {} ranks", cfg.ranks);
+    if let Some(k) = cfg.kill {
+        assert!(k.slot < cfg.pool, "kill slot {} outside pool of {}", k.slot, cfg.pool);
+        assert!(k.every >= 1, "kill cadence must be >= 1");
+        assert!(cfg.pool >= 2, "failure injection needs a surviving slot");
+    }
+    let job = Job::n_node(cfg.ranks, JobSpec::new(1, cfg.streams), cfg.policy)
+        .pooled(cfg.pool, cfg.map)
+        .with_hot(cfg.hot);
+    let u = Universe::launch(job, 64).expect("fleet launch");
+    trace_fleet_rank(&u, cfg, rank)
 }
 
 /// Per-rank endpoint-pool resource accounting for this config: what

@@ -26,6 +26,9 @@ pub mod job;
 pub mod rma;
 
 pub use comm::{RankComm, Universe};
-pub use fleet::{rank_usage, run_fleet, stream_seed, stream_traffic, FleetCell, FleetConfig, KillSpec};
+pub use fleet::{
+    rank_usage, run_fleet, stream_seed, stream_traffic, trace_fleet, trace_fleet_rank, FleetCell,
+    FleetConfig, KillSpec,
+};
 pub use job::{HotStreams, Job, JobSpec};
 pub use rma::Window;

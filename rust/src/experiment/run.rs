@@ -129,6 +129,11 @@ fn workload_rows(cfg: &ExperimentConfig) -> Vec<ReportRow> {
 }
 
 fn pool_row(label: String, r: &PooledResult) -> ReportRow {
+    // Contention and occupancy ride beside the rates under the unified
+    // metrics-registry names (EXPERIMENTS.md §Observability): contended
+    // acquisitions per lock class and the worst per-CQ high-water mark.
+    // Trajectory-derived, so deterministic for these sequential runs.
+    let cq_hw_max = r.result.cq_high_water.iter().copied().max().unwrap_or(0);
     ReportRow::new(label)
         .metric("messages", r.result.messages as f64)
         .metric("rate_mmsgs", r.result.mmsgs_per_sec)
@@ -139,6 +144,10 @@ fn pool_row(label: String, r: &PooledResult) -> ReportRow {
         .metric("rehomed", r.rehomed as f64)
         .metric("sched_steps", r.result.sched_steps as f64)
         .metric("sched_events", r.result.sched_events as f64)
+        .metric("lock_contended_qp", r.result.lock_contended.qp as f64)
+        .metric("lock_contended_cq", r.result.lock_contended.cq as f64)
+        .metric("lock_contended_uuar", r.result.lock_contended.uuar as f64)
+        .metric("cq_high_water_max", cq_hw_max as f64)
         .metric("qps", r.usage.qps as f64)
         .metric("uuars", r.usage.uuars_allocated as f64)
         .metric("uuars_used", r.usage.uuars_used as f64)

@@ -27,7 +27,8 @@ use crate::endpoints::{BufLayout, Category, EndpointPolicy, ResourceUsage};
 use crate::mlx5::MemModel;
 use crate::par::par_map;
 use crate::report::{f2, pct, Table};
-use crate::vci::{run_pooled, MapStrategy};
+use crate::trace::{Trace, VciSnapshot};
+use crate::vci::{run_pooled, run_pooled_traced, MapStrategy};
 use crate::verbs::Fabric;
 use crate::workload::drive::{everywhere_head_to_head, run_cell};
 use crate::workload::Scenario;
@@ -866,6 +867,79 @@ pub fn ablation_msg_size(quick: bool) -> Vec<Table> {
         t.row(vec![size.to_string(), (size <= 60).to_string(), f2(rate)]);
     }
     vec![t]
+}
+
+/// Figure ids `scep trace` supports: each maps to one representative
+/// cell whose message lifecycle the deterministic sink records (a whole
+/// figure is dozens of independent runs whose traces would not compose
+/// into one virtual timeline).
+pub const TRACE_FIGURES: [&str; 4] = ["fig2", "fig9", "fig11", "pool"];
+
+/// One traced figure cell: the run's virtual-time observables, the
+/// canonical trace, and (for pooled cells) the VCI mapper snapshot.
+#[derive(Debug, Clone)]
+pub struct TracedFigure {
+    pub result: MsgRateResult,
+    pub trace: Trace,
+    pub vci: Option<VciSnapshot>,
+}
+
+fn trace_policy_cell(
+    label: &str,
+    policy: &EndpointPolicy,
+    nthreads: u32,
+    quick: bool,
+) -> TracedFigure {
+    let (fabric, eps) = policy.build_fresh(nthreads).expect("topology build");
+    let cfg = MsgRateConfig { msgs_per_thread: msgs(quick), ..Default::default() };
+    let mut runner = Runner::new(&fabric, &eps, cfg);
+    runner.set_tracing(true);
+    let mut result = runner.run_partitioned();
+    let trace = Trace::assemble(label, result.trace.take(), Vec::new());
+    TracedFigure { result, trace, vci: None }
+}
+
+/// Trace one representative cell of a [`TRACE_FIGURES`] figure:
+/// fig2 traces the MPI+threads extreme (shared QP/CQ, maximal lock
+/// contention), fig9 the 16-way CQ-sharing cell, fig11 the 16-way
+/// QP-sharing cell, and `pool` an adaptive pooled run (which also
+/// exercises the VCI assign/migrate event log). Same aliases as
+/// [`by_name`].
+pub fn trace_figure(name: &str, quick: bool) -> Option<TracedFigure> {
+    Some(match name {
+        "fig2" | "2" | "2b" => trace_policy_cell(
+            "fig2:mpi-threads@16",
+            &EndpointPolicy::preset(Category::MpiThreads),
+            16,
+            quick,
+        ),
+        "fig9" | "9" => trace_policy_cell(
+            "fig9:cq-16way@16",
+            &EndpointPolicy::sharing(SharedResource::Cq, 16),
+            16,
+            quick,
+        ),
+        "fig11" | "11" => trace_policy_cell(
+            "fig11:qp-16way@16",
+            &EndpointPolicy::sharing(SharedResource::Qp, 16),
+            16,
+            quick,
+        ),
+        "pool" | "vci" => {
+            let cfg = MsgRateConfig { msgs_per_thread: msgs(quick) / 4, ..Default::default() };
+            let (r, trace, vci) = run_pooled_traced(
+                &EndpointPolicy::scalable(),
+                16,
+                5,
+                MapStrategy::adaptive(),
+                cfg,
+                "pool:scalable-16s-5slots-adaptive",
+            )
+            .expect("pool build");
+            TracedFigure { result: r.result, trace, vci: Some(vci) }
+        }
+        _ => return None,
+    })
 }
 
 /// Run a named figure.

@@ -46,6 +46,9 @@
 //!   trait (traffic matrix + completion semantics + topology hint), the
 //!   paper apps as data definitions, and the sequel's scenarios
 //!   (alltoall / sparse / rpc / the MPI-everywhere head-to-head).
+//! * [`trace`] — deterministic virtual-time tracing: canonical-keyed
+//!   message-lifecycle and resource events, the Chrome/Perfetto
+//!   exporter, and the unified metrics snapshot.
 //! * [`cli`] — testable flag parsers for the `scep` binary.
 
 pub mod apps;
@@ -62,6 +65,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod testing;
+pub mod trace;
 pub mod vci;
 pub mod verbs;
 pub mod workload;

@@ -10,6 +10,7 @@
 //! scep fleet [--quick] [--ranks 1024] [--streams 32] [--pool 8] [--map hash]
 //!           [--msgs 1024] [--seed 1] [--workers <n>] [--workload <name>]
 //! scep workload [<name>] [--quick] [--workers <n>]
+//! scep trace <figure|workload|fleet> [--quick] [--out <path>] [--workers <n>]
 //! scep run global-array [--n 256] [--category 2xdynamic | --policy <spec>]
 //! scep run stencil [--spec 4.4] [--category dynamic | --policy <spec>]
 //! scep experiment <config.json> [--seed <s>] [--out <dir>] [--workers <n>]
@@ -32,6 +33,13 @@
 //! `scep fleet --workload <name>` shapes the fleet's per-stream demand
 //! from that scenario's traffic matrix instead of the hot-stream skew.
 //!
+//! `scep trace` runs one representative cell (a supported figure, a
+//! workload scenario, or one fleet rank with the failure event) with
+//! the deterministic trace sink enabled, writes Chrome trace-event
+//! JSON (loadable in Perfetto / chrome://tracing) and merges the
+//! canonical metrics snapshot into BENCH_des.json's "metrics" member —
+//! see EXPERIMENTS.md §Observability.
+//!
 //! `scep experiment` runs a JSON experiment config (see
 //! `experiment::ExperimentConfig`) and writes a self-contained report
 //! (`<name>.report.json` + `<name>.report.md`); `scep compare` diffs
@@ -46,13 +54,15 @@ use std::process::ExitCode;
 use scalable_ep::apps::{GlobalArray, StencilBench};
 use scalable_ep::bench::{Features, MsgRateConfig, Runner};
 use scalable_ep::cli;
-use scalable_ep::coordinator::fleet::{fleet_sweep, merge_fleet_json};
-use scalable_ep::coordinator::{FleetConfig, JobSpec};
+use scalable_ep::coordinator::fleet::{fleet_sweep, merge_fleet_json, trace_fleet};
+use scalable_ep::coordinator::{FleetConfig, JobSpec, KillSpec};
 use scalable_ep::endpoints::{Category, EndpointPolicy, ResourceUsage};
 use scalable_ep::experiment::{self, ExperimentConfig, Report};
 use scalable_ep::runtime::ArtifactRuntime;
+use scalable_ep::trace::{merge_metrics_json, render_chrome, snapshot, SnapshotInput};
 use scalable_ep::vci::{run_pooled, EndpointPool, MapStrategy, Stream, VciMapper};
 use scalable_ep::verbs::Fabric;
+use scalable_ep::workload::drive::run_cell_traced;
 use scalable_ep::workload::Scenario;
 use scalable_ep::{figures, report};
 
@@ -66,6 +76,7 @@ fn usage() -> ExitCode {
          scep fleet [--quick] [--ranks <n>] [--streams <n>] [--pool <k>] \
          [--map <strategy>] [--msgs <m>] [--seed <s>] [--workers <n>] [--workload <name>]\n  \
          scep workload [<name>] [--quick] [--workers <n>]\n  \
+         scep trace <figure|workload|fleet> [--quick] [--out <path>] [--workers <n>]\n  \
          scep run global-array [--n <elems>] [--category <cat> | --policy <spec>]\n  \
          scep run stencil [--spec P.T] [--category <cat> | --policy <spec>] [--iters <n>]\n  \
          scep experiment <config.json> [--seed <s>] [--out <dir>] [--workers <n>]\n  \
@@ -175,6 +186,85 @@ fn cmd_experiment(args: &[String]) -> ExitCode {
     }
     print!("{md}");
     eprintln!("[experiment] report -> {json_path} + {md_path}");
+    ExitCode::SUCCESS
+}
+
+/// List the valid `scep trace` targets for diagnostics.
+fn trace_targets() -> String {
+    format!("{}, {}, fleet", figures::TRACE_FIGURES.join(", "), Scenario::names())
+}
+
+/// `scep trace <target>`: run one representative cell with the
+/// deterministic sink enabled, write the Chrome trace-event JSON
+/// (loadable in Perfetto / chrome://tracing) and merge the canonical
+/// metrics snapshot into BENCH_des.json's "metrics" member.
+fn cmd_trace(args: &[String]) -> ExitCode {
+    try_flag!(apply_workers(args));
+    let quick = args.iter().any(|a| a == "--quick");
+    let Some(target) = args.get(1).filter(|a| !a.starts_with("--")) else {
+        return bad(format!("scep trace: missing <target>; valid targets: {}", trace_targets()));
+    };
+    let (result, trace, vci) = if let Some(tf) = figures::trace_figure(target, quick) {
+        (tf.result, tf.trace, tf.vci)
+    } else if let Ok(s) = Scenario::parse(target) {
+        let w = s.instantiate(quick);
+        let n = w.shape().threads_per_rank;
+        let pool = (n / 3).max(1);
+        let label = format!("workload:{}", s.name());
+        match run_cell_traced(&*w, &EndpointPolicy::scalable(), pool, MapStrategy::adaptive(), &label)
+        {
+            Ok((cell, trace, vci)) => (cell.result, trace, Some(vci)),
+            Err(e) => {
+                eprintln!("trace cell build failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else if target == "fleet" {
+        // One rank with the failure event, so the trace shows the
+        // post-kill recovery and the VCI log the kill + re-homes.
+        let mut cfg = FleetConfig::new(8, 8);
+        if quick {
+            cfg = cfg.quick();
+        }
+        cfg.kill = Some(KillSpec { slot: 0, every: 1 });
+        let (result, trace, vci) = trace_fleet(&cfg, 0);
+        (result, trace, Some(vci))
+    } else {
+        return bad(format!(
+            "unknown trace target '{target}'; valid targets: {}",
+            trace_targets()
+        ));
+    };
+    let chrome = render_chrome(&trace);
+    let out_path =
+        cli::flag_value(args, "--out").unwrap_or_else(|| format!("trace_{target}.json"));
+    if let Err(e) = std::fs::write(&out_path, &chrome) {
+        eprintln!("cannot write {out_path}: {e}");
+        return ExitCode::FAILURE;
+    }
+    let metrics = snapshot(&SnapshotInput {
+        label: &trace.label,
+        result: &result,
+        parts: None,
+        vci: vci.as_ref(),
+        trace: Some(&trace),
+    });
+    let bench_path =
+        std::env::var("SCEP_BENCH_JSON").unwrap_or_else(|_| "BENCH_des.json".to_string());
+    let existing = std::fs::read_to_string(&bench_path).unwrap_or_default();
+    if let Err(e) = std::fs::write(&bench_path, merge_metrics_json(&existing, &metrics)) {
+        eprintln!("cannot write {bench_path}: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "trace [{}]: {} events ({} dropped), {} VCI events over {} msgs",
+        trace.label,
+        trace.events.len(),
+        trace.dropped,
+        trace.vci.len(),
+        result.messages
+    );
+    eprintln!("[trace] chrome JSON -> {out_path}; metrics -> {bench_path} (\"metrics\" member)");
     ExitCode::SUCCESS
 }
 
@@ -399,6 +489,7 @@ fn main() -> ExitCode {
             }
             ExitCode::SUCCESS
         }
+        "trace" => cmd_trace(&args),
         "experiment" => cmd_experiment(&args),
         "compare" => cmd_compare(&args),
         "run" => {
@@ -477,6 +568,9 @@ fn main() -> ExitCode {
             }
             ExitCode::SUCCESS
         }
-        _ => usage(),
+        cmd => {
+            eprintln!("{}", cli::unknown_subcommand(cmd));
+            usage()
+        }
     }
 }

@@ -113,6 +113,13 @@ impl SimLock {
         self.contended_acquires
     }
 
+    /// The thread that last held (or still holds) the lock; `None`
+    /// before the first acquire. A contended waiter queues behind this
+    /// holder — the trace layer's holder attribution.
+    pub fn last_holder(&self) -> Option<HolderId> {
+        self.last_holder
+    }
+
     pub fn migrations(&self) -> u64 {
         self.migrations
     }

@@ -1,0 +1,294 @@
+//! Chrome trace-event exporter: render a [`Trace`] as the JSON object
+//! format `chrome://tracing` and Perfetto load directly.
+//!
+//! Mapping:
+//!
+//! * each DES thread is a track (`pid 0`, `tid` = thread id, named via
+//!   `thread_name` metadata);
+//! * `Post`/`Poll` phases are complete duration events (`ph: "X"`,
+//!   `ts`/`dur` in microseconds of *virtual* time);
+//! * completions and lock waits are instants (`ph: "i"`);
+//! * CQ high-water transitions are counter tracks (`ph: "C"`, one
+//!   counter per CQ);
+//! * VCI slot residency is the async-span dimension (`pid 1`): a
+//!   stream's life on a slot opens with `ph: "b"` and closes with
+//!   `ph: "e"`, so migrations/kills/re-homes read as span handoffs.
+//!   The mapper runs outside virtual time, so these use the mapper's
+//!   event *ordinal* as their timestamp.
+//!
+//! Everything renders through the experiment harness's canonical
+//! [`Json`] writer: member order is fixed, numbers use the shortest
+//! round-trip form, and the event list is the canonically sorted stream
+//! from [`TraceBuf::into_events`](super::TraceBuf::into_events) — so
+//! the bytes are identical across execution strategies and worker
+//! counts.
+
+use crate::experiment::Json;
+
+use super::{LockKind, Trace, TraceEvent, TraceEventKind, VciEvent};
+
+/// Virtual ns → Chrome's microsecond `ts`/`dur` unit. One IEEE divide,
+/// rendered shortest-round-trip: deterministic across platforms.
+fn us(t: u64) -> Json {
+    Json::Num(t as f64 / 1000.0)
+}
+
+fn obj(members: Vec<(&str, Json)>) -> Json {
+    Json::Obj(members.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn common(name: &str, ph: &str, pid: u64, tid: u64, ts: Json) -> Vec<(String, Json)> {
+    vec![
+        ("name".to_string(), Json::Str(name.to_string())),
+        ("ph".to_string(), Json::Str(ph.to_string())),
+        ("pid".to_string(), Json::Num(pid as f64)),
+        ("tid".to_string(), Json::Num(tid as f64)),
+        ("ts".to_string(), ts),
+    ]
+}
+
+fn push(out: &mut Vec<Json>, mut base: Vec<(String, Json)>, extra: Vec<(&str, Json)>) {
+    base.extend(extra.into_iter().map(|(k, v)| (k.to_string(), v)));
+    out.push(Json::Obj(base));
+}
+
+fn des_event(out: &mut Vec<Json>, e: &TraceEvent) {
+    let (t, tid, step) = (e.key.time, e.key.tid as u64, e.key.step);
+    let step_arg = ("step", Json::Num(step as f64));
+    match e.kind {
+        TraceEventKind::Post { qp, msgs, release } => {
+            let mut ev = common("post", "X", 0, tid, us(t));
+            ev.push(("dur".to_string(), us(release.saturating_sub(t))));
+            push(
+                out,
+                ev,
+                vec![(
+                    "args",
+                    obj(vec![
+                        ("qp", Json::Num(qp as f64)),
+                        ("msgs", Json::Num(msgs as f64)),
+                        step_arg,
+                    ]),
+                )],
+            );
+        }
+        TraceEventKind::Poll { cq, got, release } => {
+            let mut ev = common("poll", "X", 0, tid, us(t));
+            ev.push(("dur".to_string(), us(release.saturating_sub(t))));
+            push(
+                out,
+                ev,
+                vec![(
+                    "args",
+                    obj(vec![
+                        ("cq", Json::Num(cq as f64)),
+                        ("got", Json::Num(got as f64)),
+                        step_arg,
+                    ]),
+                )],
+            );
+        }
+        TraceEventKind::Completion { cq, done, lat_ns } => {
+            let ev = common("completion", "i", 0, tid, us(done));
+            push(
+                out,
+                ev,
+                vec![
+                    ("s", Json::Str("t".to_string())),
+                    (
+                        "args",
+                        obj(vec![
+                            ("cq", Json::Num(cq as f64)),
+                            ("lat_ns", Json::Num(lat_ns)),
+                            step_arg,
+                        ]),
+                    ),
+                ],
+            );
+        }
+        TraceEventKind::LockWait { kind, id, holder } => {
+            let name = match kind {
+                LockKind::Qp => "lock_wait:qp",
+                LockKind::Cq => "lock_wait:cq",
+                LockKind::Uuar => "lock_wait:uuar",
+            };
+            let ev = common(name, "i", 0, tid, us(t));
+            push(
+                out,
+                ev,
+                vec![
+                    ("s", Json::Str("t".to_string())),
+                    (
+                        "args",
+                        obj(vec![
+                            ("lock", Json::Str(kind.label().to_string())),
+                            ("id", Json::Num(id as f64)),
+                            (
+                                "holder",
+                                holder.map_or(Json::Null, |h| Json::Num(h as f64)),
+                            ),
+                            step_arg,
+                        ]),
+                    ),
+                ],
+            );
+        }
+        TraceEventKind::CqDepth { cq, depth } => {
+            let ev = common(&format!("cq{cq}"), "C", 0, tid, us(t));
+            push(out, ev, vec![("args", obj(vec![("depth", Json::Num(depth as f64))]))]);
+        }
+    }
+}
+
+/// Emit the VCI async-span dimension: one open span per (stream, slot)
+/// residency. The mapper ordinal is the clock.
+fn vci_events(out: &mut Vec<Json>, vci: &[VciEvent]) {
+    // (stream key, slot, opened-at ordinal) for spans still open.
+    let mut open: Vec<(u64, u32, usize)> = Vec::new();
+    let span = |ph: &str, stream_key: u64, slot: u32, ts: usize| {
+        let mut ev = common(&format!("slot{slot}"), ph, 1, slot as u64, Json::Num(ts as f64));
+        ev.push(("cat".to_string(), Json::Str("vci".to_string())));
+        ev.push(("id".to_string(), Json::Str(format!("{stream_key:#x}"))));
+        Json::Obj(ev)
+    };
+    let close = |open: &mut Vec<(u64, u32, usize)>, out: &mut Vec<Json>, key: u64, at: usize| {
+        if let Some(i) = open.iter().position(|&(k, _, _)| k == key) {
+            let (_, slot, _) = open.remove(i);
+            out.push(span("e", key, slot, at));
+        }
+    };
+    for (ord, &e) in vci.iter().enumerate() {
+        match e {
+            VciEvent::Assign { stream, slot } => {
+                out.push(span("b", stream.key(), slot, ord));
+                open.push((stream.key(), slot, ord));
+            }
+            VciEvent::Migrate { stream, from: _, to } | VciEvent::Rehome { stream, from: _, to } => {
+                close(&mut open, out, stream.key(), ord);
+                out.push(span("b", stream.key(), to, ord));
+                open.push((stream.key(), to, ord));
+            }
+            VciEvent::Kill { slot } => {
+                let ev = common("kill", "i", 1, slot as u64, Json::Num(ord as f64));
+                push(out, ev, vec![("s", Json::Str("t".to_string())), ("cat", Json::Str("vci".to_string()))]);
+            }
+        }
+    }
+    // Close residencies still open at the end of the run.
+    let end = vci.len();
+    while let Some((key, slot, _)) = open.pop() {
+        out.push(span("e", key, slot, end));
+    }
+}
+
+/// Render the full Chrome trace-event JSON document.
+pub fn render_chrome(trace: &Trace) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    // Thread-name metadata for every DES track present in the stream.
+    let mut tids: Vec<u32> = trace.events.iter().map(|e| e.key.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        let ev = common("thread_name", "M", 0, tid as u64, Json::Num(0.0));
+        push(
+            &mut events,
+            ev,
+            vec![("args", obj(vec![("name", Json::Str(format!("thread {tid}")))]))],
+        );
+    }
+    for e in &trace.events {
+        des_event(&mut events, e);
+    }
+    vci_events(&mut events, &trace.vci);
+    let doc = obj(vec![
+        ("displayTimeUnit", Json::Str("ns".to_string())),
+        (
+            "otherData",
+            obj(vec![
+                ("label", Json::Str(trace.label.clone())),
+                ("events", Json::Num(trace.events.len() as f64)),
+                ("dropped", Json::Num(trace.dropped as f64)),
+                ("vci_events", Json::Num(trace.vci.len() as f64)),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ]);
+    let mut s = doc.render(0);
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::sched::Key;
+    use crate::vci::Stream;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            label: "unit".to_string(),
+            events: vec![
+                TraceEvent {
+                    key: Key { time: 100, tid: 0, step: 0 },
+                    kind: TraceEventKind::Post { qp: 0, msgs: 4, release: 180 },
+                },
+                TraceEvent {
+                    key: Key { time: 250, tid: 1, step: 0 },
+                    kind: TraceEventKind::LockWait { kind: LockKind::Qp, id: 0, holder: Some(0) },
+                },
+                TraceEvent {
+                    key: Key { time: 300, tid: 0, step: 1 },
+                    kind: TraceEventKind::Poll { cq: 0, got: 2, release: 340 },
+                },
+                TraceEvent {
+                    key: Key { time: 300, tid: 0, step: 1 },
+                    kind: TraceEventKind::Completion { cq: 0, done: 320, lat_ns: 220.0 },
+                },
+                TraceEvent {
+                    key: Key { time: 320, tid: 0, step: 1 },
+                    kind: TraceEventKind::CqDepth { cq: 0, depth: 2 },
+                },
+            ],
+            dropped: 0,
+            vci: vec![
+                VciEvent::Assign { stream: Stream::of_thread(0), slot: 0 },
+                VciEvent::Assign { stream: Stream::of_thread(1), slot: 1 },
+                VciEvent::Kill { slot: 1 },
+                VciEvent::Rehome { stream: Stream::of_thread(1), from: 1, to: 0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_document_parses_and_carries_the_schema() {
+        let s = render_chrome(&sample_trace());
+        let doc = Json::parse(&s).expect("chrome JSON must parse");
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ns"));
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!evs.is_empty());
+        for ev in evs {
+            for field in ["name", "ph", "pid", "tid", "ts"] {
+                assert!(ev.get(field).is_some(), "event missing {field}: {ev:?}");
+            }
+        }
+        // Duration events carry dur; the post span is 80 ns = 0.08 us.
+        let post = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("post"))
+            .unwrap();
+        assert_eq!(post.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(post.get("dur").and_then(Json::as_f64), Some(0.08));
+        // The VCI dimension: every "b" eventually has an "e" with the
+        // same id (the rehomed stream has two residencies).
+        let b = evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("b")).count();
+        let e = evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("e")).count();
+        assert_eq!(b, 3);
+        assert_eq!(b, e);
+    }
+
+    #[test]
+    fn chrome_render_is_a_pure_function_of_the_trace() {
+        let t = sample_trace();
+        assert_eq!(render_chrome(&t), render_chrome(&t));
+    }
+}

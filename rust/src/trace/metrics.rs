@@ -1,0 +1,204 @@
+//! The unified metrics registry: one canonical snapshot object naming
+//! every counter the stack exposes, rendered through the experiment
+//! harness's dep-free [`Json`] writer so the bytes are stable.
+//!
+//! Two kinds of series ride together, deliberately distinguished:
+//!
+//! * **virtual-time observables** (lock contention, CQ high-water, VCI
+//!   lifecycle counts, message/latency aggregates) — identical across
+//!   execution strategies, safe to golden-pin;
+//! * **engine diagnostics** (`sched_events`, coalescing gap, island
+//!   speculation accept/attempts, worker budget) — properties of *how*
+//!   the run executed. They belong in a metrics snapshot (that is what
+//!   a perf artifact is for) but never in the canonical trace event
+//!   stream, whose bytes must not depend on the strategy.
+//!
+//! [`merge_metrics_json`] splices a rendered snapshot into
+//! `BENCH_des.json` under the `"metrics"` key, the same string-level
+//! in-place merge `scep fleet` uses for its `"fleet"` array.
+
+use crate::bench::{MsgRateResult, PartitionStats};
+use crate::experiment::Json;
+
+use super::{Trace, VciEvent};
+
+/// VCI-layer state worth snapshotting, lifted off a
+/// [`VciMapper`](crate::vci::VciMapper) after a run.
+#[derive(Debug, Clone, Default)]
+pub struct VciSnapshot {
+    /// Streams resident per pool slot (`VciMapper::loads`) — the
+    /// per-slot occupancy series the ROADMAP's contention-keyed
+    /// `Adaptive` strategy will consume.
+    pub loads: Vec<u32>,
+    pub migrations: u64,
+    pub rehomed: u64,
+    pub events: Vec<VciEvent>,
+}
+
+impl VciSnapshot {
+    pub fn of_mapper(m: &crate::vci::VciMapper) -> Self {
+        Self {
+            loads: m.loads().to_vec(),
+            migrations: m.migrations(),
+            rehomed: m.rehomed(),
+            events: m.events().to_vec(),
+        }
+    }
+}
+
+/// Everything a snapshot can draw from; `parts`/`vci`/`trace` sections
+/// are omitted (not nulled) when absent, so the object stays minimal
+/// for plain runs.
+pub struct SnapshotInput<'a> {
+    pub label: &'a str,
+    pub result: &'a MsgRateResult,
+    pub parts: Option<&'a PartitionStats>,
+    pub vci: Option<&'a VciSnapshot>,
+    pub trace: Option<&'a Trace>,
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// Build the canonical metrics snapshot for one run.
+pub fn snapshot(input: &SnapshotInput) -> Json {
+    let r = input.result;
+    let mut m: Vec<(String, Json)> = vec![
+        ("label".to_string(), Json::Str(input.label.to_string())),
+        ("messages".to_string(), num(r.messages as f64)),
+        ("duration_ns".to_string(), num(r.duration as f64)),
+        ("rate_mmsgs".to_string(), num(r.mmsgs_per_sec)),
+        ("p50_ns".to_string(), num(r.p50_latency_ns)),
+        ("p99_ns".to_string(), num(r.p99_latency_ns)),
+        ("p999_ns".to_string(), num(r.p999_latency_ns)),
+        ("lock_contended_qp".to_string(), num(r.lock_contended.qp as f64)),
+        ("lock_contended_cq".to_string(), num(r.lock_contended.cq as f64)),
+        ("lock_contended_uuar".to_string(), num(r.lock_contended.uuar as f64)),
+        (
+            "cq_high_water".to_string(),
+            Json::Arr(r.cq_high_water.iter().map(|&h| num(h as f64)).collect()),
+        ),
+        ("sched_steps".to_string(), num(r.sched_steps as f64)),
+        ("sched_events".to_string(), num(r.sched_events as f64)),
+        (
+            "coalesced_steps".to_string(),
+            num(r.sched_steps.saturating_sub(r.sched_events) as f64),
+        ),
+    ];
+    if let Some(p) = input.parts {
+        m.push(("islands".to_string(), num(p.islands as f64)));
+        m.push(("island_attempts".to_string(), num(p.attempts as f64)));
+        m.push(("island_accepted".to_string(), num(p.parallel as u8 as f64)));
+        m.push(("island_couplings".to_string(), num(p.couplings as f64)));
+        m.push(("workers".to_string(), num(p.workers as f64)));
+    }
+    if let Some(v) = input.vci {
+        m.push((
+            "vci_slot_loads".to_string(),
+            Json::Arr(v.loads.iter().map(|&l| num(l as f64)).collect()),
+        ));
+        m.push(("vci_migrations".to_string(), num(v.migrations as f64)));
+        m.push(("vci_rehomed".to_string(), num(v.rehomed as f64)));
+        let kills = v.events.iter().filter(|e| matches!(e, VciEvent::Kill { .. })).count();
+        m.push(("vci_kills".to_string(), num(kills as f64)));
+    }
+    if let Some(t) = input.trace {
+        m.push(("trace_events".to_string(), num(t.events.len() as f64)));
+        m.push(("trace_dropped".to_string(), num(t.dropped as f64)));
+        m.push(("vci_events".to_string(), num(t.vci.len() as f64)));
+    }
+    Json::Obj(m)
+}
+
+/// Merge a rendered `"metrics"` value (object or array) into an existing
+/// `BENCH_des.json` body, replacing any previous one — or mint a fresh
+/// object when the file is absent/empty. Mirrors
+/// [`merge_fleet_json`](crate::coordinator::fleet::merge_fleet_json);
+/// the delimiter matcher is structural (snapshot strings — labels and
+/// series names — never contain braces or brackets).
+pub fn merge_metrics_json(existing: &str, metrics: &Json) -> String {
+    let rendered = metrics.render(1);
+    let t = existing.trim_end();
+    let Some(body_end) = t.rfind('}') else {
+        return format!("{{\n  \"metrics\": {rendered}\n}}\n");
+    };
+    let mut head = t[..body_end].to_string();
+    if let Some(key) = head.find("\"metrics\"") {
+        let open_rel = head[key..].find(['{', '[']);
+        if let Some(open_rel) = open_rel {
+            let open = key + open_rel;
+            let (oc, cc) = if head.as_bytes()[open] == b'{' { ('{', '}') } else { ('[', ']') };
+            let mut depth = 0usize;
+            let mut close = open;
+            for (i, ch) in head[open..].char_indices() {
+                if ch == oc {
+                    depth += 1;
+                } else if ch == cc {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = open + i;
+                        break;
+                    }
+                }
+            }
+            let before = head[..key].trim_end();
+            let mut start = key;
+            let mut end = close + 1;
+            if before.ends_with(',') {
+                start = before.len() - 1;
+            } else if let Some(next) = head[end..].find(|c: char| !c.is_whitespace()) {
+                if head[end..].as_bytes()[next] == b',' {
+                    end += next + 1;
+                }
+            }
+            head.replace_range(start..end, "");
+        }
+    }
+    let head = head.trim_end();
+    let sep = if head.ends_with('{') || head.ends_with(',') { "" } else { "," };
+    format!("{head}{sep}\n  \"metrics\": {rendered}\n}}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(members: &[(&str, f64)]) -> Json {
+        Json::Obj(members.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect())
+    }
+
+    #[test]
+    fn merge_into_empty_and_existing_bodies() {
+        let m = obj(&[("a", 1.0)]);
+        let fresh = merge_metrics_json("", &m);
+        let parsed = Json::parse(&fresh).unwrap();
+        assert_eq!(parsed.get("metrics").and_then(|v| v.get("a")).and_then(Json::as_u64), Some(1));
+
+        let existing = "{\n  \"suite\": \"des\",\n  \"fleet\": [\n    {\"x\": 1}\n  ]\n}\n";
+        let merged = merge_metrics_json(existing, &m);
+        let parsed = Json::parse(&merged).unwrap();
+        assert!(parsed.get("suite").is_some(), "existing keys survive: {merged}");
+        assert!(parsed.get("fleet").is_some());
+        assert!(parsed.get("metrics").is_some());
+    }
+
+    #[test]
+    fn merge_replaces_a_previous_metrics_entry() {
+        let first = merge_metrics_json("{\n  \"suite\": \"des\"\n}\n", &obj(&[("a", 1.0)]));
+        let second = merge_metrics_json(&first, &obj(&[("b", 2.0)]));
+        let parsed = Json::parse(&second).unwrap();
+        let m = parsed.get("metrics").unwrap();
+        assert!(m.get("a").is_none(), "old snapshot replaced: {second}");
+        assert_eq!(m.get("b").and_then(Json::as_u64), Some(2));
+        assert_eq!(second.matches("\"metrics\"").count(), 1);
+    }
+
+    #[test]
+    fn merge_is_idempotent_on_bytes() {
+        let m = obj(&[("a", 1.0), ("b", 2.5)]);
+        let once = merge_metrics_json("{\n  \"suite\": \"des\"\n}\n", &m);
+        let twice = merge_metrics_json(&once, &m);
+        assert_eq!(once, twice);
+    }
+}

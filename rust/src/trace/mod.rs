@@ -1,0 +1,368 @@
+//! Deterministic virtual-time tracing + the unified metrics registry.
+//!
+//! The DES already *computes* everything the paper's analysis needs —
+//! which lock a thread bounced on, how full a CQ ran, when a VCI
+//! migrated — but until this module it only surfaced scattered ad-hoc
+//! counters. Here every observable becomes a **record keyed on the
+//! canonical phase key** `(time, tid, step)` ([`Key`]): the same tag
+//! that orders rail requests and latency samples across speculative
+//! islands. That choice is what makes tracing deterministic by
+//! construction:
+//!
+//! * `time` is virtual, so wallclock never leaks in;
+//! * `tid`/`step` count *program phases* ([`ThreadSim::steps`] in
+//!   `bench::msgrate`), which are identical across the sequential,
+//!   coalescing fast-path, forced-general and partitioned-parallel
+//!   execution strategies (trajectories are bit-equal — the engine's
+//!   core invariant, pinned since PR 1);
+//! * the exporter sorts by key before rendering, so the *emission*
+//!   order (which does differ: a coalesced thread runs several phases
+//!   back-to-back; islands run concurrently) never shows.
+//!
+//! The result: the Chrome trace-event stream of a run is **bit-identical
+//! across `SCEP_WORKERS=1` vs `4`, fast vs general, sequential vs
+//! partitioned** — asserted by `tests/trace.rs` and a CI `cmp`.
+//!
+//! Zero cost when off: the engine holds an `Option<Box<TraceBuf>>`;
+//! every record site is one `is_some()` branch on a cold pointer. With
+//! the sink disabled all golden fixtures are byte-unchanged (pinned by
+//! `prop_tracing_off_is_byte_identical`).
+//!
+//! Engine *diagnostics* — `sched_events`, coalescing counts, island
+//! accept/reject — are deliberately **not** part of the canonical event
+//! stream: they describe the execution strategy, not the virtual-time
+//! behavior, and legitimately differ across worker counts. They travel
+//! in the [`metrics`] snapshot instead, whose *formatting* is canonical
+//! (dep-free [`Json`](crate::experiment::Json)) even where its values
+//! are strategy-dependent.
+
+pub mod chrome;
+pub mod metrics;
+
+use crate::sim::sched::Key;
+use crate::sim::Time;
+use crate::vci::Stream;
+
+pub use chrome::render_chrome;
+pub use metrics::{merge_metrics_json, snapshot, SnapshotInput, VciSnapshot};
+
+/// Which serialization point a [`TraceEventKind::LockWait`] bounced on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    /// The QP lock (§V: serializes WQE prep + doorbell).
+    Qp,
+    /// The CQ lock (§V-E: serializes `ibv_poll_cq`).
+    Cq,
+    /// The uUAR doorbell lock (§IV-B: shared uUARs serialize the
+    /// doorbell write inside the QP critical section).
+    Uuar,
+}
+
+impl LockKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            LockKind::Qp => "qp",
+            LockKind::Cq => "cq",
+            LockKind::Uuar => "uuar",
+        }
+    }
+}
+
+/// One virtual-time observable, recorded at its issuing phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEventKind {
+    /// One `ibv_post_send` call: `msgs` WQEs onto `qp`, lock released
+    /// (thread resumes) at `release`.
+    Post { qp: u32, msgs: u32, release: Time },
+    /// One `ibv_poll_cq` call: `got` CQEs off `cq`, resuming at
+    /// `release`.
+    Poll { cq: u32, got: u32, release: Time },
+    /// A signaled completion became CPU-visible on `cq` at `done`;
+    /// `lat_ns` is the sojourn latency (post-call or open-loop arrival
+    /// to CQE).
+    Completion { cq: u32, done: Time, lat_ns: f64 },
+    /// The issuing phase found its lock held (the DES server was busy
+    /// past `now`): the contended-acquire event, with the holder it
+    /// queued behind (`None` if the lock was never held before — can't
+    /// happen for a *contended* acquire, but kept honest).
+    LockWait { kind: LockKind, id: u32, holder: Option<u32> },
+    /// The CQ arrival ring's high-water occupancy rose to `depth` —
+    /// the transition events behind `MsgRateResult::cq_high_water`, and
+    /// the signal the `Adaptive` VCI strategy migrates on.
+    CqDepth { cq: u32, depth: u32 },
+}
+
+/// A keyed trace record. Keys are unique per program phase (per-thread
+/// `step` counts phases); a phase's several records keep their emission
+/// order under the exporter's *stable* sort.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub key: Key,
+    pub kind: TraceEventKind,
+}
+
+/// A VCI mapper lifecycle event ([`crate::vci::VciMapper`] logs these
+/// when tracing). The mapper runs sequentially outside virtual time, so
+/// these are ordered by a plain ordinal — deterministic regardless of
+/// DES worker count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VciEvent {
+    /// `stream` registered onto `slot`.
+    Assign { stream: Stream, slot: u32 },
+    /// The `Adaptive` rebalance moved `stream` off an over-occupancy
+    /// slot.
+    Migrate { stream: Stream, from: u32, to: u32 },
+    /// Failure injection killed `slot`.
+    Kill { slot: u32 },
+    /// `stream` re-homed off the killed slot onto a survivor.
+    Rehome { stream: Stream, from: u32, to: u32 },
+}
+
+/// Per-class contended-acquire totals, summed over every lock of the
+/// class at the end of a run. Trajectories are bit-equal across
+/// execution strategies, so these are virtual-time observables (unlike
+/// `sched_events`) — the contention *signal* the ROADMAP's
+/// adaptive-on-contention strategy needs, now on every
+/// [`MsgRateResult`](crate::bench::MsgRateResult).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LockCounters {
+    pub qp: u64,
+    pub cq: u64,
+    pub uuar: u64,
+}
+
+impl LockCounters {
+    pub fn total(&self) -> u64 {
+        self.qp + self.cq + self.uuar
+    }
+}
+
+/// Default record capacity: generous for every figure/workload cell at
+/// `--quick` sizes, bounded so a fleet-sized run cannot OOM the tracer.
+pub const DEFAULT_TRACE_CAP: usize = 1 << 20;
+
+/// The ring-buffered collector the engine records into.
+///
+/// "Ring" with a determinism twist: a plain drop-oldest ring would keep
+/// whichever records were emitted last, and emission order is
+/// strategy-dependent. Instead the buffer compacts by **canonical key**
+/// whenever it reaches twice its capacity — a stable sort keeps the
+/// `cap` smallest-keyed records and drops the rest. An exchange
+/// argument shows the final kept set equals the globally
+/// smallest-`cap` records of the whole run, independent of emission
+/// order *and* of local compaction points: a record among the global
+/// smallest `cap` is, at every compaction it witnesses, among the
+/// smallest `cap` present, so it is never dropped. The same argument
+/// covers island merging — each island's locally-kept superset contains
+/// every globally-kept record of that island.
+#[derive(Debug, Clone)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+    cap: usize,
+    /// Total records ever pushed (kept + dropped); strategy-invariant.
+    generated: u64,
+    /// Running per-CQ high-water, for [`TraceEventKind::CqDepth`]
+    /// transition detection. Island forks seed it from the fork-time
+    /// ring high-water so warmup transitions are not re-emitted.
+    cq_peak: Vec<u32>,
+}
+
+impl TraceBuf {
+    pub fn new(ncqs: usize) -> Self {
+        Self::with_cap(ncqs, DEFAULT_TRACE_CAP)
+    }
+
+    pub fn with_cap(ncqs: usize, cap: usize) -> Self {
+        assert!(cap >= 1, "a trace buffer keeps at least one record");
+        Self { events: Vec::new(), cap, generated: 0, cq_peak: vec![0; ncqs] }
+    }
+
+    pub fn push(&mut self, key: Key, kind: TraceEventKind) {
+        self.generated += 1;
+        if self.events.len() >= self.cap.saturating_mul(2) {
+            self.compact();
+        }
+        self.events.push(TraceEvent { key, kind });
+    }
+
+    /// Record a CQ-occupancy observation; emits a
+    /// [`TraceEventKind::CqDepth`] record on a high-water transition.
+    pub fn observe_cq(&mut self, key: Key, cq: usize, high_water: u32) {
+        if high_water > self.cq_peak[cq] {
+            self.cq_peak[cq] = high_water;
+            self.push(key, TraceEventKind::CqDepth { cq: cq as u32, depth: high_water });
+        }
+    }
+
+    /// Stable sort by canonical key, keep the smallest `cap`.
+    fn compact(&mut self) {
+        self.events.sort_by(|a, b| a.key.cmp(&b.key));
+        self.events.truncate(self.cap);
+    }
+
+    /// Reset for a speculative island fork: drop the warmup records
+    /// (the parent keeps them) and seed the CQ peaks from the fork-time
+    /// ring high-waters so only *new* transitions are recorded.
+    pub fn fork_island(&mut self, cq_high_water: &[u32]) {
+        self.events.clear();
+        self.generated = 0;
+        self.cq_peak.clear();
+        self.cq_peak.extend_from_slice(cq_high_water);
+    }
+
+    /// Fold a finished island's records into this (fork-point) buffer.
+    pub fn absorb(&mut self, island: TraceBuf) {
+        self.generated += island.generated;
+        self.events.extend(island.events);
+        while self.events.len() > self.cap.saturating_mul(2) {
+            self.compact();
+        }
+    }
+
+    /// Finish: canonical order, capacity applied. Returns the records
+    /// plus how many were dropped — both strategy-invariant.
+    pub fn into_events(mut self) -> (Vec<TraceEvent>, u64) {
+        self.compact();
+        let dropped = self.generated - self.events.len() as u64;
+        (self.events, dropped)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// A finished, export-ready trace: the canonical event stream plus the
+/// (ordinal-ordered) VCI lifecycle log.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// What was traced (figure/workload/fleet target label).
+    pub label: String,
+    /// Canonically ordered virtual-time records.
+    pub events: Vec<TraceEvent>,
+    /// Records dropped by the capacity bound (strategy-invariant).
+    pub dropped: u64,
+    /// VCI mapper lifecycle events, in mapper ordinal order.
+    pub vci: Vec<VciEvent>,
+}
+
+impl Trace {
+    /// Assemble from an engine buffer (usually
+    /// [`MsgRateResult::trace`](crate::bench::MsgRateResult)) and a
+    /// mapper's event log.
+    pub fn assemble(label: &str, buf: Option<Box<TraceBuf>>, vci: Vec<VciEvent>) -> Trace {
+        let (events, dropped) = match buf {
+            Some(b) => b.into_events(),
+            None => (Vec::new(), 0),
+        };
+        Trace { label: label.to_string(), events, dropped, vci }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(time: Time, tid: u32, step: u64) -> Key {
+        Key { time, tid, step }
+    }
+
+    fn post(qp: u32) -> TraceEventKind {
+        TraceEventKind::Post { qp, msgs: 4, release: 10 }
+    }
+
+    #[test]
+    fn compaction_keeps_the_globally_smallest_records() {
+        // Push 10 records in a scrambled order through a cap-3 buffer;
+        // whatever the compaction points, the survivors must be the 3
+        // smallest keys.
+        let order = [7u64, 2, 9, 0, 5, 1, 8, 3, 6, 4];
+        let mut buf = TraceBuf::with_cap(1, 3);
+        for &s in &order {
+            buf.push(k(s, 0, s), post(0));
+        }
+        let (events, dropped) = buf.into_events();
+        let steps: Vec<u64> = events.iter().map(|e| e.key.step).collect();
+        assert_eq!(steps, vec![0, 1, 2]);
+        assert_eq!(dropped, 7);
+    }
+
+    #[test]
+    fn compaction_is_insertion_order_invariant() {
+        let mut fwd = TraceBuf::with_cap(1, 4);
+        let mut rev = TraceBuf::with_cap(1, 4);
+        for s in 0..32u64 {
+            fwd.push(k(s, 0, s), post(0));
+        }
+        for s in (0..32u64).rev() {
+            rev.push(k(s, 0, s), post(0));
+        }
+        assert_eq!(fwd.into_events(), rev.into_events());
+    }
+
+    #[test]
+    fn island_absorb_reproduces_the_sequential_stream() {
+        // Sequential: all records through one buffer. Partitioned: a
+        // warmup prefix in the parent, the rest split across two island
+        // buffers, absorbed back. Same final stream.
+        let all: Vec<(Key, TraceEventKind)> =
+            (0..20u64).map(|s| (k(s, (s % 2) as u32, s / 2), post((s % 2) as u32))).collect();
+        let mut seq = TraceBuf::with_cap(2, 8);
+        for &(key, kind) in &all {
+            seq.push(key, kind);
+        }
+
+        let mut parent = TraceBuf::with_cap(2, 8);
+        for &(key, kind) in &all[..6] {
+            parent.push(key, kind);
+        }
+        let mut isl0 = parent.clone();
+        let mut isl1 = parent.clone();
+        isl0.fork_island(&[0, 0]);
+        isl1.fork_island(&[0, 0]);
+        for &(key, kind) in &all[6..] {
+            if key.tid == 0 {
+                isl0.push(key, kind);
+            } else {
+                isl1.push(key, kind);
+            }
+        }
+        parent.absorb(isl0);
+        parent.absorb(isl1);
+        assert_eq!(parent.into_events(), seq.into_events());
+    }
+
+    #[test]
+    fn cq_observation_emits_only_transitions() {
+        let mut buf = TraceBuf::new(2);
+        buf.observe_cq(k(1, 0, 0), 0, 1);
+        buf.observe_cq(k(2, 0, 1), 0, 1); // no transition
+        buf.observe_cq(k(3, 0, 2), 0, 3);
+        buf.observe_cq(k(4, 0, 3), 1, 2);
+        let (events, _) = buf.into_events();
+        let depths: Vec<(u32, u32)> = events
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceEventKind::CqDepth { cq, depth } => Some((cq, depth)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(depths, vec![(0, 1), (0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn fork_island_seeds_peaks_from_the_fork_point() {
+        let mut buf = TraceBuf::new(1);
+        buf.observe_cq(k(1, 0, 0), 0, 5);
+        buf.fork_island(&[5]);
+        buf.observe_cq(k(2, 0, 1), 0, 5); // warmup peak: not a transition
+        buf.observe_cq(k(3, 0, 2), 0, 6);
+        let (events, _) = buf.into_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, TraceEventKind::CqDepth { cq: 0, depth: 6 });
+    }
+}

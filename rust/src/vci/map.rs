@@ -8,6 +8,8 @@
 //! pooled runs stay bit-deterministic and reseedable
 //! (`SCEP_FUZZ_SEED`-driven fuzzers rerun the same mapping).
 
+use crate::trace::VciEvent;
+
 use super::stream::Stream;
 
 /// Default `Adaptive` occupancy threshold (outstanding CQEs observed on
@@ -107,6 +109,12 @@ pub struct VciMapper {
     next_rr: u32,
     migrations: u64,
     rehomed: u64,
+    /// Lifecycle event log ([`VciEvent`]): every assign / migrate /
+    /// kill / re-home, in the order the mapper performed it. The mapper
+    /// runs sequentially outside virtual time, so this ordinal order is
+    /// deterministic regardless of DES worker count — the trace
+    /// exporter renders it as the async-span dimension.
+    events: Vec<VciEvent>,
 }
 
 impl VciMapper {
@@ -121,6 +129,7 @@ impl VciMapper {
             next_rr: 0,
             migrations: 0,
             rehomed: 0,
+            events: Vec::new(),
         }
     }
 
@@ -173,6 +182,7 @@ impl VciMapper {
         };
         self.assigned.push((stream, slot));
         self.loads[slot as usize] += 1;
+        self.events.push(VciEvent::Assign { stream, slot });
         slot
     }
 
@@ -200,6 +210,11 @@ impl VciMapper {
     /// [`VciMapper::kill_slot`] (distinct from rebalance migrations).
     pub fn rehomed(&self) -> u64 {
         self.rehomed
+    }
+
+    /// The lifecycle event log, in mapper ordinal order.
+    pub fn events(&self) -> &[VciEvent] {
+        &self.events
     }
 
     /// Whether `slot` is still accepting streams.
@@ -234,6 +249,7 @@ impl VciMapper {
             "killing slot {slot} would leave the pool with no live endpoint"
         );
         self.dead[s] = true;
+        self.events.push(VciEvent::Kill { slot });
         let mut moved = 0u64;
         for i in 0..self.assigned.len() {
             if self.assigned[i].1 != slot {
@@ -246,6 +262,11 @@ impl VciMapper {
             self.assigned[i].1 = target as u32;
             self.loads[s] -= 1;
             self.loads[target] += 1;
+            self.events.push(VciEvent::Rehome {
+                stream: self.assigned[i].0,
+                from: slot,
+                to: target as u32,
+            });
             moved += 1;
         }
         debug_assert_eq!(self.loads[s], 0, "a killed slot keeps no streams");
@@ -307,6 +328,11 @@ impl VciMapper {
                 self.loads[hot] -= 1;
                 self.loads[cold] += 1;
                 self.migrations += 1;
+                self.events.push(VciEvent::Migrate {
+                    stream: self.assigned[idx].0,
+                    from: hot as u32,
+                    to: cold as u32,
+                });
             }
         }
         self.migrations - before

@@ -64,5 +64,5 @@ pub mod stream;
 
 pub use map::{MapStrategy, VciMapper, DEFAULT_ADAPTIVE_OCCUPANCY};
 pub use pool::EndpointPool;
-pub use run::{pooled_threads, run_pooled, PooledResult};
+pub use run::{pooled_threads, run_pooled, run_pooled_traced, PooledResult};
 pub use stream::Stream;

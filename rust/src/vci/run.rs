@@ -4,6 +4,7 @@
 
 use crate::bench::{MsgRateConfig, MsgRateResult, Runner};
 use crate::endpoints::{EndpointPolicy, ResourceUsage, ThreadEndpoint};
+use crate::trace::{Trace, VciSnapshot};
 use crate::verbs::error::{Result, VerbsError};
 
 use super::map::{MapStrategy, VciMapper};
@@ -100,6 +101,61 @@ pub fn run_pooled(
         migrations: mapper.migrations(),
         rehomed: mapper.rehomed(),
     })
+}
+
+/// [`run_pooled`] with the deterministic trace sink enabled on the
+/// timed phase (the `Adaptive` probe stays untraced — it is a separate
+/// run whose records would pollute the timed stream). The timed phase
+/// goes through [`Runner::run_partitioned`], which is bit-identical to
+/// the sequential path by construction; the returned [`Trace`] carries
+/// the canonical event stream plus the mapper's VCI lifecycle log, and
+/// the [`VciSnapshot`] feeds the unified metrics snapshot.
+pub fn run_pooled_traced(
+    policy: &EndpointPolicy,
+    nstreams: u32,
+    pool_size: u32,
+    strategy: MapStrategy,
+    cfg: MsgRateConfig,
+    label: &str,
+) -> Result<(PooledResult, Trace, VciSnapshot)> {
+    if strategy == MapStrategy::Dedicated && pool_size < nstreams {
+        return Err(VerbsError::Config(format!(
+            "dedicated stream mapping needs pool_size >= streams ({pool_size} < {nstreams})"
+        )));
+    }
+    let (fabric, pool) = EndpointPool::build_fresh(policy, pool_size)?;
+    let mut mapper = VciMapper::new(strategy, pool_size);
+    for t in 0..nstreams {
+        mapper.assign(Stream::of_thread(t));
+    }
+    if matches!(strategy, MapStrategy::Adaptive { .. }) {
+        let probe_cfg = MsgRateConfig { msgs_per_thread: probe_msgs(cfg.msgs_per_thread), ..cfg };
+        let probe = Runner::new(&fabric, &pooled_threads(&pool, &mapper), probe_cfg).run();
+        let occupancy: Vec<u64> = pool
+            .endpoints()
+            .iter()
+            .map(|ep| probe.cq_high_water[ep.cq.index()] as u64)
+            .collect();
+        mapper.rebalance(&occupancy);
+    }
+    let threads = pooled_threads(&pool, &mapper);
+    let mut runner = Runner::new(&fabric, &threads, cfg);
+    runner.set_tracing(true);
+    let mut result = runner.run_partitioned();
+    let vci = VciSnapshot::of_mapper(&mapper);
+    let trace = Trace::assemble(label, result.trace.take(), vci.events.clone());
+    let usage = pool.usage(&fabric);
+    Ok((
+        PooledResult {
+            result,
+            usage,
+            loads: mapper.loads().to_vec(),
+            migrations: mapper.migrations(),
+            rehomed: mapper.rehomed(),
+        },
+        trace,
+        vci,
+    ))
 }
 
 #[cfg(test)]

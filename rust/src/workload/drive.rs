@@ -24,6 +24,7 @@ use crate::endpoints::{
     Category, EndpointPolicy, EndpointSet, QpProvision, ResourceUsage, ThreadEndpoint, UarMap,
 };
 use crate::nicsim::CostModel;
+use crate::trace::{Trace, VciSnapshot};
 use crate::vci::{pooled_threads, EndpointPool, MapStrategy, Stream, VciMapper};
 use crate::verbs::error::{Result, VerbsError};
 use crate::verbs::{BufId, CtxId, Fabric, MrId, PdId, QpCaps, QpId, TdInitAttr};
@@ -181,6 +182,26 @@ pub struct DriveSpec<'a> {
 /// directly — the pre-refactor drivers' exact path — and only a
 /// genuinely non-uniform matrix engages `set_msgs_targets`.
 pub fn drive(fabric: &Fabric, groups: &[Vec<ThreadEndpoint>], spec: &DriveSpec) -> MsgRateResult {
+    drive_impl(fabric, groups, spec, false)
+}
+
+/// [`drive`] with the deterministic trace sink enabled; the returned
+/// result carries the record buffer in `MsgRateResult::trace`. The
+/// timed virtual-time observables are bit-identical to [`drive`]'s.
+pub fn drive_traced(
+    fabric: &Fabric,
+    groups: &[Vec<ThreadEndpoint>],
+    spec: &DriveSpec,
+) -> MsgRateResult {
+    drive_impl(fabric, groups, spec, true)
+}
+
+fn drive_impl(
+    fabric: &Fabric,
+    groups: &[Vec<ThreadEndpoint>],
+    spec: &DriveSpec,
+    traced: bool,
+) -> MsgRateResult {
     let uniform = spec.targets.windows(2).all(|w| w[0] == w[1]);
     let mut cfg = MsgRateConfig {
         msg_size: spec.msg_size,
@@ -196,6 +217,9 @@ pub fn drive(fabric: &Fabric, groups: &[Vec<ThreadEndpoint>], spec: &DriveSpec) 
         cfg.msgs_per_thread = spec.targets.first().copied().unwrap_or(cfg.msgs_per_thread);
     }
     let mut runner = Runner::new_multi(fabric, groups, cfg);
+    if traced {
+        runner.set_tracing(true);
+    }
     if !uniform {
         runner.set_msgs_targets(spec.targets);
     }
@@ -252,6 +276,36 @@ pub fn run_cell_opts(
     force_general: bool,
     partitioned: bool,
 ) -> Result<WorkloadCell> {
+    Ok(run_cell_impl(w, policy, pool_size, strategy, force_general, partitioned, None)?.0)
+}
+
+/// [`run_cell`] with the deterministic trace sink enabled on the timed
+/// phase (the `Adaptive` probe stays untraced). Runs on the partitioned
+/// engine path — bit-identical to the sequential one by construction —
+/// and returns the canonical [`Trace`] plus the mapper's
+/// [`VciSnapshot`] for the unified metrics snapshot.
+pub fn run_cell_traced(
+    w: &dyn Workload,
+    policy: &EndpointPolicy,
+    pool_size: u32,
+    strategy: MapStrategy,
+    label: &str,
+) -> Result<(WorkloadCell, Trace, VciSnapshot)> {
+    let (cell, traced) = run_cell_impl(w, policy, pool_size, strategy, false, true, Some(label))?;
+    let (trace, vci) = traced.expect("traced run assembles a trace");
+    Ok((cell, trace, vci))
+}
+
+#[allow(clippy::type_complexity)]
+fn run_cell_impl(
+    w: &dyn Workload,
+    policy: &EndpointPolicy,
+    pool_size: u32,
+    strategy: MapStrategy,
+    force_general: bool,
+    partitioned: bool,
+    trace_label: Option<&str>,
+) -> Result<(WorkloadCell, Option<(Trace, VciSnapshot)>)> {
     let shape = w.shape();
     assert_eq!(shape.ranks_per_node, 1, "pooled cells drive one rank's streams");
     assert!(
@@ -289,22 +343,24 @@ pub fn run_cell_opts(
     let groups: Vec<Vec<ThreadEndpoint>> =
         pooled_threads(&pool, &mapper).iter().map(|&t| vec![t]).collect();
     let traffic = open_loop_traffic(w, 0);
-    let result = drive(
-        &fabric,
-        &groups,
-        &DriveSpec {
-            targets: &targets,
-            msg_size,
-            shares_qp: policy.shares_qp(),
-            ranks: None,
-            open_loop: traffic.as_deref(),
-            conservative: false,
-            force_general,
-            partitioned,
-        },
-    );
+    let spec = DriveSpec {
+        targets: &targets,
+        msg_size,
+        shares_qp: policy.shares_qp(),
+        ranks: None,
+        open_loop: traffic.as_deref(),
+        conservative: false,
+        force_general,
+        partitioned,
+    };
+    let mut result = drive_impl(&fabric, &groups, &spec, trace_label.is_some());
+    let traced = trace_label.map(|label| {
+        let vci = VciSnapshot::of_mapper(&mapper);
+        let trace = Trace::assemble(label, result.trace.take(), vci.events.clone());
+        (trace, vci)
+    });
     let usage = pool.usage(&fabric);
-    Ok(WorkloadCell { result, usage, migrations: mapper.migrations() })
+    Ok((WorkloadCell { result, usage, migrations: mapper.migrations() }, traced))
 }
 
 /// The MPI-everywhere side of the head-to-head: `cores` single-thread
